@@ -1,0 +1,162 @@
+//! Regenerate *all* of the paper's tables and figures at a chosen scale
+//! in one run.  Each `cargo bench` target covers one figure in depth;
+//! this example is the quick single-entry-point version.
+//!
+//! ```sh
+//! cargo run --release --example paper_figures            # scale 1
+//! SCALE=4 cargo run --release --example paper_figures    # bigger
+//! ```
+
+use dist_color::bench::{profiles, run_algo, suite, Algo};
+use dist_color::distributed::CostModel;
+use dist_color::graph::stats::GraphStats;
+
+fn main() {
+    let scale: usize = std::env::var("SCALE").ok().and_then(|s| s.parse().ok()).unwrap_or(1);
+    let ranks: usize = std::env::var("RANKS").ok().and_then(|s| s.parse().ok()).unwrap_or(8);
+    let cost = CostModel::default();
+    println!("scale={scale} ranks={ranks} (env SCALE/RANKS to change)\n");
+
+    // ---------------- Table 1 ------------------------------------------
+    println!("== Table 1: graph suite ==");
+    println!("{}", GraphStats::header());
+    let d1suite = suite::d1_suite(scale);
+    for sg in &d1suite {
+        println!("{}", GraphStats::of(sg.name, sg.class, &sg.graph).row());
+    }
+
+    // ---------------- Figure 2 ------------------------------------------
+    println!("\n== Fig 2: D1 performance profiles ({} ranks) ==", ranks);
+    let algos = [Algo::D1Baseline, Algo::D1RecolorDegree, Algo::ZoltanD1];
+    let mut time_series: Vec<profiles::CostSeries> = algos
+        .iter()
+        .map(|a| profiles::CostSeries { label: a.label().into(), costs: vec![] })
+        .collect();
+    let mut color_series = time_series.clone();
+    for sg in &d1suite {
+        for (i, &a) in algos.iter().enumerate() {
+            let m = run_algo(a, &sg.graph, sg.name, ranks, cost, 42);
+            assert!(m.proper, "{} on {}", a.label(), sg.name);
+            time_series[i].costs.push(m.total_ns as f64);
+            color_series[i].costs.push(m.colors as f64);
+        }
+    }
+    println!("-- (a) execution time profile --");
+    print!("{}", profiles::render(&time_series, &profiles::default_taus()));
+    println!("-- (b) colors profile --");
+    print!("{}", profiles::render(&color_series, &profiles::default_taus()));
+
+    // headline: recolor-degrees vs baseline color reduction
+    let reduction: f64 = color_series[0]
+        .costs
+        .iter()
+        .zip(&color_series[1].costs)
+        .map(|(b, r)| 1.0 - r / b)
+        .sum::<f64>()
+        / color_series[0].costs.len() as f64;
+    println!("recolor-degrees mean color reduction vs baseline: {:.1}% (paper: 8.9%)", reduction * 100.0);
+
+    // ---------------- Figures 3–4 ---------------------------------------
+    println!("\n== Fig 3/4: D1 strong scaling + comm/comp breakdown ==");
+    let queen = suite::d1_suite(scale.max(2)).remove(2).graph; // PDE
+    let social = suite::d1_suite(scale.max(2)).remove(5).graph; // social
+    for (name, g) in [("queen-s (PDE)", &queen), ("friendster-s (social)", &social)] {
+        println!("{:<22} {:>5} {:>10} {:>10} {:>10} {:>7}", name, "ranks", "total_ms", "comp_ms", "comm_ms", "colors");
+        for np in [1, 2, 4, 8, 16] {
+            for algo in [Algo::D1RecolorDegree, Algo::ZoltanD1] {
+                let m = run_algo(algo, g, name, np, cost, 42);
+                println!(
+                    "{:<22} {:>5} {:>10.2} {:>10.2} {:>10.3} {:>7}  {}",
+                    "", np, m.total_ns as f64 / 1e6, m.comp_ns as f64 / 1e6,
+                    m.comm_ns as f64 / 1e6, m.colors, m.algo
+                );
+            }
+        }
+    }
+
+    // ---------------- Figure 5 ------------------------------------------
+    println!("\n== Fig 5: D1 weak scaling (per-rank workloads) ==");
+    println!("{:>12} {:>5} {:>12} {:>10}", "per_rank", "ranks", "n", "total_ms");
+    for per_rank in [2_000usize, 4_000, 8_000] {
+        for np in [1, 2, 4, 8] {
+            let g = suite::weak_scaling_mesh(per_rank * scale, np);
+            let m = run_algo(Algo::D1RecolorDegree, &g, "hex", np, cost, 42);
+            println!("{:>12} {:>5} {:>12} {:>10.2}", per_rank * scale, np, g.n(), m.total_ns as f64 / 1e6);
+        }
+    }
+
+    // ---------------- Figure 6 ------------------------------------------
+    println!("\n== Fig 6: communication rounds, D1 vs D1-2GL ==");
+    println!("{:>5} {:>14} {:>10}", "ranks", "D1-baseline", "D1-2GL");
+    for np in [2, 4, 8, 16] {
+        let mb = run_algo(Algo::D1Baseline, &queen, "queen-s", np, cost, 42);
+        let m2 = run_algo(Algo::D1TwoGhostLayers, &queen, "queen-s", np, cost, 42);
+        println!("{:>5} {:>14} {:>10}", np, mb.comm_rounds, m2.comm_rounds);
+    }
+
+    // ---------------- Figure 7 ------------------------------------------
+    println!("\n== Fig 7: D2 performance profiles ==");
+    let d2suite = suite::d2_suite(scale);
+    let algos2 = [Algo::D2, Algo::ZoltanD2];
+    let mut t2: Vec<profiles::CostSeries> = algos2
+        .iter()
+        .map(|a| profiles::CostSeries { label: a.label().into(), costs: vec![] })
+        .collect();
+    let mut c2 = t2.clone();
+    for sg in &d2suite {
+        for (i, &a) in algos2.iter().enumerate() {
+            let m = run_algo(a, &sg.graph, sg.name, ranks, cost, 42);
+            assert!(m.proper, "{} on {}", a.label(), sg.name);
+            t2[i].costs.push(m.total_ns as f64);
+            c2[i].costs.push(m.colors as f64);
+        }
+    }
+    println!("-- (a) execution time profile --");
+    print!("{}", profiles::render(&t2, &profiles::default_taus()));
+    println!("-- (b) colors profile --");
+    print!("{}", profiles::render(&c2, &profiles::default_taus()));
+
+    // ---------------- Figures 8–10 ---------------------------------------
+    println!("\n== Fig 8/9: D2 strong scaling + breakdown ==");
+    let bump = suite::d2_suite(scale.max(2)).remove(0).graph;
+    println!("{:>5} {:>10} {:>10} {:>10} {:>7}  algo", "ranks", "total_ms", "comp_ms", "comm_ms", "colors");
+    for np in [1, 2, 4, 8, 16] {
+        for algo in [Algo::D2, Algo::ZoltanD2] {
+            let m = run_algo(algo, &bump, "bump-s", np, cost, 42);
+            println!(
+                "{:>5} {:>10.2} {:>10.2} {:>10.3} {:>7}  {}",
+                np, m.total_ns as f64 / 1e6, m.comp_ns as f64 / 1e6,
+                m.comm_ns as f64 / 1e6, m.colors, m.algo
+            );
+        }
+    }
+    println!("\n== Fig 10: D2 weak scaling ==");
+    for per_rank in [1_000usize, 2_000] {
+        for np in [1, 2, 4, 8] {
+            let g = suite::weak_scaling_mesh(per_rank * scale, np);
+            let m = run_algo(Algo::D2, &g, "hex", np, cost, 42);
+            println!("{:>12} {:>5} {:>12} {:>10.2}", per_rank * scale, np, g.n(), m.total_ns as f64 / 1e6);
+        }
+    }
+
+    // ---------------- Table 2 + Figures 11–12 -----------------------------
+    println!("\n== Table 2 + Fig 11/12: PD2 ==");
+    for (name, class, bg) in suite::pd2_suite(scale) {
+        let s = GraphStats::of(name, class, &bg.graph);
+        println!("{}", s.row());
+        println!("{:>5} {:>10} {:>10} {:>10} {:>7}  algo", "ranks", "total_ms", "comp_ms", "comm_ms", "colors");
+        for np in [1, 2, 4, 8, 16] {
+            for algo in [Algo::PD2, Algo::ZoltanPD2] {
+                let m = run_algo(algo, &bg.graph, name, np, cost, 42);
+                assert!(m.proper);
+                println!(
+                    "{:>5} {:>10.2} {:>10.2} {:>10.3} {:>7}  {}",
+                    np, m.total_ns as f64 / 1e6, m.comp_ns as f64 / 1e6,
+                    m.comm_ns as f64 / 1e6, m.colors, m.algo
+                );
+            }
+        }
+    }
+
+    println!("\npaper_figures OK");
+}

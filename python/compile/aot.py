@@ -1,0 +1,87 @@
+"""AOT driver: lower the L2 round functions to HLO *text* artifacts.
+
+HLO text (NOT `lowered.compile()` / `.serialize()`) is the interchange
+format: jax >= 0.5 emits HloModuleProtos with 64-bit instruction ids which
+xla_extension 0.5.1 (the version the published `xla` 0.1.6 crate binds)
+rejects (`proto.id() <= INT_MAX`).  The HLO text parser reassigns ids, so
+text round-trips cleanly.  See /opt/xla-example/README.md.
+
+One artifact per (function, shape-bucket):
+
+    artifacts/d1_round_n{N}_d{D}.hlo.txt
+    artifacts/d1_full_n{N}_d{D}.hlo.txt
+    artifacts/d2_round_n{N}_d{D}.hlo.txt
+    artifacts/pd2_round_n{N}_d{D}.hlo.txt
+    artifacts/manifest.txt            (one line per artifact: name n dmax)
+
+The Rust runtime (`rust/src/runtime/`) reads the manifest, compiles each
+artifact on the PJRT CPU client lazily, and pads local subgraphs up to the
+smallest fitting bucket.
+"""
+
+import argparse
+import os
+from functools import partial
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# D1 buckets: (N, DMAX). N must be a multiple of the 256-vertex tile.
+D1_BUCKETS = [(256, 16), (1024, 32), (4096, 32)]
+# D2 buckets are smaller: the two-hop gather is [B, D, D].
+D2_BUCKETS = [(256, 8), (1024, 16)]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_one(fn, n, dmax):
+    args = model.example_args(n, dmax)
+    return to_hlo_text(jax.jit(fn).lower(*args))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated artifact-name prefixes to build")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    jobs = []
+    for n, d in D1_BUCKETS:
+        jobs.append((f"d1_round_n{n}_d{d}", model.d1_color_round, n, d))
+        jobs.append((f"d1_full_n{n}_d{d}", model.d1_color_full, n, d))
+    for n, d in D2_BUCKETS:
+        jobs.append((f"d2_round_n{n}_d{d}",
+                     partial(model.d2_color_round, partial_d2=False), n, d))
+        jobs.append((f"pd2_round_n{n}_d{d}",
+                     partial(model.d2_color_round, partial_d2=True), n, d))
+
+    manifest = []
+    for name, fn, n, d in jobs:
+        if args.only and not any(name.startswith(p)
+                                 for p in args.only.split(",")):
+            continue
+        text = lower_one(fn, n, d)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest.append(f"{name} {n} {d}")
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"manifest: {len(manifest)} artifacts")
+
+
+if __name__ == "__main__":
+    main()

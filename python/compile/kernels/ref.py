@@ -1,0 +1,166 @@
+"""Pure-jnp/numpy oracles for the Pallas kernels.
+
+Two levels of reference:
+  * `*_jnp` — vectorized jnp re-implementations of the exact kernel
+    semantics (Jacobi speculation + lower-index-wins uncolor).  The Pallas
+    kernels must match these bit-for-bit.
+  * `serial_greedy*` — plain-python serial greedy, used to check that the
+    *fixed point* of the speculative loop is a proper coloring with a sane
+    number of colors (quality oracle, not bit-equality).
+"""
+
+import numpy as np
+import jax.numpy as jnp
+
+
+def _mix32(x):
+    """lowbias32 — must match vb_bit._mix32 and the rust mix32 exactly."""
+    x = np.asarray(x).astype(np.uint32) if not hasattr(x, "dtype") or not str(x.dtype).startswith("uint") else x
+    x = jnp.asarray(x).astype(jnp.uint32)
+    x = x ^ (x >> 16)
+    x = x * jnp.uint32(0x7FEB352D)
+    x = x ^ (x >> 15)
+    x = x * jnp.uint32(0x846CA68B)
+    return x ^ (x >> 16)
+
+
+def _beats(a, b):
+    pa, pb = _mix32(a), _mix32(b)
+    return (pa < pb) | ((pa == pb) & (jnp.asarray(a) < jnp.asarray(b)))
+
+
+def assign_colors_jnp(adj, colors, mask):
+    """Vectorized reference of vb_bit.assign_colors (D1)."""
+    adj = jnp.asarray(adj)
+    colors = jnp.asarray(colors)
+    mask = jnp.asarray(mask)
+    valid = adj >= 0
+    ncol = jnp.where(valid, colors[jnp.where(valid, adj, 0)], 0)
+    chosen = _smallest_free_jnp(ncol)
+    return jnp.where(mask == 1, chosen, colors)
+
+
+def _smallest_free_jnp(ncol):
+    """Smallest positive color not present in each row of ncol [N, D]."""
+    n, d = ncol.shape
+    # candidate colors 1..d+1 — greedy never needs more
+    cand = jnp.arange(1, d + 2, dtype=jnp.int32)  # [d+1]
+    used = (ncol[:, :, None] == cand[None, None, :]).any(axis=1)  # [N, d+1]
+    return jnp.argmin(used, axis=1).astype(jnp.int32) + 1
+
+
+def detect_conflicts_jnp(adj, colors, mask):
+    """Vectorized reference of vb_bit.detect_conflicts (D1)."""
+    adj = jnp.asarray(adj)
+    colors = jnp.asarray(colors)
+    mask = jnp.asarray(mask)
+    n = colors.shape[0]
+    idx = jnp.arange(n, dtype=jnp.int32)
+    valid = adj >= 0
+    ncol = jnp.where(valid, colors[jnp.where(valid, adj, 0)], 0)
+    loses = valid & (ncol == colors[:, None]) & (colors[:, None] > 0) \
+        & _beats(adj, idx[:, None])
+    return jnp.where(loses.any(axis=1) & (mask == 1), 0, colors)
+
+
+def _two_hop(adj, colors):
+    adj = jnp.asarray(adj)
+    n = adj.shape[0]
+    idx = jnp.arange(n, dtype=jnp.int32)
+    valid1 = adj >= 0
+    safe1 = jnp.where(valid1, adj, 0)
+    adj2 = adj[safe1]  # [N, D, D]
+    valid2 = valid1[:, :, None] & (adj2 >= 0)
+    safe2 = jnp.where(valid2, adj2, 0)
+    ncol2 = jnp.where(valid2, colors[safe2], 0)
+    self2 = adj2 == idx[:, None, None]
+    return valid1, valid2, adj2, ncol2, self2
+
+
+def assign_colors_d2_jnp(adj, colors, mask, *, partial_d2):
+    adj = jnp.asarray(adj)
+    colors = jnp.asarray(colors)
+    mask = jnp.asarray(mask)
+    n, d = adj.shape
+    valid1, valid2, adj2, ncol2, self2 = _two_hop(adj, colors)
+    ncol2 = jnp.where(self2, 0, ncol2).reshape(n, -1)
+    ncol1 = jnp.where(valid1, colors[jnp.where(valid1, adj, 0)], 0)
+    ncol = ncol2 if partial_d2 else jnp.concatenate([ncol1, ncol2], axis=1)
+    chosen = _smallest_free_jnp(ncol)
+    return jnp.where(mask == 1, chosen, colors)
+
+
+def detect_conflicts_d2_jnp(adj, colors, mask, *, partial_d2):
+    adj = jnp.asarray(adj)
+    colors = jnp.asarray(colors)
+    mask = jnp.asarray(mask)
+    n = colors.shape[0]
+    idx = jnp.arange(n, dtype=jnp.int32)
+    valid1, valid2, adj2, ncol2, self2 = _two_hop(adj, colors)
+    colored = colors[:, None] > 0
+    lose2 = (valid2 & ~self2 & (ncol2 == colors[:, None, None])
+             & _beats(adj2, idx[:, None, None]))
+    conflict = lose2.any(axis=(1, 2)) & (colors > 0)
+    if not partial_d2:
+        ncol1 = jnp.where(valid1, colors[jnp.where(valid1, adj, 0)], 0)
+        lose1 = valid1 & (ncol1 == colors[:, None]) & colored \
+            & _beats(adj, idx[:, None])
+        conflict = conflict | lose1.any(axis=1)
+    return jnp.where(conflict & (mask == 1), 0, colors)
+
+
+# ----------------------------------------------------------------------
+# Serial quality oracles (plain python / numpy)
+# ----------------------------------------------------------------------
+
+def serial_greedy(adj):
+    """Serial first-fit greedy over ELL adjacency; returns np.int32[N]."""
+    adj = np.asarray(adj)
+    n = adj.shape[0]
+    colors = np.zeros(n, dtype=np.int32)
+    for v in range(n):
+        used = {int(colors[u]) for u in adj[v] if u >= 0 and colors[u] > 0}
+        c = 1
+        while c in used:
+            c += 1
+        colors[v] = c
+    return colors
+
+
+def is_proper_d1(adj, colors):
+    adj = np.asarray(adj)
+    colors = np.asarray(colors)
+    if (colors <= 0).any():
+        return False
+    for v in range(adj.shape[0]):
+        for u in adj[v]:
+            if u >= 0 and u != v and colors[u] == colors[v]:
+                return False
+    return True
+
+
+def _neigh2(adj, v):
+    out = set()
+    for u in adj[v]:
+        if u < 0:
+            continue
+        for w in adj[u]:
+            if w >= 0 and w != v:
+                out.add(int(w))
+    return out
+
+
+def is_proper_d2(adj, colors, *, partial_d2=False):
+    adj = np.asarray(adj)
+    colors = np.asarray(colors)
+    if (colors <= 0).any():
+        return False
+    for v in range(adj.shape[0]):
+        if not partial_d2:
+            for u in adj[v]:
+                if u >= 0 and u != v and colors[u] == colors[v]:
+                    return False
+        for w in _neigh2(adj, v):
+            if colors[w] == colors[v]:
+                return False
+    return True

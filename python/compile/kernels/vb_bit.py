@@ -1,0 +1,291 @@
+"""L1 Pallas kernels: VB_BIT-style speculative graph coloring on an ELL tile.
+
+TPU rethink of KokkosKernels' CUDA VB_BIT (Deveci et al., IPDPS'16):
+
+  * thread-per-vertex CUDA loop  ->  vertex-tile vectorized over VPU lanes;
+    all B vertices in a tile scan neighbour slot j simultaneously (the ELL
+    transpose of the CUDA neighbour loop).
+  * 32-bit forbidden "color window" in registers  ->  WORDS statically
+    unrolled int32 mask words reduced with bitwise-or over the neighbour
+    axis (lax.reduce).
+  * speculative racy writes + repair  ->  explicit Jacobi speculation: read
+    old colors, write new colors; the conflict kernel then uncolors losers.
+
+Data layout (one shape bucket = one AOT artifact):
+  adj    : int32[N, DMAX]  ELL adjacency, -1 padding
+  colors : int32[N]        0 = uncolored; proper colors are 1-based
+  mask   : int32[N]        1 = vertex must be (re)colored this round
+
+Greedy never needs more than deg(v)+1 <= DMAX+1 colors, so
+WORDS = ceil((DMAX+1)/32) words always suffice — assignment cannot overflow
+the window.
+
+Kernels must be lowered with interpret=True: real TPU lowering emits a
+Mosaic custom-call the CPU PJRT plugin cannot execute.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+
+def words_for(dmax: int) -> int:
+    """Number of 32-bit forbidden words needed for a max degree `dmax`."""
+    return (dmax + 1 + 31) // 32
+
+
+def _mix32(x):
+    """lowbias32 mixer — bit-identical to `dist_color::util::mix32`.
+
+    Local conflict tie-breaking: the endpoint with the larger
+    (mix32(i), i) pair is uncolored.  Hashed priorities keep the Jacobi
+    fixpoint loop at O(log n) expected rounds where a raw-index rule
+    would serialize lattice-ordered graphs into O(diameter) rounds.
+    """
+    x = x.astype(jnp.uint32)
+    x = x ^ (x >> 16)
+    x = x * jnp.uint32(0x7FEB352D)
+    x = x ^ (x >> 15)
+    x = x * jnp.uint32(0x846CA68B)
+    return x ^ (x >> 16)
+
+
+def _beats(a, b):
+    """True where vertex-id array `a` has priority over `b` (keeps color)."""
+    pa, pb = _mix32(a), _mix32(b)
+    return (pa < pb) | ((pa == pb) & (a < b))
+
+
+def _forbidden_words(ncol, words: int):
+    """ncol: int32[..., D] neighbour colors (0 = none).
+
+    Returns list of int32[...] forbidden bitmask words; bit k of word w is
+    set iff some neighbour has color w*32 + k + 1.
+    """
+    out = []
+    for w in range(words):
+        base = w * 32 + 1
+        rel = ncol - base
+        in_w = (rel >= 0) & (rel < 32)
+        bits = jnp.where(in_w, jnp.int32(1) << (rel & 31), jnp.int32(0))
+        word = lax.reduce(bits, jnp.int32(0), lax.bitwise_or, (bits.ndim - 1,))
+        out.append(word)
+    return out
+
+
+def _smallest_free(words_list):
+    """Given forbidden words [B], return smallest 1-based free color [B]."""
+    avails = []
+    bitpos = lax.iota(jnp.int32, 32)
+    for word in words_list:
+        # (word >> k) & 1 == 0  ->  color k+base is free
+        a = ((word[:, None] >> bitpos[None, :]) & 1) == 0
+        avails.append(a)
+    avail = jnp.concatenate(avails, axis=1)  # [B, WORDS*32]
+    first = jnp.argmax(avail, axis=1)  # first free slot; always exists
+    return first.astype(jnp.int32) + 1
+
+
+def _assign_kernel(adj_ref, colors_ref, mask_ref, out_ref, *, words: int):
+    """One speculative assignment pass over a vertex tile."""
+    adj = adj_ref[...]  # [B, D]
+    colors = colors_ref[...]  # [N] (full)
+    mask = mask_ref[...]  # [B]
+    valid = adj >= 0
+    ncol = jnp.where(valid, colors[jnp.where(valid, adj, 0)], 0)
+    fw = _forbidden_words(ncol, words)
+    chosen = _smallest_free(fw)
+    b = pl.program_id(0) * adj.shape[0]
+    old = lax.dynamic_slice(colors, (b,), (adj.shape[0],))
+    out_ref[...] = jnp.where(mask == 1, chosen, old)
+
+
+def _detect_kernel(adj_ref, colors_ref, mask_ref, out_ref):
+    """Local (intra-rank) conflict detection over a vertex tile.
+
+    Vertex i is uncolored iff it is mask-eligible and some
+    *higher-priority* neighbour (hashed-priority order, `_beats`) shares
+    its color — the deterministic Jacobi tie-break that makes the
+    speculative loop converge.  Ghosts and padding (mask == 0) are never
+    uncolored; their colors are pinned by the owning rank, exactly as in
+    the paper's recolor protocol (§3.2).
+    """
+    adj = adj_ref[...]  # [B, D]
+    colors = colors_ref[...]  # [N]
+    mask = mask_ref[...]  # [B]
+    bsz = adj.shape[0]
+    b = pl.program_id(0) * bsz
+    my = lax.dynamic_slice(colors, (b,), (bsz,))  # [B]
+    idx = lax.iota(jnp.int32, bsz) + b  # global vertex ids of tile
+    valid = adj >= 0
+    ncol = jnp.where(valid, colors[jnp.where(valid, adj, 0)], 0)
+    same = valid & (ncol == my[:, None]) & (my[:, None] > 0)
+    loses = same & _beats(adj, idx[:, None])
+    conflict = loses.any(axis=1) & (mask == 1)
+    out_ref[...] = jnp.where(conflict, 0, my)
+
+
+def _gather2(colors, adj, adj_full):
+    """Two-hop neighbour colors: colors[adj_full[adj]] with -1 masking.
+
+    adj:      int32[B, D]   one-hop of the tile
+    adj_full: int32[N, D]   full adjacency
+    returns (valid2, ncol2): bool/int32 [B, D, D]
+    """
+    valid1 = adj >= 0
+    safe1 = jnp.where(valid1, adj, 0)
+    adj2 = adj_full[safe1]  # [B, D, D]
+    valid2 = valid1[:, :, None] & (adj2 >= 0)
+    safe2 = jnp.where(valid2, adj2, 0)
+    ncol2 = jnp.where(valid2, colors[safe2], 0)
+    return valid2, adj2, ncol2
+
+
+def _assign_d2_kernel(adj_ref, adj_full_ref, colors_ref, mask_ref, out_ref,
+                      *, words: int, partial_d2: bool):
+    """Distance-2 speculative assignment (net-/two-hop-based, NB_BIT spirit).
+
+    Forbids colors of the full two-hop neighbourhood; with partial_d2 the
+    one-hop colors are NOT forbidden (partial distance-2 coloring, used for
+    bipartite Jacobian coloring).
+    """
+    adj = adj_ref[...]
+    adj_full = adj_full_ref[...]
+    colors = colors_ref[...]
+    mask = mask_ref[...]
+    bsz = adj.shape[0]
+    b = pl.program_id(0) * bsz
+    idx = lax.iota(jnp.int32, bsz) + b
+
+    valid1 = adj >= 0
+    ncol1 = jnp.where(valid1, colors[jnp.where(valid1, adj, 0)], 0)
+    valid2, adj2, ncol2 = _gather2(colors, adj, adj_full)
+    # exclude self from the two-hop set
+    ncol2 = jnp.where(adj2 == idx[:, None, None], 0, ncol2)
+    ncol2 = ncol2.reshape(bsz, -1)
+
+    if partial_d2:
+        ncol = ncol2
+    else:
+        ncol = jnp.concatenate([ncol1, ncol2], axis=1)
+    fw = _forbidden_words(ncol, words)
+    chosen = _smallest_free(fw)
+    old = lax.dynamic_slice(colors, (b,), (bsz,))
+    out_ref[...] = jnp.where(mask == 1, chosen, old)
+
+
+def _detect_d2_kernel(adj_ref, adj_full_ref, colors_ref, mask_ref, out_ref,
+                      *, partial_d2: bool):
+    """Distance-2 conflict detection: uncolor i iff it is mask-eligible and
+    a lower-indexed vertex within its (partial-)distance-2 neighbourhood
+    shares its color."""
+    adj = adj_ref[...]
+    adj_full = adj_full_ref[...]
+    colors = colors_ref[...]
+    mask = mask_ref[...]
+    bsz = adj.shape[0]
+    b = pl.program_id(0) * bsz
+    my = lax.dynamic_slice(colors, (b,), (bsz,))
+    idx = lax.iota(jnp.int32, bsz) + b
+
+    valid1 = adj >= 0
+    ncol1 = jnp.where(valid1, colors[jnp.where(valid1, adj, 0)], 0)
+    valid2, adj2, ncol2 = _gather2(colors, adj, adj_full)
+    self2 = adj2 == idx[:, None, None]
+
+    colored = my[:, None] > 0
+    lose2 = (valid2 & ~self2 & (ncol2 == my[:, None, None])
+             & _beats(adj2, idx[:, None, None]))
+    conflict = (lose2.any(axis=(1, 2))) & (my > 0)
+    if not partial_d2:
+        lose1 = valid1 & (ncol1 == my[:, None]) & _beats(adj, idx[:, None]) & colored
+        conflict = conflict | lose1.any(axis=1)
+    conflict = conflict & (mask == 1)
+    out_ref[...] = jnp.where(conflict, 0, my)
+
+
+def _tile(n: int) -> int:
+    """Vertex-tile size: one grid step per tile (VMEM-sized on real TPU)."""
+    return min(n, 256)
+
+
+def assign_colors(adj, colors, mask):
+    """Speculative D1 assignment pass. Returns new colors int32[N]."""
+    n, dmax = adj.shape
+    b = _tile(n)
+    words = words_for(dmax)
+    return pl.pallas_call(
+        partial(_assign_kernel, words=words),
+        grid=(n // b,),
+        in_specs=[
+            pl.BlockSpec((b, dmax), lambda i: (i, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((b,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((b,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.int32),
+        interpret=True,
+    )(adj, colors, mask)
+
+
+def detect_conflicts(adj, colors, mask):
+    """D1 local conflict pass: returns colors with losers uncolored."""
+    n, dmax = adj.shape
+    b = _tile(n)
+    return pl.pallas_call(
+        _detect_kernel,
+        grid=(n // b,),
+        in_specs=[
+            pl.BlockSpec((b, dmax), lambda i: (i, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((b,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((b,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.int32),
+        interpret=True,
+    )(adj, colors, mask)
+
+
+def _d2_words(dmax: int) -> int:
+    # Distance-2 greedy needs at most deg2(v)+1 <= DMAX^2 + 1 colors.
+    return (dmax * dmax + 1 + 31) // 32
+
+
+def assign_colors_d2(adj, colors, mask, *, partial_d2: bool):
+    n, dmax = adj.shape
+    b = min(_tile(n), 64)  # [B,D,D] gather; keep tiles small
+    words = _d2_words(dmax)
+    return pl.pallas_call(
+        partial(_assign_d2_kernel, words=words, partial_d2=partial_d2),
+        grid=(n // b,),
+        in_specs=[
+            pl.BlockSpec((b, dmax), lambda i: (i, 0)),
+            pl.BlockSpec((n, dmax), lambda i: (0, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((b,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((b,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.int32),
+        interpret=True,
+    )(adj, adj, colors, mask)
+
+
+def detect_conflicts_d2(adj, colors, mask, *, partial_d2: bool):
+    n, dmax = adj.shape
+    b = min(_tile(n), 64)
+    return pl.pallas_call(
+        partial(_detect_d2_kernel, partial_d2=partial_d2),
+        grid=(n // b,),
+        in_specs=[
+            pl.BlockSpec((b, dmax), lambda i: (i, 0)),
+            pl.BlockSpec((n, dmax), lambda i: (0, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((b,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((b,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.int32),
+        interpret=True,
+    )(adj, adj, colors, mask)

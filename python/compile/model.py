@@ -1,0 +1,84 @@
+"""L2: the per-round local-coloring compute graph.
+
+One `color_round` = speculative assignment (Pallas) + local conflict
+detection (Pallas) + uncolored-count reduction, fused into a single jitted
+function so the Rust coordinator makes exactly one PJRT `execute` call per
+local round.  The Rust side loops until the returned conflict count is zero,
+then runs the paper's *distributed* conflict protocol (Algorithms 3–5) over
+rank boundaries.
+
+A `*_full` variant wraps the round in a lax.while_loop so one PJRT call
+colors the whole local subgraph to fixpoint (ablated against per-round
+dispatch in EXPERIMENTS.md §Perf).
+
+All functions are shape-bucketed: one AOT artifact per (N, DMAX) bucket,
+see aot.py.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import vb_bit
+
+
+def _uncolored(colors, mask):
+    """Count mask-eligible vertices that are still uncolored."""
+    return jnp.sum(((colors == 0) & (mask == 1)).astype(jnp.int32))
+
+
+def d1_color_round(adj, colors, mask):
+    """One distance-1 speculative round.
+
+    Returns (new_colors, uncolored): `uncolored` counts mask-eligible
+    vertices that lost the local tie-break and still need work.
+    """
+    assigned = vb_bit.assign_colors(adj, colors, mask)
+    resolved = vb_bit.detect_conflicts(adj, assigned, mask)
+    return resolved, _uncolored(resolved, mask)
+
+
+def d2_color_round(adj, colors, mask, *, partial_d2=False):
+    """One (partial-)distance-2 speculative round."""
+    assigned = vb_bit.assign_colors_d2(adj, colors, mask,
+                                       partial_d2=partial_d2)
+    resolved = vb_bit.detect_conflicts_d2(adj, assigned, mask,
+                                          partial_d2=partial_d2)
+    return resolved, _uncolored(resolved, mask)
+
+
+def _color_full(round_fn, adj, colors, mask, max_rounds):
+    """Iterate `round_fn` until no mask-eligible vertex is uncolored."""
+    def cond(state):
+        _, unc, it = state
+        return (unc > 0) & (it < max_rounds)
+
+    def body(state):
+        cols, _, it = state
+        m = ((cols == 0) & (mask == 1)).astype(jnp.int32)
+        cols, unc = round_fn(adj, cols, m)
+        return cols, unc, it + 1
+
+    init = (colors, _uncolored(colors, mask), jnp.int32(0))
+    cols, unc, rounds = jax.lax.while_loop(cond, body, init)
+    return cols, unc, rounds
+
+
+def d1_color_full(adj, colors, mask, *, max_rounds=64):
+    """Full local D1 coloring to fixpoint in one executable."""
+    return _color_full(d1_color_round, adj, colors, mask, max_rounds)
+
+
+def d2_color_full(adj, colors, mask, *, partial_d2=False, max_rounds=64):
+    """Full local (partial-)D2 coloring to fixpoint in one executable."""
+    def rf(a, c, m):
+        return d2_color_round(a, c, m, partial_d2=partial_d2)
+    return _color_full(rf, adj, colors, mask, max_rounds)
+
+
+def example_args(n, dmax):
+    """ShapeDtypeStructs for lowering an (n, dmax) bucket."""
+    return (
+        jax.ShapeDtypeStruct((n, dmax), jnp.int32),
+        jax.ShapeDtypeStruct((n,), jnp.int32),
+        jax.ShapeDtypeStruct((n,), jnp.int32),
+    )

@@ -1,0 +1,18 @@
+use crate::graph::{Graph, VId};
+use crate::util::bitset::BitSet;
+
+/// Serial first-fit greedy in natural order (Algorithm 1 of the paper).
+pub fn serial_greedy_natural(g: &Graph) -> Vec<u32> {
+    let mut colors = vec![0u32; g.n()];
+    let mut forbidden = BitSet::with_capacity(64);
+    for v in 0..g.n() as VId {
+        forbidden.clear();
+        for &u in g.neighbors(v) {
+            if colors[u as usize] > 0 {
+                forbidden.set(colors[u as usize] as usize - 1);
+            }
+        }
+        colors[v as usize] = forbidden.first_zero() as u32 + 1;
+    }
+    colors
+}

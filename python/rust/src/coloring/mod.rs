@@ -1,0 +1,3 @@
+pub mod local;
+pub mod validate;
+pub mod distributed;

@@ -1,0 +1,244 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp reference and a serial
+numpy oracle, including hypothesis sweeps over shapes and degrees."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref, vb_bit
+
+
+def random_ell(n_real, n_bucket, dmax, deg, seed):
+    """Random symmetric ELL adjacency over n_real vertices, padded to
+    n_bucket rows."""
+    rng = np.random.default_rng(seed)
+    adj_sets = [set() for _ in range(n_real)]
+    # sample edges until degree budget; keep symmetric
+    attempts = n_real * deg
+    for _ in range(attempts):
+        u, v = rng.integers(0, n_real, 2)
+        if u == v or len(adj_sets[u]) >= dmax or len(adj_sets[v]) >= dmax:
+            continue
+        if v in adj_sets[u]:
+            continue
+        adj_sets[u].add(int(v))
+        adj_sets[v].add(int(u))
+    adj = -np.ones((n_bucket, dmax), dtype=np.int32)
+    for v, s in enumerate(adj_sets):
+        for j, u in enumerate(sorted(s)):
+            adj[v, j] = u
+    return adj
+
+
+def mask_for(n_real, n_bucket):
+    m = np.zeros(n_bucket, dtype=np.int32)
+    m[:n_real] = 1
+    return m
+
+
+# ----------------------------------------------------------------------
+# bit-exactness: pallas kernel == jnp reference
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("n_real,n_bucket,dmax,deg,seed", [
+    (8, 256, 16, 2, 0),
+    (100, 256, 16, 4, 1),
+    (256, 256, 16, 6, 2),
+    (200, 1024, 32, 10, 3),
+])
+def test_assign_matches_ref(n_real, n_bucket, dmax, deg, seed):
+    adj = random_ell(n_real, n_bucket, dmax, deg, seed)
+    mask = mask_for(n_real, n_bucket)
+    colors = np.zeros(n_bucket, dtype=np.int32)
+    got = vb_bit.assign_colors(jnp.asarray(adj), jnp.asarray(colors),
+                               jnp.asarray(mask))
+    want = ref.assign_colors_jnp(adj, colors, mask)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_detect_matches_ref(seed):
+    n_real, n_bucket, dmax = 120, 256, 16
+    adj = random_ell(n_real, n_bucket, dmax, 5, seed)
+    mask = mask_for(n_real, n_bucket)
+    rng = np.random.default_rng(seed)
+    # random (improper) coloring to stress conflict detection
+    colors = np.zeros(n_bucket, dtype=np.int32)
+    colors[:n_real] = rng.integers(1, 4, n_real)
+    got = vb_bit.detect_conflicts(jnp.asarray(adj), jnp.asarray(colors),
+                                  jnp.asarray(mask))
+    want = ref.detect_conflicts_jnp(adj, colors, mask)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("partial", [False, True])
+@pytest.mark.parametrize("seed", range(3))
+def test_d2_round_matches_ref(partial, seed):
+    n_real, n_bucket, dmax = 80, 256, 8
+    adj = random_ell(n_real, n_bucket, dmax, 3, seed)
+    mask = mask_for(n_real, n_bucket)
+    colors = np.zeros(n_bucket, dtype=np.int32)
+    got = vb_bit.assign_colors_d2(jnp.asarray(adj), jnp.asarray(colors),
+                                  jnp.asarray(mask), partial_d2=partial)
+    want = ref.assign_colors_d2_jnp(adj, colors, mask, partial_d2=partial)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # then detection over the (possibly conflicted) assignment
+    got2 = vb_bit.detect_conflicts_d2(jnp.asarray(adj), got,
+                                      jnp.asarray(mask), partial_d2=partial)
+    want2 = ref.detect_conflicts_d2_jnp(adj, np.asarray(want), mask,
+                                        partial_d2=partial)
+    np.testing.assert_array_equal(np.asarray(got2), np.asarray(want2))
+
+
+# ----------------------------------------------------------------------
+# fixpoint properness: full rounds end in a proper coloring
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("n_real,dmax,deg,seed", [
+    (64, 16, 3, 0),
+    (200, 16, 6, 1),
+    (256, 16, 8, 2),
+])
+def test_d1_fixpoint_proper(n_real, dmax, deg, seed):
+    n_bucket = 256
+    adj = random_ell(n_real, n_bucket, dmax, deg, seed)
+    mask = mask_for(n_real, n_bucket)
+    colors = jnp.zeros(n_bucket, dtype=jnp.int32)
+    for _ in range(200):
+        colors, unc = model.d1_color_round(jnp.asarray(adj), colors,
+                                           jnp.asarray(mask))
+        if int(unc) == 0:
+            break
+    cols = np.asarray(colors)
+    assert int(unc) == 0
+    assert ref.is_proper_d1(adj[:n_real], cols[:n_real])
+    # greedy bound
+    degs = (adj[:n_real] >= 0).sum(axis=1)
+    assert cols[:n_real].max() <= degs.max() + 1
+
+
+def test_d1_full_while_loop_matches_round_loop():
+    n_bucket, dmax = 256, 16
+    adj = random_ell(150, n_bucket, dmax, 5, 7)
+    mask = mask_for(150, n_bucket)
+    colors = jnp.zeros(n_bucket, dtype=jnp.int32)
+    c1, unc, rounds = model.d1_color_full(jnp.asarray(adj), colors,
+                                          jnp.asarray(mask))
+    c2 = jnp.zeros(n_bucket, dtype=jnp.int32)
+    for _ in range(int(rounds)):
+        c2, _ = model.d1_color_round(jnp.asarray(adj), c2, jnp.asarray(
+            ((np.asarray(c2) == 0) & (mask == 1)).astype(np.int32)))
+    assert int(unc) == 0
+    np.testing.assert_array_equal(np.asarray(c1), np.asarray(c2))
+
+
+@pytest.mark.parametrize("partial", [False, True])
+def test_d2_fixpoint_proper(partial):
+    n_real, n_bucket, dmax = 100, 256, 8
+    adj = random_ell(n_real, n_bucket, dmax, 3, 11)
+    mask = mask_for(n_real, n_bucket)
+    colors = jnp.zeros(n_bucket, dtype=jnp.int32)
+    for _ in range(300):
+        colors, unc = model.d2_color_round(jnp.asarray(adj), colors,
+                                           jnp.asarray(mask),
+                                           partial_d2=partial)
+        if int(unc) == 0:
+            break
+    cols = np.asarray(colors)
+    assert int(unc) == 0
+    assert ref.is_proper_d2(adj[:n_real], cols[:n_real], partial_d2=partial)
+
+
+# ----------------------------------------------------------------------
+# pinned ghosts / padding never move
+# ----------------------------------------------------------------------
+
+def test_ghosts_are_respected_and_never_modified():
+    # path 0-1-2 where 1 is a pinned ghost with color 1
+    n_bucket, dmax = 256, 16
+    adj = -np.ones((n_bucket, dmax), dtype=np.int32)
+    adj[0, 0] = 1
+    adj[1, :2] = [0, 2]
+    adj[2, 0] = 1
+    colors = np.zeros(n_bucket, dtype=np.int32)
+    colors[1] = 1
+    mask = np.zeros(n_bucket, dtype=np.int32)
+    mask[0] = mask[2] = 1
+    out, unc = model.d1_color_round(jnp.asarray(adj), jnp.asarray(colors),
+                                    jnp.asarray(mask))
+    out = np.asarray(out)
+    assert int(unc) == 0
+    assert out[1] == 1          # ghost untouched
+    assert out[0] == 2 and out[2] == 2  # avoid ghost color
+
+
+def test_padding_rows_stay_zero():
+    adj = random_ell(50, 256, 16, 4, 3)
+    mask = mask_for(50, 256)
+    colors = jnp.zeros(256, dtype=jnp.int32)
+    out, _, _ = model.d1_color_full(jnp.asarray(adj), colors,
+                                    jnp.asarray(mask))
+    assert (np.asarray(out)[50:] == 0).all()
+
+
+# ----------------------------------------------------------------------
+# hypothesis sweeps
+# ----------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n_real=st.integers(min_value=2, max_value=256),
+    deg=st.integers(min_value=1, max_value=8),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_property_d1_assign_matches_ref(n_real, deg, seed):
+    adj = random_ell(n_real, 256, 16, deg, seed)
+    mask = mask_for(n_real, 256)
+    rng = np.random.default_rng(seed)
+    colors = np.zeros(256, dtype=np.int32)
+    # random partial pre-coloring
+    pre = rng.random(n_real) < 0.3
+    colors[:n_real][pre] = rng.integers(1, 6, pre.sum())
+    mask2 = mask.copy()
+    mask2[:n_real][pre] = 0
+    got = vb_bit.assign_colors(jnp.asarray(adj), jnp.asarray(colors),
+                               jnp.asarray(mask2))
+    want = ref.assign_colors_jnp(adj, colors, mask2)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n_real=st.integers(min_value=2, max_value=120),
+    deg=st.integers(min_value=1, max_value=6),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_property_d1_fixpoint_proper_and_greedy_bounded(n_real, deg, seed):
+    adj = random_ell(n_real, 256, 16, deg, seed)
+    mask = mask_for(n_real, 256)
+    cols, unc, _ = model.d1_color_full(jnp.asarray(adj),
+                                       jnp.zeros(256, dtype=jnp.int32),
+                                       jnp.asarray(mask))
+    cols = np.asarray(cols)
+    assert int(unc) == 0
+    assert ref.is_proper_d1(adj[:n_real], cols[:n_real])
+    degs = (adj[:n_real] >= 0).sum(axis=1)
+    assert cols[:n_real].max() <= max(int(degs.max()), 0) + 1
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    n_real=st.integers(min_value=2, max_value=64),
+    seed=st.integers(min_value=0, max_value=2**31),
+    partial=st.booleans(),
+)
+def test_property_d2_round_matches_ref(n_real, seed, partial):
+    adj = random_ell(n_real, 256, 8, 2, seed)
+    mask = mask_for(n_real, 256)
+    colors = np.zeros(256, dtype=np.int32)
+    got = vb_bit.assign_colors_d2(jnp.asarray(adj), jnp.asarray(colors),
+                                  jnp.asarray(mask), partial_d2=partial)
+    want = ref.assign_colors_d2_jnp(adj, colors, mask, partial_d2=partial)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))

@@ -1,0 +1,88 @@
+"""L2/AOT tests: shapes, lowering, HLO-text artifact sanity."""
+
+import os
+import tempfile
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, model
+
+
+def test_example_args_shapes():
+    a, c, m = model.example_args(256, 16)
+    assert a.shape == (256, 16) and a.dtype == jnp.int32
+    assert c.shape == (256,) and m.shape == (256,)
+
+
+@pytest.mark.parametrize("n,d", aot.D1_BUCKETS)
+def test_d1_round_lowers_to_hlo_text(n, d):
+    text = aot.lower_one(model.d1_color_round, n, d)
+    assert "ENTRY" in text
+    assert "HloModule" in text
+
+
+@pytest.mark.parametrize("n,d", aot.D2_BUCKETS)
+def test_d2_round_lowers_to_hlo_text(n, d):
+    from functools import partial
+    text = aot.lower_one(partial(model.d2_color_round, partial_d2=False), n, d)
+    assert "ENTRY" in text
+
+
+def test_d1_full_contains_while_loop():
+    text = aot.lower_one(model.d1_color_full, 256, 16)
+    assert "while" in text
+
+
+def test_round_outputs_are_tupled_pair():
+    lowered = jax.jit(model.d1_color_round).lower(*model.example_args(256, 16))
+    # output: (colors, uncolored)
+    out = lowered.out_info
+    flat = jax.tree_util.tree_leaves(out)
+    assert len(flat) == 2
+    assert flat[0].shape == (256,)
+    assert flat[1].shape == ()
+
+
+def test_aot_main_writes_manifest(tmp_path=None):
+    with tempfile.TemporaryDirectory() as d:
+        import sys
+        argv = sys.argv
+        sys.argv = ["aot", "--out-dir", d, "--only", "d1_round_n256"]
+        try:
+            aot.main()
+        finally:
+            sys.argv = argv
+        files = os.listdir(d)
+        assert "manifest.txt" in files
+        assert "d1_round_n256_d16.hlo.txt" in files
+        manifest = open(os.path.join(d, "manifest.txt")).read().split()
+        assert manifest[0] == "d1_round_n256_d16"
+        assert manifest[1] == "256" and manifest[2] == "16"
+
+
+def test_round_is_jit_idempotent_on_fixpoint():
+    # running a round on an already-proper coloring changes nothing
+    n, dmax = 256, 16
+    adj = -np.ones((n, dmax), dtype=np.int32)
+    adj[0, 0], adj[1, 0] = 1, 0
+    mask = np.zeros(n, dtype=np.int32)
+    mask[:2] = 1
+    colors = np.zeros(n, dtype=np.int32)
+    colors[:2] = [1, 2]
+    # mask selects only uncolored vertices => nothing to do
+    m2 = ((colors == 0) & (mask == 1)).astype(np.int32)
+    out, unc = model.d1_color_round(jnp.asarray(adj), jnp.asarray(colors),
+                                    jnp.asarray(m2))
+    assert int(unc) == 0
+    np.testing.assert_array_equal(np.asarray(out), colors)
+
+
+def test_words_for_bounds():
+    from compile.kernels.vb_bit import words_for
+    assert words_for(16) == 1   # 17 colors fit in 32 bits
+    assert words_for(31) == 1
+    assert words_for(32) == 2
+    assert words_for(63) == 2

@@ -1,0 +1,55 @@
+//! Figure 10: D2 weak scaling on the hexahedral meshes (same workloads
+//! as Fig 5, distance-2 flavor).
+//!
+//! Env: BENCH_PERRANK (default "1000,2000,4000"), BENCH_MAXRANKS (16).
+
+use dist_color::bench::{run_algo, suite, write_csv, Algo, Measurement};
+use dist_color::distributed::CostModel;
+
+fn main() {
+    let per_ranks: Vec<usize> = std::env::var("BENCH_PERRANK")
+        .unwrap_or_else(|_| "1000,2000,4000".into())
+        .split(',')
+        .map(|s| s.trim().parse().expect("bad BENCH_PERRANK"))
+        .collect();
+    let maxranks: usize =
+        std::env::var("BENCH_MAXRANKS").ok().and_then(|s| s.parse().ok()).unwrap_or(16);
+    let cost = CostModel::default();
+
+    println!("== Fig 10: D2 weak scaling ==");
+    println!(
+        "{:>10} {:>6} {:>12} {:>10} {:>10} {:>10} {:>7}",
+        "per_rank", "ranks", "n", "total_ms", "comp_ms", "comm_ms", "colors"
+    );
+    let mut rows: Vec<Measurement> = Vec::new();
+    for &per_rank in &per_ranks {
+        let mut first_total = None;
+        let mut ranks = 1usize;
+        while ranks <= maxranks {
+            let g = suite::weak_scaling_mesh(per_rank, ranks);
+            let m = run_algo(Algo::D2, &g, &format!("hex-{per_rank}"), ranks, cost, 42);
+            assert!(m.proper);
+            println!(
+                "{:>10} {:>6} {:>12} {:>10.2} {:>10.2} {:>10.3} {:>7}",
+                per_rank,
+                ranks,
+                g.n(),
+                m.total_ns as f64 / 1e6,
+                m.comp_ns as f64 / 1e6,
+                m.comm_ns as f64 / 1e6,
+                m.colors
+            );
+            first_total.get_or_insert(m.total_ns);
+            rows.push(m);
+            ranks *= 2;
+        }
+        let last = rows.last().unwrap();
+        println!(
+            "  weak-scaling efficiency at {} ranks: {:.0}%\n",
+            last.nranks,
+            first_total.unwrap() as f64 / last.total_ns as f64 * 100.0
+        );
+    }
+    let path = write_csv("fig10_d2_weak_scaling", &rows).unwrap();
+    println!("wrote {}", path.display());
+}

@@ -1,0 +1,65 @@
+//! Figures 11 and 12 (+ Table 2): PD2 strong scaling on the Hamrle3 and
+//! patents surrogates vs Zoltan, with comm/comp breakdown.
+//!
+//! Env: BENCH_SCALE (default 2), BENCH_MAXRANKS (default 32).
+
+use dist_color::bench::{run_algo, suite, write_csv, Algo, Measurement};
+use dist_color::distributed::CostModel;
+use dist_color::graph::stats::GraphStats;
+
+fn main() {
+    let scale: usize =
+        std::env::var("BENCH_SCALE").ok().and_then(|s| s.parse().ok()).unwrap_or(2);
+    let maxranks: usize =
+        std::env::var("BENCH_MAXRANKS").ok().and_then(|s| s.parse().ok()).unwrap_or(32);
+    let cost = CostModel::default();
+
+    println!("== Table 2: PD2 bipartite inputs ==");
+    println!("{}", GraphStats::header());
+    let graphs = suite::pd2_suite(scale);
+    for (name, class, bg) in &graphs {
+        println!("{}", GraphStats::of(name, class, &bg.graph).row());
+    }
+
+    let mut rows: Vec<Measurement> = Vec::new();
+    for (name, _, bg) in &graphs {
+        println!("\n== Fig 11/12: PD2 strong scaling, {name} ==");
+        println!(
+            "{:>5} {:>12} {:>10} {:>10} {:>10} {:>7} {:>7}",
+            "ranks", "algo", "total_ms", "comp_ms", "comm_ms", "colors", "rounds"
+        );
+        let mut ranks = 1usize;
+        while ranks <= maxranks {
+            for algo in [Algo::PD2, Algo::ZoltanPD2] {
+                let m = run_algo(algo, &bg.graph, name, ranks, cost, 42);
+                assert!(m.proper);
+                println!(
+                    "{:>5} {:>12} {:>10.2} {:>10.2} {:>10.3} {:>7} {:>7}",
+                    ranks,
+                    m.algo,
+                    m.total_ns as f64 / 1e6,
+                    m.comp_ns as f64 / 1e6,
+                    m.comm_ns as f64 / 1e6,
+                    m.colors,
+                    m.comm_rounds
+                );
+                rows.push(m);
+            }
+            ranks *= 2;
+        }
+        let ours: Vec<&Measurement> =
+            rows.iter().filter(|m| m.algo == "PD2" && &m.graph == name).collect();
+        let zol: Vec<&Measurement> =
+            rows.iter().filter(|m| m.algo == "Zoltan-PD2" && &m.graph == name).collect();
+        let last = ours.len() - 1;
+        println!(
+            "colors: ours {} vs zoltan {} (paper: PD2 within 10%); \
+             self-speedup vs 1 rank {:.2}x (paper: 1.73x patents, ~1x Hamrle3)",
+            ours[last].colors,
+            zol[last].colors,
+            ours[0].total_ns as f64 / ours[last].total_ns as f64,
+        );
+    }
+    let path = write_csv("fig11_pd2_strong_scaling", &rows).unwrap();
+    println!("\nwrote {}", path.display());
+}

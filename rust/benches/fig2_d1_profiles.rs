@@ -1,0 +1,88 @@
+//! Figure 2: performance profiles of D1-baseline vs D1-recolor-degree vs
+//! Zoltan over the Table-1 suite — (a) execution time, (b) colors.
+//! Also prints the §5.1 headline numbers (best-fractions, mean color
+//! reduction from recolor-degrees).
+//!
+//! Env: BENCH_SCALE (default 2), BENCH_RANKS (default 16), BENCH_REPS
+//! (default 3 — the paper averages five runs).
+
+use dist_color::bench::{profiles, run_algo, suite, write_csv, Algo, Measurement};
+use dist_color::distributed::CostModel;
+
+fn main() {
+    let scale: usize =
+        std::env::var("BENCH_SCALE").ok().and_then(|s| s.parse().ok()).unwrap_or(2);
+    let ranks: usize =
+        std::env::var("BENCH_RANKS").ok().and_then(|s| s.parse().ok()).unwrap_or(16);
+    let reps: usize =
+        std::env::var("BENCH_REPS").ok().and_then(|s| s.parse().ok()).unwrap_or(3);
+    let cost = CostModel::default();
+    let algos = [Algo::D1Baseline, Algo::D1RecolorDegree, Algo::ZoltanD1];
+
+    let graphs = suite::d1_suite(scale);
+    println!("== Fig 2: D1 profiles over {} graphs, {ranks} ranks, {reps} reps ==", graphs.len());
+
+    let mut time_series: Vec<profiles::CostSeries> = algos
+        .iter()
+        .map(|a| profiles::CostSeries { label: a.label().into(), costs: vec![] })
+        .collect();
+    let mut color_series = time_series.clone();
+    let mut rows: Vec<Measurement> = Vec::new();
+
+    for sg in &graphs {
+        for (i, &algo) in algos.iter().enumerate() {
+            // average over reps (paper: average of five runs)
+            let mut t = 0f64;
+            let mut c = 0f64;
+            let mut last = None;
+            for rep in 0..reps {
+                let m = run_algo(algo, &sg.graph, sg.name, ranks, cost, 42 + rep as u64);
+                assert!(m.proper, "{} on {}", algo.label(), sg.name);
+                t += m.total_ns as f64;
+                c += m.colors as f64;
+                last = Some(m);
+            }
+            time_series[i].costs.push(t / reps as f64);
+            color_series[i].costs.push(c / reps as f64);
+            rows.push(last.unwrap());
+        }
+    }
+
+    println!("\n-- (a) execution time profile --");
+    print!("{}", profiles::render(&time_series, &profiles::default_taus()));
+    println!("\n-- (b) number-of-colors profile --");
+    print!("{}", profiles::render(&color_series, &profiles::default_taus()));
+
+    println!("\n-- headline checks vs paper §5.1 --");
+    for (label, frac) in profiles::best_fraction(&time_series) {
+        println!("time-best fraction   {label:<20} {:.0}%  (paper: RD 60%, base 26%, Zoltan 13%)", frac * 100.0);
+    }
+    for (label, frac) in profiles::best_fraction(&color_series) {
+        println!("colors-best fraction {label:<20} {:.0}%  (paper: Zoltan/RD each 53%)", frac * 100.0);
+    }
+    let mean_reduction: f64 = color_series[0]
+        .costs
+        .iter()
+        .zip(&color_series[1].costs)
+        .map(|(b, r)| 1.0 - r / b)
+        .sum::<f64>()
+        / color_series[0].costs.len() as f64;
+    println!(
+        "recolor-degrees mean color reduction vs baseline: {:.1}% (paper: 8.9%)",
+        mean_reduction * 100.0
+    );
+    let mean_speedup: f64 = time_series[0]
+        .costs
+        .iter()
+        .zip(&time_series[1].costs)
+        .map(|(b, r)| b / r)
+        .sum::<f64>()
+        / time_series[0].costs.len() as f64;
+    println!(
+        "recolor-degrees mean speedup vs baseline: {:.2}x (paper: ~1.07x)",
+        mean_speedup
+    );
+
+    let path = write_csv("fig2_d1_profiles", &rows).unwrap();
+    println!("\nwrote {}", path.display());
+}

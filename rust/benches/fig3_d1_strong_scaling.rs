@@ -1,0 +1,71 @@
+//! Figures 3 and 4: D1 strong scaling on a PDE mesh and a social graph,
+//! ours vs Zoltan, with the communication/computation breakdown.
+//!
+//! Env: BENCH_SCALE (default 4), BENCH_MAXRANKS (default 32).
+
+use dist_color::bench::{run_algo, write_csv, Algo, Measurement};
+use dist_color::distributed::CostModel;
+use dist_color::graph::generators::{ba, mesh};
+
+fn main() {
+    let scale: usize =
+        std::env::var("BENCH_SCALE").ok().and_then(|s| s.parse().ok()).unwrap_or(4);
+    let maxranks: usize =
+        std::env::var("BENCH_MAXRANKS").ok().and_then(|s| s.parse().ok()).unwrap_or(32);
+    let cost = CostModel::default();
+
+    // Queen_4147 surrogate (largest PDE) and com-Friendster surrogate
+    // (largest social) — the two graphs Fig. 3 presents.
+    let queen = mesh::hex_mesh(16 * scale, 16, 12);
+    let friendster = ba::preferential_attachment(8_000 * scale, 8, 13);
+
+    let mut rows: Vec<Measurement> = Vec::new();
+    for (name, g) in [("queen4147-s", &queen), ("friendster-s", &friendster)] {
+        println!(
+            "== Fig 3/4: {name} (n={} m={}) ==",
+            g.n(),
+            g.m()
+        );
+        println!(
+            "{:>5} {:>20} {:>10} {:>10} {:>10} {:>7} {:>7}",
+            "ranks", "algo", "total_ms", "comp_ms", "comm_ms", "colors", "rounds"
+        );
+        let mut ranks = 1usize;
+        while ranks <= maxranks {
+            for algo in [Algo::D1RecolorDegree, Algo::ZoltanD1] {
+                let m = run_algo(algo, g, name, ranks, cost, 42);
+                assert!(m.proper);
+                println!(
+                    "{:>5} {:>20} {:>10.2} {:>10.2} {:>10.3} {:>7} {:>7}",
+                    ranks,
+                    m.algo,
+                    m.total_ns as f64 / 1e6,
+                    m.comp_ns as f64 / 1e6,
+                    m.comm_ns as f64 / 1e6,
+                    m.colors,
+                    m.comm_rounds
+                );
+                rows.push(m);
+            }
+            ranks *= 2;
+        }
+        // shape checks vs paper: ours faster than Zoltan at scale on both
+        let ours_last = rows
+            .iter()
+            .rev()
+            .find(|m| m.algo == "D1-recolor-degree" && m.graph == name)
+            .unwrap();
+        let zol_last = rows
+            .iter()
+            .rev()
+            .find(|m| m.algo == "Zoltan-D1" && m.graph == name)
+            .unwrap();
+        println!(
+            "at {} ranks: ours/zoltan speedup = {:.2}x (paper: 1.75x Queen, 4.6x Friendster)\n",
+            ours_last.nranks,
+            zol_last.total_ns as f64 / ours_last.total_ns as f64
+        );
+    }
+    let path = write_csv("fig3_d1_strong_scaling", &rows).unwrap();
+    println!("wrote {}", path.display());
+}

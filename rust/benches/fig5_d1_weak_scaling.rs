@@ -1,0 +1,56 @@
+//! Figure 5: D1 weak scaling on 3D hexahedral meshes with fixed per-rank
+//! workloads (the paper's 12.5M–100M vertices per GPU, scaled down).
+//!
+//! Env: BENCH_PERRANK (comma list, default "2000,4000,8000,16000"),
+//! BENCH_MAXRANKS (default 32).
+
+use dist_color::bench::{run_algo, suite, write_csv, Algo, Measurement};
+use dist_color::distributed::CostModel;
+
+fn main() {
+    let per_ranks: Vec<usize> = std::env::var("BENCH_PERRANK")
+        .unwrap_or_else(|_| "2000,4000,8000,16000".into())
+        .split(',')
+        .map(|s| s.trim().parse().expect("bad BENCH_PERRANK"))
+        .collect();
+    let maxranks: usize =
+        std::env::var("BENCH_MAXRANKS").ok().and_then(|s| s.parse().ok()).unwrap_or(32);
+    let cost = CostModel::default();
+
+    println!("== Fig 5: D1 weak scaling (slab-partitioned hex meshes) ==");
+    println!(
+        "{:>10} {:>6} {:>12} {:>10} {:>10} {:>10} {:>7}",
+        "per_rank", "ranks", "n", "total_ms", "comp_ms", "comm_ms", "rounds"
+    );
+    let mut rows: Vec<Measurement> = Vec::new();
+    for &per_rank in &per_ranks {
+        let mut ranks = 1usize;
+        let mut first_total = None;
+        while ranks <= maxranks {
+            let g = suite::weak_scaling_mesh(per_rank, ranks);
+            let m = run_algo(Algo::D1RecolorDegree, &g, &format!("hex-{per_rank}"), ranks, cost, 42);
+            assert!(m.proper);
+            println!(
+                "{:>10} {:>6} {:>12} {:>10.2} {:>10.2} {:>10.3} {:>7}",
+                per_rank,
+                ranks,
+                g.n(),
+                m.total_ns as f64 / 1e6,
+                m.comp_ns as f64 / 1e6,
+                m.comm_ns as f64 / 1e6,
+                m.comm_rounds
+            );
+            first_total.get_or_insert(m.total_ns);
+            rows.push(m);
+            ranks *= 2;
+        }
+        let last = rows.last().unwrap();
+        println!(
+            "  weak-scaling efficiency at {} ranks: {:.0}% (flat is ideal)\n",
+            last.nranks,
+            first_total.unwrap() as f64 / last.total_ns as f64 * 100.0
+        );
+    }
+    let path = write_csv("fig5_d1_weak_scaling", &rows).unwrap();
+    println!("wrote {}", path.display());
+}

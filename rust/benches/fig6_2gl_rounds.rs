@@ -1,0 +1,88 @@
+//! Figure 6: number of communication rounds, D1-baseline vs D1-2GL, on
+//! the Queen_4147 surrogate from 2 to 128 ranks — plus the §5.4 trade-off
+//! check that 2GL moves *more bytes per round* (and the high-latency
+//! interconnect scenario where 2GL pays off end-to-end).
+//!
+//! Env: BENCH_SCALE (default 4), BENCH_MAXRANKS (default 32).
+
+use dist_color::bench::{run_algo, write_csv, Algo, Measurement};
+use dist_color::coloring::distributed::{color_distributed, DistConfig, NativeBackend};
+use dist_color::coloring::Problem;
+use dist_color::distributed::CostModel;
+use dist_color::graph::generators::mesh;
+use dist_color::partition;
+
+fn main() {
+    let scale: usize =
+        std::env::var("BENCH_SCALE").ok().and_then(|s| s.parse().ok()).unwrap_or(4);
+    let maxranks: usize =
+        std::env::var("BENCH_MAXRANKS").ok().and_then(|s| s.parse().ok()).unwrap_or(32);
+    let queen = mesh::hex_mesh(16 * scale, 16, 12);
+    let cost = CostModel::default();
+
+    println!("== Fig 6: comm rounds D1-baseline vs D1-2GL (queen surrogate, n={}) ==", queen.n());
+    println!(
+        "{:>6} {:>14} {:>10} {:>14} {:>12}",
+        "ranks", "base_rounds", "2gl_rounds", "base_bytes", "2gl_bytes"
+    );
+    let mut rows: Vec<Measurement> = Vec::new();
+    let mut ranks = 2usize;
+    let mut reduced = 0usize;
+    let mut total = 0usize;
+    while ranks <= maxranks {
+        let part = partition::edge_balanced(&queen, ranks);
+        let base_cfg = DistConfig {
+            problem: Problem::D1,
+            recolor_degrees: false,
+            two_ghost_layers: false,
+            ..Default::default()
+        };
+        let tgl_cfg = DistConfig { two_ghost_layers: true, ..base_cfg };
+        let rb = color_distributed(&queen, &part, base_cfg, cost, &NativeBackend(base_cfg.kernel));
+        let r2 = color_distributed(&queen, &part, tgl_cfg, cost, &NativeBackend(tgl_cfg.kernel));
+        println!(
+            "{:>6} {:>14} {:>10} {:>14} {:>12}",
+            ranks, rb.stats.comm_rounds, r2.stats.comm_rounds, rb.stats.bytes, r2.stats.bytes
+        );
+        total += 1;
+        if r2.stats.comm_rounds <= rb.stats.comm_rounds {
+            reduced += 1;
+        }
+        rows.push(run_algo(Algo::D1Baseline, &queen, "queen-s", ranks, cost, 42));
+        rows.push(run_algo(Algo::D1TwoGhostLayers, &queen, "queen-s", ranks, cost, 42));
+        ranks *= 2;
+    }
+    println!(
+        "\n2GL matched-or-reduced rounds in {reduced}/{total} configs \
+         (paper: ~25% round reduction at 128 ranks, but higher per-round cost)"
+    );
+
+    // §5.4: "in distributed systems with much higher latency costs,
+    // D1-2GL could be beneficial" — verify with the high-latency model.
+    println!("\n-- high-latency interconnect (50us alpha) end-to-end --");
+    println!("{:>6} {:>14} {:>12}", "ranks", "base_ms", "2gl_ms");
+    let hl = CostModel::high_latency();
+    let mut ranks = 8usize;
+    while ranks <= maxranks {
+        let part = partition::edge_balanced(&queen, ranks);
+        let base_cfg = DistConfig {
+            problem: Problem::D1,
+            recolor_degrees: false,
+            two_ghost_layers: false,
+            ..Default::default()
+        };
+        let tgl_cfg = DistConfig { two_ghost_layers: true, ..base_cfg };
+        let rb = color_distributed(&queen, &part, base_cfg, hl, &NativeBackend(base_cfg.kernel));
+        let r2 = color_distributed(&queen, &part, tgl_cfg, hl, &NativeBackend(tgl_cfg.kernel));
+        println!(
+            "{:>6} {:>14.2} {:>12.2}",
+            ranks,
+            rb.stats.total_ns() as f64 / 1e6,
+            r2.stats.total_ns() as f64 / 1e6
+        );
+        ranks *= 2;
+    }
+
+    let path = write_csv("fig6_2gl_rounds", &rows).unwrap();
+    println!("wrote {}", path.display());
+}

@@ -1,0 +1,59 @@
+//! Figure 7: D2 performance profiles — our D2 vs Zoltan's distance-2
+//! over the 8-graph subset, (a) time and (b) colors.
+//!
+//! Env: BENCH_SCALE (default 2), BENCH_RANKS (default 16).
+
+use dist_color::bench::{profiles, run_algo, suite, write_csv, Algo, Measurement};
+use dist_color::distributed::CostModel;
+
+fn main() {
+    let scale: usize =
+        std::env::var("BENCH_SCALE").ok().and_then(|s| s.parse().ok()).unwrap_or(2);
+    let ranks: usize =
+        std::env::var("BENCH_RANKS").ok().and_then(|s| s.parse().ok()).unwrap_or(16);
+    let cost = CostModel::default();
+    let algos = [Algo::D2, Algo::ZoltanD2];
+
+    let graphs = suite::d2_suite(scale);
+    println!("== Fig 7: D2 profiles over {} graphs, {ranks} ranks ==", graphs.len());
+
+    let mut tser: Vec<profiles::CostSeries> = algos
+        .iter()
+        .map(|a| profiles::CostSeries { label: a.label().into(), costs: vec![] })
+        .collect();
+    let mut cser = tser.clone();
+    let mut rows: Vec<Measurement> = Vec::new();
+
+    for sg in &graphs {
+        for (i, &algo) in algos.iter().enumerate() {
+            let m = run_algo(algo, &sg.graph, sg.name, ranks, cost, 42);
+            assert!(m.proper, "{} on {}", algo.label(), sg.name);
+            tser[i].costs.push(m.total_ns as f64);
+            cser[i].costs.push(m.colors as f64);
+            rows.push(m);
+        }
+    }
+
+    println!("\n-- (a) execution time profile --");
+    print!("{}", profiles::render(&tser, &profiles::default_taus()));
+    println!("\n-- (b) colors profile --");
+    print!("{}", profiles::render(&cser, &profiles::default_taus()));
+
+    for (label, frac) in profiles::best_fraction(&tser) {
+        println!("time-best fraction {label:<12} {:.0}% (paper: D2 wins all but two graphs)", frac * 100.0);
+    }
+    for (label, frac) in profiles::best_fraction(&cser) {
+        println!("colors-best fraction {label:<12} {:.0}% (paper: each best on half)", frac * 100.0);
+    }
+    // best-case speedup headline (paper: 8.5x on Queen_4147)
+    let best_speedup = tser[1]
+        .costs
+        .iter()
+        .zip(&tser[0].costs)
+        .map(|(z, d)| z / d)
+        .fold(f64::MIN, f64::max);
+    println!("best-case D2 speedup over Zoltan: {best_speedup:.1}x (paper: 8.5x)");
+
+    let path = write_csv("fig7_d2_profiles", &rows).unwrap();
+    println!("wrote {}", path.display());
+}

@@ -1,0 +1,61 @@
+//! Figures 8 and 9: D2 strong scaling on Bump_2911 and Queen_4147
+//! surrogates vs Zoltan, with comm/comp breakdown.
+//!
+//! Env: BENCH_SCALE (default 3), BENCH_MAXRANKS (default 32).
+
+use dist_color::bench::{run_algo, write_csv, Algo, Measurement};
+use dist_color::distributed::CostModel;
+use dist_color::graph::generators::mesh;
+
+fn main() {
+    let scale: usize =
+        std::env::var("BENCH_SCALE").ok().and_then(|s| s.parse().ok()).unwrap_or(3);
+    let maxranks: usize =
+        std::env::var("BENCH_MAXRANKS").ok().and_then(|s| s.parse().ok()).unwrap_or(32);
+    let cost = CostModel::default();
+
+    let bump = mesh::hex_mesh(10 * scale, 10, 8);
+    let queen = mesh::hex_mesh(12 * scale, 12, 10);
+
+    let mut rows: Vec<Measurement> = Vec::new();
+    for (name, g) in [("bump2911-s", &bump), ("queen4147-s", &queen)] {
+        println!("== Fig 8/9: D2 strong scaling, {name} (n={} m={}) ==", g.n(), g.m());
+        println!(
+            "{:>5} {:>12} {:>10} {:>10} {:>10} {:>7} {:>7}",
+            "ranks", "algo", "total_ms", "comp_ms", "comm_ms", "colors", "rounds"
+        );
+        let mut ranks = 1usize;
+        while ranks <= maxranks {
+            for algo in [Algo::D2, Algo::ZoltanD2] {
+                let m = run_algo(algo, g, name, ranks, cost, 42);
+                assert!(m.proper);
+                println!(
+                    "{:>5} {:>12} {:>10.2} {:>10.2} {:>10.3} {:>7} {:>7}",
+                    ranks,
+                    m.algo,
+                    m.total_ns as f64 / 1e6,
+                    m.comp_ns as f64 / 1e6,
+                    m.comm_ns as f64 / 1e6,
+                    m.colors,
+                    m.comm_rounds
+                );
+                rows.push(m);
+            }
+            ranks *= 2;
+        }
+        let ours: Vec<&Measurement> =
+            rows.iter().filter(|m| m.algo == "D2" && m.graph == name).collect();
+        let zol: Vec<&Measurement> =
+            rows.iter().filter(|m| m.algo == "Zoltan-D2" && m.graph == name).collect();
+        let last = ours.len() - 1;
+        println!(
+            "at {} ranks: D2/Zoltan speedup {:.2}x (paper: 2.9x Bump, 8.5x Queen); \
+             D2 self-speedup vs 1 rank {:.2}x (paper avg 4.29x)\n",
+            ours[last].nranks,
+            zol[last].total_ns as f64 / ours[last].total_ns as f64,
+            ours[0].total_ns as f64 / ours[last].total_ns as f64,
+        );
+    }
+    let path = write_csv("fig8_d2_strong_scaling", &rows).unwrap();
+    println!("wrote {}", path.display());
+}

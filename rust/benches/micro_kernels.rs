@@ -1,0 +1,145 @@
+//! Micro-benchmarks of the hot paths (the §Perf profiling harness):
+//! local kernels, conflict detection, ghost construction, exchanges,
+//! and the PJRT round when artifacts are present.
+//!
+//! Plain timing harness (criterion is not vendored offline): median of
+//! BENCH_REPS (default 7) runs after one warmup.
+
+use std::time::Instant;
+
+use dist_color::coloring::distributed::ghost::LocalGraph;
+use dist_color::coloring::local::{eb_bit, greedy, jp, nb_bit, vb_bit, LocalView};
+use dist_color::distributed::{run_ranks, CostModel};
+use dist_color::graph::generators::{ba, erdos_renyi::gnm, mesh};
+use dist_color::graph::Graph;
+use dist_color::partition;
+
+fn median_ms(reps: usize, mut f: impl FnMut()) -> f64 {
+    f(); // warmup
+    let mut times: Vec<f64> = (0..reps)
+        .map(|_| {
+            let t = Instant::now();
+            f();
+            t.elapsed().as_secs_f64() * 1e3
+        })
+        .collect();
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    times[reps / 2]
+}
+
+fn arcs_per_sec(g: &Graph, ms: f64) -> f64 {
+    g.arcs() as f64 / (ms / 1e3)
+}
+
+fn main() {
+    let reps: usize =
+        std::env::var("BENCH_REPS").ok().and_then(|s| s.parse().ok()).unwrap_or(7);
+    println!("== micro_kernels (median of {reps}) ==\n");
+
+    // ---- local kernels on three graph classes -------------------------
+    let graphs: Vec<(&str, Graph)> = vec![
+        ("mesh 32x32x32", mesh::hex_mesh(32, 32, 32)),
+        ("gnm 100k/800k", gnm(100_000, 800_000, 1)),
+        ("ba 100k/8", ba::preferential_attachment(100_000, 8, 2)),
+    ];
+    println!(
+        "{:<16} {:<10} {:>10} {:>14} {:>8}",
+        "graph", "kernel", "ms", "arcs/s", "colors"
+    );
+    for (name, g) in &graphs {
+        let mask = vec![true; g.n()];
+        for kernel in ["vb_bit", "eb_bit", "greedy", "jp"] {
+            let mut colors_out = 0u32;
+            let ms = median_ms(reps, || {
+                let mut colors = vec![0u32; g.n()];
+                let view = LocalView { graph: g, mask: &mask };
+                match kernel {
+                    "vb_bit" => {
+                        vb_bit::color(&view, &mut colors);
+                    }
+                    "eb_bit" => {
+                        eb_bit::color(&view, &mut colors);
+                    }
+                    "greedy" => greedy::color_masked(&view, &mut colors),
+                    _ => {
+                        jp::color(&view, &mut colors, 7);
+                    }
+                }
+                colors_out = colors.iter().copied().max().unwrap_or(0);
+            });
+            println!(
+                "{:<16} {:<10} {:>10.2} {:>14.3e} {:>8}",
+                name,
+                kernel,
+                ms,
+                arcs_per_sec(g, ms),
+                colors_out
+            );
+        }
+    }
+
+    // ---- D2 kernel ------------------------------------------------------
+    println!();
+    let g = mesh::hex_mesh(16, 16, 16);
+    let mask = vec![true; g.n()];
+    let ms = median_ms(reps, || {
+        let mut colors = vec![0u32; g.n()];
+        nb_bit::color(&LocalView { graph: &g, mask: &mask }, &mut colors, false);
+    });
+    println!("nb_bit d2 on mesh 16^3: {ms:.2} ms ({:.3e} arcs/s)", arcs_per_sec(&g, ms));
+
+    // ---- ghost construction + exchange ---------------------------------
+    println!();
+    let g = mesh::hex_mesh(32, 32, 32);
+    let part = partition::edge_balanced(&g, 8);
+    for two in [false, true] {
+        let ms = median_ms(reps.min(5), || {
+            run_ranks(8, CostModel::zero(), |c| {
+                let lg = LocalGraph::build(c, &g, &part, two);
+                std::hint::black_box(lg.n_ghost);
+            });
+        });
+        println!("ghost build (8 ranks, mesh 32^3, two_layers={two}): {ms:.2} ms");
+    }
+
+    // ---- collectives -----------------------------------------------------
+    println!();
+    for p in [4usize, 16, 64] {
+        let ms = median_ms(reps.min(5), || {
+            run_ranks(p, CostModel::zero(), |c| {
+                for i in 0..10 {
+                    c.allreduce_sum(50_000 + i * 2, 1);
+                }
+            });
+        });
+        println!("10x allreduce over {p} ranks: {ms:.3} ms");
+    }
+
+    // ---- PJRT round (validation path) -----------------------------------
+    if std::path::Path::new("artifacts/manifest.txt").exists() {
+        use dist_color::coloring::distributed::LocalBackend;
+        use dist_color::coloring::Problem;
+        use dist_color::runtime::PjrtBackend;
+        println!();
+        let backend = PjrtBackend::from_dir("artifacts").unwrap();
+        let g = mesh::hex_mesh(8, 8, 8); // 512 vertices -> 1024-bucket
+        let mask = vec![true; g.n()];
+        // warm the executable cache first
+        let mut colors = vec![0u32; g.n()];
+        backend.color(Problem::D1, &LocalView { graph: &g, mask: &mask }, &mut colors, 0);
+        let ms = median_ms(reps, || {
+            let mut colors = vec![0u32; g.n()];
+            backend.color(Problem::D1, &LocalView { graph: &g, mask: &mask }, &mut colors, 0);
+        });
+        let (execs, _) = backend.stats();
+        println!("pjrt d1 local coloring (mesh 8^3, warm cache): {ms:.2} ms ({execs} total execs)");
+        // native comparison on identical input
+        let ms_native = median_ms(reps, || {
+            let mut colors = vec![0u32; g.n()];
+            vb_bit::color(&LocalView { graph: &g, mask: &mask }, &mut colors);
+        });
+        println!("native vb_bit same input: {ms_native:.3} ms (pjrt overhead = dispatch + padding)");
+    } else {
+        println!("\n(artifacts missing — run `make artifacts` to include the PJRT micro-bench)");
+    }
+}

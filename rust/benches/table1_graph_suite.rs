@@ -1,0 +1,28 @@
+//! Table 1: the input-graph suite summary (vertices, edges, degrees,
+//! memory), for the scaled-down structural surrogates of the paper's
+//! inputs.  `BENCH_SCALE` env var scales sizes (default 2).
+
+use dist_color::bench::suite;
+use dist_color::graph::stats::{degree_histogram, GraphStats};
+
+fn main() {
+    let scale: usize =
+        std::env::var("BENCH_SCALE").ok().and_then(|s| s.parse().ok()).unwrap_or(2);
+    println!("== Table 1 (scaled surrogates, scale={scale}) ==");
+    println!("{}", GraphStats::header());
+    for sg in suite::d1_suite(scale) {
+        let s = GraphStats::of(sg.name, sg.class, &sg.graph);
+        println!("{}", s.row());
+    }
+    println!("\n== Table 2 (bipartite representations) ==");
+    println!("{}", GraphStats::header());
+    for (name, class, bg) in suite::pd2_suite(scale) {
+        println!("{}", GraphStats::of(name, class, &bg.graph).row());
+    }
+    println!("\n== degree skew diagnostics (log2 histogram buckets) ==");
+    for sg in suite::d1_suite(scale) {
+        let h = degree_histogram(&sg.graph);
+        let tail: Vec<String> = h.iter().map(|(d, c)| format!("{d}:{c}")).collect();
+        println!("{:<18} {}", sg.name, tail.join(" "));
+    }
+}

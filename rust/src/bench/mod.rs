@@ -1,0 +1,245 @@
+//! Experiment harness: the machinery that regenerates the paper's tables
+//! and figures (performance profiles, scaling sweeps, comm/comp
+//! breakdowns) from the algorithms in this crate.
+
+pub mod profiles;
+pub mod suite;
+
+use crate::coloring::distributed::zoltan::{color_zoltan, ZoltanConfig};
+use crate::coloring::distributed::{
+    color_distributed, DistConfig, LocalBackend, NativeBackend, RunResult,
+};
+use crate::coloring::{validate, Problem};
+use crate::distributed::CostModel;
+use crate::graph::Graph;
+use crate::partition::{self, PartitionKind};
+
+/// Which algorithm an experiment runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Algo {
+    /// Speculative D1, plain random conflict rule.
+    D1Baseline,
+    /// Speculative D1 with the recolor-degrees heuristic (§3.3).
+    D1RecolorDegree,
+    /// D1 with two ghost layers (§3.4).
+    D1TwoGhostLayers,
+    /// Distance-2 (§3.5).
+    D2,
+    /// Partial distance-2 (§3.6).
+    PD2,
+    /// Zoltan baseline, distance-1.
+    ZoltanD1,
+    /// Zoltan baseline, distance-2.
+    ZoltanD2,
+    /// Zoltan baseline, partial distance-2.
+    ZoltanPD2,
+}
+
+impl Algo {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Algo::D1Baseline => "D1-baseline",
+            Algo::D1RecolorDegree => "D1-recolor-degree",
+            Algo::D1TwoGhostLayers => "D1-2GL",
+            Algo::D2 => "D2",
+            Algo::PD2 => "PD2",
+            Algo::ZoltanD1 => "Zoltan-D1",
+            Algo::ZoltanD2 => "Zoltan-D2",
+            Algo::ZoltanPD2 => "Zoltan-PD2",
+        }
+    }
+
+    pub fn problem(&self) -> Problem {
+        match self {
+            Algo::D2 | Algo::ZoltanD2 => Problem::D2,
+            Algo::PD2 | Algo::ZoltanPD2 => Problem::PD2,
+            _ => Problem::D1,
+        }
+    }
+}
+
+/// Relative device-throughput factor: the paper's ranks are GPUs
+/// (KokkosKernels' GPU coloring is ~an order of magnitude faster than a
+/// serial CPU pass — Deveci et al. report ~1.5x over CuSPARSE, and both
+/// are far above one Power9 core), while Zoltan's ranks are CPU cores.
+/// Our simulated ranks are all CPU threads, so the *device* asymmetry of
+/// the paper's comparison is restored by dividing the speculative
+/// algorithms' computation time by this factor when reporting modeled
+/// totals.  Configurable via `DEVICE_FACTOR` (default 25); set to 1 to
+/// compare raw thread times.  See DESIGN.md "Substitutions".
+pub fn device_factor(algo: Algo) -> f64 {
+    match algo {
+        Algo::ZoltanD1 | Algo::ZoltanD2 | Algo::ZoltanPD2 => 1.0,
+        _ => std::env::var("DEVICE_FACTOR")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(25.0),
+    }
+}
+
+/// One experiment row: algorithm × graph × rank count.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub algo: &'static str,
+    pub graph: String,
+    pub nranks: usize,
+    /// Total modeled time (max device comp + α–β comm), ns.  Device
+    /// comp = measured comp / [`device_factor`] for GPU-resident
+    /// algorithms (see above).
+    pub total_ns: u64,
+    /// Raw (thread wall) computation time, before device modeling.
+    pub raw_comp_ns: u64,
+    /// Device-modeled computation time.
+    pub comp_ns: u64,
+    pub comm_ns: u64,
+    pub colors: usize,
+    pub comm_rounds: usize,
+    pub conflicts: u64,
+    pub proper: bool,
+}
+
+impl Measurement {
+    pub fn csv_header() -> &'static str {
+        "algo,graph,ranks,total_ms,comp_ms,raw_comp_ms,comm_ms,colors,rounds,conflicts,proper"
+    }
+
+    pub fn csv(&self) -> String {
+        format!(
+            "{},{},{},{:.3},{:.3},{:.3},{:.3},{},{},{},{}",
+            self.algo,
+            self.graph,
+            self.nranks,
+            self.total_ns as f64 / 1e6,
+            self.comp_ns as f64 / 1e6,
+            self.raw_comp_ns as f64 / 1e6,
+            self.comm_ns as f64 / 1e6,
+            self.colors,
+            self.comm_rounds,
+            self.conflicts,
+            self.proper
+        )
+    }
+}
+
+/// Run `algo` on `g` over `nranks` simulated ranks and validate.
+pub fn run_algo(
+    algo: Algo,
+    g: &Graph,
+    graph_name: &str,
+    nranks: usize,
+    cost: CostModel,
+    seed: u64,
+) -> Measurement {
+    let part = partition::partition(g, nranks, PartitionKind::EdgeBalanced, seed);
+    let result: RunResult = match algo {
+        Algo::ZoltanD1 | Algo::ZoltanD2 | Algo::ZoltanPD2 => {
+            let cfg = ZoltanConfig { problem: algo.problem(), seed, ..Default::default() };
+            color_zoltan(g, &part, cfg, cost)
+        }
+        _ => {
+            let cfg = DistConfig {
+                problem: algo.problem(),
+                recolor_degrees: matches!(
+                    algo,
+                    Algo::D1RecolorDegree | Algo::D2 | Algo::PD2
+                ),
+                two_ghost_layers: algo == Algo::D1TwoGhostLayers,
+                seed,
+                ..Default::default()
+            };
+            let backend = NativeBackend(cfg.kernel);
+            color_distributed(g, &part, cfg, cost, &backend)
+        }
+    };
+    measurement_of(algo, graph_name, nranks, g, &result)
+}
+
+fn measurement_of(
+    algo: Algo,
+    graph_name: &str,
+    nranks: usize,
+    g: &Graph,
+    result: &RunResult,
+) -> Measurement {
+    let proper = validate::is_proper(algo.problem(), g, &result.colors);
+    let dev = device_factor(algo);
+    let comp_ns = (result.stats.comp_ns as f64 / dev) as u64;
+    Measurement {
+        algo: algo.label(),
+        graph: graph_name.to_string(),
+        nranks,
+        total_ns: comp_ns + result.stats.comm_modeled_ns,
+        raw_comp_ns: result.stats.comp_ns,
+        comp_ns,
+        comm_ns: result.stats.comm_modeled_ns,
+        colors: result.stats.colors_used,
+        comm_rounds: result.stats.comm_rounds,
+        conflicts: result.stats.conflicts,
+        proper,
+    }
+}
+
+/// Like [`run_algo`] with an explicit backend (PJRT validation path).
+pub fn run_algo_with_backend(
+    algo: Algo,
+    g: &Graph,
+    graph_name: &str,
+    nranks: usize,
+    cost: CostModel,
+    seed: u64,
+    backend: &dyn LocalBackend,
+) -> Measurement {
+    assert!(
+        !matches!(algo, Algo::ZoltanD1 | Algo::ZoltanD2 | Algo::ZoltanPD2),
+        "Zoltan baseline is CPU-serial by definition"
+    );
+    let part = partition::partition(g, nranks, PartitionKind::EdgeBalanced, seed);
+    let cfg = DistConfig {
+        problem: algo.problem(),
+        recolor_degrees: matches!(algo, Algo::D1RecolorDegree | Algo::D2 | Algo::PD2),
+        two_ghost_layers: algo == Algo::D1TwoGhostLayers,
+        seed,
+        ..Default::default()
+    };
+    let result = color_distributed(g, &part, cfg, cost, backend);
+    measurement_of(algo, graph_name, nranks, g, &result)
+}
+
+/// Write measurements as CSV under `target/bench_results/<name>.csv`.
+pub fn write_csv(name: &str, rows: &[Measurement]) -> std::io::Result<std::path::PathBuf> {
+    let dir = std::path::Path::new("target/bench_results");
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join(format!("{name}.csv"));
+    let mut out = String::from(Measurement::csv_header());
+    out.push('\n');
+    for r in rows {
+        out.push_str(&r.csv());
+        out.push('\n');
+    }
+    std::fs::write(&path, out)?;
+    Ok(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators::mesh::hex_mesh;
+
+    #[test]
+    fn run_algo_produces_proper_measurements() {
+        let g = hex_mesh(4, 4, 4);
+        for algo in [Algo::D1Baseline, Algo::D1RecolorDegree, Algo::ZoltanD1] {
+            let m = run_algo(algo, &g, "mesh", 4, CostModel::zero(), 1);
+            assert!(m.proper, "{algo:?}");
+            assert!(m.colors >= 2);
+            assert!(m.comm_rounds >= 1);
+        }
+    }
+
+    #[test]
+    fn csv_row_shape() {
+        let g = hex_mesh(3, 3, 3);
+        let m = run_algo(Algo::D1Baseline, &g, "mesh", 2, CostModel::zero(), 1);
+        assert_eq!(m.csv().split(',').count(), Measurement::csv_header().split(',').count());
+    }
+}

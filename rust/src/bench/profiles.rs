@@ -1,0 +1,124 @@
+//! Performance profiles (Dolan–Moré), the presentation device of
+//! Figures 2 and 7: for each algorithm, plot the fraction of problems it
+//! solves within a factor τ of the best algorithm's cost.
+
+/// One algorithm's cost per problem (same problem order across algos).
+#[derive(Clone, Debug)]
+pub struct CostSeries {
+    pub label: String,
+    pub costs: Vec<f64>,
+}
+
+/// A performance-profile curve: (τ, fraction of problems with
+/// cost ≤ τ · best).
+pub fn profile(series: &[CostSeries], taus: &[f64]) -> Vec<(String, Vec<(f64, f64)>)> {
+    assert!(!series.is_empty());
+    let nprob = series[0].costs.len();
+    assert!(series.iter().all(|s| s.costs.len() == nprob));
+    // per-problem best cost
+    let best: Vec<f64> = (0..nprob)
+        .map(|i| {
+            series
+                .iter()
+                .map(|s| s.costs[i])
+                .fold(f64::INFINITY, f64::min)
+        })
+        .collect();
+    series
+        .iter()
+        .map(|s| {
+            let pts = taus
+                .iter()
+                .map(|&tau| {
+                    let frac = (0..nprob)
+                        .filter(|&i| s.costs[i] <= tau * best[i] + 1e-12)
+                        .count() as f64
+                        / nprob as f64;
+                    (tau, frac)
+                })
+                .collect();
+            (s.label.clone(), pts)
+        })
+        .collect()
+}
+
+/// Fraction of problems where this algorithm is (tied-)best — the
+/// "x% of graphs" numbers quoted in §5.1.
+pub fn best_fraction(series: &[CostSeries]) -> Vec<(String, f64)> {
+    let prof = profile(series, &[1.0]);
+    prof.into_iter()
+        .map(|(label, pts)| (label, pts[0].1))
+        .collect()
+}
+
+/// Standard τ grid for printing.
+pub fn default_taus() -> Vec<f64> {
+    vec![1.0, 1.1, 1.25, 1.5, 2.0, 3.0, 4.0, 6.0, 8.0, 12.0, 16.0]
+}
+
+/// Render profiles as an aligned text table (one row per τ).
+pub fn render(series: &[CostSeries], taus: &[f64]) -> String {
+    let prof = profile(series, taus);
+    let mut out = String::new();
+    out.push_str(&format!("{:>8}", "tau"));
+    for (label, _) in &prof {
+        out.push_str(&format!(" {label:>20}"));
+    }
+    out.push('\n');
+    for (ti, &tau) in taus.iter().enumerate() {
+        out.push_str(&format!("{tau:>8.2}"));
+        for (_, pts) in &prof {
+            out.push_str(&format!(" {:>20.2}", pts[ti].1));
+        }
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Vec<CostSeries> {
+        vec![
+            CostSeries { label: "A".into(), costs: vec![1.0, 2.0, 3.0] },
+            CostSeries { label: "B".into(), costs: vec![2.0, 2.0, 1.0] },
+        ]
+    }
+
+    #[test]
+    fn profile_at_tau1_is_best_fraction() {
+        let s = sample();
+        let bf = best_fraction(&s);
+        // A best on problem 0; B best on problem 2; tie on problem 1
+        assert!((bf[0].1 - 2.0 / 3.0).abs() < 1e-9);
+        assert!((bf[1].1 - 2.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn profile_reaches_one_for_large_tau() {
+        let s = sample();
+        let p = profile(&s, &[100.0]);
+        for (_, pts) in p {
+            assert!((pts[0].1 - 1.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn profile_is_monotone_in_tau() {
+        let s = sample();
+        let taus = default_taus();
+        for (_, pts) in profile(&s, &taus) {
+            for w in pts.windows(2) {
+                assert!(w[0].1 <= w[1].1 + 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn render_contains_labels() {
+        let s = sample();
+        let r = render(&s, &[1.0, 2.0]);
+        assert!(r.contains('A') && r.contains('B'));
+    }
+}

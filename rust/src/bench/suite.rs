@@ -1,0 +1,201 @@
+//! The benchmark graph suite: scaled-down structural surrogates of the
+//! paper's Table 1 / Table 2 inputs (see DESIGN.md "Substitutions").
+//!
+//! `scale` multiplies the baseline sizes: 1 = CI-friendly seconds-scale,
+//! 4 = the default bench scale, 16 = the overnight scale.
+
+use crate::graph::generators::*;
+use crate::graph::{BipartiteGraph, Graph};
+
+/// A named suite entry mirroring one Table 1 row.
+pub struct SuiteGraph {
+    pub name: &'static str,
+    pub class: &'static str,
+    pub graph: Graph,
+}
+
+/// The D1 comparison suite (Fig. 2's graph set, scaled down).
+pub fn d1_suite(scale: usize) -> Vec<SuiteGraph> {
+    let s = scale.max(1);
+    vec![
+        SuiteGraph {
+            name: "ldoor-s",
+            class: "PDE Problem",
+            graph: mesh::grid3d(12 * s, 12, 6),
+        },
+        SuiteGraph {
+            name: "audikw1-s",
+            class: "PDE Problem",
+            graph: mesh::hex_mesh(12 * s, 12, 8),
+        },
+        SuiteGraph {
+            name: "queen4147-s",
+            class: "PDE Problem",
+            graph: mesh::hex_mesh(16 * s, 16, 8),
+        },
+        SuiteGraph {
+            name: "livejournal-s",
+            class: "Social Network",
+            graph: ba::preferential_attachment(3000 * s, 6, 11),
+        },
+        SuiteGraph {
+            name: "hollywood-s",
+            class: "Social Network",
+            graph: ba::preferential_attachment(1500 * s, 12, 12),
+        },
+        SuiteGraph {
+            name: "friendster-s",
+            class: "Social Network",
+            graph: ba::preferential_attachment(4000 * s, 8, 13),
+        },
+        SuiteGraph {
+            name: "europe-osm-s",
+            class: "Road Network",
+            graph: lattice::road_lattice(70 * s, 70, 14),
+        },
+        SuiteGraph {
+            name: "indochina-s",
+            class: "Web Graph",
+            graph: ba::preferential_attachment(2500 * s, 10, 15),
+        },
+        SuiteGraph {
+            name: "rgg-s",
+            class: "Synthetic Graph",
+            graph: rgg::random_geometric(4000 * s, 12.0, 16),
+        },
+        SuiteGraph {
+            name: "kron-s",
+            class: "Synthetic Graph",
+            graph: rmat::rmat(10 + log2(s), 8, 17),
+        },
+        SuiteGraph {
+            name: "mycielskian11",
+            class: "Synthetic Graph",
+            graph: mycielskian::mycielskian(11),
+        },
+        SuiteGraph {
+            name: "mycielskian12",
+            class: "Synthetic Graph",
+            graph: mycielskian::mycielskian(12),
+        },
+    ]
+}
+
+/// The D2 comparison subset (Fig. 7 uses 8 of the Table 1 graphs).
+pub fn d2_suite(scale: usize) -> Vec<SuiteGraph> {
+    let s = scale.max(1);
+    vec![
+        SuiteGraph {
+            name: "bump2911-s",
+            class: "PDE Problem",
+            graph: mesh::hex_mesh(10 * s, 10, 6),
+        },
+        SuiteGraph {
+            name: "queen4147-s",
+            class: "PDE Problem",
+            graph: mesh::hex_mesh(12 * s, 12, 6),
+        },
+        SuiteGraph {
+            name: "hollywood-s",
+            class: "Social Network",
+            graph: ba::preferential_attachment(800 * s, 8, 12),
+        },
+        SuiteGraph {
+            name: "europe-osm-s",
+            class: "Road Network",
+            graph: lattice::road_lattice(50 * s, 50, 14),
+        },
+        SuiteGraph {
+            name: "rgg-s",
+            class: "Synthetic Graph",
+            graph: rgg::random_geometric(2000 * s, 10.0, 16),
+        },
+        SuiteGraph {
+            name: "ldoor-s",
+            class: "PDE Problem",
+            graph: mesh::grid3d(10 * s, 10, 5),
+        },
+        SuiteGraph {
+            name: "audikw1-s",
+            class: "PDE Problem",
+            graph: mesh::hex_mesh(8 * s, 8, 8),
+        },
+        SuiteGraph {
+            name: "livejournal-s",
+            class: "Social Network",
+            graph: ba::preferential_attachment(1200 * s, 5, 11),
+        },
+    ]
+}
+
+/// Table 2's bipartite pair (PD2 experiments).
+pub fn pd2_suite(scale: usize) -> Vec<(&'static str, &'static str, BipartiteGraph)> {
+    let s = scale.max(1);
+    vec![
+        (
+            "hamrle3-s",
+            "Circuit Sim.",
+            bipartite::circuit_like(3000 * s, 3000 * s, 2, 6, 21),
+        ),
+        (
+            "patents-s",
+            "Patent Citations",
+            bipartite::citation_like(4000 * s, 4000 * s, 2.0, 22),
+        ),
+    ]
+}
+
+/// Weak-scaling mesh of `per_rank` vertices per rank over `nranks`
+/// z-slabs (the paper grows a single axis, §5.3).
+pub fn weak_scaling_mesh(per_rank: usize, nranks: usize) -> Graph {
+    // fixed 2D cross-section, z grows with ranks
+    let (nx, ny) = cross_section(per_rank);
+    let nz_per = (per_rank + nx * ny - 1) / (nx * ny);
+    mesh::hex_mesh(nx, ny, (nz_per * nranks).max(2))
+}
+
+fn cross_section(per_rank: usize) -> (usize, usize) {
+    // keep the slab face ~ sqrt of workload so boundary/interior ratio
+    // shrinks with workload like the paper's setup
+    let side = ((per_rank as f64).powf(1.0 / 3.0).round() as usize).max(2);
+    (side, side)
+}
+
+fn log2(x: usize) -> u32 {
+    (usize::BITS - x.leading_zeros()).saturating_sub(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn d1_suite_builds_and_validates() {
+        for sg in d1_suite(1) {
+            sg.graph.validate().unwrap_or_else(|e| panic!("{}: {e}", sg.name));
+            assert!(sg.graph.n() > 100, "{} too small", sg.name);
+        }
+    }
+
+    #[test]
+    fn suites_have_expected_cardinality() {
+        assert_eq!(d1_suite(1).len(), 12);
+        assert_eq!(d2_suite(1).len(), 8);
+        assert_eq!(pd2_suite(1).len(), 2);
+    }
+
+    #[test]
+    fn weak_scaling_mesh_grows_linearly() {
+        let g1 = weak_scaling_mesh(1000, 1);
+        let g4 = weak_scaling_mesh(1000, 4);
+        let ratio = g4.n() as f64 / g1.n() as f64;
+        assert!((3.0..5.0).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn pd2_suite_is_bipartite() {
+        for (name, _, bg) in pd2_suite(1) {
+            bg.validate().unwrap_or_else(|e| panic!("{name}: {e}"));
+        }
+    }
+}

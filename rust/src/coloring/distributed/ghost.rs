@@ -1,0 +1,439 @@
+//! Local graph construction with one or two ghost layers (§2.4, §3.4).
+//!
+//! Each rank owns the vertices the partition assigns to it, plus
+//! read-only *ghost* copies of remote vertices its algorithms need:
+//!
+//! * **1 layer** (D1): non-owned endpoints of owned edges; ghost rows
+//!   carry only their back-edges to locals (`E_g`).
+//! * **2 layers** (D1-2GL, D2, PD2): the owners of first-layer ghosts
+//!   send those ghosts' full adjacency lists (one alltoallv round, done
+//!   once as in §3.4), which reveals ghost–ghost edges and a second layer
+//!   of ghost vertices.
+//!
+//! Construction also establishes the color-update subscriptions: every
+//! rank registers its ghost GIDs with their owners, so later exchanges
+//! send only (position, color) pairs along these subscription lists.
+
+use crate::distributed::comm::{decode_u32s, encode_u32s, Comm};
+use crate::graph::{Graph, GraphBuilder, VId};
+use crate::partition::Partition;
+
+/// Base tags for the construction-phase collectives.
+const TAG_REG: u64 = 10_000;
+const TAG_FETCH_REQ: u64 = 10_002;
+const TAG_FETCH_REP: u64 = 10_004;
+
+/// A rank's local graph: owned vertices, ghosts, and comm metadata.
+#[derive(Debug)]
+pub struct LocalGraph {
+    pub rank: u32,
+    pub nranks: u32,
+    /// Number of owned (local) vertices; local ids `0..n_local`.
+    pub n_local: usize,
+    /// Number of first-layer ghosts; ids `n_local..n_local+n_ghost1`.
+    pub n_ghost1: usize,
+    /// Total ghosts (both layers); ids `n_local..n_local+n_ghost`.
+    pub n_ghost: usize,
+    /// local id -> global id.
+    pub gids: Vec<VId>,
+    /// CSR over local ids (locals, then layer-1 ghosts, then layer-2).
+    pub graph: Graph,
+    /// *Global* degree of every local id (recolor-degrees needs ghosts').
+    pub degrees: Vec<u32>,
+    /// Owned vertices with at least one ghost neighbor (Fig. 1 left).
+    pub boundary_d1: Vec<u32>,
+    /// Owned vertices within two hops of a remote vertex (Fig. 1 right).
+    pub boundary_d2: Vec<u32>,
+    /// Per rank: local indices of *owned* vertices that rank subscribes
+    /// to (color updates flow along this list, in order).
+    pub subs_out: Vec<Vec<u32>>,
+    /// Per rank: `(local idx, position in subs_out[r])` sorted by local
+    /// idx — delta exchanges merge the recolored set against this.
+    pub subs_pos: Vec<Vec<(u32, u32)>>,
+    /// Per rank: local indices of *ghosts* we receive from that rank,
+    /// in the same order as the owner's `subs_out` entry for us.
+    pub ghost_from: Vec<Vec<u32>>,
+}
+
+impl LocalGraph {
+    /// Build the local graph for `comm.rank()` from the application's
+    /// global graph + partition.  Collective: all ranks must call.
+    pub fn build(comm: &mut Comm, g: &Graph, part: &Partition, two_layers: bool) -> LocalGraph {
+        let rank = comm.rank();
+        let p = comm.nranks() as usize;
+        let owned: Vec<VId> = part.owned(rank);
+        let n_local = owned.len();
+
+        // global -> local map for owned vertices
+        let mut lid = std::collections::HashMap::<VId, u32>::with_capacity(n_local * 2);
+        for (i, &v) in owned.iter().enumerate() {
+            lid.insert(v, i as u32);
+        }
+
+        // ---- first-layer ghosts -------------------------------------
+        let mut ghosts1: Vec<VId> = Vec::new();
+        for &v in &owned {
+            for &u in g.neighbors(v) {
+                if part.owner[u as usize] != rank && !lid.contains_key(&u) {
+                    lid.insert(u, 0); // placeholder, fixed below
+                    ghosts1.push(u);
+                }
+            }
+        }
+        ghosts1.sort_unstable();
+        for (i, &u) in ghosts1.iter().enumerate() {
+            lid.insert(u, (n_local + i) as u32);
+        }
+        let n_ghost1 = ghosts1.len();
+
+        // ---- optional second layer: fetch ghost adjacency ------------
+        // Request each layer-1 ghost's full neighbor list from its owner.
+        let mut ghost_adj: Vec<Vec<VId>> = Vec::new(); // by ghosts1 order, global ids
+        let mut ghosts2: Vec<VId> = Vec::new();
+        if two_layers {
+            let replies = fetch(comm, part, &ghosts1, |v| {
+                let mut out = vec![g.degree(v) as u32];
+                out.extend_from_slice(g.neighbors(v));
+                out
+            });
+            ghost_adj = replies;
+            // discover second-layer ghosts
+            for adj in &ghost_adj {
+                for &u in adj {
+                    if part.owner[u as usize] != rank && !lid.contains_key(&u) {
+                        lid.insert(u, 0);
+                        ghosts2.push(u);
+                    }
+                }
+            }
+            ghosts2.sort_unstable();
+            for (i, &u) in ghosts2.iter().enumerate() {
+                lid.insert(u, (n_local + n_ghost1 + i) as u32);
+            }
+        }
+        let n_ghost = n_ghost1 + ghosts2.len();
+
+        // ---- gids array ----------------------------------------------
+        let mut gids: Vec<VId> = Vec::with_capacity(n_local + n_ghost);
+        gids.extend_from_slice(&owned);
+        gids.extend_from_slice(&ghosts1);
+        gids.extend_from_slice(&ghosts2);
+
+        // ---- degrees: owned from g, ghosts fetched from owners --------
+        let all_ghosts: Vec<VId> = gids[n_local..].to_vec();
+        let deg_replies = fetch(comm, part, &all_ghosts, |v| vec![g.degree(v) as u32]);
+        let mut degrees: Vec<u32> = Vec::with_capacity(n_local + n_ghost);
+        for &v in &owned {
+            degrees.push(g.degree(v) as u32);
+        }
+        for r in &deg_replies {
+            debug_assert_eq!(r.len(), 1);
+            degrees.push(r[0]);
+        }
+
+        // ---- color-update subscriptions -------------------------------
+        // send all ghost gids to their owners; keep our side's ordering
+        let mut req_by_rank: Vec<Vec<VId>> = vec![Vec::new(); p];
+        let mut ghost_from: Vec<Vec<u32>> = vec![Vec::new(); p];
+        for (i, &u) in gids[n_local..].iter().enumerate() {
+            let o = part.owner[u as usize] as usize;
+            req_by_rank[o].push(u);
+            ghost_from[o].push((n_local + i) as u32);
+        }
+        let bufs: Vec<Vec<u8>> = req_by_rank.iter().map(|v| encode_u32s(v)).collect();
+        let got = comm.alltoallv(TAG_REG, bufs);
+        let mut subs_out: Vec<Vec<u32>> = vec![Vec::new(); p];
+        for (r, buf) in got.into_iter().enumerate() {
+            let want = decode_u32s(&buf);
+            subs_out[r] = want
+                .iter()
+                .map(|gv| *lid.get(gv).expect("subscribed vertex not owned"))
+                .collect();
+            debug_assert!(subs_out[r].iter().all(|&l| (l as usize) < n_local));
+        }
+        let subs_pos: Vec<Vec<(u32, u32)>> = subs_out
+            .iter()
+            .map(|subs| {
+                let mut sp: Vec<(u32, u32)> = subs
+                    .iter()
+                    .enumerate()
+                    .map(|(pos, &l)| (l, pos as u32))
+                    .collect();
+                sp.sort_unstable();
+                sp
+            })
+            .collect();
+
+        // ---- local CSR -------------------------------------------------
+        let nl = n_local + n_ghost;
+        let mut b = GraphBuilder::with_edge_capacity(nl, owned.iter().map(|&v| g.degree(v)).sum());
+        for (i, &v) in owned.iter().enumerate() {
+            for &u in g.neighbors(v) {
+                b.edge(i as VId, lid[&u]);
+            }
+        }
+        if two_layers {
+            for (i, adj) in ghost_adj.iter().enumerate() {
+                let gl = (n_local + i) as VId;
+                // adj[0] is the degree, rest are neighbors
+                for &u in &adj[1..] {
+                    b.edge(gl, lid[&u]);
+                }
+            }
+        }
+        let graph = b.build();
+
+        // ---- boundary sets ---------------------------------------------
+        let mut boundary_d1: Vec<u32> = Vec::new();
+        let mut is_b1 = vec![false; n_local];
+        for v in 0..n_local {
+            if graph.neighbors(v as VId).iter().any(|&u| (u as usize) >= n_local) {
+                boundary_d1.push(v as u32);
+                is_b1[v] = true;
+            }
+        }
+        let mut boundary_d2: Vec<u32> = Vec::new();
+        for v in 0..n_local {
+            let b2 = is_b1[v]
+                || graph
+                    .neighbors(v as VId)
+                    .iter()
+                    .any(|&u| (u as usize) < n_local && is_b1[u as usize]);
+            if b2 {
+                boundary_d2.push(v as u32);
+            }
+        }
+
+        LocalGraph {
+            rank,
+            nranks: p as u32,
+            n_local,
+            n_ghost1,
+            n_ghost,
+            gids,
+            graph,
+            degrees,
+            boundary_d1,
+            boundary_d2,
+            subs_out,
+            subs_pos,
+            ghost_from,
+        }
+    }
+
+    /// Is local id `v` a ghost (either layer)?
+    #[inline]
+    pub fn is_ghost(&self, v: u32) -> bool {
+        (v as usize) >= self.n_local
+    }
+
+    /// Interior vertices: owned, no ghost neighbor (never conflict, §2.4).
+    pub fn interior(&self) -> Vec<u32> {
+        let b1: std::collections::HashSet<u32> = self.boundary_d1.iter().copied().collect();
+        (0..self.n_local as u32).filter(|v| !b1.contains(v)).collect()
+    }
+}
+
+/// Generic owner-fetch: for each gid in `wants` (any order), ask its
+/// owner to compute `reply(gid)` (a u32 list); returns replies in
+/// `wants` order.  Two alltoallv rounds; length-prefixed records.
+fn fetch(
+    comm: &mut Comm,
+    part: &Partition,
+    wants: &[VId],
+    reply: impl Fn(VId) -> Vec<u32>,
+) -> Vec<Vec<u32>> {
+    let p = comm.nranks() as usize;
+    let rank = comm.rank();
+    let mut req: Vec<Vec<VId>> = vec![Vec::new(); p];
+    let mut slot: Vec<(usize, usize)> = Vec::with_capacity(wants.len()); // (rank, idx within rank)
+    for &v in wants {
+        let o = part.owner[v as usize] as usize;
+        debug_assert_ne!(o, rank as usize, "fetching an owned vertex");
+        slot.push((o, req[o].len()));
+        req[o].push(v);
+    }
+    let bufs: Vec<Vec<u8>> = req.iter().map(|v| encode_u32s(v)).collect();
+    let got = comm.alltoallv(TAG_FETCH_REQ, bufs);
+    // build replies: for each requested gid, [len, data...]
+    let mut rep_bufs: Vec<Vec<u8>> = Vec::with_capacity(p);
+    for buf in &got {
+        let gs = decode_u32s(buf);
+        let mut out: Vec<u32> = Vec::with_capacity(gs.len() * 2);
+        for gv in gs {
+            let data = reply(gv);
+            out.push(data.len() as u32);
+            out.extend_from_slice(&data);
+        }
+        rep_bufs.push(encode_u32s(&out));
+    }
+    let reps = comm.alltoallv(TAG_FETCH_REP, rep_bufs);
+    // split records per source rank
+    let mut records: Vec<Vec<Vec<u32>>> = Vec::with_capacity(p);
+    for buf in &reps {
+        let xs = decode_u32s(buf);
+        let mut recs = Vec::new();
+        let mut i = 0usize;
+        while i < xs.len() {
+            let len = xs[i] as usize;
+            recs.push(xs[i + 1..i + 1 + len].to_vec());
+            i += 1 + len;
+        }
+        records.push(recs);
+    }
+    // reassemble in `wants` order
+    let mut taken = vec![0usize; p];
+    slot.iter()
+        .map(|&(r, idx)| {
+            debug_assert_eq!(taken[r], idx);
+            taken[r] += 1;
+            std::mem::take(&mut records[r][idx])
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::distributed::{run_ranks, CostModel};
+    use crate::graph::generators::{erdos_renyi::gnm, mesh::hex_mesh};
+    use crate::partition::{block, hash};
+
+    fn build_all(g: &Graph, part: &Partition, two: bool) -> Vec<LocalGraph> {
+        run_ranks(part.nparts, CostModel::zero(), |c| {
+            LocalGraph::build(c, g, part, two)
+        })
+    }
+
+    #[test]
+    fn locals_partition_the_graph() {
+        let g = hex_mesh(4, 4, 4);
+        let part = block(&g, 4);
+        let lgs = build_all(&g, &part, false);
+        let total: usize = lgs.iter().map(|l| l.n_local).sum();
+        assert_eq!(total, g.n());
+        // gids of locals are exactly the owned sets
+        for (r, lg) in lgs.iter().enumerate() {
+            assert_eq!(lg.gids[..lg.n_local], part.owned(r as u32)[..]);
+        }
+    }
+
+    #[test]
+    fn one_layer_ghosts_are_exactly_cut_neighbors() {
+        let g = hex_mesh(4, 4, 8);
+        let part = block(&g, 4);
+        for lg in build_all(&g, &part, false) {
+            // every ghost is adjacent to an owned vertex in the global graph
+            for gi in lg.n_local..lg.n_local + lg.n_ghost {
+                let gv = lg.gids[gi];
+                let touches_owned = g
+                    .neighbors(gv)
+                    .iter()
+                    .any(|&u| part.owner[u as usize] == lg.rank);
+                assert!(touches_owned);
+            }
+            assert_eq!(lg.n_ghost, lg.n_ghost1);
+        }
+    }
+
+    #[test]
+    fn local_edges_match_global_edges() {
+        let g = gnm(120, 500, 3);
+        let part = hash(&g, 4, 1);
+        for lg in build_all(&g, &part, false) {
+            for v in 0..lg.n_local {
+                let gv = lg.gids[v];
+                let mut local_nb: Vec<VId> = lg
+                    .graph
+                    .neighbors(v as VId)
+                    .iter()
+                    .map(|&u| lg.gids[u as usize])
+                    .collect();
+                local_nb.sort_unstable();
+                let mut global_nb: Vec<VId> = g.neighbors(gv).to_vec();
+                global_nb.sort_unstable();
+                assert_eq!(local_nb, global_nb, "rank {} vertex {gv}", lg.rank);
+            }
+        }
+    }
+
+    #[test]
+    fn two_layer_ghosts_have_full_adjacency() {
+        let g = gnm(100, 400, 5);
+        let part = hash(&g, 3, 2);
+        for lg in build_all(&g, &part, true) {
+            for gi in lg.n_local..lg.n_local + lg.n_ghost1 {
+                let gv = lg.gids[gi];
+                let mut local_nb: Vec<VId> = lg
+                    .graph
+                    .neighbors(gi as VId)
+                    .iter()
+                    .map(|&u| lg.gids[u as usize])
+                    .collect();
+                local_nb.sort_unstable();
+                let mut global_nb: Vec<VId> = g.neighbors(gv).to_vec();
+                global_nb.sort_unstable();
+                assert_eq!(local_nb, global_nb, "ghost {gv} on rank {}", lg.rank);
+            }
+        }
+    }
+
+    #[test]
+    fn degrees_are_global_degrees() {
+        let g = gnm(80, 300, 7);
+        let part = hash(&g, 4, 3);
+        for two in [false, true] {
+            for lg in build_all(&g, &part, two) {
+                for (i, &gv) in lg.gids.iter().enumerate() {
+                    assert_eq!(lg.degrees[i] as usize, g.degree(gv), "two={two}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn subscriptions_are_consistent() {
+        let g = gnm(100, 400, 9);
+        let part = hash(&g, 4, 4);
+        let lgs = build_all(&g, &part, false);
+        // owner's subs_out[r] names the same gids as rank r's ghost_from[owner]
+        for (o, lo) in lgs.iter().enumerate() {
+            for (r, subs) in lo.subs_out.iter().enumerate() {
+                let sent: Vec<VId> = subs.iter().map(|&l| lo.gids[l as usize]).collect();
+                let expect: Vec<VId> = lgs[r].ghost_from[o]
+                    .iter()
+                    .map(|&gl| lgs[r].gids[gl as usize])
+                    .collect();
+                assert_eq!(sent, expect, "owner {o} -> rank {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn boundary_sets_nest() {
+        let g = hex_mesh(4, 4, 8);
+        let part = block(&g, 4);
+        for lg in build_all(&g, &part, false) {
+            let b1: std::collections::HashSet<_> = lg.boundary_d1.iter().collect();
+            assert!(lg.boundary_d2.len() >= lg.boundary_d1.len());
+            for v in &lg.boundary_d1 {
+                assert!(b1.contains(v));
+            }
+            // interior + boundary_d1 = all locals
+            assert_eq!(lg.interior().len() + lg.boundary_d1.len(), lg.n_local);
+        }
+    }
+
+    #[test]
+    fn mesh_slab_boundaries_are_two_faces() {
+        // periodic 4x4x8 in 4 slabs: every slab has two boundary faces of
+        // 16 vertices each
+        let g = hex_mesh(4, 4, 8);
+        let part = block(&g, 4);
+        for lg in build_all(&g, &part, false) {
+            assert_eq!(lg.n_local, 32);
+            assert_eq!(lg.boundary_d1.len(), 32); // thickness 2: all local
+            assert_eq!(lg.n_ghost, 32);
+        }
+    }
+}

@@ -1,0 +1,657 @@
+//! Distributed-memory speculative coloring (the paper's Algorithm 2),
+//! with its three front-ends D1, D1-2GL, D2/PD2 and the Zoltan/Bozdağ
+//! baseline.
+//!
+//! Flow per rank:
+//!
+//! 1. color all local vertices with the on-"GPU" kernel (ghosts unknown);
+//! 2. exchange boundary colors (full subscription exchange);
+//! 3. detect conflicts across rank boundaries and resolve with
+//!    Algorithm 4 (optionally prioritizing by degree — the paper's novel
+//!    recolor-degrees heuristic);
+//! 4. `Allreduce(conflicts, SUM)`; while > 0: recolor losers locally,
+//!    communicate *only changed* boundary colors, re-detect.
+//!
+//! The D1-2GL variant (§3.4) additionally *predicts* the recoloring of
+//! ghost losers: ghosts carry full adjacency in the second-layer build,
+//! so both ranks can run the same global-priority greedy over the cut
+//! region and — on mesh-like graphs where the second layer is interior —
+//! arrive at consistent colors without another round.  Predictions are
+//! overwritten by the owner's authoritative update at the next exchange,
+//! so correctness never depends on them (mirroring the paper's
+//! temporarily-recolor-then-restore ghosts trick).
+
+pub mod conflict;
+pub mod ghost;
+pub mod zoltan;
+
+use crate::coloring::local::{color_local, nb_bit, LocalKernel, LocalView};
+use crate::coloring::{colors_used, Color, Problem};
+use crate::distributed::comm::{decode_u32s, encode_u32s, Comm};
+use crate::distributed::{run_ranks, CostModel};
+use crate::distributed::cost::CommStats;
+use crate::graph::{Graph, VId};
+use crate::partition::Partition;
+use crate::util::gid_rand;
+use crate::util::timer::SplitTimer;
+use ghost::LocalGraph;
+
+const TAG_COLORS: u64 = 20_000;
+const TAG_REDUCE: u64 = 30_000;
+
+/// Configuration of one distributed coloring run.
+#[derive(Clone, Copy, Debug)]
+pub struct DistConfig {
+    pub problem: Problem,
+    /// Algorithm 4's recolorDegrees flag (the novel heuristic, §3.3).
+    pub recolor_degrees: bool,
+    /// Use a second ghost layer for D1 (D1-2GL, §3.4).  D2/PD2 always
+    /// build two layers regardless (§3.5).
+    pub two_ghost_layers: bool,
+    /// Local kernel for the native backend.
+    pub kernel: LocalKernel,
+    pub seed: u64,
+    /// Safety cap on recoloring rounds.
+    pub max_rounds: usize,
+}
+
+impl Default for DistConfig {
+    fn default() -> Self {
+        DistConfig {
+            problem: Problem::D1,
+            recolor_degrees: true,
+            two_ghost_layers: false,
+            kernel: LocalKernel::VbBit,
+            seed: 42,
+            max_rounds: 500,
+        }
+    }
+}
+
+/// A local-coloring backend: the native Rust kernels, or the PJRT
+/// executor running the AOT-compiled Pallas kernels.
+pub trait LocalBackend: Sync {
+    /// Color the masked vertices of `view` in place; unmasked colors are
+    /// fixed constraints.  Returns the kernel's internal round count.
+    fn color(
+        &self,
+        problem: Problem,
+        view: &LocalView,
+        colors: &mut [Color],
+        seed: u64,
+    ) -> usize;
+
+    /// Short name for logs/benches.
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+/// The native (pure Rust) kernels.
+pub struct NativeBackend(pub LocalKernel);
+
+impl LocalBackend for NativeBackend {
+    fn color(
+        &self,
+        problem: Problem,
+        view: &LocalView,
+        colors: &mut [Color],
+        seed: u64,
+    ) -> usize {
+        match problem {
+            Problem::D1 => color_local(self.0, view, colors, seed),
+            Problem::D2 => nb_bit::color(view, colors, false),
+            Problem::PD2 => nb_bit::color(view, colors, true),
+        }
+    }
+}
+
+/// Per-rank outcome of a distributed coloring.
+#[derive(Debug)]
+pub struct RankOutcome {
+    /// (global id, color) for every owned vertex.
+    pub owned_colors: Vec<(VId, Color)>,
+    /// Number of boundary-color communication rounds (Fig. 6's metric).
+    pub comm_rounds: usize,
+    /// Conflicts this rank detected over all rounds.
+    pub conflicts: u64,
+    /// Vertices this rank recolored over all rounds.
+    pub recolored: u64,
+    pub timers: SplitTimer,
+    pub comm: CommStats,
+}
+
+/// Aggregated run statistics (rank maxima for times, sums for counters).
+#[derive(Clone, Debug)]
+pub struct RunStats {
+    pub nranks: usize,
+    pub comm_rounds: usize,
+    pub conflicts: u64,
+    pub recolored: u64,
+    pub colors_used: usize,
+    pub comp_ns: u64,
+    pub comm_wall_ns: u64,
+    pub comm_modeled_ns: u64,
+    pub bytes: u64,
+}
+
+impl RunStats {
+    /// Total modeled time: max comp + max modeled comm.
+    pub fn total_ns(&self) -> u64 {
+        self.comp_ns + self.comm_modeled_ns
+    }
+
+    /// Total wall time: max comp + max wall comm.
+    pub fn wall_ns(&self) -> u64 {
+        self.comp_ns + self.comm_wall_ns
+    }
+}
+
+/// Result of a full distributed run.
+#[derive(Debug)]
+pub struct RunResult {
+    /// Global color array (indexed by global vertex id).
+    pub colors: Vec<Color>,
+    pub stats: RunStats,
+}
+
+/// Run the distributed coloring across `part.nparts` simulated ranks.
+pub fn color_distributed(
+    g: &Graph,
+    part: &Partition,
+    cfg: DistConfig,
+    cost: CostModel,
+    backend: &dyn LocalBackend,
+) -> RunResult {
+    let outcomes = run_ranks(part.nparts, cost, |comm| {
+        color_rank(comm, g, part, cfg, backend)
+    });
+    assemble(g, outcomes, part.nparts)
+}
+
+/// Combine per-rank outcomes into a global color array + stats.
+pub fn assemble(g: &Graph, outcomes: Vec<RankOutcome>, nranks: usize) -> RunResult {
+    let mut colors = vec![0 as Color; g.n()];
+    let mut stats = RunStats {
+        nranks,
+        comm_rounds: 0,
+        conflicts: 0,
+        recolored: 0,
+        colors_used: 0,
+        comp_ns: 0,
+        comm_wall_ns: 0,
+        comm_modeled_ns: 0,
+        bytes: 0,
+    };
+    for o in outcomes {
+        for (v, c) in o.owned_colors {
+            colors[v as usize] = c;
+        }
+        stats.comm_rounds = stats.comm_rounds.max(o.comm_rounds);
+        stats.conflicts += o.conflicts;
+        stats.recolored += o.recolored;
+        stats.comp_ns = stats.comp_ns.max(o.timers.comp.as_nanos() as u64);
+        stats.comm_wall_ns = stats
+            .comm_wall_ns
+            .max(o.timers.comm.as_nanos() as u64);
+        stats.comm_modeled_ns = stats.comm_modeled_ns.max(o.comm.modeled_ns);
+        stats.bytes += o.comm.bytes_sent;
+    }
+    stats.colors_used = colors_used(&colors);
+    RunResult { colors, stats }
+}
+
+/// The per-rank body of Algorithm 2.
+pub fn color_rank(
+    comm: &mut Comm,
+    g: &Graph,
+    part: &Partition,
+    cfg: DistConfig,
+    backend: &dyn LocalBackend,
+) -> RankOutcome {
+    let two_layers = match cfg.problem {
+        Problem::D1 => cfg.two_ghost_layers,
+        Problem::D2 | Problem::PD2 => true, // §3.5: D2 needs the 2-hop view
+    };
+    let mut timers = SplitTimer::new();
+    let lg = timers.comm(|| LocalGraph::build(comm, g, part, two_layers));
+
+    let n_all = lg.n_local + lg.n_ghost;
+    let mut colors: Vec<Color> = vec![0; n_all];
+
+    // ---- initial local coloring (ghosts unknown/uncolored) -----------
+    let mut mask = vec![false; n_all];
+    mask[..lg.n_local].fill(true);
+    timers.comp(|| {
+        backend.color(
+            cfg.problem,
+            &LocalView { graph: &lg.graph, mask: &mask },
+            &mut colors,
+            cfg.seed ^ lg.rank as u64,
+        )
+    });
+
+    // ---- initial full boundary exchange --------------------------------
+    let mut comm_rounds = 1usize;
+    timers.comm(|| exchange_full(comm, &lg, &mut colors));
+
+    // ---- speculative fix loop -------------------------------------------
+    let mut conflicts_total = 0u64;
+    let mut recolored_total = 0u64;
+    let mut round = 0usize;
+    loop {
+        let (local_losers, ghost_losers, found) =
+            timers.comp(|| detect_conflicts(&lg, &colors, cfg));
+        conflicts_total += found;
+        let global = timers.comm(|| comm.allreduce_sum(TAG_REDUCE + 2 * round as u64, found));
+        if global == 0 {
+            break;
+        }
+        round += 1;
+        assert!(
+            round <= cfg.max_rounds,
+            "distributed coloring did not converge in {} rounds",
+            cfg.max_rounds
+        );
+
+        // uncolor local losers and recolor
+        timers.comp(|| {
+            for &v in &local_losers {
+                colors[v as usize] = 0;
+            }
+            recolored_total += local_losers.len() as u64;
+            if two_layers && cfg.problem == Problem::D1 {
+                // 2GL: consistent global-priority greedy over the cut
+                // region, predicting ghost losers' new colors too.
+                recolor_predictive(&lg, &mut colors, &local_losers, &ghost_losers, cfg.seed);
+            } else {
+                let mut m = vec![false; n_all];
+                for &v in &local_losers {
+                    m[v as usize] = true;
+                }
+                backend.color(
+                    cfg.problem,
+                    &LocalView { graph: &lg.graph, mask: &m },
+                    &mut colors,
+                    cfg.seed ^ ((round as u64) << 8) ^ lg.rank as u64,
+                );
+            }
+        });
+
+        // communicate only the recolored owned vertices
+        comm_rounds += 1;
+        timers.comm(|| exchange_delta(comm, &lg, &mut colors, &local_losers, round));
+    }
+
+    let owned_colors = (0..lg.n_local)
+        .map(|v| (lg.gids[v], colors[v]))
+        .collect();
+    RankOutcome {
+        owned_colors,
+        comm_rounds,
+        conflicts: conflicts_total,
+        recolored: recolored_total,
+        timers,
+        comm: comm.stats(),
+    }
+}
+
+// -----------------------------------------------------------------------
+// conflict detection (Algorithms 3 and 5)
+// -----------------------------------------------------------------------
+
+/// Detect cross-rank conflicts.  Returns (local losers, ghost losers,
+/// count of conflicts involving a local vertex).
+fn detect_conflicts(
+    lg: &LocalGraph,
+    colors: &[Color],
+    cfg: DistConfig,
+) -> (Vec<u32>, Vec<u32>, u64) {
+    match cfg.problem {
+        Problem::D1 => detect_d1(lg, colors, cfg),
+        Problem::D2 => detect_d2(lg, colors, cfg, false),
+        Problem::PD2 => detect_d2(lg, colors, cfg, true),
+    }
+}
+
+/// Algorithm 3 with the §3.4 optimization: scan only ghosts' adjacency
+/// (`E_g`), since every cross-rank conflict edge is incident to a ghost.
+fn detect_d1(lg: &LocalGraph, colors: &[Color], cfg: DistConfig) -> (Vec<u32>, Vec<u32>, u64) {
+    let mut local_losers: Vec<u32> = Vec::new();
+    let mut ghost_losers: Vec<u32> = Vec::new();
+    let mut count = 0u64;
+    let nl = lg.n_local as u32;
+    for gl in nl..(lg.n_local + lg.n_ghost) as u32 {
+        let cg = colors[gl as usize];
+        if cg == 0 {
+            continue;
+        }
+        for &u in lg.graph.neighbors(gl) {
+            if colors[u as usize] != cg {
+                continue;
+            }
+            if u < nl {
+                // local-ghost conflict
+                count += 1;
+                match conflict::resolve(
+                    cfg.seed,
+                    cfg.recolor_degrees,
+                    lg.gids[u as usize] as u64,
+                    lg.degrees[u as usize],
+                    lg.gids[gl as usize] as u64,
+                    lg.degrees[gl as usize],
+                ) {
+                    conflict::Loser::First => local_losers.push(u),
+                    conflict::Loser::Second => ghost_losers.push(gl),
+                }
+            } else if u < gl {
+                // ghost-ghost conflict (2GL only): owners resolve it; we
+                // track the loser for recolor prediction.
+                if conflict::first_loses(
+                    cfg.seed,
+                    cfg.recolor_degrees,
+                    lg.gids[u as usize] as u64,
+                    lg.degrees[u as usize],
+                    lg.gids[gl as usize] as u64,
+                    lg.degrees[gl as usize],
+                ) {
+                    ghost_losers.push(u);
+                } else {
+                    ghost_losers.push(gl);
+                }
+            }
+        }
+    }
+    local_losers.sort_unstable();
+    local_losers.dedup();
+    ghost_losers.sort_unstable();
+    ghost_losers.dedup();
+    (local_losers, ghost_losers, count)
+}
+
+/// Algorithm 5: distance-2 conflicts for boundary-d2 vertices; with
+/// `partial`, only two-hop conflicts count (PD2, §3.6).
+fn detect_d2(
+    lg: &LocalGraph,
+    colors: &[Color],
+    cfg: DistConfig,
+    partial: bool,
+) -> (Vec<u32>, Vec<u32>, u64) {
+    let nl = lg.n_local as u32;
+    let mut local_losers: Vec<u32> = Vec::new();
+    let mut count = 0u64;
+    for &v in &lg.boundary_d2 {
+        let cv = colors[v as usize];
+        if cv == 0 {
+            continue;
+        }
+        let v_loses = |x: u32| -> bool {
+            conflict::first_loses(
+                cfg.seed,
+                cfg.recolor_degrees,
+                lg.gids[v as usize] as u64,
+                lg.degrees[v as usize],
+                lg.gids[x as usize] as u64,
+                lg.degrees[x as usize],
+            )
+        };
+        for &u in lg.graph.neighbors(v as VId) {
+            if !partial && u >= nl && colors[u as usize] == cv {
+                count += 1;
+                if v_loses(u) {
+                    local_losers.push(v);
+                }
+            }
+            for &x in lg.graph.neighbors(u) {
+                if x != v as VId && x >= nl && colors[x as usize] == cv {
+                    count += 1;
+                    if v_loses(x) {
+                        local_losers.push(v);
+                    }
+                }
+            }
+        }
+    }
+    local_losers.sort_unstable();
+    local_losers.dedup();
+    (local_losers, Vec::new(), count)
+}
+
+// -----------------------------------------------------------------------
+// recoloring
+// -----------------------------------------------------------------------
+
+/// D1-2GL recoloring: sequential greedy over local + ghost losers in
+/// global (rand(GID), GID) priority order.  Ghost losers get *predicted*
+/// colors (authoritative values arrive with the next exchange); with a
+/// mesh-like second layer both sides compute identical colors for the
+/// cut region, cutting a round of communication (Fig. 6).
+fn recolor_predictive(
+    lg: &LocalGraph,
+    colors: &mut [Color],
+    local_losers: &[u32],
+    ghost_losers: &[u32],
+    seed: u64,
+) {
+    let mut order: Vec<u32> = local_losers
+        .iter()
+        .chain(ghost_losers.iter())
+        .copied()
+        .collect();
+    for &v in &order {
+        colors[v as usize] = 0;
+    }
+    order.sort_unstable_by_key(|&v| {
+        let gid = lg.gids[v as usize] as u64;
+        (gid_rand(seed, gid), gid)
+    });
+    let mut forbidden = crate::util::bitset::BitSet::with_capacity(64);
+    for &v in &order {
+        forbidden.clear();
+        for &u in lg.graph.neighbors(v as VId) {
+            let c = colors[u as usize];
+            if c > 0 {
+                forbidden.set(c as usize - 1);
+            }
+        }
+        colors[v as usize] = forbidden.first_zero() as Color + 1;
+    }
+}
+
+// -----------------------------------------------------------------------
+// boundary color exchange
+// -----------------------------------------------------------------------
+
+/// Initial all-to-all exchange of all subscribed boundary colors.
+fn exchange_full(comm: &mut Comm, lg: &LocalGraph, colors: &mut [Color]) {
+    let p = lg.nranks as usize;
+    let mut bufs: Vec<Vec<u8>> = Vec::with_capacity(p);
+    for r in 0..p {
+        let payload: Vec<u32> = lg.subs_out[r]
+            .iter()
+            .map(|&l| colors[l as usize])
+            .collect();
+        bufs.push(encode_u32s(&payload));
+    }
+    let got = comm.alltoallv(TAG_COLORS, bufs);
+    for (r, buf) in got.into_iter().enumerate() {
+        let cs = decode_u32s(&buf);
+        debug_assert_eq!(cs.len(), lg.ghost_from[r].len());
+        for (&gl, &c) in lg.ghost_from[r].iter().zip(cs.iter()) {
+            colors[gl as usize] = c;
+        }
+    }
+}
+
+/// Delta exchange: send (position, color) pairs for just-recolored owned
+/// vertices along each subscription list ("after the initial all-to-all
+/// boundary exchange, we only communicate the colors of boundary
+/// vertices that have been recolored", §3.2).
+fn exchange_delta(
+    comm: &mut Comm,
+    lg: &LocalGraph,
+    colors: &mut [Color],
+    recolored: &[u32],
+    round: usize,
+) {
+    let p = lg.nranks as usize;
+    let mut bufs: Vec<Vec<u8>> = Vec::with_capacity(p);
+    for r in 0..p {
+        // merge the (sorted) recolored set against the sorted
+        // (local idx -> subscription position) index
+        let sp = &lg.subs_pos[r];
+        let mut payload: Vec<u32> = Vec::new();
+        let mut si = 0usize;
+        for &v in recolored {
+            while si < sp.len() && sp[si].0 < v {
+                si += 1;
+            }
+            while si < sp.len() && sp[si].0 == v {
+                payload.push(sp[si].1);
+                payload.push(colors[v as usize]);
+                si += 1;
+            }
+        }
+        bufs.push(encode_u32s(&payload));
+    }
+    let got = comm.alltoallv(TAG_COLORS + 1 + round as u64, bufs);
+    for (r, buf) in got.into_iter().enumerate() {
+        let xs = decode_u32s(&buf);
+        for pair in xs.chunks_exact(2) {
+            let gl = lg.ghost_from[r][pair[0] as usize];
+            colors[gl as usize] = pair[1];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coloring::validate;
+    use crate::graph::generators::{ba, erdos_renyi::gnm, mesh::hex_mesh, mycielskian};
+    use crate::partition::{self, PartitionKind};
+
+    fn run(
+        g: &Graph,
+        nparts: usize,
+        problem: Problem,
+        rd: bool,
+        two: bool,
+    ) -> RunResult {
+        let part = partition::partition(g, nparts, PartitionKind::EdgeBalanced, 7);
+        let cfg = DistConfig {
+            problem,
+            recolor_degrees: rd,
+            two_ghost_layers: two,
+            ..Default::default()
+        };
+        color_distributed(g, &part, cfg, CostModel::zero(), &NativeBackend(cfg.kernel))
+    }
+
+    #[test]
+    fn d1_proper_on_mesh_multiple_ranks() {
+        let g = hex_mesh(6, 6, 6);
+        for np in [1, 2, 4, 8] {
+            let r = run(&g, np, Problem::D1, true, false);
+            assert!(validate::is_proper_d1(&g, &r.colors), "np={np}");
+            assert!(r.stats.colors_used <= 7);
+        }
+    }
+
+    #[test]
+    fn d1_proper_on_random_and_skewed() {
+        let g1 = gnm(500, 3000, 1);
+        let g2 = ba::preferential_attachment(600, 5, 2);
+        for g in [&g1, &g2] {
+            for rd in [false, true] {
+                let r = run(g, 6, Problem::D1, rd, false);
+                assert!(validate::is_proper_d1(g, &r.colors), "rd={rd}");
+            }
+        }
+    }
+
+    #[test]
+    fn d1_2gl_proper_and_fewer_or_equal_rounds_on_mesh() {
+        let g = hex_mesh(8, 8, 8);
+        let base = run(&g, 8, Problem::D1, false, false);
+        let tgl = run(&g, 8, Problem::D1, false, true);
+        assert!(validate::is_proper_d1(&g, &base.colors));
+        assert!(validate::is_proper_d1(&g, &tgl.colors));
+        assert!(
+            tgl.stats.comm_rounds <= base.stats.comm_rounds,
+            "2GL rounds {} > base {}",
+            tgl.stats.comm_rounds,
+            base.stats.comm_rounds
+        );
+    }
+
+    #[test]
+    fn d2_proper_on_mesh_and_random() {
+        let g = hex_mesh(5, 5, 5);
+        let r = run(&g, 4, Problem::D2, true, true);
+        assert!(validate::is_proper_d2(&g, &r.colors));
+        let g = gnm(300, 900, 3);
+        let r = run(&g, 5, Problem::D2, true, true);
+        assert!(validate::is_proper_d2(&g, &r.colors));
+    }
+
+    #[test]
+    fn pd2_proper_on_bipartite() {
+        let bg = crate::graph::generators::bipartite::circuit_like(200, 200, 2, 5, 1);
+        let r = run(&bg.graph, 4, Problem::PD2, true, true);
+        assert!(validate::is_proper_pd2(&bg.graph, &r.colors));
+    }
+
+    #[test]
+    fn mycielskian_distributed_needs_at_least_chromatic() {
+        let g = mycielskian::mycielskian(6);
+        let r = run(&g, 4, Problem::D1, true, false);
+        assert!(validate::is_proper_d1(&g, &r.colors));
+        assert!(r.stats.colors_used >= 6);
+    }
+
+    #[test]
+    fn single_rank_has_one_comm_round_no_conflicts() {
+        let g = gnm(200, 800, 4);
+        let r = run(&g, 1, Problem::D1, true, false);
+        assert!(validate::is_proper_d1(&g, &r.colors));
+        assert_eq!(r.stats.comm_rounds, 1);
+        assert_eq!(r.stats.conflicts, 0);
+    }
+
+    #[test]
+    fn hash_partition_worst_case_still_proper() {
+        let g = gnm(300, 1500, 5);
+        let part = partition::hash(&g, 8, 3);
+        let cfg = DistConfig::default();
+        let r = color_distributed(&g, &part, cfg, CostModel::zero(), &NativeBackend(cfg.kernel));
+        assert!(validate::is_proper_d1(&g, &r.colors));
+        assert!(r.stats.conflicts > 0, "hash partition should conflict");
+    }
+
+    #[test]
+    fn colors_bounded_by_max_degree_plus_one_d1() {
+        for seed in 0..3 {
+            let g = gnm(250, 1000, seed);
+            let r = run(&g, 4, Problem::D1, true, false);
+            assert!(r.stats.colors_used <= g.max_degree() + 1);
+        }
+    }
+
+    #[test]
+    fn more_ranks_do_not_break_empty_parts() {
+        // more ranks than vertices in some parts
+        let g = gnm(20, 40, 6);
+        let r = run(&g, 16, Problem::D1, true, false);
+        assert!(validate::is_proper_d1(&g, &r.colors));
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let g = gnm(300, 1200, 8);
+        let a = run(&g, 6, Problem::D1, true, false);
+        let b = run(&g, 6, Problem::D1, true, false);
+        assert_eq!(a.colors, b.colors);
+        assert_eq!(a.stats.comm_rounds, b.stats.comm_rounds);
+    }
+}

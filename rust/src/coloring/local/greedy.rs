@@ -1,0 +1,223 @@
+//! Serial greedy coloring (Algorithm 1) with the classic orderings:
+//! natural, largest-degree-first, smallest-degree-last, and saturation
+//! (DSatur).  These are the quality yardsticks and the CPU kernel of the
+//! Zoltan baseline.
+
+use crate::coloring::local::LocalView;
+use crate::coloring::Color;
+use crate::graph::{Graph, VId};
+use crate::util::bitset::BitSet;
+
+/// Vertex visit orderings (§2.2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Ordering {
+    Natural,
+    LargestFirst,
+    SmallestLast,
+    Saturation,
+}
+
+/// First-fit greedy over the whole graph in natural order.
+pub fn serial_greedy_natural(g: &Graph) -> Vec<Color> {
+    serial_greedy(g, Ordering::Natural)
+}
+
+/// First-fit greedy with a chosen ordering.
+pub fn serial_greedy(g: &Graph, ord: Ordering) -> Vec<Color> {
+    let mut colors = vec![0 as Color; g.n()];
+    match ord {
+        Ordering::Saturation => return dsatur(g),
+        _ => {}
+    }
+    let order = order_of(g, ord);
+    let mut forbidden = BitSet::with_capacity(64);
+    for &v in &order {
+        assign_first_fit(g, v, &mut colors, &mut forbidden);
+    }
+    colors
+}
+
+fn order_of(g: &Graph, ord: Ordering) -> Vec<VId> {
+    let mut vs: Vec<VId> = (0..g.n() as VId).collect();
+    match ord {
+        Ordering::Natural | Ordering::Saturation => vs,
+        Ordering::LargestFirst => {
+            vs.sort_by_key(|&v| std::cmp::Reverse(g.degree(v)));
+            vs
+        }
+        Ordering::SmallestLast => {
+            // iteratively remove min-(remaining-)degree vertex; color in
+            // reverse removal order
+            let n = g.n();
+            let mut deg: Vec<usize> = (0..n).map(|v| g.degree(v as VId)).collect();
+            let maxd = g.max_degree();
+            let mut buckets: Vec<Vec<VId>> = vec![Vec::new(); maxd + 1];
+            for v in 0..n {
+                buckets[deg[v]].push(v as VId);
+            }
+            let mut removed = vec![false; n];
+            let mut removal: Vec<VId> = Vec::with_capacity(n);
+            let mut cursor = 0usize;
+            while removal.len() < n {
+                // find lowest non-empty bucket (cursor can regress by 1)
+                while cursor > 0 && !buckets[cursor - 1].is_empty() {
+                    cursor -= 1;
+                }
+                while cursor <= maxd && buckets[cursor].is_empty() {
+                    cursor += 1;
+                }
+                let v = loop {
+                    match buckets[cursor].pop() {
+                        Some(v) if !removed[v as usize] && deg[v as usize] == cursor => break v,
+                        Some(_) => continue, // stale entry
+                        None => {
+                            cursor += 1;
+                            while cursor <= maxd && buckets[cursor].is_empty() {
+                                cursor += 1;
+                            }
+                        }
+                    }
+                };
+                removed[v as usize] = true;
+                removal.push(v);
+                for &u in g.neighbors(v) {
+                    if !removed[u as usize] {
+                        deg[u as usize] -= 1;
+                        buckets[deg[u as usize]].push(u);
+                    }
+                }
+            }
+            removal.reverse();
+            removal
+        }
+    }
+}
+
+#[inline]
+fn assign_first_fit(g: &Graph, v: VId, colors: &mut [Color], forbidden: &mut BitSet) {
+    forbidden.clear();
+    for &u in g.neighbors(v) {
+        let c = colors[u as usize];
+        if c > 0 {
+            forbidden.set(c as usize - 1);
+        }
+    }
+    colors[v as usize] = forbidden.first_zero() as Color + 1;
+}
+
+/// DSatur (Brélaz): repeatedly color the vertex with the most distinctly
+/// colored neighbors, breaking ties by degree.
+pub fn dsatur(g: &Graph) -> Vec<Color> {
+    let n = g.n();
+    let mut colors = vec![0 as Color; n];
+    let mut sat: Vec<std::collections::HashSet<Color>> =
+        vec![std::collections::HashSet::new(); n];
+    let mut done = vec![false; n];
+    let mut forbidden = BitSet::with_capacity(64);
+    for _ in 0..n {
+        // argmax (saturation, degree)
+        let v = (0..n as VId)
+            .filter(|&v| !done[v as usize])
+            .max_by_key(|&v| (sat[v as usize].len(), g.degree(v)))
+            .unwrap();
+        assign_first_fit(g, v, &mut colors, &mut forbidden);
+        done[v as usize] = true;
+        let c = colors[v as usize];
+        for &u in g.neighbors(v) {
+            sat[u as usize].insert(c);
+        }
+    }
+    colors
+}
+
+/// First-fit greedy over only the masked vertices of a [`LocalView`];
+/// unmasked colors are fixed constraints.  This is the Zoltan baseline's
+/// sequential boundary/interior kernel.
+pub fn color_masked(view: &LocalView, colors: &mut [Color]) {
+    let g = view.graph;
+    let mut forbidden = BitSet::with_capacity(64);
+    for v in 0..g.n() as VId {
+        if view.mask[v as usize] {
+            assign_first_fit(g, v, colors, &mut forbidden);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coloring::validate::is_proper_d1;
+    use crate::coloring::max_color;
+    use crate::graph::generators::{erdos_renyi::gnm, mycielskian::mycielskian};
+    use crate::graph::GraphBuilder;
+
+    #[test]
+    fn all_orderings_produce_proper_colorings() {
+        let g = gnm(300, 1500, 1);
+        for ord in [
+            Ordering::Natural,
+            Ordering::LargestFirst,
+            Ordering::SmallestLast,
+            Ordering::Saturation,
+        ] {
+            let c = serial_greedy(&g, ord);
+            assert!(is_proper_d1(&g, &c), "{ord:?} not proper");
+            assert!(max_color(&c) as usize <= g.max_degree() + 1);
+        }
+    }
+
+    #[test]
+    fn greedy_on_bipartite_uses_two_colors() {
+        // even cycle
+        let mut b = GraphBuilder::new(10);
+        for i in 0..10u32 {
+            b.edge(i, (i + 1) % 10);
+        }
+        let g = b.build();
+        let c = serial_greedy_natural(&g);
+        assert!(is_proper_d1(&g, &c));
+        assert_eq!(max_color(&c), 2);
+    }
+
+    #[test]
+    fn dsatur_matches_chromatic_number_on_mycielskian() {
+        // DSatur is exact on many small graphs; Mycielskian(k) needs k
+        for k in 3..=5 {
+            let g = mycielskian(k);
+            let c = dsatur(&g);
+            assert!(is_proper_d1(&g, &c));
+            assert_eq!(max_color(&c), k, "k={k}");
+        }
+    }
+
+    #[test]
+    fn smallest_last_beats_or_ties_natural_on_crown() {
+        // crown-like bipartite graphs are greedy's worst case in natural
+        // order; smallest-last fixes them
+        let mut b = GraphBuilder::new(12);
+        for i in 0..6u32 {
+            for j in 0..6u32 {
+                if i != j {
+                    b.edge(i, 6 + j);
+                }
+            }
+        }
+        let g = b.build();
+        let nat = max_color(&serial_greedy(&g, Ordering::Natural));
+        let sl = max_color(&serial_greedy(&g, Ordering::SmallestLast));
+        assert!(sl <= nat);
+        assert_eq!(sl, 2);
+    }
+
+    #[test]
+    fn masked_coloring_respects_fixed_colors() {
+        // path 0-1-2; vertex 1 pinned to color 1 => 0 and 2 get 2
+        let g = GraphBuilder::new(3).edges(&[(0, 1), (1, 2)]).build();
+        let mut colors = vec![0, 1, 0];
+        let mask = vec![true, false, true];
+        color_masked(&LocalView { graph: &g, mask: &mask }, &mut colors);
+        assert_eq!(colors[1], 1);
+        assert_eq!(colors[0], 2);
+        assert_eq!(colors[2], 2);
+    }
+}

@@ -1,0 +1,151 @@
+//! VB_BIT — vertex-based speculative coloring with bit-mask forbidden
+//! tracking (Deveci et al.), Jacobi formulation.
+//!
+//! Semantics are *identical* to the Pallas kernel
+//! (`python/compile/kernels/vb_bit.py`): each round, every masked
+//! uncolored vertex picks the smallest color absent from its neighbors'
+//! snapshot colors; then any masked vertex sharing a color with a
+//! higher-priority neighbor (hashed-priority order, [`mix32`]) is
+//! uncolored.  The fixpoint is a proper coloring of the masked set
+//! relative to the pinned colors.
+
+use crate::coloring::local::LocalView;
+use crate::coloring::Color;
+use crate::graph::VId;
+use crate::util::bitset::BitSet;
+use crate::util::mix32;
+
+/// Color the masked vertices of `view` to fixpoint. Returns #rounds.
+pub fn color(view: &LocalView, colors: &mut [Color]) -> usize {
+    let g = view.graph;
+    let n = g.n();
+    debug_assert_eq!(colors.len(), n);
+    debug_assert_eq!(view.mask.len(), n);
+
+    // worklist of vertices still to color
+    let mut work: Vec<VId> = (0..n as VId)
+        .filter(|&v| view.mask[v as usize] && colors[v as usize] == 0)
+        .collect();
+    // hashed tie-break priorities, precomputed once (§Perf iteration 2)
+    let prio: Vec<u32> = (0..n as u32).map(mix32).collect();
+    let mut rounds = 0usize;
+    let mut forbidden = BitSet::with_capacity(64);
+    let mut next_colors: Vec<(VId, Color)> = Vec::new();
+
+    while !work.is_empty() {
+        rounds += 1;
+        // assignment pass: snapshot semantics (read `colors`, stage writes)
+        next_colors.clear();
+        for &v in &work {
+            forbidden.clear();
+            for &u in g.neighbors(v) {
+                let c = colors[u as usize];
+                if c > 0 {
+                    forbidden.set(c as usize - 1);
+                }
+            }
+            next_colors.push((v, forbidden.first_zero() as Color + 1));
+        }
+        for &(v, c) in &next_colors {
+            colors[v as usize] = c;
+        }
+        // conflict pass: uncolor masked vertices losing the hashed-
+        // priority tie-break.  Only freshly assigned vertices can
+        // conflict (pinned colors are respected by assignment), so
+        // scanning `work` suffices.
+        let mut next_work: Vec<VId> = Vec::new();
+        for &v in &work {
+            let c = colors[v as usize];
+            let pv = (prio[v as usize], v);
+            let loses = g
+                .neighbors(v)
+                .iter()
+                .any(|&u| colors[u as usize] == c && (prio[u as usize], u) < pv);
+            if loses {
+                next_work.push(v);
+            }
+        }
+        for &v in &next_work {
+            colors[v as usize] = 0;
+        }
+        work = next_work;
+    }
+    rounds
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coloring::local::LocalView;
+    use crate::coloring::validate::is_proper_d1;
+    use crate::coloring::max_color;
+    use crate::graph::generators::{ba, erdos_renyi::gnm, mesh::hex_mesh};
+    use crate::graph::{Graph, GraphBuilder};
+
+    fn run_all(g: &Graph) -> Vec<Color> {
+        let mask = vec![true; g.n()];
+        let mut colors = vec![0; g.n()];
+        color(&LocalView { graph: g, mask: &mask }, &mut colors);
+        colors
+    }
+
+    #[test]
+    fn proper_on_random_graphs() {
+        for seed in 0..5 {
+            let g = gnm(400, 2400, seed);
+            let c = run_all(&g);
+            assert!(is_proper_d1(&g, &c));
+            assert!(max_color(&c) as usize <= g.max_degree() + 1);
+        }
+    }
+
+    #[test]
+    fn proper_on_mesh_with_few_colors() {
+        let g = hex_mesh(6, 6, 6);
+        let c = run_all(&g);
+        assert!(is_proper_d1(&g, &c));
+        // 6-regular torus colors greedily in <= 7, usually much fewer
+        assert!(max_color(&c) <= 7);
+    }
+
+    #[test]
+    fn proper_on_skewed_graph() {
+        let g = ba::preferential_attachment(1000, 4, 1);
+        let c = run_all(&g);
+        assert!(is_proper_d1(&g, &c));
+    }
+
+    #[test]
+    fn respects_pinned_ghosts() {
+        // star: center 0 with 4 leaves; leaves pinned to colors 1..4
+        let g = GraphBuilder::new(5)
+            .edges(&[(0, 1), (0, 2), (0, 3), (0, 4)])
+            .build();
+        let mut colors = vec![0, 1, 2, 3, 4];
+        let mask = vec![true, false, false, false, false];
+        color(&LocalView { graph: &g, mask: &mask }, &mut colors);
+        assert_eq!(colors[0], 5);
+        assert_eq!(&colors[1..], &[1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn empty_mask_is_noop() {
+        let g = gnm(50, 100, 2);
+        let mask = vec![false; g.n()];
+        let mut colors = vec![0; g.n()];
+        let rounds = color(&LocalView { graph: &g, mask: &mask }, &mut colors);
+        assert_eq!(rounds, 0);
+        assert!(colors.iter().all(|&c| c == 0));
+    }
+
+    #[test]
+    fn already_colored_masked_vertices_are_kept() {
+        // masked but already colored => not in worklist
+        let g = GraphBuilder::new(2).edges(&[(0, 1)]).build();
+        let mut colors = vec![2, 0];
+        let mask = vec![true, true];
+        color(&LocalView { graph: &g, mask: &mask }, &mut colors);
+        assert_eq!(colors[0], 2);
+        assert_eq!(colors[1], 1);
+    }
+}

@@ -1,0 +1,68 @@
+//! Graph coloring: local ("on-GPU") kernels, the distributed speculative
+//! framework, and validation.
+//!
+//! Color `0` is "uncolored" everywhere (as in the paper: "our coloring
+//! functions interpret color zero as uncolored"); proper colors are
+//! 1-based `u32`s.
+
+pub mod distributed;
+pub mod local;
+pub mod validate;
+
+/// A vertex color; 0 = uncolored.
+pub type Color = u32;
+
+/// Which coloring problem to solve (§2.1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Problem {
+    /// Distance-1: adjacent vertices differ.
+    D1,
+    /// Distance-2: vertices within two hops differ.
+    D2,
+    /// Partial distance-2: only two-hop conflicts matter (bipartite use).
+    PD2,
+}
+
+impl std::fmt::Display for Problem {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Problem::D1 => write!(f, "D1"),
+            Problem::D2 => write!(f, "D2"),
+            Problem::PD2 => write!(f, "PD2"),
+        }
+    }
+}
+
+/// Number of distinct colors used (ignoring uncolored).
+pub fn colors_used(colors: &[Color]) -> usize {
+    let mut seen = std::collections::HashSet::new();
+    for &c in colors {
+        if c > 0 {
+            seen.insert(c);
+        }
+    }
+    seen.len()
+}
+
+/// Largest color value used (the paper reports "number of colors", which
+/// for first-fit greedy equals the max since colors are dense from 1).
+pub fn max_color(colors: &[Color]) -> Color {
+    colors.iter().copied().max().unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn colors_used_ignores_uncolored() {
+        assert_eq!(colors_used(&[0, 1, 2, 2, 0]), 2);
+        assert_eq!(colors_used(&[]), 0);
+    }
+
+    #[test]
+    fn max_color_of_empty_is_zero() {
+        assert_eq!(max_color(&[]), 0);
+        assert_eq!(max_color(&[3, 1]), 3);
+    }
+}

@@ -1,0 +1,363 @@
+//! Rank runtime and communicator.
+//!
+//! `run_ranks(p, cost, f)` spawns `p` scoped threads, each receiving a
+//! [`Comm`] handle.  Point-to-point messages are `Vec<u8>` over per-rank
+//! mpsc channels with selective receive; collectives are implemented on
+//! top (gather-to-0 + broadcast), which is semantically exact and fast
+//! enough at p <= 256.
+
+use std::collections::VecDeque;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::time::Instant;
+
+use super::cost::{CommStats, CostModel};
+
+type Packet = (u32, u64, Vec<u8>); // (from, tag, payload)
+
+/// Per-rank communicator handle (not Clone: one per rank thread).
+pub struct Comm {
+    rank: u32,
+    nranks: u32,
+    senders: Vec<Sender<Packet>>,
+    inbox: Receiver<Packet>,
+    /// out-of-order packets waiting for a matching recv
+    pending: VecDeque<Packet>,
+    cost: CostModel,
+    stats: CommStats,
+}
+
+impl Comm {
+    #[inline]
+    pub fn rank(&self) -> u32 {
+        self.rank
+    }
+
+    #[inline]
+    pub fn nranks(&self) -> u32 {
+        self.nranks
+    }
+
+    pub fn stats(&self) -> CommStats {
+        self.stats
+    }
+
+    pub fn cost_model(&self) -> CostModel {
+        self.cost
+    }
+
+    /// Tagged send. Never blocks (unbounded channel).
+    pub fn send(&mut self, to: u32, tag: u64, payload: Vec<u8>) {
+        self.stats.messages += 1;
+        self.stats.bytes_sent += payload.len() as u64;
+        self.stats.modeled_ns += self.cost.msg_ns(payload.len());
+        self.senders[to as usize]
+            .send((self.rank, tag, payload))
+            .expect("rank channel closed");
+    }
+
+    /// Blocking selective receive: next message from `from` with `tag`.
+    pub fn recv(&mut self, from: u32, tag: u64) -> Vec<u8> {
+        let t0 = Instant::now();
+        // check pending first
+        if let Some(pos) = self
+            .pending
+            .iter()
+            .position(|&(f, t, _)| f == from && t == tag)
+        {
+            let (_, _, payload) = self.pending.remove(pos).unwrap();
+            self.stats.wall_ns += t0.elapsed().as_nanos() as u64;
+            return payload;
+        }
+        loop {
+            let pkt = self.inbox.recv().expect("rank channel closed");
+            if pkt.0 == from && pkt.1 == tag {
+                self.stats.wall_ns += t0.elapsed().as_nanos() as u64;
+                return pkt.2;
+            }
+            self.pending.push_back(pkt);
+        }
+    }
+
+    /// Personalized all-to-all: `bufs[r]` goes to rank r; returns what
+    /// each rank sent to us (`out[r]` = payload from rank r).
+    pub fn alltoallv(&mut self, tag: u64, bufs: Vec<Vec<u8>>) -> Vec<Vec<u8>> {
+        assert_eq!(bufs.len(), self.nranks as usize);
+        self.stats.collectives += 1;
+        let me = self.rank;
+        let p = self.nranks;
+        let mut out: Vec<Vec<u8>> = (0..p).map(|_| Vec::new()).collect();
+        let mut iter = bufs.into_iter().enumerate();
+        for (r, buf) in iter.by_ref() {
+            let r = r as u32;
+            if r == me {
+                out[me as usize] = buf;
+            } else {
+                self.send(r, tag, buf);
+            }
+        }
+        for r in 0..p {
+            if r != me {
+                out[r as usize] = self.recv(r, tag);
+            }
+        }
+        out
+    }
+
+    /// Sum-allreduce of a u64 (the `Allreduce(conflicts, SUM)` of Alg. 2).
+    pub fn allreduce_sum(&mut self, tag: u64, x: u64) -> u64 {
+        self.reduce_then_bcast(tag, x, |a, b| a + b)
+    }
+
+    /// Max-allreduce of a u64.
+    pub fn allreduce_max(&mut self, tag: u64, x: u64) -> u64 {
+        self.reduce_then_bcast(tag, x, |a, b| a.max(b))
+    }
+
+    fn reduce_then_bcast(&mut self, tag: u64, x: u64, op: impl Fn(u64, u64) -> u64) -> u64 {
+        self.stats.collectives += 1;
+        self.stats.modeled_ns += self.cost.collective_ns(self.nranks as usize, 8);
+        let p = self.nranks;
+        if p == 1 {
+            return x;
+        }
+        if self.rank == 0 {
+            let mut acc = x;
+            for r in 1..p {
+                let b = self.recv_raw(r, tag);
+                acc = op(acc, u64::from_le_bytes(b.try_into().unwrap()));
+            }
+            for r in 1..p {
+                self.send_raw(r, tag + 1, acc.to_le_bytes().to_vec());
+            }
+            acc
+        } else {
+            self.send_raw(0, tag, x.to_le_bytes().to_vec());
+            let b = self.recv_raw(0, tag + 1);
+            u64::from_le_bytes(b.try_into().unwrap())
+        }
+    }
+
+    /// Barrier (allreduce of nothing).
+    pub fn barrier(&mut self, tag: u64) {
+        self.allreduce_max(tag, 0);
+    }
+
+    /// Gather per-rank stats onto rank 0 (None elsewhere).
+    pub fn gather_stats(&mut self, tag: u64) -> Option<Vec<CommStats>> {
+        let p = self.nranks;
+        let mine = self.stats;
+        if self.rank == 0 {
+            let mut all = vec![mine];
+            for r in 1..p {
+                let b = self.recv_raw(r, tag);
+                let mut it = b.chunks_exact(8);
+                let mut next = || u64::from_le_bytes(it.next().unwrap().try_into().unwrap());
+                all.push(CommStats {
+                    messages: next(),
+                    bytes_sent: next(),
+                    collectives: next(),
+                    modeled_ns: next(),
+                    wall_ns: next(),
+                });
+            }
+            Some(all)
+        } else {
+            let mut b = Vec::with_capacity(40);
+            for x in [mine.messages, mine.bytes_sent, mine.collectives, mine.modeled_ns, mine.wall_ns] {
+                b.extend_from_slice(&x.to_le_bytes());
+            }
+            self.send_raw(0, tag, b);
+            None
+        }
+    }
+
+    // raw send/recv that do not count toward user-visible stats
+    fn send_raw(&mut self, to: u32, tag: u64, payload: Vec<u8>) {
+        self.senders[to as usize]
+            .send((self.rank, tag, payload))
+            .expect("rank channel closed");
+    }
+
+    fn recv_raw(&mut self, from: u32, tag: u64) -> Vec<u8> {
+        if let Some(pos) = self
+            .pending
+            .iter()
+            .position(|&(f, t, _)| f == from && t == tag)
+        {
+            return self.pending.remove(pos).unwrap().2;
+        }
+        loop {
+            let pkt = self.inbox.recv().expect("rank channel closed");
+            if pkt.0 == from && pkt.1 == tag {
+                return pkt.2;
+            }
+            self.pending.push_back(pkt);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// typed payload helpers
+// ---------------------------------------------------------------------
+
+/// Encode a u32 slice little-endian.
+pub fn encode_u32s(xs: &[u32]) -> Vec<u8> {
+    let mut b = Vec::with_capacity(xs.len() * 4);
+    for &x in xs {
+        b.extend_from_slice(&x.to_le_bytes());
+    }
+    b
+}
+
+/// Decode a little-endian u32 payload.
+pub fn decode_u32s(b: &[u8]) -> Vec<u32> {
+    assert!(b.len() % 4 == 0);
+    b.chunks_exact(4)
+        .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+        .collect()
+}
+
+/// Encode a u64 slice little-endian.
+pub fn encode_u64s(xs: &[u64]) -> Vec<u8> {
+    let mut b = Vec::with_capacity(xs.len() * 8);
+    for &x in xs {
+        b.extend_from_slice(&x.to_le_bytes());
+    }
+    b
+}
+
+/// Decode a little-endian u64 payload.
+pub fn decode_u64s(b: &[u8]) -> Vec<u64> {
+    assert!(b.len() % 8 == 0);
+    b.chunks_exact(8)
+        .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+        .collect()
+}
+
+/// Spawn `nranks` rank threads running `f` and return their results in
+/// rank order.  Panics in any rank propagate.
+pub fn run_ranks<T: Send>(
+    nranks: usize,
+    cost: CostModel,
+    f: impl Fn(&mut Comm) -> T + Sync,
+) -> Vec<T> {
+    assert!(nranks >= 1);
+    let mut senders: Vec<Sender<Packet>> = Vec::with_capacity(nranks);
+    let mut inboxes: Vec<Receiver<Packet>> = Vec::with_capacity(nranks);
+    for _ in 0..nranks {
+        let (tx, rx) = channel();
+        senders.push(tx);
+        inboxes.push(rx);
+    }
+    let f = &f;
+    std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(nranks);
+        for (rank, inbox) in inboxes.into_iter().enumerate() {
+            let senders = senders.clone();
+            handles.push(scope.spawn(move || {
+                let mut comm = Comm {
+                    rank: rank as u32,
+                    nranks: nranks as u32,
+                    senders,
+                    inbox,
+                    pending: VecDeque::new(),
+                    cost,
+                    stats: CommStats::default(),
+                };
+                f(&mut comm)
+            }));
+        }
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("rank thread panicked"))
+            .collect()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allreduce_sum_over_ranks() {
+        let out = run_ranks(8, CostModel::zero(), |c| {
+            c.allreduce_sum(100, c.rank() as u64 + 1)
+        });
+        assert_eq!(out, vec![36; 8]);
+    }
+
+    #[test]
+    fn allreduce_max_over_ranks() {
+        let out = run_ranks(5, CostModel::zero(), |c| c.allreduce_max(10, c.rank() as u64));
+        assert_eq!(out, vec![4; 5]);
+    }
+
+    #[test]
+    fn single_rank_allreduce_is_identity() {
+        let out = run_ranks(1, CostModel::zero(), |c| c.allreduce_sum(0, 42));
+        assert_eq!(out, vec![42]);
+    }
+
+    #[test]
+    fn alltoallv_exchanges_personalized_data() {
+        let out = run_ranks(4, CostModel::zero(), |c| {
+            let me = c.rank();
+            let bufs: Vec<Vec<u8>> = (0..4).map(|r| vec![me as u8, r as u8]).collect();
+            let got = c.alltoallv(7, bufs);
+            // got[r] must be [r, me]
+            for (r, b) in got.iter().enumerate() {
+                assert_eq!(b, &vec![r as u8, me as u8]);
+            }
+            me
+        });
+        assert_eq!(out, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn selective_recv_handles_out_of_order_tags() {
+        run_ranks(2, CostModel::zero(), |c| {
+            if c.rank() == 0 {
+                c.send(1, 5, vec![5]);
+                c.send(1, 6, vec![6]);
+            } else {
+                // receive in reverse tag order
+                assert_eq!(c.recv(0, 6), vec![6]);
+                assert_eq!(c.recv(0, 5), vec![5]);
+            }
+        });
+    }
+
+    #[test]
+    fn stats_account_messages_and_bytes() {
+        let out = run_ranks(2, CostModel::default(), |c| {
+            if c.rank() == 0 {
+                c.send(1, 1, vec![0u8; 100]);
+            } else {
+                c.recv(0, 1);
+            }
+            c.stats()
+        });
+        assert_eq!(out[0].messages, 1);
+        assert_eq!(out[0].bytes_sent, 100);
+        assert!(out[0].modeled_ns >= 1_500);
+        assert_eq!(out[1].messages, 0);
+    }
+
+    #[test]
+    fn u32_u64_codecs_roundtrip() {
+        let xs = vec![0u32, 1, u32::MAX, 42];
+        assert_eq!(decode_u32s(&encode_u32s(&xs)), xs);
+        let ys = vec![0u64, u64::MAX, 7];
+        assert_eq!(decode_u64s(&encode_u64s(&ys)), ys);
+    }
+
+    #[test]
+    fn barrier_completes() {
+        // would deadlock if broken
+        run_ranks(6, CostModel::zero(), |c| {
+            for i in 0..3 {
+                c.barrier(1000 + i * 2);
+            }
+        });
+    }
+}

@@ -1,0 +1,111 @@
+//! Interconnect cost model: α–β (latency–bandwidth) accounting.
+//!
+//! In-process channels make real message passing essentially free, which
+//! would hide the communication scaling the paper measures on InfiniBand.
+//! Every comm operation therefore also *accounts* modeled time:
+//! `t(msg) = α + β · bytes`, collectives pay `ceil(log2(p))` α-steps.
+//! Reported "comm time" = wall time blocked in comm + modeled time, and
+//! both are recorded separately so benches can report either.
+
+/// α–β interconnect model. Defaults approximate one NVLink/IB hop as in
+/// the paper's AiMOS testbed (1.5 µs latency, 10 GB/s effective).
+#[derive(Clone, Copy, Debug)]
+pub struct CostModel {
+    /// Per-message latency in nanoseconds.
+    pub alpha_ns: u64,
+    /// Per-byte transfer time in picoseconds (ps avoids f64 in hot path).
+    pub beta_ps_per_byte: u64,
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        CostModel { alpha_ns: 1_500, beta_ps_per_byte: 100 } // 10 GB/s
+    }
+}
+
+impl CostModel {
+    /// A model where communication is free (for algorithm-only studies).
+    pub fn zero() -> Self {
+        CostModel { alpha_ns: 0, beta_ps_per_byte: 0 }
+    }
+
+    /// A high-latency interconnect (the "distributed systems with much
+    /// higher latency costs" scenario of §5.4, where D1-2GL pays off).
+    pub fn high_latency() -> Self {
+        CostModel { alpha_ns: 50_000, beta_ps_per_byte: 100 }
+    }
+
+    #[inline]
+    pub fn msg_ns(&self, bytes: usize) -> u64 {
+        self.alpha_ns + (self.beta_ps_per_byte * bytes as u64) / 1000
+    }
+
+    /// Modeled time of one collective step over `p` ranks moving `bytes`
+    /// per rank: log-tree latency plus serialized bandwidth term.
+    #[inline]
+    pub fn collective_ns(&self, p: usize, bytes: usize) -> u64 {
+        let steps = (usize::BITS - p.max(1).leading_zeros()) as u64;
+        self.alpha_ns * steps + (self.beta_ps_per_byte * bytes as u64) / 1000
+    }
+}
+
+/// Per-rank communication statistics, accumulated by [`super::Comm`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CommStats {
+    pub messages: u64,
+    pub bytes_sent: u64,
+    pub collectives: u64,
+    /// Modeled (α–β) communication time.
+    pub modeled_ns: u64,
+    /// Wall-clock time spent blocked in comm calls.
+    pub wall_ns: u64,
+}
+
+impl CommStats {
+    pub fn merge(&mut self, other: &CommStats) {
+        self.messages += other.messages;
+        self.bytes_sent += other.bytes_sent;
+        self.collectives += other.collectives;
+        self.modeled_ns = self.modeled_ns.max(other.modeled_ns);
+        self.wall_ns = self.wall_ns.max(other.wall_ns);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn msg_cost_monotone_in_bytes() {
+        let m = CostModel::default();
+        assert!(m.msg_ns(0) == m.alpha_ns);
+        assert!(m.msg_ns(1 << 20) > m.msg_ns(1 << 10));
+    }
+
+    #[test]
+    fn collective_scales_with_log_p() {
+        let m = CostModel::default();
+        let t2 = m.collective_ns(2, 0);
+        let t128 = m.collective_ns(128, 0);
+        assert_eq!(t2, 2 * m.alpha_ns);
+        assert_eq!(t128, 8 * m.alpha_ns);
+    }
+
+    #[test]
+    fn zero_model_is_free() {
+        let m = CostModel::zero();
+        assert_eq!(m.msg_ns(12345), 0);
+        assert_eq!(m.collective_ns(64, 999), 0);
+    }
+
+    #[test]
+    fn stats_merge_takes_max_time_sum_bytes() {
+        let mut a = CommStats { messages: 1, bytes_sent: 10, collectives: 2, modeled_ns: 5, wall_ns: 7 };
+        let b = CommStats { messages: 2, bytes_sent: 20, collectives: 1, modeled_ns: 9, wall_ns: 3 };
+        a.merge(&b);
+        assert_eq!(a.messages, 3);
+        assert_eq!(a.bytes_sent, 30);
+        assert_eq!(a.modeled_ns, 9);
+        assert_eq!(a.wall_ns, 7);
+    }
+}

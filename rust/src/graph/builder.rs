@@ -1,0 +1,126 @@
+//! Edge-list → CSR construction with the paper's preprocessing:
+//! deduplicate multi-edges, drop self-loops, symmetrize.
+
+use super::{Graph, VId};
+
+/// Accumulates (possibly directed, duplicated) edges and produces a clean
+/// undirected CSR.
+#[derive(Clone, Debug)]
+pub struct GraphBuilder {
+    n: usize,
+    edges: Vec<(VId, VId)>,
+}
+
+impl GraphBuilder {
+    pub fn new(n: usize) -> Self {
+        GraphBuilder { n, edges: Vec::new() }
+    }
+
+    pub fn with_edge_capacity(n: usize, m: usize) -> Self {
+        GraphBuilder { n, edges: Vec::with_capacity(m) }
+    }
+
+    /// Add a single undirected edge (either direction).
+    #[inline]
+    pub fn edge(&mut self, u: VId, v: VId) -> &mut Self {
+        self.edges.push((u, v));
+        self
+    }
+
+    /// Add many undirected edges.
+    pub fn edges(mut self, es: &[(VId, VId)]) -> Self {
+        self.edges.extend_from_slice(es);
+        self
+    }
+
+    pub fn edge_count(&self) -> usize {
+        self.edges.len()
+    }
+
+    /// Build the CSR: symmetrize, sort, dedup, drop self-loops.
+    pub fn build(self) -> Graph {
+        let n = self.n;
+        // counting sort by source for O(n + m) CSR construction
+        let mut deg = vec![0u64; n + 1];
+        let mut arcs = Vec::with_capacity(self.edges.len() * 2);
+        for &(u, v) in &self.edges {
+            assert!((u as usize) < n && (v as usize) < n, "edge out of range");
+            if u == v {
+                continue; // drop self-loops
+            }
+            arcs.push((u, v));
+            arcs.push((v, u));
+        }
+        for &(u, _) in &arcs {
+            deg[u as usize + 1] += 1;
+        }
+        for i in 0..n {
+            deg[i + 1] += deg[i];
+        }
+        let mut col_idx = vec![0 as VId; arcs.len()];
+        let mut cursor = deg.clone();
+        for &(u, v) in &arcs {
+            let c = &mut cursor[u as usize];
+            col_idx[*c as usize] = v;
+            *c += 1;
+        }
+        // sort + dedup each row
+        let mut out_ptr = vec![0u64; n + 1];
+        let mut out_idx = Vec::with_capacity(col_idx.len());
+        for v in 0..n {
+            let s = deg[v] as usize;
+            let e = deg[v + 1] as usize;
+            let row = &mut col_idx[s..e];
+            row.sort_unstable();
+            let before = out_idx.len();
+            let mut last: Option<VId> = None;
+            for &u in row.iter() {
+                if last != Some(u) {
+                    out_idx.push(u);
+                    last = Some(u);
+                }
+            }
+            out_ptr[v + 1] = out_ptr[v] + (out_idx.len() - before) as u64;
+        }
+        Graph { row_ptr: out_ptr, col_idx: out_idx }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dedup_and_self_loop_removal() {
+        let g = GraphBuilder::new(3)
+            .edges(&[(0, 1), (1, 0), (0, 1), (2, 2), (1, 2)])
+            .build();
+        assert_eq!(g.m(), 2);
+        assert_eq!(g.neighbors(0), &[1]);
+        assert_eq!(g.neighbors(1), &[0, 2]);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn empty_graph() {
+        let g = GraphBuilder::new(5).build();
+        assert_eq!(g.n(), 5);
+        assert_eq!(g.m(), 0);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn rows_are_sorted() {
+        let g = GraphBuilder::new(4)
+            .edges(&[(3, 0), (3, 2), (3, 1)])
+            .build();
+        assert_eq!(g.neighbors(3), &[0, 1, 2]);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    #[should_panic(expected = "edge out of range")]
+    fn out_of_range_panics() {
+        GraphBuilder::new(2).edges(&[(0, 5)]).build();
+    }
+}

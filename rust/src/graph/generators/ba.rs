@@ -1,0 +1,64 @@
+//! Preferential attachment (Barabási–Albert) — stand-in for the paper's
+//! social-network (soc-LiveJournal1, hollywood-2009, com-Friendster) and
+//! web-crawl (indochina-2004) inputs: heavy-tailed degrees with a giant
+//! connected component.
+
+use crate::graph::{Graph, GraphBuilder, VId};
+use crate::util::rng::Rng;
+
+/// BA graph: each new vertex attaches `m` edges to existing vertices with
+/// probability proportional to degree (implemented with the standard
+/// edge-endpoint sampling trick).
+pub fn preferential_attachment(n: usize, m: usize, seed: u64) -> Graph {
+    assert!(n > m && m >= 1);
+    let mut rng = Rng::new(seed);
+    // endpoint pool: every edge contributes both endpoints, so sampling a
+    // uniform pool element is degree-proportional sampling.
+    let mut pool: Vec<VId> = Vec::with_capacity(2 * n * m);
+    let mut builder = GraphBuilder::with_edge_capacity(n, n * m);
+    // seed clique on m+1 vertices
+    for u in 0..=m {
+        for v in (u + 1)..=m {
+            builder.edge(u as VId, v as VId);
+            pool.push(u as VId);
+            pool.push(v as VId);
+        }
+    }
+    for v in (m + 1)..n {
+        for _ in 0..m {
+            let t = pool[rng.below(pool.len() as u64) as usize];
+            builder.edge(v as VId, t);
+            pool.push(v as VId);
+            pool.push(t);
+        }
+    }
+    builder.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ba_shape() {
+        let g = preferential_attachment(500, 3, 1);
+        assert_eq!(g.n(), 500);
+        // ~3 per vertex minus dedup
+        assert!(g.m() >= 1400 && g.m() <= 1500 + 3);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn ba_is_heavy_tailed() {
+        let g = preferential_attachment(2000, 4, 2);
+        assert!((g.max_degree() as f64) > 4.0 * g.avg_degree());
+    }
+
+    #[test]
+    fn every_vertex_connected() {
+        let g = preferential_attachment(300, 2, 3);
+        for v in 0..g.n() {
+            assert!(g.degree(v as VId) >= 1);
+        }
+    }
+}

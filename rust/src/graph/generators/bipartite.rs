@@ -1,0 +1,92 @@
+//! Bipartite generators for the PD2 experiments (Table 2):
+//!
+//! * `circuit_like` — Hamrle3 surrogate: circuit-simulation matrices have
+//!   near-uniform small row degrees (δ_avg 3.5, δ_max 18).
+//! * `citation_like` — patents surrogate: citation matrices are sparser
+//!   with a skewed tail (δ_avg 1.9, δ_max ~1k).
+//!
+//! Both build the bipartite representation B(V_s, V_t, E) of a
+//! non-symmetric sparse matrix as in §3.6.
+
+use crate::graph::{BipartiteGraph, GraphBuilder, VId};
+use crate::util::rng::Rng;
+
+/// Bipartite graph with `ns` source (row) and `nt` target (column)
+/// vertices; row degrees uniform in [dmin, dmax], column picked with mild
+/// locality (band structure like a circuit matrix).
+pub fn circuit_like(ns: usize, nt: usize, dmin: usize, dmax: usize, seed: u64) -> BipartiteGraph {
+    assert!(ns > 0 && nt > 0 && dmin >= 1 && dmax >= dmin);
+    let mut rng = Rng::new(seed);
+    let mut b = GraphBuilder::with_edge_capacity(ns + nt, ns * (dmin + dmax) / 2);
+    for r in 0..ns {
+        let deg = dmin as u64 + rng.below((dmax - dmin + 1) as u64);
+        // banded: columns near the diagonal position, plus occasional far
+        let center = (r as f64 / ns as f64 * nt as f64) as i64;
+        for _ in 0..deg {
+            let c = if rng.chance(0.85) {
+                let off = rng.below(33) as i64 - 16;
+                (center + off).rem_euclid(nt as i64) as usize
+            } else {
+                rng.below(nt as u64) as usize
+            };
+            b.edge(r as VId, (ns + c) as VId);
+        }
+    }
+    BipartiteGraph { graph: b.build(), ns }
+}
+
+/// Citation-like bipartite: row degrees ~ geometric (many 1–2s), column
+/// popularity heavy-tailed via preferential sampling.
+pub fn citation_like(ns: usize, nt: usize, avg_degree: f64, seed: u64) -> BipartiteGraph {
+    assert!(ns > 0 && nt > 0 && avg_degree >= 1.0);
+    let mut rng = Rng::new(seed);
+    let mut b = GraphBuilder::with_edge_capacity(ns + nt, (ns as f64 * avg_degree) as usize);
+    // endpoint pool for preferential column popularity
+    let mut pool: Vec<u32> = (0..nt.min(64) as u32).collect();
+    let p_stop = 1.0 / avg_degree;
+    for r in 0..ns {
+        // geometric degree >= 1
+        let mut deg = 1usize;
+        while !rng.chance(p_stop) && deg < 64 {
+            deg += 1;
+        }
+        for _ in 0..deg {
+            let c = if rng.chance(0.5) {
+                pool[rng.below(pool.len() as u64) as usize] as usize
+            } else {
+                rng.below(nt as u64) as usize
+            };
+            b.edge(r as VId, (ns + c) as VId);
+            pool.push(c as u32);
+        }
+    }
+    BipartiteGraph { graph: b.build(), ns }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn circuit_like_shape() {
+        let bg = circuit_like(1000, 1000, 2, 6, 1);
+        bg.validate().unwrap();
+        let avg = bg.graph.avg_degree();
+        assert!((1.5..8.0).contains(&avg), "avg {avg}");
+        assert!(bg.graph.max_degree() < 64);
+    }
+
+    #[test]
+    fn citation_like_is_skewed() {
+        let bg = citation_like(3000, 3000, 2.0, 2);
+        bg.validate().unwrap();
+        assert!((bg.graph.max_degree() as f64) > 8.0 * bg.graph.avg_degree());
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = circuit_like(100, 100, 2, 4, 9);
+        let b = circuit_like(100, 100, 2, 4, 9);
+        assert_eq!(a.graph, b.graph);
+    }
+}

@@ -1,0 +1,40 @@
+//! Erdős–Rényi G(n, m) — the unstructured random baseline used in tests
+//! and property sweeps.
+
+use crate::graph::{Graph, GraphBuilder, VId};
+use crate::util::rng::Rng;
+
+/// G(n, m): `m` undirected edges sampled uniformly (duplicates removed by
+/// the builder, so the final edge count can be slightly below `m`).
+pub fn gnm(n: usize, m: usize, seed: u64) -> Graph {
+    assert!(n >= 2);
+    let mut rng = Rng::new(seed);
+    let mut b = GraphBuilder::with_edge_capacity(n, m);
+    for _ in 0..m {
+        let u = rng.below(n as u64) as VId;
+        let mut v = rng.below(n as u64) as VId;
+        while v == u {
+            v = rng.below(n as u64) as VId;
+        }
+        b.edge(u, v);
+    }
+    b.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gnm_counts() {
+        let g = gnm(100, 300, 1);
+        assert_eq!(g.n(), 100);
+        assert!(g.m() <= 300 && g.m() > 250);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn deterministic() {
+        assert_eq!(gnm(50, 100, 7), gnm(50, 100, 7));
+    }
+}

@@ -1,0 +1,53 @@
+//! Road-network-like lattice — stand-in for europe_osm (Table 1):
+//! very low average degree (~2), small max degree, huge diameter.
+
+use crate::graph::{Graph, GraphBuilder, VId};
+use crate::util::rng::Rng;
+
+/// 2D grid with a fraction of edges removed (dead ends / sparse rural
+/// roads) and occasional diagonal shortcuts (highway ramps), keeping the
+/// degree distribution road-like: δ_avg ≈ 2, δ_max small.
+pub fn road_lattice(nx: usize, ny: usize, seed: u64) -> Graph {
+    assert!(nx >= 2 && ny >= 2);
+    let n = nx * ny;
+    let id = |x: usize, y: usize| (x + nx * y) as VId;
+    let mut rng = Rng::new(seed);
+    let mut b = GraphBuilder::with_edge_capacity(n, n * 2);
+    for y in 0..ny {
+        for x in 0..nx {
+            // keep ~55% of grid edges => avg degree ~2.2
+            if x + 1 < nx && rng.chance(0.55) {
+                b.edge(id(x, y), id(x + 1, y));
+            }
+            if y + 1 < ny && rng.chance(0.55) {
+                b.edge(id(x, y), id(x, y + 1));
+            }
+            // rare diagonals
+            if x + 1 < nx && y + 1 < ny && rng.chance(0.02) {
+                b.edge(id(x, y), id(x + 1, y + 1));
+            }
+        }
+    }
+    b.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn road_degrees() {
+        let g = road_lattice(100, 100, 1);
+        assert_eq!(g.n(), 10_000);
+        let avg = g.avg_degree();
+        assert!((1.5..3.0).contains(&avg), "avg {avg}");
+        assert!(g.max_degree() <= 10);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn deterministic() {
+        assert_eq!(road_lattice(20, 20, 5), road_lattice(20, 20, 5));
+        assert_ne!(road_lattice(20, 20, 5), road_lattice(20, 20, 6));
+    }
+}

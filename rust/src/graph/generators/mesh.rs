@@ -1,0 +1,120 @@
+//! Uniform 3D hexahedral meshes — the paper's weak-scaling workload
+//! (§5.3: "uniform 3D hexahedral meshes … partitioned … in slabs").
+//!
+//! Periodic boundaries give δ_avg = δ_max = 6 exactly, matching Table 1's
+//! hexahedral row.  Vertices are numbered x-fastest, z-slowest, so a
+//! contiguous block partition along the last axis is the paper's "slab"
+//! distribution.
+
+use crate::graph::{Graph, GraphBuilder, VId};
+
+/// Periodic (toroidal) 3D grid: each cell has exactly 6 neighbors.
+/// Dimensions of 1 or 2 along an axis degenerate gracefully (duplicate
+/// edges are removed by the builder).
+pub fn hex_mesh(nx: usize, ny: usize, nz: usize) -> Graph {
+    assert!(nx > 0 && ny > 0 && nz > 0);
+    let n = nx * ny * nz;
+    let id = |x: usize, y: usize, z: usize| -> VId {
+        (x + nx * (y + ny * z)) as VId
+    };
+    let mut b = GraphBuilder::with_edge_capacity(n, n * 3);
+    for z in 0..nz {
+        for y in 0..ny {
+            for x in 0..nx {
+                let v = id(x, y, z);
+                if nx > 1 {
+                    b.edge(v, id((x + 1) % nx, y, z));
+                }
+                if ny > 1 {
+                    b.edge(v, id(x, (y + 1) % ny, z));
+                }
+                if nz > 1 {
+                    b.edge(v, id(x, y, (z + 1) % nz));
+                }
+            }
+        }
+    }
+    b.build()
+}
+
+/// Non-periodic 3D grid (7-point stencil interior) — used when an
+/// open-boundary PDE surrogate is preferred (Queen/Bump-like δ spread).
+pub fn grid3d(nx: usize, ny: usize, nz: usize) -> Graph {
+    assert!(nx > 0 && ny > 0 && nz > 0);
+    let n = nx * ny * nz;
+    let id = |x: usize, y: usize, z: usize| -> VId {
+        (x + nx * (y + ny * z)) as VId
+    };
+    let mut b = GraphBuilder::with_edge_capacity(n, n * 3);
+    for z in 0..nz {
+        for y in 0..ny {
+            for x in 0..nx {
+                let v = id(x, y, z);
+                if x + 1 < nx {
+                    b.edge(v, id(x + 1, y, z));
+                }
+                if y + 1 < ny {
+                    b.edge(v, id(x, y + 1, z));
+                }
+                if z + 1 < nz {
+                    b.edge(v, id(x, y, z + 1));
+                }
+            }
+        }
+    }
+    b.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn periodic_mesh_is_6_regular() {
+        let g = hex_mesh(4, 4, 4);
+        assert_eq!(g.n(), 64);
+        for v in 0..g.n() {
+            assert_eq!(g.degree(v as VId), 6, "vertex {v}");
+        }
+        assert_eq!(g.m(), 64 * 3);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn open_grid_degrees() {
+        let g = grid3d(3, 3, 3);
+        assert_eq!(g.n(), 27);
+        // corner has degree 3, center has 6
+        assert_eq!(g.degree(0), 3);
+        let center = 1 + 3 * (1 + 3 * 1);
+        assert_eq!(g.degree(center as VId), 6);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn degenerate_axes() {
+        let g = hex_mesh(4, 1, 1); // a ring
+        assert_eq!(g.n(), 4);
+        for v in 0..4 {
+            assert_eq!(g.degree(v), 2);
+        }
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn slab_axis_is_contiguous() {
+        // vertices of one z-slab are a contiguous id range
+        let (nx, ny, nz) = (3, 3, 4);
+        let g = hex_mesh(nx, ny, nz);
+        assert_eq!(g.n(), nx * ny * nz);
+        // all neighbors of slab z are within one slab distance
+        for v in 0..g.n() {
+            let z = v / (nx * ny);
+            for &u in g.neighbors(v as VId) {
+                let uz = u as usize / (nx * ny);
+                let dz = z.abs_diff(uz);
+                assert!(dz == 0 || dz == 1 || dz == nz - 1);
+            }
+        }
+    }
+}

@@ -1,0 +1,126 @@
+//! Synthetic graph generators — the offline stand-ins for the paper's
+//! Table 1 / Table 2 inputs (see DESIGN.md "Substitutions").
+//!
+//! | paper input class            | generator                       |
+//! |------------------------------|---------------------------------|
+//! | PDE meshes (ldoor, Queen…)   | [`mesh::hex_mesh`] (exact class)|
+//! | weak-scaling hexahedral      | [`mesh::hex_mesh`] slabs        |
+//! | social networks (twitter7…)  | [`ba::preferential_attachment`] |
+//! | kron_g500 (synthetic skewed) | [`rmat::rmat`]                  |
+//! | road networks (europe_osm)   | [`lattice::road_lattice`]       |
+//! | rgg_n_2_24_s0                | [`rgg::random_geometric`]       |
+//! | mycielskianNN (chromatic     | [`mycielskian::mycielskian`]    |
+//! |  adversaries, exact constr.) |                                 |
+//! | web graphs (indochina-2004)  | [`ba`] with high skew           |
+//! | Hamrle3 / patents (Table 2)  | [`bipartite`]                   |
+
+pub mod ba;
+pub mod bipartite;
+pub mod erdos_renyi;
+pub mod lattice;
+pub mod mesh;
+pub mod mycielskian;
+pub mod rgg;
+pub mod rmat;
+
+use super::Graph;
+
+/// Parse a graph spec string into a graph. Used by the CLI and benches.
+///
+/// Specs:
+///   `mesh:NXxNYxNZ`            periodic 3D hexahedral mesh
+///   `rmat:SCALE,EDGEFACTOR`    RMAT (a=.57,b=.19,c=.19)
+///   `ba:N,M`                   preferential attachment, M edges/vertex
+///   `er:N,M`                   Erdős–Rényi G(n, m)
+///   `rgg:N,DEG`                random geometric with expected degree DEG
+///   `road:NXxNY`               road-like lattice
+///   `myc:K`                    Mycielskian with chromatic number K
+/// Optional `@seed` suffix, e.g. `rmat:12,8@42`.
+pub fn from_spec(spec: &str) -> Result<Graph, String> {
+    let (spec, seed) = match spec.split_once('@') {
+        Some((s, sd)) => (s, sd.parse::<u64>().map_err(|e| e.to_string())?),
+        None => (spec, 1u64),
+    };
+    let (kind, args) = spec
+        .split_once(':')
+        .ok_or_else(|| format!("bad graph spec `{spec}`"))?;
+    let nums = |s: &str, sep: char| -> Result<Vec<usize>, String> {
+        s.split(sep)
+            .map(|x| x.trim().parse::<usize>().map_err(|e| e.to_string()))
+            .collect()
+    };
+    match kind {
+        "mesh" => {
+            let d = nums(args, 'x')?;
+            if d.len() != 3 {
+                return Err("mesh:NXxNYxNZ".into());
+            }
+            Ok(mesh::hex_mesh(d[0], d[1], d[2]))
+        }
+        "rmat" => {
+            let d = nums(args, ',')?;
+            Ok(rmat::rmat(d[0] as u32, d[1], seed))
+        }
+        "ba" => {
+            let d = nums(args, ',')?;
+            Ok(ba::preferential_attachment(d[0], d[1], seed))
+        }
+        "er" => {
+            let d = nums(args, ',')?;
+            Ok(erdos_renyi::gnm(d[0], d[1], seed))
+        }
+        "rgg" => {
+            let d = nums(args, ',')?;
+            Ok(rgg::random_geometric(d[0], d[1] as f64, seed))
+        }
+        "road" => {
+            let d = nums(args, 'x')?;
+            if d.len() != 2 {
+                return Err("road:NXxNY".into());
+            }
+            Ok(lattice::road_lattice(d[0], d[1], seed))
+        }
+        "myc" => {
+            let d = nums(args, ',')?;
+            Ok(mycielskian::mycielskian(d[0] as u32))
+        }
+        _ => Err(format!("unknown graph kind `{kind}`")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn specs_parse_and_build() {
+        for spec in [
+            "mesh:4x4x2",
+            "rmat:8,4",
+            "ba:200,3",
+            "er:100,300",
+            "rgg:200,8",
+            "road:10x10",
+            "myc:5",
+            "rmat:8,4@7",
+        ] {
+            let g = from_spec(spec).unwrap_or_else(|e| panic!("{spec}: {e}"));
+            g.validate().unwrap_or_else(|e| panic!("{spec}: {e}"));
+            assert!(g.n() > 0);
+        }
+    }
+
+    #[test]
+    fn bad_specs_error() {
+        assert!(from_spec("mesh:4x4").is_err());
+        assert!(from_spec("nope:1").is_err());
+        assert!(from_spec("meshless").is_err());
+    }
+
+    #[test]
+    fn seeds_change_random_graphs() {
+        let a = from_spec("er:100,300@1").unwrap();
+        let b = from_spec("er:100,300@2").unwrap();
+        assert_ne!(a, b);
+    }
+}

@@ -1,0 +1,92 @@
+//! Mycielski construction — the *exact* construction behind the paper's
+//! mycielskian19/mycielskian20 adversaries (Table 1): triangle-free graphs
+//! with known chromatic number k, on which distributed speculative
+//! coloring struggles (§5.2's outliers).
+//!
+//! mycielskian(k) has chromatic number exactly k; sizes grow as
+//! n_{k+1} = 2 n_k + 1 from K2 (k=2).
+
+use crate::graph::{Graph, GraphBuilder, VId};
+
+/// Iterated Mycielskian with chromatic number `k` (k >= 2).
+/// k=2 is a single edge; each iteration applies the Mycielski operation.
+pub fn mycielskian(k: u32) -> Graph {
+    assert!((2..=14).contains(&k), "k in 2..=14 for this testbed");
+    // start from K2
+    let mut n = 2usize;
+    let mut edges: Vec<(VId, VId)> = vec![(0, 1)];
+    for _ in 2..k {
+        // Mycielski operation: vertices v_i -> add u_i (shadow) + w (apex).
+        // u_i adjacent to N(v_i); w adjacent to all u_i.
+        let mut new_edges = Vec::with_capacity(edges.len() * 3 + n);
+        new_edges.extend_from_slice(&edges);
+        for &(a, bb) in &edges {
+            new_edges.push((a, bb + n as VId)); // v_a - u_b
+            new_edges.push((bb, a + n as VId)); // v_b - u_a
+        }
+        let w = (2 * n) as VId;
+        for i in 0..n {
+            new_edges.push((w, (n + i) as VId));
+        }
+        edges = new_edges;
+        n = 2 * n + 1;
+    }
+    GraphBuilder::with_edge_capacity(n, edges.len())
+        .edges(&edges)
+        .build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coloring::local::greedy::serial_greedy_natural;
+
+    #[test]
+    fn sizes_follow_recurrence() {
+        // n_2 = 2; n_{k+1} = 2 n_k + 1
+        let mut expect = 2usize;
+        for k in 2..=8 {
+            let g = mycielskian(k);
+            assert_eq!(g.n(), expect, "k={k}");
+            g.validate().unwrap();
+            expect = 2 * expect + 1;
+        }
+    }
+
+    #[test]
+    fn myc4_is_grotzsch() {
+        // chromatic number 4 => the 11-vertex, 20-edge Grötzsch graph
+        let g = mycielskian(4);
+        assert_eq!(g.n(), 11);
+        assert_eq!(g.m(), 20);
+    }
+
+    #[test]
+    fn triangle_free() {
+        let g = mycielskian(6);
+        for v in 0..g.n() as VId {
+            for &u in g.neighbors(v) {
+                for &w in g.neighbors(u) {
+                    if w == v {
+                        continue;
+                    }
+                    assert!(
+                        g.neighbors(w).binary_search(&v).is_err(),
+                        "triangle {v}-{u}-{w}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn greedy_needs_at_least_k_colors() {
+        // chromatic number is exactly k; any proper coloring uses >= k
+        for k in 3..=7 {
+            let g = mycielskian(k);
+            let colors = serial_greedy_natural(&g);
+            let used = *colors.iter().max().unwrap();
+            assert!(used >= k, "k={k} used={used}");
+        }
+    }
+}

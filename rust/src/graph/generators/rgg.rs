@@ -1,0 +1,80 @@
+//! Random geometric graph — stand-in for rgg_n_2_24_s0 (Table 1):
+//! uniform points in the unit square, edges within radius r.  Uses a
+//! uniform grid for O(n · deg) construction.
+
+use crate::graph::{Graph, GraphBuilder, VId};
+use crate::util::rng::Rng;
+
+/// RGG with `n` points and radius chosen for `expected_degree`
+/// (E[deg] = n·π·r² in the unit square, ignoring boundary effects).
+pub fn random_geometric(n: usize, expected_degree: f64, seed: u64) -> Graph {
+    assert!(n >= 2);
+    let r = (expected_degree / (n as f64 * std::f64::consts::PI)).sqrt();
+    let mut rng = Rng::new(seed);
+    let pts: Vec<(f64, f64)> = (0..n).map(|_| (rng.f64(), rng.f64())).collect();
+
+    // bucket grid with cell size >= r so neighbors are in the 3x3 stencil
+    let cells = ((1.0 / r).floor() as usize).clamp(1, 4096);
+    let cell_of = |p: (f64, f64)| -> (usize, usize) {
+        (
+            ((p.0 * cells as f64) as usize).min(cells - 1),
+            ((p.1 * cells as f64) as usize).min(cells - 1),
+        )
+    };
+    let mut grid: Vec<Vec<u32>> = vec![Vec::new(); cells * cells];
+    for (i, &p) in pts.iter().enumerate() {
+        let (cx, cy) = cell_of(p);
+        grid[cy * cells + cx].push(i as u32);
+    }
+    let r2 = r * r;
+    let mut b = GraphBuilder::with_edge_capacity(n, (n as f64 * expected_degree / 2.0) as usize);
+    for (i, &p) in pts.iter().enumerate() {
+        let (cx, cy) = cell_of(p);
+        for dy in -1i64..=1 {
+            for dx in -1i64..=1 {
+                let nxi = cx as i64 + dx;
+                let nyi = cy as i64 + dy;
+                if nxi < 0 || nyi < 0 || nxi >= cells as i64 || nyi >= cells as i64 {
+                    continue;
+                }
+                for &j in &grid[nyi as usize * cells + nxi as usize] {
+                    if (j as usize) <= i {
+                        continue;
+                    }
+                    let q = pts[j as usize];
+                    let d2 = (p.0 - q.0).powi(2) + (p.1 - q.1).powi(2);
+                    if d2 <= r2 {
+                        b.edge(i as VId, j);
+                    }
+                }
+            }
+        }
+    }
+    b.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rgg_degree_close_to_target() {
+        let g = random_geometric(4000, 12.0, 1);
+        assert_eq!(g.n(), 4000);
+        let avg = g.avg_degree();
+        assert!((8.0..16.0).contains(&avg), "avg degree {avg}");
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn rgg_max_degree_bounded() {
+        // geometric graphs have no heavy tail
+        let g = random_geometric(2000, 10.0, 2);
+        assert!(g.max_degree() < 40);
+    }
+
+    #[test]
+    fn deterministic() {
+        assert_eq!(random_geometric(500, 8.0, 3), random_geometric(500, 8.0, 3));
+    }
+}

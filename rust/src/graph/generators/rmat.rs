@@ -1,0 +1,78 @@
+//! RMAT / Kronecker generator — stand-in for kron_g500-logn21 and other
+//! skewed-degree synthetic inputs (Graph500 parameters a=.57 b=.19 c=.19).
+
+use crate::graph::{Graph, GraphBuilder, VId};
+use crate::util::rng::Rng;
+
+/// RMAT graph with `2^scale` vertices and `edge_factor * 2^scale`
+/// undirected edges (before dedup), Graph500 probabilities.
+pub fn rmat(scale: u32, edge_factor: usize, seed: u64) -> Graph {
+    rmat_with(scale, edge_factor, 0.57, 0.19, 0.19, seed)
+}
+
+/// RMAT with explicit quadrant probabilities (a + b + c <= 1).
+pub fn rmat_with(
+    scale: u32,
+    edge_factor: usize,
+    a: f64,
+    b: f64,
+    c: f64,
+    seed: u64,
+) -> Graph {
+    assert!(scale <= 30, "scale too large for this testbed");
+    assert!(a + b + c <= 1.0 + 1e-9);
+    let n = 1usize << scale;
+    let m = edge_factor * n;
+    let mut rng = Rng::new(seed);
+    let mut builder = GraphBuilder::with_edge_capacity(n, m);
+    for _ in 0..m {
+        let (mut u, mut v) = (0usize, 0usize);
+        for _ in 0..scale {
+            let r = rng.f64();
+            let (du, dv) = if r < a {
+                (0, 0)
+            } else if r < a + b {
+                (0, 1)
+            } else if r < a + b + c {
+                (1, 0)
+            } else {
+                (1, 1)
+            };
+            u = (u << 1) | du;
+            v = (v << 1) | dv;
+        }
+        builder.edge(u as VId, v as VId);
+    }
+    builder.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rmat_shape() {
+        let g = rmat(10, 8, 1);
+        assert_eq!(g.n(), 1024);
+        assert!(g.m() > 1024); // most of 8192 survive dedup
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn rmat_is_skewed() {
+        let g = rmat(12, 8, 3);
+        // skewed: max degree far above average
+        assert!(
+            (g.max_degree() as f64) > 5.0 * g.avg_degree(),
+            "max {} avg {}",
+            g.max_degree(),
+            g.avg_degree()
+        );
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        assert_eq!(rmat(8, 4, 9), rmat(8, 4, 9));
+        assert_ne!(rmat(8, 4, 9), rmat(8, 4, 10));
+    }
+}

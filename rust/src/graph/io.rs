@@ -1,0 +1,202 @@
+//! Graph I/O: Matrix Market (.mtx) and plain/binary edge lists.
+//!
+//! The paper ingests SuiteSparse matrices via HPCGraph's parallel I/O; we
+//! provide the equivalent single-node readers so users can feed real .mtx
+//! files to the CLI.
+
+use std::fs::File;
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use super::{Graph, GraphBuilder, VId};
+
+/// Read a MatrixMarket coordinate file as an undirected graph.
+/// Pattern/real/integer/complex entries are all treated as edges;
+/// `symmetric` and `general` headers are both accepted (we symmetrize
+/// regardless, matching the paper's preprocessing).
+pub fn read_matrix_market(path: impl AsRef<Path>) -> Result<Graph, String> {
+    let f = File::open(path.as_ref()).map_err(|e| e.to_string())?;
+    let mut lines = BufReader::new(f).lines();
+    // header
+    let header = loop {
+        match lines.next() {
+            Some(Ok(l)) if l.starts_with("%%MatrixMarket") => break l,
+            Some(Ok(_)) => return Err("missing MatrixMarket header".into()),
+            Some(Err(e)) => return Err(e.to_string()),
+            None => return Err("empty file".into()),
+        }
+    };
+    if !header.contains("coordinate") {
+        return Err("only coordinate format supported".into());
+    }
+    // skip comments, read dims
+    let dims = loop {
+        match lines.next() {
+            Some(Ok(l)) if l.starts_with('%') => continue,
+            Some(Ok(l)) if l.trim().is_empty() => continue,
+            Some(Ok(l)) => break l,
+            Some(Err(e)) => return Err(e.to_string()),
+            None => return Err("missing size line".into()),
+        }
+    };
+    let mut it = dims.split_whitespace();
+    let rows: usize = it.next().ok_or("bad size line")?.parse().map_err(|_| "bad rows")?;
+    let cols: usize = it.next().ok_or("bad size line")?.parse().map_err(|_| "bad cols")?;
+    let nnz: usize = it.next().ok_or("bad size line")?.parse().map_err(|_| "bad nnz")?;
+    let n = rows.max(cols);
+    let mut b = GraphBuilder::with_edge_capacity(n, nnz);
+    for line in lines {
+        let line = line.map_err(|e| e.to_string())?;
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('%') {
+            continue;
+        }
+        let mut it = line.split_whitespace();
+        let i: usize = it.next().ok_or("bad entry")?.parse().map_err(|_| "bad row id")?;
+        let j: usize = it.next().ok_or("bad entry")?.parse().map_err(|_| "bad col id")?;
+        if i == 0 || j == 0 || i > n || j > n {
+            return Err(format!("entry ({i},{j}) out of range"));
+        }
+        b.edge((i - 1) as VId, (j - 1) as VId);
+    }
+    Ok(b.build())
+}
+
+/// Write a graph as a symmetric MatrixMarket pattern file.
+pub fn write_matrix_market(g: &Graph, path: impl AsRef<Path>) -> Result<(), String> {
+    let f = File::create(path.as_ref()).map_err(|e| e.to_string())?;
+    let mut w = BufWriter::new(f);
+    let emit = |w: &mut BufWriter<File>| -> std::io::Result<()> {
+        writeln!(w, "%%MatrixMarket matrix coordinate pattern symmetric")?;
+        writeln!(w, "{} {} {}", g.n(), g.n(), g.m())?;
+        for v in 0..g.n() {
+            for &u in g.neighbors(v as VId) {
+                if (u as usize) < v {
+                    // lower triangle (v > u): MM symmetric stores one side
+                    writeln!(w, "{} {}", v + 1, u + 1)?;
+                }
+            }
+        }
+        Ok(())
+    };
+    emit(&mut w).map_err(|e| e.to_string())
+}
+
+/// Plain text edge list: one `u v` pair per line, 0-based, '#' comments.
+pub fn read_edge_list(path: impl AsRef<Path>) -> Result<Graph, String> {
+    let f = File::open(path.as_ref()).map_err(|e| e.to_string())?;
+    let mut edges: Vec<(VId, VId)> = Vec::new();
+    let mut maxv: VId = 0;
+    for line in BufReader::new(f).lines() {
+        let line = line.map_err(|e| e.to_string())?;
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut it = line.split_whitespace();
+        let u: VId = it.next().ok_or("bad line")?.parse().map_err(|_| "bad u")?;
+        let v: VId = it.next().ok_or("bad line")?.parse().map_err(|_| "bad v")?;
+        maxv = maxv.max(u).max(v);
+        edges.push((u, v));
+    }
+    Ok(GraphBuilder::new(maxv as usize + 1).edges(&edges).build())
+}
+
+/// Binary CSR snapshot (fast reload for large generated graphs):
+/// magic "DCG1", u64 n, u64 arcs, row_ptr[n+1] u64 LE, col_idx[arcs] u32 LE.
+pub fn write_binary(g: &Graph, path: impl AsRef<Path>) -> Result<(), String> {
+    let f = File::create(path.as_ref()).map_err(|e| e.to_string())?;
+    let mut w = BufWriter::new(f);
+    let res = (|| -> std::io::Result<()> {
+        w.write_all(b"DCG1")?;
+        w.write_all(&(g.n() as u64).to_le_bytes())?;
+        w.write_all(&(g.arcs() as u64).to_le_bytes())?;
+        for &x in &g.row_ptr {
+            w.write_all(&x.to_le_bytes())?;
+        }
+        for &x in &g.col_idx {
+            w.write_all(&x.to_le_bytes())?;
+        }
+        Ok(())
+    })();
+    res.map_err(|e| e.to_string())
+}
+
+/// Read a binary CSR snapshot written by [`write_binary`].
+pub fn read_binary(path: impl AsRef<Path>) -> Result<Graph, String> {
+    let mut f = BufReader::new(File::open(path.as_ref()).map_err(|e| e.to_string())?);
+    let mut magic = [0u8; 4];
+    f.read_exact(&mut magic).map_err(|e| e.to_string())?;
+    if &magic != b"DCG1" {
+        return Err("bad magic".into());
+    }
+    let mut u64buf = [0u8; 8];
+    f.read_exact(&mut u64buf).map_err(|e| e.to_string())?;
+    let n = u64::from_le_bytes(u64buf) as usize;
+    f.read_exact(&mut u64buf).map_err(|e| e.to_string())?;
+    let arcs = u64::from_le_bytes(u64buf) as usize;
+    let mut row_ptr = Vec::with_capacity(n + 1);
+    for _ in 0..=n {
+        f.read_exact(&mut u64buf).map_err(|e| e.to_string())?;
+        row_ptr.push(u64::from_le_bytes(u64buf));
+    }
+    let mut col_idx = Vec::with_capacity(arcs);
+    let mut u32buf = [0u8; 4];
+    for _ in 0..arcs {
+        f.read_exact(&mut u32buf).map_err(|e| e.to_string())?;
+        col_idx.push(u32::from_le_bytes(u32buf));
+    }
+    let g = Graph { row_ptr, col_idx };
+    g.validate()?;
+    Ok(g)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators::erdos_renyi::gnm;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("dist_color_io_{}_{}", std::process::id(), name));
+        p
+    }
+
+    #[test]
+    fn mtx_roundtrip() {
+        let g = gnm(50, 120, 1);
+        let p = tmp("a.mtx");
+        write_matrix_market(&g, &p).unwrap();
+        let h = read_matrix_market(&p).unwrap();
+        assert_eq!(g, h);
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn binary_roundtrip() {
+        let g = gnm(64, 200, 2);
+        let p = tmp("a.bin");
+        write_binary(&g, &p).unwrap();
+        let h = read_binary(&p).unwrap();
+        assert_eq!(g, h);
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn edge_list_parsing() {
+        let p = tmp("el.txt");
+        std::fs::write(&p, "# comment\n0 1\n1 2\n\n2 0\n").unwrap();
+        let g = read_edge_list(&p).unwrap();
+        assert_eq!(g.n(), 3);
+        assert_eq!(g.m(), 3);
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn mtx_rejects_garbage() {
+        let p = tmp("bad.mtx");
+        std::fs::write(&p, "hello\n").unwrap();
+        assert!(read_matrix_market(&p).is_err());
+        std::fs::remove_file(p).ok();
+    }
+}

@@ -1,0 +1,214 @@
+//! Graph core: CSR storage, construction, statistics and I/O.
+//!
+//! All graphs are stored undirected (both directions present in CSR) with
+//! `u32` vertex ids; builders deduplicate multi-edges and drop self-loops,
+//! matching the paper's preprocessing ("values listed are after
+//! preprocessing to remove multi-edges and self-loops").
+
+pub mod builder;
+pub mod generators;
+pub mod io;
+pub mod stats;
+
+pub use builder::GraphBuilder;
+
+/// Vertex id within a graph.
+pub type VId = u32;
+
+/// An undirected graph in compressed-sparse-row form.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Graph {
+    /// Row offsets, `n + 1` entries.
+    pub row_ptr: Vec<u64>,
+    /// Flattened adjacency; each undirected edge appears twice.
+    pub col_idx: Vec<VId>,
+}
+
+impl Graph {
+    /// Number of vertices.
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.row_ptr.len() - 1
+    }
+
+    /// Number of undirected edges (each stored twice internally).
+    #[inline]
+    pub fn m(&self) -> usize {
+        self.col_idx.len() / 2
+    }
+
+    /// Number of directed arcs (CSR entries).
+    #[inline]
+    pub fn arcs(&self) -> usize {
+        self.col_idx.len()
+    }
+
+    /// Neighbors of `v`.
+    #[inline]
+    pub fn neighbors(&self, v: VId) -> &[VId] {
+        let s = self.row_ptr[v as usize] as usize;
+        let e = self.row_ptr[v as usize + 1] as usize;
+        &self.col_idx[s..e]
+    }
+
+    /// Degree of `v`.
+    #[inline]
+    pub fn degree(&self, v: VId) -> usize {
+        (self.row_ptr[v as usize + 1] - self.row_ptr[v as usize]) as usize
+    }
+
+    pub fn max_degree(&self) -> usize {
+        (0..self.n()).map(|v| self.degree(v as VId)).max().unwrap_or(0)
+    }
+
+    pub fn avg_degree(&self) -> f64 {
+        if self.n() == 0 {
+            0.0
+        } else {
+            self.arcs() as f64 / self.n() as f64
+        }
+    }
+
+    /// Estimated in-memory size in bytes (CSR arrays only).
+    pub fn memory_bytes(&self) -> usize {
+        self.row_ptr.len() * 8 + self.col_idx.len() * 4
+    }
+
+    /// True iff the CSR is a well-formed undirected simple graph:
+    /// sorted rows, no self-loops, no duplicates, symmetric.
+    pub fn validate(&self) -> Result<(), String> {
+        let n = self.n() as u64;
+        if *self.row_ptr.first().unwrap_or(&1) != 0 {
+            return Err("row_ptr[0] != 0".into());
+        }
+        if *self.row_ptr.last().unwrap() != self.col_idx.len() as u64 {
+            return Err("row_ptr[n] != |col_idx|".into());
+        }
+        for v in 0..self.n() {
+            if self.row_ptr[v] > self.row_ptr[v + 1] {
+                return Err(format!("row_ptr decreasing at {v}"));
+            }
+            let row = self.neighbors(v as VId);
+            for w in row.windows(2) {
+                if w[0] >= w[1] {
+                    return Err(format!("row {v} not strictly sorted"));
+                }
+            }
+            for &u in row {
+                if u as u64 >= n {
+                    return Err(format!("edge ({v},{u}) out of range"));
+                }
+                if u as usize == v {
+                    return Err(format!("self-loop at {v}"));
+                }
+                if !self.neighbors(u).binary_search(&(v as VId)).is_ok() {
+                    return Err(format!("edge ({v},{u}) not symmetric"));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Breadth-first order from `src`, visiting all components
+    /// (restarting from the lowest unvisited vertex).
+    pub fn bfs_order(&self, src: VId) -> Vec<VId> {
+        let n = self.n();
+        let mut order = Vec::with_capacity(n);
+        let mut seen = vec![false; n];
+        let mut queue = std::collections::VecDeque::new();
+        let mut next_root = 0usize;
+        if (src as usize) < n {
+            queue.push_back(src);
+            seen[src as usize] = true;
+        }
+        while order.len() < n {
+            while let Some(v) = queue.pop_front() {
+                order.push(v);
+                for &u in self.neighbors(v) {
+                    if !seen[u as usize] {
+                        seen[u as usize] = true;
+                        queue.push_back(u);
+                    }
+                }
+            }
+            while next_root < n && seen[next_root] {
+                next_root += 1;
+            }
+            if next_root < n {
+                seen[next_root] = true;
+                queue.push_back(next_root as VId);
+            } else {
+                break;
+            }
+        }
+        order
+    }
+}
+
+/// A bipartite graph stored as a general graph whose first `ns` vertices
+/// form the "source" side `V_s` (the set partial distance-2 coloring
+/// colors), and the rest form `V_t` (§3.6 of the paper).
+#[derive(Clone, Debug)]
+pub struct BipartiteGraph {
+    pub graph: Graph,
+    /// `|V_s|`; vertices `0..ns` are the source side.
+    pub ns: usize,
+}
+
+impl BipartiteGraph {
+    /// Check bipartiteness: every edge must cross the two sides.
+    pub fn validate(&self) -> Result<(), String> {
+        self.graph.validate()?;
+        for v in 0..self.graph.n() {
+            for &u in self.graph.neighbors(v as VId) {
+                if (v < self.ns) == ((u as usize) < self.ns) {
+                    return Err(format!("edge ({v},{u}) does not cross sides"));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn triangle() -> Graph {
+        GraphBuilder::new(3)
+            .edges(&[(0, 1), (1, 2), (0, 2)])
+            .build()
+    }
+
+    #[test]
+    fn csr_basics() {
+        let g = triangle();
+        assert_eq!(g.n(), 3);
+        assert_eq!(g.m(), 3);
+        assert_eq!(g.neighbors(0), &[1, 2]);
+        assert_eq!(g.degree(1), 2);
+        assert_eq!(g.max_degree(), 2);
+        assert!((g.avg_degree() - 2.0).abs() < 1e-12);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn bfs_order_covers_all_components() {
+        // two disjoint edges
+        let g = GraphBuilder::new(4).edges(&[(0, 1), (2, 3)]).build();
+        let order = g.bfs_order(0);
+        let mut s = order.clone();
+        s.sort_unstable();
+        assert_eq!(s, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn bipartite_validation() {
+        let g = GraphBuilder::new(4).edges(&[(0, 2), (1, 3)]).build();
+        let b = BipartiteGraph { graph: g, ns: 2 };
+        b.validate().unwrap();
+        let bad = GraphBuilder::new(4).edges(&[(0, 1)]).build();
+        let b = BipartiteGraph { graph: bad, ns: 2 };
+        assert!(b.validate().is_err());
+    }
+}

@@ -1,0 +1,126 @@
+//! Graph statistics — the numbers reported in Tables 1 and 2.
+
+use super::{Graph, VId};
+
+/// Summary row matching Table 1's columns.
+#[derive(Clone, Debug, PartialEq)]
+pub struct GraphStats {
+    pub name: String,
+    pub class: String,
+    pub n: usize,
+    pub m: usize,
+    pub avg_degree: f64,
+    pub max_degree: usize,
+    pub memory_bytes: usize,
+}
+
+impl GraphStats {
+    pub fn of(name: &str, class: &str, g: &Graph) -> Self {
+        GraphStats {
+            name: name.to_string(),
+            class: class.to_string(),
+            n: g.n(),
+            m: g.m(),
+            avg_degree: g.avg_degree(),
+            max_degree: g.max_degree(),
+            memory_bytes: g.memory_bytes(),
+        }
+    }
+
+    /// Human format with k/M/B suffixes, as in the paper's tables.
+    pub fn row(&self) -> String {
+        format!(
+            "| {:<18} | {:<16} | {:>8} | {:>8} | {:>7.1} | {:>8} | {:>9} |",
+            self.name,
+            self.class,
+            human(self.n as f64),
+            human(self.m as f64),
+            self.avg_degree,
+            human(self.max_degree as f64),
+            human_bytes(self.memory_bytes),
+        )
+    }
+
+    pub fn header() -> String {
+        format!(
+            "| {:<18} | {:<16} | {:>8} | {:>8} | {:>7} | {:>8} | {:>9} |\n|{}|",
+            "Graph", "Class", "#Vtx", "#Edges", "d_avg", "d_max", "Memory",
+            "-".repeat(92)
+        )
+    }
+}
+
+/// k/M/B suffix formatting.
+pub fn human(x: f64) -> String {
+    if x >= 1e9 {
+        format!("{:.1}B", x / 1e9)
+    } else if x >= 1e6 {
+        format!("{:.1}M", x / 1e6)
+    } else if x >= 1e3 {
+        format!("{:.1}k", x / 1e3)
+    } else {
+        format!("{x:.0}")
+    }
+}
+
+pub fn human_bytes(b: usize) -> String {
+    let b = b as f64;
+    if b >= 1e9 {
+        format!("{:.1}GB", b / 1e9)
+    } else if b >= 1e6 {
+        format!("{:.1}MB", b / 1e6)
+    } else {
+        format!("{:.1}kB", b / 1e3)
+    }
+}
+
+/// Degree histogram (log2 buckets) — used for skew diagnostics.
+pub fn degree_histogram(g: &Graph) -> Vec<(usize, usize)> {
+    let mut buckets: Vec<usize> = Vec::new();
+    for v in 0..g.n() {
+        let d = g.degree(v as VId);
+        let b = if d == 0 { 0 } else { (usize::BITS - d.leading_zeros()) as usize };
+        if b >= buckets.len() {
+            buckets.resize(b + 1, 0);
+        }
+        buckets[b] += 1;
+    }
+    buckets
+        .iter()
+        .enumerate()
+        .filter(|(_, &c)| c > 0)
+        .map(|(b, &c)| (if b == 0 { 0 } else { 1 << (b - 1) }, c))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::GraphBuilder;
+
+    #[test]
+    fn human_suffixes() {
+        assert_eq!(human(950.0), "950");
+        assert_eq!(human(2_500.0), "2.5k");
+        assert_eq!(human(3_300_000.0), "3.3M");
+        assert_eq!(human(76.7e9), "76.7B");
+    }
+
+    #[test]
+    fn stats_of_triangle() {
+        let g = GraphBuilder::new(3).edges(&[(0, 1), (1, 2), (0, 2)]).build();
+        let s = GraphStats::of("tri", "test", &g);
+        assert_eq!(s.n, 3);
+        assert_eq!(s.m, 3);
+        assert_eq!(s.max_degree, 2);
+        assert!(s.row().contains("tri"));
+    }
+
+    #[test]
+    fn histogram_counts_all_vertices() {
+        let g = GraphBuilder::new(4).edges(&[(0, 1), (0, 2), (0, 3)]).build();
+        let h = degree_histogram(&g);
+        let total: usize = h.iter().map(|&(_, c)| c).sum();
+        assert_eq!(total, 4);
+    }
+}

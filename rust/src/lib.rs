@@ -1,0 +1,26 @@
+//! # dist-color
+//!
+//! Distributed multi-GPU graph coloring — a reproduction of Bogle, Slota,
+//! Boman, Devine & Rajamanickam, *"Parallel Graph Coloring Algorithms for
+//! Distributed GPU Environments"* (2021) as a three-layer Rust + JAX +
+//! Pallas system.
+//!
+//! * **L3 (this crate)** — the distributed coordinator: simulated-MPI rank
+//!   runtime, ghost layers, speculative coloring driver (Algorithm 2),
+//!   conflict rules (Algorithms 3–5), the novel recolor-degrees heuristic,
+//!   and the Zoltan/Bozdağ baseline.
+//! * **L2/L1 (python/compile, build-time only)** — JAX round functions
+//!   wrapping Pallas VB_BIT-style kernels, AOT-lowered to HLO text.
+//! * **runtime** — PJRT CPU client that loads `artifacts/*.hlo.txt` and
+//!   serves local coloring from the Rust hot path.
+//!
+//! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
+//! paper-versus-measured record.
+
+pub mod bench;
+pub mod coloring;
+pub mod distributed;
+pub mod graph;
+pub mod partition;
+pub mod runtime;
+pub mod util;

@@ -1,0 +1,277 @@
+//! `dist-color` — CLI for the distributed graph coloring framework.
+//!
+//! Subcommands:
+//!   color     color a graph with any algorithm/backend and validate
+//!   stats     print Table-1-style statistics for a graph
+//!   generate  write a generated graph to disk (.mtx or binary)
+//!   bench     run one of the paper-figure experiments (see benches/)
+//!
+//! Graph specs: `mesh:8x8x8`, `rmat:12,8@seed`, `ba:5000,6`, `er:N,M`,
+//! `rgg:N,DEG`, `road:NXxNY`, `myc:K`, or `file:path.{mtx,el,bin}`.
+
+use std::process::ExitCode;
+
+use dist_color::bench::{run_algo, run_algo_with_backend, Algo};
+use dist_color::coloring::distributed::zoltan::{color_zoltan, ZoltanConfig};
+use dist_color::coloring::distributed::{color_distributed, DistConfig, NativeBackend};
+use dist_color::coloring::{validate, Problem};
+use dist_color::distributed::CostModel;
+use dist_color::graph::{generators, io, stats::GraphStats, Graph};
+use dist_color::partition::{self, PartitionKind};
+use dist_color::runtime::PjrtBackend;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match run(args) {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn run(args: Vec<String>) -> Result<(), String> {
+    let mut it = args.into_iter();
+    let cmd = it.next().unwrap_or_else(|| "help".into());
+    let rest: Vec<String> = it.collect();
+    match cmd.as_str() {
+        "color" => cmd_color(parse_flags(&rest)?),
+        "stats" => cmd_stats(parse_flags(&rest)?),
+        "generate" => cmd_generate(parse_flags(&rest)?),
+        "bench" => cmd_bench(parse_flags(&rest)?),
+        "help" | "--help" | "-h" => {
+            print!("{HELP}");
+            Ok(())
+        }
+        other => Err(format!("unknown command `{other}`; try `dist-color help`")),
+    }
+}
+
+const HELP: &str = "\
+dist-color: distributed multi-GPU graph coloring (Bogle et al. 2021 repro)
+
+USAGE:
+  dist-color color --graph SPEC [--algo A] [--ranks N] [--backend B] ...
+  dist-color stats --graph SPEC [--name NAME]
+  dist-color generate --graph SPEC --out FILE[.mtx|.bin]
+  dist-color bench --name FIG [--scale S] [--ranks N]
+
+COLOR FLAGS:
+  --graph SPEC        mesh:8x8x8 | rmat:12,8 | ba:N,M | er:N,M | rgg:N,D
+                      | road:XxY | myc:K | file:path  (append @seed)
+  --algo A            d1 | d1-baseline | d1-2gl | d2 | pd2
+                      | zoltan-d1 | zoltan-d2 | zoltan-pd2   [d1]
+  --ranks N           simulated MPI ranks / GPUs               [4]
+  --backend B         native | pjrt                            [native]
+  --partitioner P     block | edge | bfs | hash                [edge]
+  --seed S            RNG seed                                 [42]
+  --artifacts DIR     artifact dir for --backend pjrt          [artifacts]
+";
+
+struct Flags(std::collections::HashMap<String, String>);
+
+impl Flags {
+    fn get(&self, k: &str) -> Option<&str> {
+        self.0.get(k).map(|s| s.as_str())
+    }
+    fn get_or(&self, k: &str, d: &str) -> String {
+        self.get(k).unwrap_or(d).to_string()
+    }
+    fn usize_or(&self, k: &str, d: usize) -> Result<usize, String> {
+        match self.get(k) {
+            None => Ok(d),
+            Some(v) => v.parse().map_err(|_| format!("bad --{k}: `{v}`")),
+        }
+    }
+    fn u64_or(&self, k: &str, d: u64) -> Result<u64, String> {
+        match self.get(k) {
+            None => Ok(d),
+            Some(v) => v.parse().map_err(|_| format!("bad --{k}: `{v}`")),
+        }
+    }
+}
+
+fn parse_flags(args: &[String]) -> Result<Flags, String> {
+    let mut map = std::collections::HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        let a = &args[i];
+        let key = a
+            .strip_prefix("--")
+            .ok_or_else(|| format!("expected --flag, got `{a}`"))?;
+        let val = args
+            .get(i + 1)
+            .ok_or_else(|| format!("--{key} needs a value"))?;
+        map.insert(key.to_string(), val.to_string());
+        i += 2;
+    }
+    Ok(Flags(map))
+}
+
+fn load_graph(spec: &str) -> Result<Graph, String> {
+    if let Some(path) = spec.strip_prefix("file:") {
+        if path.ends_with(".mtx") {
+            io::read_matrix_market(path)
+        } else if path.ends_with(".bin") {
+            io::read_binary(path)
+        } else {
+            io::read_edge_list(path)
+        }
+    } else {
+        generators::from_spec(spec)
+    }
+}
+
+fn cmd_color(f: Flags) -> Result<(), String> {
+    let spec = f.get("graph").ok_or("--graph is required")?;
+    let g = load_graph(spec)?;
+    let ranks = f.usize_or("ranks", 4)?;
+    let seed = f.u64_or("seed", 42)?;
+    let algo = f.get_or("algo", "d1");
+    let backend_name = f.get_or("backend", "native");
+    let pk: PartitionKind = f.get_or("partitioner", "edge").parse()?;
+    let part = partition::partition(&g, ranks, pk, seed);
+    let cost = CostModel::default();
+
+    let t0 = std::time::Instant::now();
+    let (result, problem) = match algo.as_str() {
+        "zoltan-d1" | "zoltan-d2" | "zoltan-pd2" => {
+            let problem = match algo.as_str() {
+                "zoltan-d1" => Problem::D1,
+                "zoltan-d2" => Problem::D2,
+                _ => Problem::PD2,
+            };
+            let cfg = ZoltanConfig { problem, seed, ..Default::default() };
+            (color_zoltan(&g, &part, cfg, cost), problem)
+        }
+        name => {
+            let (problem, rd, two) = match name {
+                "d1" => (Problem::D1, true, false),
+                "d1-baseline" => (Problem::D1, false, false),
+                "d1-2gl" => (Problem::D1, true, true),
+                "d2" => (Problem::D2, true, false),
+                "pd2" => (Problem::PD2, true, false),
+                other => return Err(format!("unknown --algo `{other}`")),
+            };
+            let cfg = DistConfig {
+                problem,
+                recolor_degrees: rd,
+                two_ghost_layers: two,
+                seed,
+                ..Default::default()
+            };
+            let result = match backend_name.as_str() {
+                "native" => {
+                    color_distributed(&g, &part, cfg, cost, &NativeBackend(cfg.kernel))
+                }
+                "pjrt" => {
+                    let dir = f.get_or("artifacts", "artifacts");
+                    let backend = PjrtBackend::from_dir(&dir).map_err(|e| e.to_string())?;
+                    let r = color_distributed(&g, &part, cfg, cost, &backend);
+                    let (exe, fb) = backend.stats();
+                    println!("pjrt: {exe} kernel executions, {fb} native fallbacks");
+                    r
+                }
+                other => return Err(format!("unknown --backend `{other}`")),
+            };
+            (result, problem)
+        }
+    };
+    let wall = t0.elapsed();
+
+    let proper = validate::is_proper(problem, &g, &result.colors);
+    println!(
+        "graph={} n={} m={} ranks={} algo={} backend={}",
+        spec,
+        g.n(),
+        g.m(),
+        ranks,
+        algo,
+        backend_name
+    );
+    println!(
+        "colors={} rounds={} conflicts={} proper={}",
+        result.stats.colors_used, result.stats.comm_rounds, result.stats.conflicts, proper
+    );
+    println!(
+        "wall={:.1}ms comp(max)={:.1}ms comm(modeled,max)={:.3}ms bytes={}",
+        wall.as_secs_f64() * 1e3,
+        result.stats.comp_ns as f64 / 1e6,
+        result.stats.comm_modeled_ns as f64 / 1e6,
+        result.stats.bytes
+    );
+    if !proper {
+        return Err("coloring is NOT proper".into());
+    }
+    Ok(())
+}
+
+fn cmd_stats(f: Flags) -> Result<(), String> {
+    let spec = f.get("graph").ok_or("--graph is required")?;
+    let g = load_graph(spec)?;
+    let name = f.get_or("name", spec);
+    let s = GraphStats::of(&name, "-", &g);
+    println!("{}", GraphStats::header());
+    println!("{}", s.row());
+    Ok(())
+}
+
+fn cmd_generate(f: Flags) -> Result<(), String> {
+    let spec = f.get("graph").ok_or("--graph is required")?;
+    let out = f.get("out").ok_or("--out is required")?;
+    let g = load_graph(spec)?;
+    if out.ends_with(".mtx") {
+        io::write_matrix_market(&g, out)?;
+    } else {
+        io::write_binary(&g, out)?;
+    }
+    println!("wrote {} (n={} m={})", out, g.n(), g.m());
+    Ok(())
+}
+
+fn cmd_bench(f: Flags) -> Result<(), String> {
+    let name = f.get("name").ok_or(
+        "--name is required (fig2|fig3|fig5|fig6|fig7|fig8|fig10|fig11|table1); \
+         or run `cargo bench` for the full set",
+    )?;
+    let ranks = f.usize_or("ranks", 8)?;
+    let _ = ranks;
+    println!(
+        "`dist-color bench --name {name}` is a thin alias; the full harnesses live in \
+         rust/benches/ — run `cargo bench --bench {}`",
+        match name {
+            "fig2" => "fig2_d1_profiles",
+            "fig3" | "fig4" => "fig3_d1_strong_scaling",
+            "fig5" => "fig5_d1_weak_scaling",
+            "fig6" => "fig6_2gl_rounds",
+            "fig7" => "fig7_d2_profiles",
+            "fig8" | "fig9" => "fig8_d2_strong_scaling",
+            "fig10" => "fig10_d2_weak_scaling",
+            "fig11" | "fig12" => "fig11_pd2_strong_scaling",
+            "table1" => "table1_graph_suite",
+            other => return Err(format!("unknown experiment `{other}`")),
+        }
+    );
+    // still run a small smoke version inline so the alias is useful
+    let g = dist_color::graph::generators::mesh::hex_mesh(8, 8, 8);
+    let m = run_algo(Algo::D1RecolorDegree, &g, "mesh:8x8x8", 4, CostModel::default(), 42);
+    println!("smoke: {}", m.csv());
+    // exercise the pjrt path if artifacts are present
+    if std::path::Path::new("artifacts/manifest.txt").exists() {
+        if let Ok(backend) = PjrtBackend::from_dir("artifacts") {
+            let g = dist_color::graph::generators::mesh::hex_mesh(4, 4, 4);
+            let m = run_algo_with_backend(
+                Algo::D1RecolorDegree,
+                &g,
+                "mesh:4x4x4",
+                2,
+                CostModel::default(),
+                42,
+                &backend,
+            );
+            println!("smoke-pjrt: {}", m.csv());
+        }
+    }
+    Ok(())
+}

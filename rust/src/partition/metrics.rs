@@ -1,0 +1,78 @@
+//! Partition quality metrics: global edge cut and balance, the two
+//! objectives the paper's partitioning step optimizes (§3.7).
+
+use super::Partition;
+use crate::graph::{Graph, VId};
+
+/// Number of undirected edges whose endpoints live on different ranks.
+pub fn edge_cut(g: &Graph, p: &Partition) -> usize {
+    let mut cut = 0usize;
+    for v in 0..g.n() {
+        for &u in g.neighbors(v as VId) {
+            if (u as usize) > v && p.owner[v] != p.owner[u as usize] {
+                cut += 1;
+            }
+        }
+    }
+    cut
+}
+
+/// max/avg vertex-count imbalance (1.0 = perfect).
+pub fn vertex_imbalance(g: &Graph, p: &Partition) -> f64 {
+    let sizes = p.part_sizes();
+    let max = *sizes.iter().max().unwrap_or(&0) as f64;
+    let avg = g.n() as f64 / p.nparts as f64;
+    if avg == 0.0 {
+        1.0
+    } else {
+        max / avg
+    }
+}
+
+/// max/avg per-rank arc-count imbalance (the paper balances edges).
+pub fn edge_imbalance(g: &Graph, p: &Partition) -> f64 {
+    let mut arcs = vec![0usize; p.nparts];
+    for v in 0..g.n() {
+        arcs[p.owner[v] as usize] += g.degree(v as VId);
+    }
+    let max = *arcs.iter().max().unwrap_or(&0) as f64;
+    let avg = g.arcs() as f64 / p.nparts as f64;
+    if avg == 0.0 {
+        1.0
+    } else {
+        max / avg
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators::mesh::hex_mesh;
+    use crate::partition::{block, hash};
+
+    #[test]
+    fn slab_cut_on_mesh_is_two_slab_faces() {
+        // periodic 4x4x8 mesh cut into 4 z-slabs of thickness 2:
+        // every slab boundary face has 16 edges; 4 boundaries
+        let g = hex_mesh(4, 4, 8);
+        let p = block(&g, 4);
+        assert_eq!(edge_cut(&g, &p), 4 * 16);
+    }
+
+    #[test]
+    fn perfect_balance_for_block_on_uniform() {
+        let g = hex_mesh(4, 4, 8);
+        let p = block(&g, 4);
+        assert!((vertex_imbalance(&g, &p) - 1.0).abs() < 1e-9);
+        assert!((edge_imbalance(&g, &p) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn hash_cut_is_large() {
+        let g = hex_mesh(4, 4, 8);
+        let p = hash(&g, 4, 1);
+        // expected ~3/4 of edges cut for 4 random parts
+        let cut = edge_cut(&g, &p) as f64 / g.m() as f64;
+        assert!(cut > 0.5, "cut fraction {cut}");
+    }
+}

@@ -1,0 +1,215 @@
+//! Graph partitioning — the XtraPuLP stand-in (§3.7).
+//!
+//! The paper assumes the application provides an edge-balanced, low-cut
+//! partition.  We provide:
+//!
+//! * [`block`] — contiguous vertex blocks; with mesh numbering this is the
+//!   paper's "slab" partitioning used in the weak-scaling study (§5.3);
+//! * [`edge_balanced`] — contiguous blocks balanced by edge count (the
+//!   paper's stated objective: "balancing the number of edges per-process");
+//! * [`bfs`] — BFS-relabelled edge-balanced blocks (locality-seeking, the
+//!   qualitative XtraPuLP surrogate);
+//! * [`hash`] — randomized ownership, the adversarial high-cut case.
+
+pub mod metrics;
+
+use crate::graph::{Graph, VId};
+use crate::util::splitmix64;
+
+/// A vertex→rank ownership map.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Partition {
+    pub nparts: usize,
+    pub owner: Vec<u32>,
+}
+
+impl Partition {
+    /// Vertices owned by `rank` (ascending).
+    pub fn owned(&self, rank: u32) -> Vec<VId> {
+        (0..self.owner.len() as u32)
+            .filter(|&v| self.owner[v as usize] == rank)
+            .collect()
+    }
+
+    pub fn part_sizes(&self) -> Vec<usize> {
+        let mut sizes = vec![0usize; self.nparts];
+        for &o in &self.owner {
+            sizes[o as usize] += 1;
+        }
+        sizes
+    }
+
+    /// All parts non-empty and owners in range.
+    pub fn validate(&self, g: &Graph) -> Result<(), String> {
+        if self.owner.len() != g.n() {
+            return Err("owner array length mismatch".into());
+        }
+        for (v, &o) in self.owner.iter().enumerate() {
+            if o as usize >= self.nparts {
+                return Err(format!("vertex {v} owned by out-of-range rank {o}"));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Strategy selector used by the CLI (`--partitioner`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PartitionKind {
+    Block,
+    EdgeBalanced,
+    Bfs,
+    Hash,
+}
+
+impl std::str::FromStr for PartitionKind {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "block" => Ok(Self::Block),
+            "edge" | "edge-balanced" => Ok(Self::EdgeBalanced),
+            "bfs" => Ok(Self::Bfs),
+            "hash" => Ok(Self::Hash),
+            _ => Err(format!("unknown partitioner `{s}`")),
+        }
+    }
+}
+
+/// Partition `g` into `nparts` with the chosen strategy.
+pub fn partition(g: &Graph, nparts: usize, kind: PartitionKind, seed: u64) -> Partition {
+    match kind {
+        PartitionKind::Block => block(g, nparts),
+        PartitionKind::EdgeBalanced => edge_balanced(g, nparts),
+        PartitionKind::Bfs => bfs(g, nparts),
+        PartitionKind::Hash => hash(g, nparts, seed),
+    }
+}
+
+/// Contiguous vertex-count-balanced blocks ("slabs" for mesh numbering).
+pub fn block(g: &Graph, nparts: usize) -> Partition {
+    assert!(nparts >= 1);
+    let n = g.n();
+    let mut owner = vec![0u32; n];
+    for (v, o) in owner.iter_mut().enumerate() {
+        *o = ((v * nparts) / n.max(1)) as u32;
+    }
+    Partition { nparts, owner }
+}
+
+/// Contiguous blocks balanced by edge (arc) count — prefix-sum split.
+pub fn edge_balanced(g: &Graph, nparts: usize) -> Partition {
+    assert!(nparts >= 1);
+    let n = g.n();
+    let total = g.arcs() as f64 + n as f64; // weight vertices too, avoids empty parts
+    let mut owner = vec![0u32; n];
+    let mut acc = 0f64;
+    let mut part = 0u32;
+    for v in 0..n {
+        // advance part when accumulated weight passes the ideal boundary
+        let ideal_end = (part as f64 + 1.0) * total / nparts as f64;
+        if acc >= ideal_end && (part as usize) < nparts - 1 {
+            part += 1;
+        }
+        owner[v] = part;
+        acc += g.degree(v as VId) as f64 + 1.0;
+    }
+    Partition { nparts, owner }
+}
+
+/// BFS-relabelled edge-balanced blocks: relabel vertices in BFS order,
+/// then cut contiguous edge-balanced chunks of the order.  Gives
+/// XtraPuLP-like locality on meshes/rgg without an external dependency.
+pub fn bfs(g: &Graph, nparts: usize) -> Partition {
+    assert!(nparts >= 1);
+    let order = g.bfs_order(0);
+    let n = g.n();
+    let total = g.arcs() as f64 + n as f64;
+    let mut owner = vec![0u32; n];
+    let mut acc = 0f64;
+    let mut part = 0u32;
+    for (i, &v) in order.iter().enumerate() {
+        let _ = i;
+        let ideal_end = (part as f64 + 1.0) * total / nparts as f64;
+        if acc >= ideal_end && (part as usize) < nparts - 1 {
+            part += 1;
+        }
+        owner[v as usize] = part;
+        acc += g.degree(v) as f64 + 1.0;
+    }
+    Partition { nparts, owner }
+}
+
+/// Hashed ownership — the adversarial, cut-maximizing baseline.
+pub fn hash(g: &Graph, nparts: usize, seed: u64) -> Partition {
+    assert!(nparts >= 1);
+    let owner = (0..g.n())
+        .map(|v| (splitmix64(seed ^ v as u64) % nparts as u64) as u32)
+        .collect();
+    Partition { nparts, owner }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators::{erdos_renyi::gnm, mesh::hex_mesh};
+
+    #[test]
+    fn block_is_contiguous_and_balanced() {
+        let g = hex_mesh(4, 4, 8);
+        let p = block(&g, 4);
+        p.validate(&g).unwrap();
+        let sizes = p.part_sizes();
+        assert_eq!(sizes, vec![32, 32, 32, 32]);
+        // contiguity
+        for v in 1..g.n() {
+            assert!(p.owner[v] >= p.owner[v - 1]);
+        }
+    }
+
+    #[test]
+    fn edge_balanced_bounds_imbalance() {
+        let g = gnm(1000, 8000, 1);
+        let p = edge_balanced(&g, 8);
+        p.validate(&g).unwrap();
+        let mut arcs = vec![0usize; 8];
+        for v in 0..g.n() {
+            arcs[p.owner[v] as usize] += g.degree(v as VId);
+        }
+        let maxa = *arcs.iter().max().unwrap() as f64;
+        let avga = g.arcs() as f64 / 8.0;
+        assert!(maxa / avga < 1.5, "imbalance {}", maxa / avga);
+    }
+
+    #[test]
+    fn all_partitioners_cover_all_parts() {
+        let g = hex_mesh(4, 4, 4);
+        for kind in [
+            PartitionKind::Block,
+            PartitionKind::EdgeBalanced,
+            PartitionKind::Bfs,
+            PartitionKind::Hash,
+        ] {
+            let p = partition(&g, 4, kind, 7);
+            p.validate(&g).unwrap();
+            let sizes = p.part_sizes();
+            assert!(sizes.iter().all(|&s| s > 0), "{kind:?}: {sizes:?}");
+        }
+    }
+
+    #[test]
+    fn bfs_cut_beats_hash_on_mesh() {
+        let g = hex_mesh(8, 8, 8);
+        let pb = bfs(&g, 8);
+        let ph = hash(&g, 8, 1);
+        let cb = metrics::edge_cut(&g, &pb);
+        let ch = metrics::edge_cut(&g, &ph);
+        assert!(cb < ch, "bfs cut {cb} >= hash cut {ch}");
+    }
+
+    #[test]
+    fn single_part_owns_everything() {
+        let g = hex_mesh(3, 3, 3);
+        let p = partition(&g, 1, PartitionKind::EdgeBalanced, 0);
+        assert!(p.owner.iter().all(|&o| o == 0));
+    }
+}

@@ -1,0 +1,115 @@
+//! CSR → padded ELL conversion for the Pallas kernel buckets.
+//!
+//! The kernels take `adj: int32[N, DMAX]` with `-1` padding, plus
+//! `colors` and `mask` vectors of length `N` (the shape bucket).  Real
+//! local graphs are padded up to the smallest fitting bucket; padding
+//! rows have no edges and `mask = 0`, so they can never influence real
+//! vertices (asserted in the Python tests too).
+
+use crate::coloring::local::LocalView;
+use crate::coloring::Color;
+use crate::graph::VId;
+
+/// A shape bucket (N, DMAX) an artifact was lowered for.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Bucket {
+    pub n: usize,
+    pub dmax: usize,
+}
+
+/// Pick the smallest bucket fitting (n, dmax), if any.
+pub fn pick_bucket(buckets: &[Bucket], n: usize, dmax: usize) -> Option<Bucket> {
+    buckets
+        .iter()
+        .copied()
+        .filter(|b| b.n >= n && b.dmax >= dmax)
+        .min_by_key(|b| (b.n, b.dmax))
+}
+
+/// ELL-packed inputs for one kernel invocation.
+pub struct EllInputs {
+    pub bucket: Bucket,
+    /// `bucket.n * bucket.dmax` adjacency entries, row-major, -1 padded.
+    pub adj: Vec<i32>,
+    pub colors: Vec<i32>,
+    pub mask: Vec<i32>,
+}
+
+/// Pack `view` + `colors` into `bucket`'s ELL layout.
+/// Panics if the graph exceeds the bucket (callers pre-check).
+pub fn pack(view: &LocalView, colors: &[Color], bucket: Bucket) -> EllInputs {
+    let g = view.graph;
+    let n = g.n();
+    assert!(n <= bucket.n, "graph larger than bucket");
+    let mut adj = vec![-1i32; bucket.n * bucket.dmax];
+    for v in 0..n {
+        let nb = g.neighbors(v as VId);
+        assert!(nb.len() <= bucket.dmax, "degree exceeds bucket dmax");
+        for (j, &u) in nb.iter().enumerate() {
+            adj[v * bucket.dmax + j] = u as i32;
+        }
+    }
+    let mut cs = vec![0i32; bucket.n];
+    let mut ms = vec![0i32; bucket.n];
+    for v in 0..n {
+        cs[v] = colors[v] as i32;
+        ms[v] = if view.mask[v] && colors[v] == 0 { 1 } else { 0 };
+    }
+    EllInputs { bucket, adj, colors: cs, mask: ms }
+}
+
+/// Write kernel output colors back into the caller's color array
+/// (masked vertices only — unmasked are authoritative on the Rust side).
+pub fn unpack(view: &LocalView, out: &[i32], colors: &mut [Color]) {
+    let n = view.graph.n();
+    for v in 0..n {
+        if view.mask[v] && colors[v] == 0 {
+            debug_assert!(out[v] >= 0);
+            colors[v] = out[v] as Color;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::GraphBuilder;
+
+    #[test]
+    fn bucket_selection_prefers_smallest() {
+        let bs = [
+            Bucket { n: 256, dmax: 16 },
+            Bucket { n: 1024, dmax: 32 },
+            Bucket { n: 4096, dmax: 32 },
+        ];
+        assert_eq!(pick_bucket(&bs, 100, 8), Some(bs[0]));
+        assert_eq!(pick_bucket(&bs, 100, 20), Some(bs[1]));
+        assert_eq!(pick_bucket(&bs, 2000, 30), Some(bs[2]));
+        assert_eq!(pick_bucket(&bs, 5000, 8), None);
+        assert_eq!(pick_bucket(&bs, 10, 64), None);
+    }
+
+    #[test]
+    fn pack_pads_with_minus_one_and_zero_mask() {
+        let g = GraphBuilder::new(3).edges(&[(0, 1), (1, 2)]).build();
+        let mask = vec![true, true, false];
+        let colors = vec![0, 0, 7];
+        let view = LocalView { graph: &g, mask: &mask };
+        let e = pack(&view, &colors, Bucket { n: 8, dmax: 4 });
+        assert_eq!(&e.adj[0..4], &[1, -1, -1, -1]);
+        assert_eq!(&e.adj[4..8], &[0, 2, -1, -1]);
+        assert_eq!(&e.adj[12..], &[-1i32; 20][..]);
+        assert_eq!(e.colors[2], 7);
+        assert_eq!(e.mask, vec![1, 1, 0, 0, 0, 0, 0, 0]);
+    }
+
+    #[test]
+    fn unpack_only_touches_masked_uncolored() {
+        let g = GraphBuilder::new(3).edges(&[(0, 1), (1, 2)]).build();
+        let mask = vec![true, false, true];
+        let mut colors = vec![0, 9, 4]; // vertex 2 masked but already colored
+        let view = LocalView { graph: &g, mask: &mask };
+        unpack(&view, &[5, 1, 1, 0, 0], &mut colors);
+        assert_eq!(colors, vec![5, 9, 4]);
+    }
+}

@@ -1,0 +1,20 @@
+//! PJRT runtime: load the AOT-compiled JAX/Pallas artifacts and serve
+//! local coloring from the Rust hot path.
+//!
+//! `make artifacts` (build-time Python) lowers the L2 round functions to
+//! HLO *text* per shape bucket (see `python/compile/aot.py` for why text,
+//! not serialized protos).  This module:
+//!
+//! * parses `artifacts/manifest.txt`,
+//! * compiles artifacts on the PJRT CPU client lazily (cached),
+//! * converts a [`LocalView`] CSR into the kernels' padded ELL layout,
+//! * implements [`LocalBackend`] so the distributed driver can run its
+//!   local coloring through the Pallas kernels.
+//!
+//! Python never runs at request time: the Rust binary + `artifacts/` are
+//! self-contained.
+
+pub mod ell;
+pub mod pjrt;
+
+pub use pjrt::{PjrtBackend, PjrtRuntime};

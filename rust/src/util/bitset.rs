@@ -1,0 +1,95 @@
+//! Compact bitsets for forbidden-color tracking — the Rust twin of the
+//! bit-based color windows in KokkosKernels' VB_BIT / EB_BIT kernels.
+
+/// A growable bitset over `u64` words with a "find first zero" primitive.
+#[derive(Clone, Debug, Default)]
+pub struct BitSet {
+    words: Vec<u64>,
+}
+
+impl BitSet {
+    pub fn with_capacity(bits: usize) -> Self {
+        BitSet { words: vec![0; bits.div_ceil(64)] }
+    }
+
+    /// Clear all bits, keeping capacity (hot-loop friendly).
+    #[inline]
+    pub fn clear(&mut self) {
+        self.words.iter_mut().for_each(|w| *w = 0);
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize) {
+        let w = i / 64;
+        if w >= self.words.len() {
+            self.words.resize(w + 1, 0);
+        }
+        self.words[w] |= 1u64 << (i % 64);
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        let w = i / 64;
+        w < self.words.len() && (self.words[w] >> (i % 64)) & 1 == 1
+    }
+
+    /// Index of the lowest zero bit (grows conceptually without bound).
+    #[inline]
+    pub fn first_zero(&self) -> usize {
+        for (wi, &w) in self.words.iter().enumerate() {
+            if w != u64::MAX {
+                return wi * 64 + w.trailing_ones() as usize;
+            }
+        }
+        self.words.len() * 64
+    }
+
+    pub fn count_ones(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn set_get_roundtrip() {
+        let mut b = BitSet::with_capacity(10);
+        b.set(3);
+        b.set(200); // forces growth
+        assert!(b.get(3));
+        assert!(b.get(200));
+        assert!(!b.get(4));
+        assert!(!b.get(1000));
+    }
+
+    #[test]
+    fn first_zero_skips_set_prefix() {
+        let mut b = BitSet::with_capacity(130);
+        for i in 0..130 {
+            b.set(i);
+        }
+        assert_eq!(b.first_zero(), 130);
+        let empty = BitSet::with_capacity(64);
+        assert_eq!(empty.first_zero(), 0);
+    }
+
+    #[test]
+    fn first_zero_finds_hole() {
+        let mut b = BitSet::with_capacity(8);
+        b.set(0);
+        b.set(1);
+        b.set(3);
+        assert_eq!(b.first_zero(), 2);
+    }
+
+    #[test]
+    fn clear_keeps_capacity() {
+        let mut b = BitSet::with_capacity(256);
+        b.set(255);
+        b.clear();
+        assert_eq!(b.count_ones(), 0);
+        assert_eq!(b.first_zero(), 0);
+    }
+}

@@ -1,0 +1,74 @@
+//! Small shared utilities: deterministic hashing, PRNG, bitsets, timers.
+
+pub mod bitset;
+pub mod rng;
+pub mod timer;
+
+/// splitmix64: deterministic 64-bit mixer.
+///
+/// This is the `rand(GID)` of Algorithm 4 (Bozdağ et al.'s random
+/// tie-breaking): both ranks involved in a distributed conflict evaluate
+/// `splitmix64(seed ^ GID)` independently and agree on the loser without
+/// any communication.
+#[inline]
+pub fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+/// The per-GID random priority used by conflict resolution.
+#[inline]
+pub fn gid_rand(seed: u64, gid: u64) -> u64 {
+    splitmix64(seed ^ splitmix64(gid))
+}
+
+/// 32-bit mixer (lowbias32): the *local* tie-breaking priority shared
+/// bit-for-bit with the Pallas kernels (`python/compile/kernels/vb_bit.py`).
+///
+/// The speculative kernels uncolor the conflict endpoint with the larger
+/// `(mix32(i), i)` pair.  A raw-index rule would serialize lattice-ordered
+/// graphs into O(diameter) rounds (every vertex waits for its lower-index
+/// neighbor); hashed priorities give O(log n) expected rounds — the §Perf
+/// fix that took VB_BIT on a 32³ mesh from 19 ms to ~1 ms.
+#[inline]
+pub fn mix32(mut x: u32) -> u32 {
+    x ^= x >> 16;
+    x = x.wrapping_mul(0x7feb_352d);
+    x ^= x >> 15;
+    x = x.wrapping_mul(0x846c_a68b);
+    x ^ (x >> 16)
+}
+
+/// Does local vertex `a` beat (keep its color against) local vertex `b`?
+#[inline]
+pub fn local_priority_wins(a: u32, b: u32) -> bool {
+    (mix32(a), a) < (mix32(b), b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_is_deterministic() {
+        assert_eq!(splitmix64(42), splitmix64(42));
+        assert_ne!(splitmix64(42), splitmix64(43));
+    }
+
+    #[test]
+    fn splitmix_spreads_low_bits() {
+        // sequential inputs should not produce sequential outputs
+        let a = splitmix64(1);
+        let b = splitmix64(2);
+        assert!(a.abs_diff(b) > 1 << 32);
+    }
+
+    #[test]
+    fn gid_rand_depends_on_seed_and_gid() {
+        assert_ne!(gid_rand(1, 7), gid_rand(2, 7));
+        assert_ne!(gid_rand(1, 7), gid_rand(1, 8));
+        assert_eq!(gid_rand(5, 9), gid_rand(5, 9));
+    }
+}

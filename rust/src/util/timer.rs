@@ -1,0 +1,88 @@
+//! Split timers for the comm/comp breakdowns of Figures 4, 9 and 12.
+//!
+//! Computation is measured in **per-thread CPU time**
+//! (`CLOCK_THREAD_CPUTIME_ID`), not wall clock: simulated ranks are OS
+//! threads and typically oversubscribe the host's cores, so wall time
+//! would measure the scheduler, not the algorithm.  Thread CPU time is
+//! exactly the "one processor per rank" semantics the simulation needs —
+//! each rank's comp time is what it would cost on a dedicated core.
+//! Communication keeps wall time (blocked receives consume no CPU) plus
+//! the α–β modeled time accounted by [`crate::distributed::cost`].
+
+use std::time::Duration;
+
+/// Current thread CPU time.
+pub fn thread_cpu_now() -> Duration {
+    let mut ts = libc::timespec { tv_sec: 0, tv_nsec: 0 };
+    // SAFETY: ts is a valid out-pointer; the clock id is a constant.
+    let rc = unsafe { libc::clock_gettime(libc::CLOCK_THREAD_CPUTIME_ID, &mut ts) };
+    debug_assert_eq!(rc, 0);
+    Duration::new(ts.tv_sec as u64, ts.tv_nsec as u32)
+}
+
+/// Accumulates computation (thread CPU) and communication (wall) time.
+#[derive(Clone, Debug, Default)]
+pub struct SplitTimer {
+    pub comp: Duration,
+    pub comm: Duration,
+}
+
+impl SplitTimer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time `f`, attributing its *thread CPU time* to computation.
+    pub fn comp<T>(&mut self, f: impl FnOnce() -> T) -> T {
+        let t = thread_cpu_now();
+        let out = f();
+        self.comp += thread_cpu_now().saturating_sub(t);
+        out
+    }
+
+    /// Time `f`, attributing its *wall time* to communication.
+    pub fn comm<T>(&mut self, f: impl FnOnce() -> T) -> T {
+        let t = std::time::Instant::now();
+        let out = f();
+        self.comm += t.elapsed();
+        out
+    }
+
+    pub fn total(&self) -> Duration {
+        self.comp + self.comm
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buckets_accumulate() {
+        let mut t = SplitTimer::new();
+        let x = t.comp(|| 21 * 2);
+        assert_eq!(x, 42);
+        t.comm(|| std::thread::sleep(Duration::from_millis(1)));
+        assert!(t.comm >= Duration::from_millis(1));
+        assert_eq!(t.total(), t.comp + t.comm);
+    }
+
+    #[test]
+    fn thread_cpu_time_advances_under_load() {
+        let t0 = thread_cpu_now();
+        let mut acc = 0u64;
+        for i in 0..2_000_000u64 {
+            acc = acc.wrapping_add(i.wrapping_mul(2654435761));
+        }
+        std::hint::black_box(acc);
+        assert!(thread_cpu_now() > t0);
+    }
+
+    #[test]
+    fn sleep_does_not_charge_cpu_time() {
+        let mut t = SplitTimer::new();
+        t.comp(|| std::thread::sleep(Duration::from_millis(5)));
+        // sleeping burns (almost) no CPU time
+        assert!(t.comp < Duration::from_millis(3), "comp={:?}", t.comp);
+    }
+}

@@ -1,0 +1,199 @@
+//! Hand-rolled property-based tests (proptest is not vendored offline):
+//! seeded random sweeps asserting structural invariants across the
+//! stack.  Each property runs dozens of randomized cases; failures print
+//! the generating seed for reproduction.
+
+use dist_color::coloring::distributed::ghost::LocalGraph;
+use dist_color::coloring::distributed::{color_distributed, DistConfig, NativeBackend};
+use dist_color::coloring::{validate, Problem};
+use dist_color::distributed::{run_ranks, CostModel};
+use dist_color::graph::generators::erdos_renyi::gnm;
+use dist_color::graph::{Graph, GraphBuilder, VId};
+use dist_color::partition::{self, metrics, PartitionKind};
+use dist_color::util::rng::Rng;
+
+/// Random graph from a case seed: n in [2, 300], m up to 4n.
+fn arb_graph(seed: u64) -> Graph {
+    let mut rng = Rng::new(seed);
+    let n = 2 + rng.below(299) as usize;
+    let m = rng.below(4 * n as u64 + 1) as usize;
+    gnm(n, m.max(1), seed ^ 0xABCD)
+}
+
+#[test]
+fn property_builder_output_is_always_valid() {
+    for case in 0..60u64 {
+        let g = arb_graph(case);
+        g.validate().unwrap_or_else(|e| panic!("case {case}: {e}"));
+    }
+}
+
+#[test]
+fn property_builder_is_idempotent_under_rebuild() {
+    for case in 0..40u64 {
+        let g = arb_graph(case);
+        // rebuild from its own edge list: must round-trip exactly
+        let mut b = GraphBuilder::new(g.n());
+        for v in 0..g.n() as VId {
+            for &u in g.neighbors(v) {
+                if u > v {
+                    b.edge(v, u);
+                }
+            }
+        }
+        assert_eq!(b.build(), g, "case {case}");
+    }
+}
+
+#[test]
+fn property_partitions_cover_and_stay_in_range() {
+    for case in 0..40u64 {
+        let g = arb_graph(case);
+        let mut rng = Rng::new(case ^ 77);
+        let nparts = 1 + rng.below(12) as usize;
+        for pk in [
+            PartitionKind::Block,
+            PartitionKind::EdgeBalanced,
+            PartitionKind::Bfs,
+            PartitionKind::Hash,
+        ] {
+            let p = partition::partition(&g, nparts, pk, case);
+            p.validate(&g).unwrap_or_else(|e| panic!("case {case} {pk:?}: {e}"));
+            let total: usize = p.part_sizes().iter().sum();
+            assert_eq!(total, g.n());
+            // cut is at most m
+            assert!(metrics::edge_cut(&g, &p) <= g.m());
+        }
+    }
+}
+
+#[test]
+fn property_ghost_views_are_mutually_consistent() {
+    for case in 0..15u64 {
+        let g = arb_graph(case | 1);
+        let mut rng = Rng::new(case ^ 31);
+        let nparts = 2 + rng.below(5) as usize;
+        let part = partition::hash(&g, nparts, case);
+        let two = case % 2 == 0;
+        let lgs = run_ranks(nparts, CostModel::zero(), |c| {
+            LocalGraph::build(c, &g, &part, two)
+        });
+        // every vertex owned exactly once
+        let mut owned = vec![0u32; g.n()];
+        for lg in &lgs {
+            for v in 0..lg.n_local {
+                owned[lg.gids[v] as usize] += 1;
+            }
+        }
+        assert!(owned.iter().all(|&c| c == 1), "case {case}");
+        // ghosts' owners agree with the partition
+        for lg in &lgs {
+            for gi in lg.n_local..lg.n_local + lg.n_ghost {
+                let gid = lg.gids[gi] as usize;
+                assert_ne!(part.owner[gid], lg.rank, "case {case}: ghost owned locally");
+            }
+        }
+    }
+}
+
+#[test]
+fn property_distributed_d1_always_proper_and_bounded() {
+    for case in 0..25u64 {
+        let g = arb_graph(case ^ 0x5555);
+        let mut rng = Rng::new(case);
+        let nparts = 1 + rng.below(10) as usize;
+        let pk = match rng.below(3) {
+            0 => PartitionKind::Block,
+            1 => PartitionKind::EdgeBalanced,
+            _ => PartitionKind::Hash,
+        };
+        let part = partition::partition(&g, nparts, pk, case);
+        let cfg = DistConfig {
+            problem: Problem::D1,
+            recolor_degrees: case % 2 == 0,
+            two_ghost_layers: case % 3 == 0,
+            seed: case,
+            ..Default::default()
+        };
+        let r = color_distributed(&g, &part, cfg, CostModel::zero(), &NativeBackend(cfg.kernel));
+        assert!(
+            validate::is_proper_d1(&g, &r.colors),
+            "case {case}: nparts={nparts} {pk:?}"
+        );
+        assert!(r.stats.colors_used <= g.max_degree() + 1, "case {case}");
+    }
+}
+
+#[test]
+fn property_distributed_d2_always_proper() {
+    for case in 0..12u64 {
+        let g = arb_graph(case ^ 0xAAAA);
+        if g.max_degree() > 60 {
+            continue;
+        }
+        let mut rng = Rng::new(case);
+        let nparts = 1 + rng.below(6) as usize;
+        let part = partition::partition(&g, nparts, PartitionKind::Hash, case);
+        let cfg = DistConfig { problem: Problem::D2, seed: case, ..Default::default() };
+        let r = color_distributed(&g, &part, cfg, CostModel::zero(), &NativeBackend(cfg.kernel));
+        assert!(validate::is_proper_d2(&g, &r.colors), "case {case}");
+    }
+}
+
+#[test]
+fn property_colors_used_never_exceeds_serial_worst_case_bound() {
+    use dist_color::coloring::local::greedy::{serial_greedy, Ordering};
+    for case in 0..20u64 {
+        let g = arb_graph(case ^ 0x1234);
+        // any greedy-based coloring respects Δ+1
+        for ord in [Ordering::Natural, Ordering::LargestFirst, Ordering::SmallestLast] {
+            let c = serial_greedy(&g, ord);
+            assert!(
+                dist_color::coloring::max_color(&c) as usize <= g.max_degree() + 1,
+                "case {case} {ord:?}"
+            );
+        }
+    }
+}
+
+#[test]
+fn property_comm_codecs_roundtrip_random_payloads() {
+    use dist_color::distributed::comm::{decode_u32s, decode_u64s, encode_u32s, encode_u64s};
+    for case in 0..50u64 {
+        let mut rng = Rng::new(case);
+        let n = rng.below(200) as usize;
+        let xs: Vec<u32> = (0..n).map(|_| rng.next_u64() as u32).collect();
+        assert_eq!(decode_u32s(&encode_u32s(&xs)), xs);
+        let ys: Vec<u64> = (0..n).map(|_| rng.next_u64()).collect();
+        assert_eq!(decode_u64s(&encode_u64s(&ys)), ys);
+    }
+}
+
+#[test]
+fn property_alltoallv_random_matrix() {
+    // random payload matrices exchange exactly transposed
+    for case in 0..10u64 {
+        let mut rng = Rng::new(case);
+        let p = 2 + rng.below(7) as usize;
+        let sizes: Vec<Vec<usize>> =
+            (0..p).map(|_| (0..p).map(|_| rng.below(64) as usize).collect()).collect();
+        let sizes2 = sizes.clone();
+        run_ranks(p, CostModel::zero(), move |c| {
+            let me = c.rank() as usize;
+            let bufs: Vec<Vec<u8>> = (0..p)
+                .map(|r| {
+                    let len = sizes2[me][r];
+                    (0..len).map(|i| (me * 31 + r * 7 + i) as u8).collect()
+                })
+                .collect();
+            let got = c.alltoallv(99, bufs);
+            for (r, buf) in got.iter().enumerate() {
+                let len = sizes2[r][me];
+                assert_eq!(buf.len(), len);
+                for (i, &b) in buf.iter().enumerate() {
+                    assert_eq!(b, (r * 31 + me * 7 + i) as u8);
+                }
+            }
+        });
+    }
+}
