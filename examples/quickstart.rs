@@ -20,8 +20,15 @@ fn main() {
     let part = partition::partition(&g, 4, PartitionKind::EdgeBalanced, 42);
 
     // 3. distributed distance-1 coloring with the recolor-degrees
-    //    heuristic (the paper's best configuration)
-    let cfg = DistConfig { problem: Problem::D1, recolor_degrees: true, ..Default::default() };
+    //    heuristic (the paper's best configuration); threads: 0 lets
+    //    every rank's on-node kernel use all available cores — the
+    //    coloring is bit-identical for any thread count
+    let cfg = DistConfig {
+        problem: Problem::D1,
+        recolor_degrees: true,
+        threads: 0,
+        ..Default::default()
+    };
     let result =
         color_distributed(&g, &part, cfg, CostModel::default(), &NativeBackend(cfg.kernel));
 

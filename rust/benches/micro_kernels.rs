@@ -1,14 +1,20 @@
 //! Micro-benchmarks of the hot paths (the §Perf profiling harness):
-//! local kernels, conflict detection, ghost construction, exchanges,
-//! and the PJRT round when artifacts are present.
+//! local kernels (serial and parallel), conflict detection, ghost
+//! construction, exchanges, and the PJRT round when artifacts are
+//! present.
 //!
 //! Plain timing harness (criterion is not vendored offline): median of
 //! BENCH_REPS (default 7) runs after one warmup.
+//!
+//! Set `BENCH_PR1=1` (as `scripts/verify.sh` does) to run only the
+//! serial-vs-parallel smoke suite and write `BENCH_pr1.json`; the JSON
+//! schema is documented in `rust/benches/README.md`.
 
 use std::time::Instant;
 
 use dist_color::coloring::distributed::ghost::LocalGraph;
 use dist_color::coloring::local::{eb_bit, greedy, jp, nb_bit, vb_bit, LocalView};
+use dist_color::coloring::Color;
 use dist_color::distributed::{run_ranks, CostModel};
 use dist_color::graph::generators::{ba, erdos_renyi::gnm, mesh};
 use dist_color::graph::Graph;
@@ -31,7 +37,113 @@ fn arcs_per_sec(g: &Graph, ms: f64) -> f64 {
     g.arcs() as f64 / (ms / 1e3)
 }
 
+/// One measurement of the serial-vs-parallel sweep.
+struct SweepRow {
+    kernel: &'static str,
+    threads: usize,
+    ms: f64,
+    identical: bool,
+}
+
+const SWEEP_THREADS: [usize; 4] = [1, 2, 4, 8];
+
+/// Time `vb_bit`/`eb_bit` over a thread sweep on `g`, recording whether
+/// each parallel coloring is bit-identical to the 1-thread result.
+/// Callers assert with [`assert_all_identical`] *after* emitting the
+/// rows, so a divergence is still recorded in the output before the
+/// harness fails.  Shared by `main` and the `pr1_smoke` JSON mode.
+fn sweep_serial_vs_parallel(g: &Graph, reps: usize) -> Vec<SweepRow> {
+    let mask = vec![true; g.n()];
+    let view = LocalView { graph: g, mask: &mask };
+    let mut rows = Vec::new();
+    for kernel in ["vb_bit", "eb_bit"] {
+        let mut reference: Vec<Color> = Vec::new();
+        for threads in SWEEP_THREADS {
+            let mut colors: Vec<Color> = Vec::new();
+            let ms = median_ms(reps, || {
+                let mut c = vec![0 as Color; g.n()];
+                match kernel {
+                    "vb_bit" => vb_bit::color_par(&view, &mut c, threads),
+                    _ => eb_bit::color_par(&view, &mut c, threads),
+                };
+                colors = c;
+            });
+            if threads == 1 {
+                reference = colors.clone();
+            }
+            rows.push(SweepRow { kernel, threads, ms, identical: colors == reference });
+        }
+    }
+    rows
+}
+
+/// Fail the harness if any sweep row diverged from its serial result.
+fn assert_all_identical(rows: &[SweepRow]) {
+    for r in rows {
+        assert!(r.identical, "{} at {} threads diverged from serial", r.kernel, r.threads);
+    }
+}
+
+/// Serial time of `kernel` within a sweep (its 1-thread row).
+fn serial_ms_of(rows: &[SweepRow], kernel: &str) -> f64 {
+    rows.iter()
+        .find(|r| r.kernel == kernel && r.threads == 1)
+        .map(|r| r.ms)
+        .unwrap_or(f64::NAN)
+}
+
+/// Serial-vs-parallel kernel timings on a >= 1M-edge gnm graph, with the
+/// bit-identical-colors check, written to `BENCH_pr1.json`.
+fn pr1_smoke() {
+    let reps: usize =
+        std::env::var("BENCH_REPS").ok().and_then(|s| s.parse().ok()).unwrap_or(5);
+    let (n, m, seed) = (250_000usize, 1_000_000usize, 1u64);
+    eprintln!("pr1 smoke: generating gnm({n}, {m}) ...");
+    let g = gnm(n, m, seed);
+    let rows = sweep_serial_vs_parallel(&g, reps);
+
+    let mut json_rows = String::new();
+    for r in &rows {
+        if !json_rows.is_empty() {
+            json_rows.push_str(",\n");
+        }
+        json_rows.push_str(&format!(
+            "    {{\"kernel\": \"{}\", \"threads\": {}, \"ms\": {:.3}, \
+             \"arcs_per_sec\": {:.3e}, \"identical_to_serial\": {}}}",
+            r.kernel,
+            r.threads,
+            r.ms,
+            arcs_per_sec(&g, r.ms),
+            r.identical
+        ));
+        println!(
+            "{:<8} threads={} {:>9.2} ms identical={}",
+            r.kernel, r.threads, r.ms, r.identical
+        );
+    }
+    let speedup_8t = rows
+        .iter()
+        .find(|r| r.kernel == "vb_bit" && r.threads == 8)
+        .map(|r| serial_ms_of(&rows, "vb_bit") / r.ms)
+        .unwrap_or(f64::NAN);
+    let json = format!(
+        "{{\n  \"bench\": \"micro_kernels_pr1\",\n  \"schema\": 1,\n  \
+         \"graph\": {{\"kind\": \"gnm\", \"n\": {n}, \"m\": {m}, \"seed\": {seed}}},\n  \
+         \"reps\": {reps},\n  \"host_cores\": {},\n  \"rows\": [\n{json_rows}\n  ],\n  \
+         \"vb_bit_speedup_8t\": {speedup_8t:.3}\n}}\n",
+        std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1)
+    );
+    std::fs::write("BENCH_pr1.json", &json).expect("writing BENCH_pr1.json");
+    println!("\nvb_bit 8-thread speedup: {speedup_8t:.2}x  -> BENCH_pr1.json");
+    // after the JSON is on disk, so a divergence is recorded, not lost
+    assert_all_identical(&rows);
+}
+
 fn main() {
+    if std::env::var("BENCH_PR1").is_ok_and(|v| v == "1") {
+        pr1_smoke();
+        return;
+    }
     let reps: usize =
         std::env::var("BENCH_REPS").ok().and_then(|s| s.parse().ok()).unwrap_or(7);
     println!("== micro_kernels (median of {reps}) ==\n");
@@ -77,6 +189,23 @@ fn main() {
             );
         }
     }
+
+    // ---- parallel execution layer: serial vs chunked worklists ---------
+    println!();
+    println!("{:<16} {:<10} {:>8} {:>10} {:>10}", "graph", "kernel", "threads", "ms", "speedup");
+    let g = gnm(200_000, 1_000_000, 3);
+    let rows = sweep_serial_vs_parallel(&g, reps.min(5));
+    for r in &rows {
+        println!(
+            "{:<16} {:<10} {:>8} {:>10.2} {:>9.2}x",
+            "gnm 200k/1M",
+            r.kernel,
+            r.threads,
+            r.ms,
+            serial_ms_of(&rows, r.kernel) / r.ms
+        );
+    }
+    assert_all_identical(&rows);
 
     // ---- D2 kernel ------------------------------------------------------
     println!();

@@ -24,12 +24,24 @@ const TAG_FETCH_REQ: u64 = 10_002;
 const TAG_FETCH_REP: u64 = 10_004;
 
 /// A rank's local graph: owned vertices, ghosts, and comm metadata.
+///
+/// Local ids are **boundary-first** (§3's comm/compute overlap): owned
+/// vertices with a remote neighbor occupy `0..n_boundary1`, owned
+/// vertices within two hops of a remote vertex occupy `0..n_boundary2`,
+/// and the (distance-2) interior fills `n_boundary2..n_local`.  The
+/// driver colors the boundary prefix first, launches the ghost-color
+/// exchange, and colors the interior while that exchange is in flight.
 #[derive(Debug)]
 pub struct LocalGraph {
     pub rank: u32,
     pub nranks: u32,
     /// Number of owned (local) vertices; local ids `0..n_local`.
     pub n_local: usize,
+    /// Owned vertices with a remote neighbor are `0..n_boundary1`.
+    pub n_boundary1: usize,
+    /// Owned vertices within two hops of a remote vertex are
+    /// `0..n_boundary2` (`n_boundary1 <= n_boundary2 <= n_local`).
+    pub n_boundary2: usize,
     /// Number of first-layer ghosts; ids `n_local..n_local+n_ghost1`.
     pub n_ghost1: usize,
     /// Total ghosts (both layers); ids `n_local..n_local+n_ghost`.
@@ -61,8 +73,41 @@ impl LocalGraph {
     pub fn build(comm: &mut Comm, g: &Graph, part: &Partition, two_layers: bool) -> LocalGraph {
         let rank = comm.rank();
         let p = comm.nranks() as usize;
-        let owned: Vec<VId> = part.owned(rank);
-        let n_local = owned.len();
+        let owned_sorted: Vec<VId> = part.owned(rank);
+        let n_local = owned_sorted.len();
+
+        // ---- boundary-first local ordering ---------------------------
+        // Group the owned vertices as [boundary-1 | boundary-2-only |
+        // interior], each group gid-sorted (owned_sorted is ascending).
+        // Every vertex another rank subscribes to lands in the boundary
+        // prefix — boundary-1 for one-layer builds, boundary-2 for
+        // two-layer builds (a layer-2 ghost's owner sees it as boundary-2
+        // at worst) — which is what lets the driver ship boundary colors
+        // before the interior is colored.
+        let is_remote_adjacent = |v: VId| -> bool {
+            g.neighbors(v).iter().any(|&u| part.owner[u as usize] != rank)
+        };
+        let b1: Vec<bool> = owned_sorted.iter().map(|&v| is_remote_adjacent(v)).collect();
+        // owned_sorted is ascending, so ownership tests are binary searches
+        let b2: Vec<bool> = owned_sorted
+            .iter()
+            .enumerate()
+            .map(|(i, &v)| {
+                b1[i]
+                    || g.neighbors(v)
+                        .iter()
+                        .any(|&u| owned_sorted.binary_search(&u).is_ok_and(|j| b1[j]))
+            })
+            .collect();
+        let mut owned: Vec<VId> = Vec::with_capacity(n_local);
+        owned.extend(owned_sorted.iter().enumerate().filter(|&(i, _)| b1[i]).map(|(_, &v)| v));
+        let n_boundary1 = owned.len();
+        owned.extend(
+            owned_sorted.iter().enumerate().filter(|&(i, _)| !b1[i] && b2[i]).map(|(_, &v)| v),
+        );
+        let n_boundary2 = owned.len();
+        owned.extend(owned_sorted.iter().enumerate().filter(|&(i, _)| !b2[i]).map(|(_, &v)| v));
+        debug_assert_eq!(owned.len(), n_local);
 
         // global -> local map for owned vertices
         let mut lid = std::collections::HashMap::<VId, u32>::with_capacity(n_local * 2);
@@ -97,9 +142,10 @@ impl LocalGraph {
                 out
             });
             ghost_adj = replies;
-            // discover second-layer ghosts
+            // discover second-layer ghosts (adj[0] is the degree header,
+            // not a vertex — skipping it avoids phantom ghosts)
             for adj in &ghost_adj {
-                for &u in adj {
+                for &u in &adj[1..] {
                     if part.owner[u as usize] != rank && !lid.contains_key(&u) {
                         lid.insert(u, 0);
                         ghosts2.push(u);
@@ -143,13 +189,20 @@ impl LocalGraph {
         let bufs: Vec<Vec<u8>> = req_by_rank.iter().map(|v| encode_u32s(v)).collect();
         let got = comm.alltoallv(TAG_REG, bufs);
         let mut subs_out: Vec<Vec<u32>> = vec![Vec::new(); p];
+        // Every subscribed vertex must sit in the boundary prefix; the
+        // comm/compute overlap in `color_rank` is only sound because the
+        // colors shipped by the boundary-first send are final by then.
+        let subs_bound = if two_layers { n_boundary2 } else { n_boundary1 };
         for (r, buf) in got.into_iter().enumerate() {
             let want = decode_u32s(&buf);
             subs_out[r] = want
                 .iter()
                 .map(|gv| *lid.get(gv).expect("subscribed vertex not owned"))
                 .collect();
-            debug_assert!(subs_out[r].iter().all(|&l| (l as usize) < n_local));
+            debug_assert!(
+                subs_out[r].iter().all(|&l| (l as usize) < subs_bound),
+                "subscription outside the boundary prefix"
+            );
         }
         let subs_pos: Vec<Vec<(u32, u32)>> = subs_out
             .iter()
@@ -184,6 +237,9 @@ impl LocalGraph {
         let graph = b.build();
 
         // ---- boundary sets ---------------------------------------------
+        // With the boundary-first ordering these are exactly the id
+        // prefixes; recompute from the CSR and assert the invariant so
+        // any ordering regression fails loudly under tests.
         let mut boundary_d1: Vec<u32> = Vec::new();
         let mut is_b1 = vec![false; n_local];
         for v in 0..n_local {
@@ -203,11 +259,15 @@ impl LocalGraph {
                 boundary_d2.push(v as u32);
             }
         }
+        debug_assert_eq!(boundary_d1, (0..n_boundary1 as u32).collect::<Vec<u32>>());
+        debug_assert_eq!(boundary_d2, (0..n_boundary2 as u32).collect::<Vec<u32>>());
 
         LocalGraph {
             rank,
             nranks: p as u32,
             n_local,
+            n_boundary1,
+            n_boundary2,
             n_ghost1,
             n_ghost,
             gids,
@@ -227,10 +287,10 @@ impl LocalGraph {
         (v as usize) >= self.n_local
     }
 
-    /// Interior vertices: owned, no ghost neighbor (never conflict, §2.4).
+    /// Interior vertices: owned, no ghost neighbor (never conflict,
+    /// §2.4).  A contiguous suffix under the boundary-first ordering.
     pub fn interior(&self) -> Vec<u32> {
-        let b1: std::collections::HashSet<u32> = self.boundary_d1.iter().copied().collect();
-        (0..self.n_local as u32).filter(|v| !b1.contains(v)).collect()
+        (self.n_boundary1 as u32..self.n_local as u32).collect()
     }
 }
 
@@ -312,9 +372,39 @@ mod tests {
         let lgs = build_all(&g, &part, false);
         let total: usize = lgs.iter().map(|l| l.n_local).sum();
         assert_eq!(total, g.n());
-        // gids of locals are exactly the owned sets
+        // gids of locals are exactly the owned sets (boundary-first
+        // ordering permutes them, so compare as sorted sets)
         for (r, lg) in lgs.iter().enumerate() {
-            assert_eq!(lg.gids[..lg.n_local], part.owned(r as u32)[..]);
+            let mut got = lg.gids[..lg.n_local].to_vec();
+            got.sort_unstable();
+            assert_eq!(got, part.owned(r as u32));
+        }
+    }
+
+    #[test]
+    fn boundary_first_ordering_is_a_prefix() {
+        let g = gnm(150, 600, 21);
+        for (nparts, two) in [(4usize, false), (3, true)] {
+            let part = hash(&g, nparts, 5);
+            for lg in build_all(&g, &part, two) {
+                assert!(lg.n_boundary1 <= lg.n_boundary2);
+                assert!(lg.n_boundary2 <= lg.n_local);
+                assert_eq!(
+                    lg.boundary_d1,
+                    (0..lg.n_boundary1 as u32).collect::<Vec<u32>>()
+                );
+                assert_eq!(
+                    lg.boundary_d2,
+                    (0..lg.n_boundary2 as u32).collect::<Vec<u32>>()
+                );
+                assert_eq!(lg.interior(), (lg.n_boundary1 as u32..lg.n_local as u32).collect::<Vec<u32>>());
+                // every vertex another rank subscribes to sits in the
+                // prefix whose colors the overlapped send ships
+                let bound = if two { lg.n_boundary2 } else { lg.n_boundary1 };
+                for subs in &lg.subs_out {
+                    assert!(subs.iter().all(|&l| (l as usize) < bound));
+                }
+            }
         }
     }
 

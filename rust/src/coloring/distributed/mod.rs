@@ -2,15 +2,23 @@
 //! with its three front-ends D1, D1-2GL, D2/PD2 and the Zoltan/Bozdağ
 //! baseline.
 //!
-//! Flow per rank:
+//! Flow per rank (with the §3 comm/compute overlap — local ids are
+//! boundary-first, see [`ghost::LocalGraph`]):
 //!
-//! 1. color all local vertices with the on-"GPU" kernel (ghosts unknown);
-//! 2. exchange boundary colors (full subscription exchange);
+//! 1. color the boundary prefix with the on-"GPU" kernel (ghosts
+//!    unknown), then *launch* the boundary-color sends and color the
+//!    interior while that exchange is in flight;
+//! 2. complete the exchange (full subscription receive);
 //! 3. detect conflicts across rank boundaries and resolve with
 //!    Algorithm 4 (optionally prioritizing by degree — the paper's novel
 //!    recolor-degrees heuristic);
 //! 4. `Allreduce(conflicts, SUM)`; while > 0: recolor losers locally,
 //!    communicate *only changed* boundary colors, re-detect.
+//!
+//! The on-node kernels run data-parallel over [`DistConfig::threads`]
+//! workers (bit-identical to serial — see `util::par`), and each rank
+//! reuses one [`KernelScratch`] plus the recolor mask/loser buffers
+//! across all speculative rounds.
 //!
 //! The D1-2GL variant (§3.4) additionally *predicts* the recoloring of
 //! ghost losers: ghosts carry full adjacency in the second-layer build,
@@ -25,7 +33,7 @@ pub mod conflict;
 pub mod ghost;
 pub mod zoltan;
 
-use crate::coloring::local::{color_local, nb_bit, LocalKernel, LocalView};
+use crate::coloring::local::{color_local_with, nb_bit, KernelScratch, LocalKernel, LocalView};
 use crate::coloring::{colors_used, Color, Problem};
 use crate::distributed::comm::{decode_u32s, encode_u32s, Comm};
 use crate::distributed::{run_ranks, CostModel};
@@ -50,6 +58,9 @@ pub struct DistConfig {
     pub two_ghost_layers: bool,
     /// Local kernel for the native backend.
     pub kernel: LocalKernel,
+    /// Worker threads per rank for the on-node kernel passes (0 = one
+    /// per available core).  Colorings are identical for every value.
+    pub threads: usize,
     pub seed: u64,
     /// Safety cap on recoloring rounds.
     pub max_rounds: usize,
@@ -62,6 +73,7 @@ impl Default for DistConfig {
             recolor_degrees: true,
             two_ghost_layers: false,
             kernel: LocalKernel::VbBit,
+            threads: 1,
             seed: 42,
             max_rounds: 500,
         }
@@ -81,6 +93,21 @@ pub trait LocalBackend: Sync {
         seed: u64,
     ) -> usize;
 
+    /// [`LocalBackend::color`] with caller-owned per-rank scratch (the
+    /// thread knob plus cached kernel priorities).  Backends that cannot
+    /// use the scratch (PJRT) fall through to [`LocalBackend::color`].
+    fn color_with_scratch(
+        &self,
+        problem: Problem,
+        view: &LocalView,
+        colors: &mut [Color],
+        seed: u64,
+        scratch: &mut KernelScratch,
+    ) -> usize {
+        let _ = scratch;
+        self.color(problem, view, colors, seed)
+    }
+
     /// Short name for logs/benches.
     fn name(&self) -> &'static str {
         "native"
@@ -98,10 +125,21 @@ impl LocalBackend for NativeBackend {
         colors: &mut [Color],
         seed: u64,
     ) -> usize {
+        self.color_with_scratch(problem, view, colors, seed, &mut KernelScratch::new(1))
+    }
+
+    fn color_with_scratch(
+        &self,
+        problem: Problem,
+        view: &LocalView,
+        colors: &mut [Color],
+        seed: u64,
+        scratch: &mut KernelScratch,
+    ) -> usize {
         match problem {
-            Problem::D1 => color_local(self.0, view, colors, seed),
-            Problem::D2 => nb_bit::color(view, colors, false),
-            Problem::PD2 => nb_bit::color(view, colors, true),
+            Problem::D1 => color_local_with(self.0, view, colors, seed, scratch),
+            Problem::D2 => nb_bit::color_with(view, colors, false, scratch),
+            Problem::PD2 => nb_bit::color_with(view, colors, true, scratch),
         }
     }
 }
@@ -218,30 +256,62 @@ pub fn color_rank(
 
     let n_all = lg.n_local + lg.n_ghost;
     let mut colors: Vec<Color> = vec![0; n_all];
+    // per-rank kernel scratch, reused by every kernel call this rank makes
+    let mut scratch = KernelScratch::new(cfg.threads);
 
-    // ---- initial local coloring (ghosts unknown/uncolored) -----------
+    // ---- initial local coloring (ghosts unknown/uncolored), overlapped
+    // with the boundary-color exchange (§3): color the boundary prefix,
+    // launch the sends, then color the interior while the wires drain.
+    // Everything any rank subscribes to is inside the prefix (asserted
+    // in LocalGraph::build), so the shipped colors are final.
+    let pre = if two_layers { lg.n_boundary2 } else { lg.n_boundary1 };
+    let seed0 = cfg.seed ^ lg.rank as u64;
     let mut mask = vec![false; n_all];
-    mask[..lg.n_local].fill(true);
-    timers.comp(|| {
-        backend.color(
-            cfg.problem,
-            &LocalView { graph: &lg.graph, mask: &mask },
-            &mut colors,
-            cfg.seed ^ lg.rank as u64,
-        )
-    });
-
-    // ---- initial full boundary exchange --------------------------------
+    if pre > 0 {
+        mask[..pre].fill(true);
+        timers.comp(|| {
+            backend.color_with_scratch(
+                cfg.problem,
+                &LocalView { graph: &lg.graph, mask: &mask },
+                &mut colors,
+                seed0,
+                &mut scratch,
+            )
+        });
+    }
     let mut comm_rounds = 1usize;
-    timers.comm(|| exchange_full(comm, &lg, &mut colors));
+    timers.comm(|| exchange_full_send(comm, &lg, &colors));
+    if pre < lg.n_local {
+        mask[..pre].fill(false);
+        mask[pre..lg.n_local].fill(true);
+        timers.comp(|| {
+            backend.color_with_scratch(
+                cfg.problem,
+                &LocalView { graph: &lg.graph, mask: &mask },
+                &mut colors,
+                seed0,
+                &mut scratch,
+            )
+        });
+        mask[pre..lg.n_local].fill(false);
+    } else {
+        mask[..pre].fill(false);
+    }
+    timers.comm(|| exchange_full_recv(comm, &lg, &mut colors));
 
     // ---- speculative fix loop -------------------------------------------
+    // `mask` (all false again) and the loser vectors are reused across
+    // rounds instead of reallocating per round.
     let mut conflicts_total = 0u64;
     let mut recolored_total = 0u64;
     let mut round = 0usize;
+    let mut local_losers: Vec<u32> = Vec::new();
+    let mut ghost_losers: Vec<u32> = Vec::new();
     loop {
-        let (local_losers, ghost_losers, found) =
-            timers.comp(|| detect_conflicts(&lg, &colors, cfg));
+        local_losers.clear();
+        ghost_losers.clear();
+        let found = timers
+            .comp(|| detect_conflicts(&lg, &colors, cfg, &mut local_losers, &mut ghost_losers));
         conflicts_total += found;
         let global = timers.comm(|| comm.allreduce_sum(TAG_REDUCE + 2 * round as u64, found));
         if global == 0 {
@@ -265,16 +335,19 @@ pub fn color_rank(
                 // region, predicting ghost losers' new colors too.
                 recolor_predictive(&lg, &mut colors, &local_losers, &ghost_losers, cfg.seed);
             } else {
-                let mut m = vec![false; n_all];
                 for &v in &local_losers {
-                    m[v as usize] = true;
+                    mask[v as usize] = true;
                 }
-                backend.color(
+                backend.color_with_scratch(
                     cfg.problem,
-                    &LocalView { graph: &lg.graph, mask: &m },
+                    &LocalView { graph: &lg.graph, mask: &mask },
                     &mut colors,
                     cfg.seed ^ ((round as u64) << 8) ^ lg.rank as u64,
+                    &mut scratch,
                 );
+                for &v in &local_losers {
+                    mask[v as usize] = false;
+                }
             }
         });
 
@@ -300,25 +373,32 @@ pub fn color_rank(
 // conflict detection (Algorithms 3 and 5)
 // -----------------------------------------------------------------------
 
-/// Detect cross-rank conflicts.  Returns (local losers, ghost losers,
-/// count of conflicts involving a local vertex).
+/// Detect cross-rank conflicts into the caller's reusable buffers
+/// (cleared by the caller; sorted + deduped on return).  Returns the
+/// count of conflicts involving a local vertex.
 fn detect_conflicts(
     lg: &LocalGraph,
     colors: &[Color],
     cfg: DistConfig,
-) -> (Vec<u32>, Vec<u32>, u64) {
+    local_losers: &mut Vec<u32>,
+    ghost_losers: &mut Vec<u32>,
+) -> u64 {
     match cfg.problem {
-        Problem::D1 => detect_d1(lg, colors, cfg),
-        Problem::D2 => detect_d2(lg, colors, cfg, false),
-        Problem::PD2 => detect_d2(lg, colors, cfg, true),
+        Problem::D1 => detect_d1(lg, colors, cfg, local_losers, ghost_losers),
+        Problem::D2 => detect_d2(lg, colors, cfg, false, local_losers),
+        Problem::PD2 => detect_d2(lg, colors, cfg, true, local_losers),
     }
 }
 
 /// Algorithm 3 with the §3.4 optimization: scan only ghosts' adjacency
 /// (`E_g`), since every cross-rank conflict edge is incident to a ghost.
-fn detect_d1(lg: &LocalGraph, colors: &[Color], cfg: DistConfig) -> (Vec<u32>, Vec<u32>, u64) {
-    let mut local_losers: Vec<u32> = Vec::new();
-    let mut ghost_losers: Vec<u32> = Vec::new();
+fn detect_d1(
+    lg: &LocalGraph,
+    colors: &[Color],
+    cfg: DistConfig,
+    local_losers: &mut Vec<u32>,
+    ghost_losers: &mut Vec<u32>,
+) -> u64 {
     let mut count = 0u64;
     let nl = lg.n_local as u32;
     for gl in nl..(lg.n_local + lg.n_ghost) as u32 {
@@ -366,7 +446,7 @@ fn detect_d1(lg: &LocalGraph, colors: &[Color], cfg: DistConfig) -> (Vec<u32>, V
     local_losers.dedup();
     ghost_losers.sort_unstable();
     ghost_losers.dedup();
-    (local_losers, ghost_losers, count)
+    count
 }
 
 /// Algorithm 5: distance-2 conflicts for boundary-d2 vertices; with
@@ -376,9 +456,9 @@ fn detect_d2(
     colors: &[Color],
     cfg: DistConfig,
     partial: bool,
-) -> (Vec<u32>, Vec<u32>, u64) {
+    local_losers: &mut Vec<u32>,
+) -> u64 {
     let nl = lg.n_local as u32;
-    let mut local_losers: Vec<u32> = Vec::new();
     let mut count = 0u64;
     for &v in &lg.boundary_d2 {
         let cv = colors[v as usize];
@@ -414,7 +494,7 @@ fn detect_d2(
     }
     local_losers.sort_unstable();
     local_losers.dedup();
-    (local_losers, Vec::new(), count)
+    count
 }
 
 // -----------------------------------------------------------------------
@@ -464,17 +544,42 @@ fn recolor_predictive(
 
 /// Initial all-to-all exchange of all subscribed boundary colors.
 fn exchange_full(comm: &mut Comm, lg: &LocalGraph, colors: &mut [Color]) {
+    exchange_full_send(comm, lg, colors);
+    exchange_full_recv(comm, lg, colors);
+}
+
+/// Send half of the initial exchange.  Sends never block on this
+/// substrate (unbounded channels — the analogue of `MPI_Isend`), so the
+/// driver launches this before coloring the interior and overlaps the
+/// exchange with that computation (§3).  Empty payloads still go out:
+/// the receive half expects one message per peer.
+fn exchange_full_send(comm: &mut Comm, lg: &LocalGraph, colors: &[Color]) {
     let p = lg.nranks as usize;
-    let mut bufs: Vec<Vec<u8>> = Vec::with_capacity(p);
+    let me = lg.rank as usize;
+    debug_assert!(lg.subs_out[me].is_empty(), "self-subscription");
     for r in 0..p {
+        if r == me {
+            continue;
+        }
         let payload: Vec<u32> = lg.subs_out[r]
             .iter()
             .map(|&l| colors[l as usize])
             .collect();
-        bufs.push(encode_u32s(&payload));
+        comm.send(r as u32, TAG_COLORS, encode_u32s(&payload));
     }
-    let got = comm.alltoallv(TAG_COLORS, bufs);
-    for (r, buf) in got.into_iter().enumerate() {
+}
+
+/// Receive half of the initial exchange: blocks until every peer's
+/// boundary colors arrive, then installs them on our ghosts.
+fn exchange_full_recv(comm: &mut Comm, lg: &LocalGraph, colors: &mut [Color]) {
+    let p = lg.nranks as usize;
+    let me = lg.rank as usize;
+    for r in 0..p {
+        if r == me {
+            debug_assert!(lg.ghost_from[r].is_empty(), "self-ghost");
+            continue;
+        }
+        let buf = comm.recv(r as u32, TAG_COLORS);
         let cs = decode_u32s(&buf);
         debug_assert_eq!(cs.len(), lg.ghost_from[r].len());
         for (&gl, &c) in lg.ghost_from[r].iter().zip(cs.iter()) {

@@ -3,73 +3,102 @@
 //! The assignment pass is the same bit-window greedy as VB_BIT, but the
 //! conflict pass is *edge-parallel*: one unit of work per edge rather
 //! than per vertex, which balances load on skewed-degree graphs (the
-//! reason the paper's heuristic picks EB_BIT when δ_max > 6000).  On this
-//! testbed the "threads" are loop iterations, so the observable
-//! difference is the work decomposition and the identical fixpoint
-//! properties, not wall-clock balance.
+//! reason the paper's heuristic picks EB_BIT when δ_max > 6000).  Both
+//! passes read a snapshot and stage their writes (Jacobi semantics), so
+//! the worklist chunks fan out across the worker threads with no
+//! synchronization and a thread-count-independent result.
 
-use crate::coloring::local::LocalView;
+use crate::coloring::local::{KernelScratch, LocalView};
 use crate::coloring::Color;
 use crate::graph::VId;
 use crate::util::bitset::BitSet;
+use crate::util::par;
 
-/// Color the masked vertices of `view` to fixpoint. Returns #rounds.
+/// Color the masked vertices of `view` to fixpoint, serially.
+/// Returns #rounds.
 pub fn color(view: &LocalView, colors: &mut [Color]) -> usize {
+    color_with(view, colors, &mut KernelScratch::new(1))
+}
+
+/// [`color`] over `threads` workers (0 = auto); bit-identical to serial.
+pub fn color_par(view: &LocalView, colors: &mut [Color], threads: usize) -> usize {
+    color_with(view, colors, &mut KernelScratch::new(threads))
+}
+
+/// Full-control entry: thread knob and priority cache from `scratch`.
+pub fn color_with(view: &LocalView, colors: &mut [Color], scratch: &mut KernelScratch) -> usize {
     let g = view.graph;
     let n = g.n();
+    debug_assert_eq!(colors.len(), n);
+    debug_assert_eq!(view.mask.len(), n);
+
+    let threads = scratch.threads;
+    let prio = scratch.prio32(n);
     let mut work: Vec<VId> = (0..n as VId)
         .filter(|&v| view.mask[v as usize] && colors[v as usize] == 0)
         .collect();
-    let prio: Vec<u32> = (0..n as u32).map(crate::util::mix32).collect();
     let mut in_work = vec![false; n];
     let mut rounds = 0usize;
-    let mut forbidden = BitSet::with_capacity(64);
-    let mut staged: Vec<(VId, Color)> = Vec::new();
 
     while !work.is_empty() {
         rounds += 1;
-        staged.clear();
-        for &v in &work {
-            forbidden.clear();
-            for &u in g.neighbors(v) {
-                let c = colors[u as usize];
-                if c > 0 {
-                    forbidden.set(c as usize - 1);
+        // assignment pass (identical to VB_BIT): snapshot + staged writes
+        let staged: Vec<(VId, Color)> = {
+            let snapshot: &[Color] = colors;
+            par::flat_map_chunks(threads, &work, |chunk| {
+                let mut forbidden = BitSet::with_capacity(64);
+                let mut out: Vec<(VId, Color)> = Vec::with_capacity(chunk.len());
+                for &v in chunk {
+                    forbidden.clear();
+                    for &u in g.neighbors(v) {
+                        let c = snapshot[u as usize];
+                        if c > 0 {
+                            forbidden.set(c as usize - 1);
+                        }
+                    }
+                    out.push((v, forbidden.first_zero() as Color + 1));
                 }
-            }
-            staged.push((v, forbidden.first_zero() as Color + 1));
-        }
+                out
+            })
+        };
         for &(v, c) in &staged {
             colors[v as usize] = c;
             in_work[v as usize] = true;
         }
-        // edge-parallel conflict detection: iterate arcs of worked
-        // vertices; uncolor the lower-priority endpoint of each conflict
-        // (one "thread" per edge in the GPU original).
-        let mut uncolor: Vec<VId> = Vec::new();
-        for &v in &work {
-            let cv = colors[v as usize];
-            if cv == 0 {
-                continue;
-            }
-            for &u in g.neighbors(v) {
-                if colors[u as usize] == cv {
-                    // conflict edge (v, u): hashed-priority loser
-                    let loser =
-                        if (prio[u as usize], u) < (prio[v as usize], v) { v } else { u };
-                    // only masked, freshly-worked endpoints may be uncolored
-                    if in_work[loser as usize] && colors[loser as usize] != 0 {
-                        colors[loser as usize] = 0;
-                        uncolor.push(loser);
+        // edge-parallel conflict detection over a snapshot: one unit of
+        // work per arc of a worked vertex; stage the loser of every
+        // conflict edge.  A conflict only arises between two same-round
+        // assignments (assignment forbids all snapshot colors), so the
+        // loser is always in-work; the check keeps that invariant hot.
+        let mut uncolor: Vec<VId> = {
+            let snapshot: &[Color] = colors;
+            let in_work: &[bool] = &in_work;
+            par::flat_map_chunks(threads, &work, |chunk| {
+                let mut out: Vec<VId> = Vec::new();
+                for &v in chunk {
+                    let cv = snapshot[v as usize];
+                    for &u in g.neighbors(v) {
+                        if snapshot[u as usize] == cv {
+                            // conflict edge (v, u): hashed-priority loser
+                            let loser =
+                                if (prio[u as usize], u) < (prio[v as usize], v) { v } else { u };
+                            if in_work[loser as usize] {
+                                out.push(loser);
+                            }
+                        }
                     }
                 }
-            }
-        }
+                out
+            })
+        };
         for &v in &work {
             in_work[v as usize] = false;
         }
         uncolor.sort_unstable();
         uncolor.dedup();
+        for &v in &uncolor {
+            colors[v as usize] = 0;
+        }
         work = uncolor;
     }
     rounds

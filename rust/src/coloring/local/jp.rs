@@ -7,17 +7,32 @@
 //! of its uncolored masked neighbors joins the independent set and takes
 //! its smallest available color.
 
-use crate::coloring::local::LocalView;
+use crate::coloring::local::{KernelScratch, LocalView};
 use crate::coloring::Color;
 use crate::graph::VId;
 use crate::util::bitset::BitSet;
-use crate::util::gid_rand;
+use crate::util::par;
 
 /// Jones–Plassmann over the masked vertices. Returns #rounds.
 pub fn color(view: &LocalView, colors: &mut [Color], seed: u64) -> usize {
+    color_with(view, colors, seed, &mut KernelScratch::new(1))
+}
+
+/// [`color`] with caller-owned scratch: the winner-detection pass (the
+/// dominant cost) fans out over worklist chunks, and the per-call
+/// priority table is cached while the seed is unchanged.  Winners form
+/// an independent set, so the serial assignment loop is order-invariant
+/// and the result matches the serial kernel for every thread count.
+pub fn color_with(
+    view: &LocalView,
+    colors: &mut [Color],
+    seed: u64,
+    scratch: &mut KernelScratch,
+) -> usize {
     let g = view.graph;
     let n = g.n();
-    let prio: Vec<u64> = (0..n as u64).map(|v| gid_rand(seed, v)).collect();
+    let threads = scratch.threads;
+    let prio = scratch.prio64(n, seed);
     let mut active: Vec<VId> = (0..n as VId)
         .filter(|&v| view.mask[v as usize] && colors[v as usize] == 0)
         .collect();
@@ -26,17 +41,22 @@ pub fn color(view: &LocalView, colors: &mut [Color], seed: u64) -> usize {
 
     while !active.is_empty() {
         rounds += 1;
-        let winners: Vec<VId> = active
-            .iter()
-            .copied()
-            .filter(|&v| {
-                g.neighbors(v).iter().all(|&u| {
-                    colors[u as usize] > 0
-                        || !view.mask[u as usize]
-                        || (prio[u as usize], u) < (prio[v as usize], v)
-                })
+        let winners: Vec<VId> = {
+            let snapshot: &[Color] = colors;
+            par::flat_map_chunks(threads, &active, |chunk| {
+                chunk
+                    .iter()
+                    .copied()
+                    .filter(|&v| {
+                        g.neighbors(v).iter().all(|&u| {
+                            snapshot[u as usize] > 0
+                                || !view.mask[u as usize]
+                                || (prio[u as usize], u) < (prio[v as usize], v)
+                        })
+                    })
+                    .collect::<Vec<VId>>()
             })
-            .collect();
+        };
         // A vertex with an uncolored *unmasked* neighbor can never win
         // against it; treat unmasked-uncolored as non-blocking (they are
         // padding or ghosts that will never be colored locally).

@@ -17,6 +17,7 @@ pub mod vb_bit;
 
 use crate::coloring::Color;
 use crate::graph::Graph;
+use crate::util::{gid_rand, mix32};
 
 /// A local subgraph view for coloring: graph + which vertices to color.
 pub struct LocalView<'a> {
@@ -53,19 +54,84 @@ impl std::str::FromStr for LocalKernel {
     }
 }
 
+/// Reusable per-rank kernel state: the worker-thread knob plus the
+/// hashed tie-break priorities, which the speculative fix loop used to
+/// recompute from scratch on every kernel call (§Perf iteration 3 —
+/// O(n_all) per recolor round for worklists of a handful of vertices).
+#[derive(Clone, Debug)]
+pub struct KernelScratch {
+    /// Worker threads for the bit kernels' passes (0 = one per core).
+    pub threads: usize,
+    /// `mix32(i)` for local ids `0..prio32.len()` — seed-independent.
+    prio32: Vec<u32>,
+    /// `gid_rand(seed, i)` cache for Jones–Plassmann (seed-dependent).
+    prio64: Vec<u64>,
+    prio64_seed: Option<u64>,
+}
+
+impl KernelScratch {
+    pub fn new(threads: usize) -> Self {
+        KernelScratch { threads, prio32: Vec::new(), prio64: Vec::new(), prio64_seed: None }
+    }
+
+    /// Local hashed priorities for ids `0..n` (extended on demand, never
+    /// recomputed).
+    pub fn prio32(&mut self, n: usize) -> &[u32] {
+        let cur = self.prio32.len();
+        if cur < n {
+            self.prio32.extend((cur as u32..n as u32).map(mix32));
+        }
+        &self.prio32[..n]
+    }
+
+    /// JP random priorities for ids `0..n` under `seed` (cached while the
+    /// seed is unchanged).
+    pub fn prio64(&mut self, n: usize, seed: u64) -> &[u64] {
+        if self.prio64_seed != Some(seed) {
+            self.prio64.clear();
+            self.prio64_seed = Some(seed);
+        }
+        let cur = self.prio64.len();
+        if cur < n {
+            self.prio64.extend((cur as u64..n as u64).map(|v| gid_rand(seed, v)));
+        }
+        &self.prio64[..n]
+    }
+}
+
+impl Default for KernelScratch {
+    fn default() -> Self {
+        Self::new(1)
+    }
+}
+
 /// Color the masked vertices of `view` in place with the chosen kernel.
 /// Unmasked colors are respected as constraints and never modified.
 /// Returns the number of speculative rounds the kernel ran (1 for the
 /// single-pass serial greedy).
 pub fn color_local(kernel: LocalKernel, view: &LocalView, colors: &mut [Color], seed: u64) -> usize {
+    color_local_with(kernel, view, colors, seed, &mut KernelScratch::new(1))
+}
+
+/// [`color_local`] with caller-owned scratch (thread knob + cached
+/// priorities) — the distributed driver's per-rank entry point.  The
+/// parallel kernels are bit-identical to their serial forms for every
+/// thread count (Jacobi snapshot semantics; see `util::par`).
+pub fn color_local_with(
+    kernel: LocalKernel,
+    view: &LocalView,
+    colors: &mut [Color],
+    seed: u64,
+    scratch: &mut KernelScratch,
+) -> usize {
     match kernel {
-        LocalKernel::VbBit => vb_bit::color(view, colors),
-        LocalKernel::EbBit => eb_bit::color(view, colors),
+        LocalKernel::VbBit => vb_bit::color_with(view, colors, scratch),
+        LocalKernel::EbBit => eb_bit::color_with(view, colors, scratch),
         LocalKernel::Greedy => {
             greedy::color_masked(view, colors);
             1
         }
-        LocalKernel::JonesPlassmann => jp::color(view, colors, seed),
+        LocalKernel::JonesPlassmann => jp::color_with(view, colors, seed, scratch),
     }
 }
 

@@ -10,77 +10,107 @@
 //! Jacobi semantics as in [`super::vb_bit`]; the `partial` flag drops the
 //! distance-1 constraint (PD2, §3.6).
 
-use crate::coloring::local::LocalView;
+use crate::coloring::local::{KernelScratch, LocalView};
 use crate::coloring::Color;
 use crate::graph::VId;
 use crate::util::bitset::BitSet;
+use crate::util::par;
 
-/// Distance-2 (or partial distance-2) coloring of masked vertices.
-/// Returns #rounds to fixpoint.
+/// Distance-2 (or partial distance-2) coloring of masked vertices,
+/// serially.  Returns #rounds to fixpoint.
 pub fn color(view: &LocalView, colors: &mut [Color], partial: bool) -> usize {
+    color_with(view, colors, partial, &mut KernelScratch::new(1))
+}
+
+/// [`color`] over `threads` workers (0 = auto); bit-identical to serial.
+pub fn color_par(view: &LocalView, colors: &mut [Color], partial: bool, threads: usize) -> usize {
+    color_with(view, colors, partial, &mut KernelScratch::new(threads))
+}
+
+/// Full-control entry: thread knob and priority cache from `scratch`.
+/// Both passes are snapshot-pure maps over the worklist, so they chunk
+/// across workers with a thread-count-independent result.
+pub fn color_with(
+    view: &LocalView,
+    colors: &mut [Color],
+    partial: bool,
+    scratch: &mut KernelScratch,
+) -> usize {
     let g = view.graph;
     let n = g.n();
+    debug_assert_eq!(colors.len(), n);
+    debug_assert_eq!(view.mask.len(), n);
+
+    let threads = scratch.threads;
+    let prio = scratch.prio32(n);
     let mut work: Vec<VId> = (0..n as VId)
         .filter(|&v| view.mask[v as usize] && colors[v as usize] == 0)
         .collect();
-    let prio: Vec<u32> = (0..n as u32).map(crate::util::mix32).collect();
     let mut rounds = 0usize;
-    let mut forbidden = BitSet::with_capacity(256);
-    let mut staged: Vec<(VId, Color)> = Vec::new();
 
     while !work.is_empty() {
         rounds += 1;
-        staged.clear();
-        for &v in &work {
-            forbidden.clear();
-            for &u in g.neighbors(v) {
-                if !partial {
-                    let c = colors[u as usize];
-                    if c > 0 {
-                        forbidden.set(c as usize - 1);
-                    }
-                }
-                for &w in g.neighbors(u) {
-                    if w != v {
-                        let c = colors[w as usize];
-                        if c > 0 {
-                            forbidden.set(c as usize - 1);
+        let staged: Vec<(VId, Color)> = {
+            let snapshot: &[Color] = colors;
+            par::flat_map_chunks(threads, &work, |chunk| {
+                let mut forbidden = BitSet::with_capacity(256);
+                let mut out: Vec<(VId, Color)> = Vec::with_capacity(chunk.len());
+                for &v in chunk {
+                    forbidden.clear();
+                    for &u in g.neighbors(v) {
+                        if !partial {
+                            let c = snapshot[u as usize];
+                            if c > 0 {
+                                forbidden.set(c as usize - 1);
+                            }
+                        }
+                        for &w in g.neighbors(u) {
+                            if w != v {
+                                let c = snapshot[w as usize];
+                                if c > 0 {
+                                    forbidden.set(c as usize - 1);
+                                }
+                            }
                         }
                     }
+                    out.push((v, forbidden.first_zero() as Color + 1));
                 }
-            }
-            staged.push((v, forbidden.first_zero() as Color + 1));
-        }
+                out
+            })
+        };
         for &(v, c) in &staged {
             colors[v as usize] = c;
         }
         // net-based conflict detection: for each vertex u, all pairs of
         // its neighbors are distance-2 pairs; plus distance-1 pairs
         // unless partial.  Uncolor the higher-indexed masked loser.
-        let mut next: Vec<VId> = Vec::new();
-        for &v in &work {
-            let cv = colors[v as usize];
-            if cv == 0 {
-                continue;
-            }
-            let pv = (prio[v as usize], v);
-            let mut loses = false;
-            'outer: for &u in g.neighbors(v) {
-                if !partial && colors[u as usize] == cv && (prio[u as usize], u) < pv {
-                    loses = true;
-                    break;
-                }
-                for &w in g.neighbors(u) {
-                    if w != v && colors[w as usize] == cv && (prio[w as usize], w) < pv {
-                        loses = true;
-                        break 'outer;
+        let next: Vec<VId> = {
+            let snapshot: &[Color] = colors;
+            par::flat_map_chunks(threads, &work, |chunk| {
+                let mut out: Vec<VId> = Vec::new();
+                for &v in chunk {
+                    let cv = snapshot[v as usize];
+                    let pv = (prio[v as usize], v);
+                    let mut loses = false;
+                    'outer: for &u in g.neighbors(v) {
+                        if !partial && snapshot[u as usize] == cv && (prio[u as usize], u) < pv {
+                            loses = true;
+                            break;
+                        }
+                        for &w in g.neighbors(u) {
+                            if w != v && snapshot[w as usize] == cv && (prio[w as usize], w) < pv {
+                                loses = true;
+                                break 'outer;
+                            }
+                        }
+                    }
+                    if loses {
+                        out.push(v);
                     }
                 }
-            }
-            if loses {
-                next.push(v);
-            }
-        }
+                out
+            })
+        };
         for &v in &next {
             colors[v as usize] = 0;
         }

@@ -9,62 +9,93 @@
 //! uncolored.  The fixpoint is a proper coloring of the masked set
 //! relative to the pinned colors.
 
-use crate::coloring::local::LocalView;
+use crate::coloring::local::{KernelScratch, LocalView};
 use crate::coloring::Color;
 use crate::graph::VId;
 use crate::util::bitset::BitSet;
-use crate::util::mix32;
+use crate::util::par;
 
-/// Color the masked vertices of `view` to fixpoint. Returns #rounds.
+/// Color the masked vertices of `view` to fixpoint, serially.
+/// Returns #rounds.
 pub fn color(view: &LocalView, colors: &mut [Color]) -> usize {
+    color_with(view, colors, &mut KernelScratch::new(1))
+}
+
+/// [`color`] with the assignment and conflict passes run data-parallel
+/// over worklist chunks on `threads` workers (0 = auto).  Bit-identical
+/// to the serial kernel for every thread count.
+pub fn color_par(view: &LocalView, colors: &mut [Color], threads: usize) -> usize {
+    color_with(view, colors, &mut KernelScratch::new(threads))
+}
+
+/// Full-control entry: thread knob and priority cache from `scratch`.
+///
+/// Both passes are pure maps over a snapshot — assignment reads the
+/// previous round's colors and stages its writes; the conflict pass
+/// reads the post-assignment colors and stages the uncolor set — so
+/// chunking the worklist cannot change the result (the property the
+/// Deveci et al. GPU kernels rely on, asserted in
+/// `tests/parallel_kernels.rs`).
+pub fn color_with(view: &LocalView, colors: &mut [Color], scratch: &mut KernelScratch) -> usize {
     let g = view.graph;
     let n = g.n();
     debug_assert_eq!(colors.len(), n);
     debug_assert_eq!(view.mask.len(), n);
 
+    let threads = scratch.threads;
+    // hashed tie-break priorities, cached across calls (§Perf iteration 2+3)
+    let prio = scratch.prio32(n);
     // worklist of vertices still to color
     let mut work: Vec<VId> = (0..n as VId)
         .filter(|&v| view.mask[v as usize] && colors[v as usize] == 0)
         .collect();
-    // hashed tie-break priorities, precomputed once (§Perf iteration 2)
-    let prio: Vec<u32> = (0..n as u32).map(mix32).collect();
     let mut rounds = 0usize;
-    let mut forbidden = BitSet::with_capacity(64);
-    let mut next_colors: Vec<(VId, Color)> = Vec::new();
 
     while !work.is_empty() {
         rounds += 1;
-        // assignment pass: snapshot semantics (read `colors`, stage writes)
-        next_colors.clear();
-        for &v in &work {
-            forbidden.clear();
-            for &u in g.neighbors(v) {
-                let c = colors[u as usize];
-                if c > 0 {
-                    forbidden.set(c as usize - 1);
+        // assignment pass: snapshot semantics (read `colors`, stage
+        // writes), one forbidden bitset per worker
+        let staged: Vec<(VId, Color)> = {
+            let snapshot: &[Color] = colors;
+            par::flat_map_chunks(threads, &work, |chunk| {
+                let mut forbidden = BitSet::with_capacity(64);
+                let mut out: Vec<(VId, Color)> = Vec::with_capacity(chunk.len());
+                for &v in chunk {
+                    forbidden.clear();
+                    for &u in g.neighbors(v) {
+                        let c = snapshot[u as usize];
+                        if c > 0 {
+                            forbidden.set(c as usize - 1);
+                        }
+                    }
+                    out.push((v, forbidden.first_zero() as Color + 1));
                 }
-            }
-            next_colors.push((v, forbidden.first_zero() as Color + 1));
-        }
-        for &(v, c) in &next_colors {
+                out
+            })
+        };
+        for &(v, c) in &staged {
             colors[v as usize] = c;
         }
         // conflict pass: uncolor masked vertices losing the hashed-
         // priority tie-break.  Only freshly assigned vertices can
         // conflict (pinned colors are respected by assignment), so
         // scanning `work` suffices.
-        let mut next_work: Vec<VId> = Vec::new();
-        for &v in &work {
-            let c = colors[v as usize];
-            let pv = (prio[v as usize], v);
-            let loses = g
-                .neighbors(v)
-                .iter()
-                .any(|&u| colors[u as usize] == c && (prio[u as usize], u) < pv);
-            if loses {
-                next_work.push(v);
-            }
-        }
+        let next_work: Vec<VId> = {
+            let snapshot: &[Color] = colors;
+            par::flat_map_chunks(threads, &work, |chunk| {
+                chunk
+                    .iter()
+                    .copied()
+                    .filter(|&v| {
+                        let c = snapshot[v as usize];
+                        let pv = (prio[v as usize], v);
+                        g.neighbors(v)
+                            .iter()
+                            .any(|&u| snapshot[u as usize] == c && (prio[u as usize], u) < pv)
+                    })
+                    .collect()
+            })
+        };
         for &v in &next_work {
             colors[v as usize] = 0;
         }

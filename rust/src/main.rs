@@ -65,6 +65,7 @@ COLOR FLAGS:
   --ranks N           simulated MPI ranks / GPUs               [4]
   --backend B         native | pjrt                            [native]
   --partitioner P     block | edge | bfs | hash                [edge]
+  --threads T         on-node kernel threads per rank; 0=auto  [1]
   --seed S            RNG seed                                 [42]
   --artifacts DIR     artifact dir for --backend pjrt          [artifacts]
 ";
@@ -128,6 +129,7 @@ fn cmd_color(f: Flags) -> Result<(), String> {
     let g = load_graph(spec)?;
     let ranks = f.usize_or("ranks", 4)?;
     let seed = f.u64_or("seed", 42)?;
+    let threads = f.usize_or("threads", 1)?;
     let algo = f.get_or("algo", "d1");
     let backend_name = f.get_or("backend", "native");
     let pk: PartitionKind = f.get_or("partitioner", "edge").parse()?;
@@ -158,6 +160,7 @@ fn cmd_color(f: Flags) -> Result<(), String> {
                 problem,
                 recolor_degrees: rd,
                 two_ghost_layers: two,
+                threads,
                 seed,
                 ..Default::default()
             };

@@ -1,0 +1,83 @@
+//! Offline stand-in for the PJRT runtime (`pjrt` feature disabled).
+//!
+//! Mirrors the public surface of `pjrt.rs` so every caller compiles
+//! unchanged: `from_dir`/`load` always return [`PjrtUnavailable`], which
+//! the CLI reports and the tests/benches treat exactly like a missing
+//! `artifacts/` directory (they skip the PJRT paths).  If a backend
+//! value were ever constructed it would serve the native VB_BIT kernel,
+//! keeping the [`LocalBackend`] contract honest.
+
+use std::path::Path;
+
+use crate::coloring::distributed::{LocalBackend, NativeBackend};
+use crate::coloring::local::{LocalKernel, LocalView};
+use crate::coloring::{Color, Problem};
+
+/// Error returned by every constructor of this stub.
+#[derive(Clone, Copy, Debug)]
+pub struct PjrtUnavailable;
+
+impl std::fmt::Display for PjrtUnavailable {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "PJRT backend not compiled in (build with `--features pjrt` \
+             and the vendored xla crate)"
+        )
+    }
+}
+
+impl std::error::Error for PjrtUnavailable {}
+
+/// Stub of the lazily-compiling PJRT executor.
+pub struct PjrtRuntime {
+    _priv: (),
+}
+
+impl PjrtRuntime {
+    /// Always fails: the XLA client is not compiled into this build.
+    pub fn load(_dir: impl AsRef<Path>) -> Result<Self, PjrtUnavailable> {
+        Err(PjrtUnavailable)
+    }
+}
+
+/// Stub of the PJRT [`LocalBackend`].  `from_dir` always fails; the
+/// `Default` escape hatch yields a backend that serves the native
+/// VB_BIT kernel (used nowhere in-tree, but keeps the stub honest).
+pub struct PjrtBackend {
+    fallback: NativeBackend,
+}
+
+impl PjrtBackend {
+    /// Always fails: the XLA client is not compiled into this build.
+    pub fn from_dir(_dir: impl AsRef<Path>) -> Result<Self, PjrtUnavailable> {
+        Err(PjrtUnavailable)
+    }
+
+    /// (kernel executions, native fallbacks) — all zero in the stub.
+    pub fn stats(&self) -> (u64, u64) {
+        (0, 0)
+    }
+}
+
+impl LocalBackend for PjrtBackend {
+    fn color(
+        &self,
+        problem: Problem,
+        view: &LocalView,
+        colors: &mut [Color],
+        seed: u64,
+    ) -> usize {
+        self.fallback.color(problem, view, colors, seed)
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt-stub"
+    }
+}
+
+impl Default for PjrtBackend {
+    fn default() -> Self {
+        PjrtBackend { fallback: NativeBackend(LocalKernel::VbBit) }
+    }
+}

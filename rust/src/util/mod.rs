@@ -1,6 +1,8 @@
-//! Small shared utilities: deterministic hashing, PRNG, bitsets, timers.
+//! Small shared utilities: deterministic hashing, PRNG, bitsets, timers,
+//! and the scoped-thread parallel execution layer.
 
 pub mod bitset;
+pub mod par;
 pub mod rng;
 pub mod timer;
 

@@ -1,0 +1,199 @@
+//! Shared-memory parallel execution layer for the on-node kernels.
+//!
+//! The paper's on-node coloring is Deveci et al.'s bit-based kernels
+//! running data-parallel over the worklist; this module is the Rust twin
+//! of that execution model: a scoped-thread chunked map with no external
+//! dependencies (`std::thread::scope` is already the idiom of the rank
+//! runtime in `distributed/comm.rs`).
+//!
+//! Determinism contract: [`map_chunks`] splits the input into contiguous
+//! in-order chunks and returns the per-chunk results **in chunk order**,
+//! so any algorithm whose chunk function is a pure map over a snapshot
+//! (the Jacobi formulation of VB_BIT/EB_BIT/NB_BIT) produces output that
+//! is bit-identical for every thread count — asserted by
+//! `rust/tests/parallel_kernels.rs`.
+
+use std::cell::Cell;
+use std::ops::Range;
+
+use crate::util::timer::thread_cpu_now;
+
+/// Below this many items per worker, fan-out costs more than it saves
+/// (thread spawn is ~10µs; a worklist item is ~100ns): run serially.
+/// Chunk boundaries never affect results, so this is safe to tune.
+const MIN_ITEMS_PER_THREAD: usize = 512;
+
+thread_local! {
+    /// CPU nanoseconds burned by this thread's *workers* in `map_chunks`
+    /// fan-outs (monotone counter).  `SplitTimer::comp` measures the
+    /// calling thread's CPU clock, which cannot see worker threads;
+    /// crediting worker CPU here keeps per-rank comp accounting honest
+    /// when the kernels run with threads > 1.
+    static WORKER_CPU_NS: Cell<u64> = const { Cell::new(0) };
+}
+
+/// Monotone per-thread counter of worker CPU time (ns) spent on this
+/// thread's behalf.  Read before/after a computation and add the delta
+/// to the calling thread's own CPU clock for total attributed comp.
+pub fn worker_cpu_ns() -> u64 {
+    WORKER_CPU_NS.with(|c| c.get())
+}
+
+fn credit_worker_cpu(ns: u64) {
+    WORKER_CPU_NS.with(|c| c.set(c.get() + ns));
+}
+
+/// Resolve a thread-count knob: `0` means one worker per available core.
+pub fn resolve_threads(requested: usize) -> usize {
+    if requested == 0 {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    } else {
+        requested
+    }
+}
+
+/// Workers actually worth launching for `len` items.
+fn effective_threads(threads: usize, len: usize) -> usize {
+    resolve_threads(threads).min(len / MIN_ITEMS_PER_THREAD).max(1)
+}
+
+/// Split `0..len` into `k` contiguous, balanced, in-order ranges.
+pub fn chunk_ranges(len: usize, k: usize) -> Vec<Range<usize>> {
+    let k = k.max(1).min(len.max(1));
+    let base = len / k;
+    let rem = len % k;
+    let mut out = Vec::with_capacity(k);
+    let mut start = 0usize;
+    for i in 0..k {
+        let sz = base + usize::from(i < rem);
+        out.push(start..start + sz);
+        start += sz;
+    }
+    debug_assert_eq!(start, len);
+    out
+}
+
+/// Apply `f` to contiguous chunks of `items` on up to `threads` scoped
+/// workers; results are returned in chunk (= input) order.  `threads`
+/// of 0 means auto; 1 (or a small input) degenerates to a single
+/// in-thread call with no spawning.
+pub fn map_chunks<T: Sync, R: Send>(
+    threads: usize,
+    items: &[T],
+    f: impl Fn(&[T]) -> R + Sync,
+) -> Vec<R> {
+    let k = effective_threads(threads, items.len());
+    if k <= 1 {
+        return vec![f(items)];
+    }
+    let ranges = chunk_ranges(items.len(), k);
+    let f = &f;
+    std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(ranges.len() - 1);
+        for r in &ranges[1..] {
+            let chunk = &items[r.clone()];
+            // each worker reports its own CPU time so the caller can
+            // attribute it (the caller's CPU clock cannot see workers)
+            handles.push(scope.spawn(move || {
+                let t0 = thread_cpu_now();
+                let out = f(chunk);
+                (out, thread_cpu_now().saturating_sub(t0))
+            }));
+        }
+        // chunk 0 runs on the calling thread while the workers spin
+        let mut out = Vec::with_capacity(ranges.len());
+        out.push(f(&items[ranges[0].clone()]));
+        let mut foreign_ns = 0u64;
+        for h in handles {
+            let (r, cpu) = h.join().expect("parallel worker panicked");
+            foreign_ns += cpu.as_nanos() as u64;
+            out.push(r);
+        }
+        credit_worker_cpu(foreign_ns);
+        out
+    })
+}
+
+/// [`map_chunks`] flattened: concatenate the per-chunk `Vec`s in chunk
+/// order.  The common shape of the kernels' staged-write passes.
+pub fn flat_map_chunks<T: Sync, R: Send>(
+    threads: usize,
+    items: &[T],
+    f: impl Fn(&[T]) -> Vec<R> + Sync,
+) -> Vec<R> {
+    let parts = map_chunks(threads, items, f);
+    match <[_; 1]>::try_from(parts) {
+        Ok([only]) => only, // serial path: no re-copy
+        Err(parts) => {
+            let mut out = Vec::with_capacity(parts.iter().map(Vec::len).sum());
+            for mut p in parts {
+                out.append(&mut p);
+            }
+            out
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunk_ranges_cover_exactly() {
+        for len in [0usize, 1, 7, 64, 1000] {
+            for k in [1usize, 2, 3, 8, 17] {
+                let rs = chunk_ranges(len, k);
+                let mut expect = 0usize;
+                for r in &rs {
+                    assert_eq!(r.start, expect);
+                    expect = r.end;
+                }
+                assert_eq!(expect, len);
+                // balanced: sizes differ by at most one
+                let sizes: Vec<usize> = rs.iter().map(|r| r.len()).collect();
+                let (mn, mx) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+                assert!(mx - mn <= 1, "len={len} k={k}: {sizes:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn map_chunks_matches_serial_for_any_thread_count() {
+        let items: Vec<u64> = (0..10_000).collect();
+        let serial: u64 = items.iter().map(|x| x * x).sum();
+        for threads in [1usize, 2, 3, 8, 0] {
+            let parts = map_chunks(threads, &items, |chunk| {
+                chunk.iter().map(|x| x * x).sum::<u64>()
+            });
+            assert_eq!(parts.iter().sum::<u64>(), serial, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn flat_map_preserves_input_order() {
+        let items: Vec<u32> = (0..5_000).collect();
+        for threads in [1usize, 2, 8] {
+            let out = flat_map_chunks(threads, &items, |chunk| {
+                chunk.iter().map(|&x| x * 2).collect::<Vec<u32>>()
+            });
+            let expect: Vec<u32> = items.iter().map(|&x| x * 2).collect();
+            assert_eq!(out, expect, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn empty_and_tiny_inputs_are_fine() {
+        let none: Vec<u32> = vec![];
+        let out = map_chunks(8, &none, |c| c.len());
+        assert_eq!(out, vec![0]);
+        let one = [42u32];
+        let out = flat_map_chunks(8, &one, |c| c.to_vec());
+        assert_eq!(out, vec![42]);
+    }
+
+    #[test]
+    fn resolve_auto_is_positive() {
+        assert!(resolve_threads(0) >= 1);
+        assert_eq!(resolve_threads(5), 5);
+    }
+}

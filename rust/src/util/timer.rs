@@ -11,13 +11,45 @@
 
 use std::time::Duration;
 
+// The repo carries no external crates, so the thread-CPU clock is read
+// through a direct `clock_gettime` declaration instead of the `libc`
+// crate (libc itself is always linked via std on our targets).  The
+// i64/i64 timespec layout only matches the kernel ABI on 64-bit Linux
+// (32-bit targets use 32-bit time_t/long), so the declaration is gated
+// on pointer width and everything else takes the wall-clock fallback.
+#[cfg(all(target_os = "linux", target_pointer_width = "64"))]
+mod sys {
+    #[repr(C)]
+    pub struct Timespec {
+        pub tv_sec: i64,
+        pub tv_nsec: i64,
+    }
+    /// Linux's CLOCK_THREAD_CPUTIME_ID (uapi/linux/time.h).
+    pub const CLOCK_THREAD_CPUTIME_ID: i32 = 3;
+    extern "C" {
+        pub fn clock_gettime(clockid: i32, tp: *mut Timespec) -> i32;
+    }
+}
+
 /// Current thread CPU time.
+#[cfg(all(target_os = "linux", target_pointer_width = "64"))]
 pub fn thread_cpu_now() -> Duration {
-    let mut ts = libc::timespec { tv_sec: 0, tv_nsec: 0 };
+    let mut ts = sys::Timespec { tv_sec: 0, tv_nsec: 0 };
     // SAFETY: ts is a valid out-pointer; the clock id is a constant.
-    let rc = unsafe { libc::clock_gettime(libc::CLOCK_THREAD_CPUTIME_ID, &mut ts) };
+    let rc = unsafe { sys::clock_gettime(sys::CLOCK_THREAD_CPUTIME_ID, &mut ts) };
     debug_assert_eq!(rc, 0);
     Duration::new(ts.tv_sec as u64, ts.tv_nsec as u32)
+}
+
+/// Fallback for non-Linux / 32-bit targets: monotonic wall time
+/// (oversubscribed rank threads will overcount comp, but the crate
+/// still builds and runs).
+#[cfg(not(all(target_os = "linux", target_pointer_width = "64")))]
+pub fn thread_cpu_now() -> Duration {
+    use std::sync::OnceLock;
+    use std::time::Instant;
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    EPOCH.get_or_init(Instant::now).elapsed()
 }
 
 /// Accumulates computation (thread CPU) and communication (wall) time.
@@ -32,11 +64,15 @@ impl SplitTimer {
         Self::default()
     }
 
-    /// Time `f`, attributing its *thread CPU time* to computation.
+    /// Time `f`, attributing its *thread CPU time* to computation —
+    /// including CPU burned by `util::par` worker threads spawned on
+    /// this thread's behalf, which the thread clock alone cannot see.
     pub fn comp<T>(&mut self, f: impl FnOnce() -> T) -> T {
         let t = thread_cpu_now();
+        let w0 = crate::util::par::worker_cpu_ns();
         let out = f();
-        self.comp += thread_cpu_now().saturating_sub(t);
+        let workers = crate::util::par::worker_cpu_ns().saturating_sub(w0);
+        self.comp += thread_cpu_now().saturating_sub(t) + Duration::from_nanos(workers);
         out
     }
 

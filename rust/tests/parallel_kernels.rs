@@ -1,0 +1,204 @@
+//! Property tests for the shared-memory parallel execution layer: every
+//! parallel kernel must produce colorings **bit-identical** to its
+//! serial form at any thread count (the Jacobi snapshot semantics make
+//! chunking invisible), and the distributed driver must be
+//! thread-count-invariant end to end with the boundary-first ordering.
+
+use dist_color::coloring::distributed::ghost::LocalGraph;
+use dist_color::coloring::distributed::{color_distributed, DistConfig, NativeBackend};
+use dist_color::coloring::local::{eb_bit, jp, nb_bit, vb_bit, KernelScratch, LocalView};
+use dist_color::coloring::{validate, Color, Problem};
+use dist_color::distributed::{run_ranks, CostModel};
+use dist_color::graph::generators::{ba, erdos_renyi::gnm, mesh::hex_mesh};
+use dist_color::graph::Graph;
+use dist_color::partition::{self, PartitionKind};
+
+const THREAD_COUNTS: [usize; 3] = [1, 2, 8];
+
+fn fixture_graphs() -> Vec<(String, Graph)> {
+    let mut gs: Vec<(String, Graph)> = vec![("hex_mesh 8^3".into(), hex_mesh(8, 8, 8))];
+    for seed in [1u64, 7] {
+        gs.push((format!("gnm seed {seed}"), gnm(3_000, 15_000, seed)));
+        gs.push((
+            format!("pref_attach seed {seed}"),
+            ba::preferential_attachment(2_500, 6, seed),
+        ));
+    }
+    gs
+}
+
+fn color_serial(
+    g: &Graph,
+    f: impl Fn(&LocalView, &mut [Color], &mut KernelScratch) -> usize,
+) -> Vec<Color> {
+    let mask = vec![true; g.n()];
+    let mut colors = vec![0 as Color; g.n()];
+    f(
+        &LocalView { graph: g, mask: &mask },
+        &mut colors,
+        &mut KernelScratch::new(1),
+    );
+    colors
+}
+
+#[test]
+fn vb_bit_parallel_is_bit_identical_to_serial() {
+    for (name, g) in fixture_graphs() {
+        let serial = color_serial(&g, |v, c, s| vb_bit::color_with(v, c, s));
+        assert!(validate::is_proper_d1(&g, &serial), "{name}");
+        let mask = vec![true; g.n()];
+        for threads in THREAD_COUNTS {
+            let mut colors = vec![0 as Color; g.n()];
+            vb_bit::color_par(&LocalView { graph: &g, mask: &mask }, &mut colors, threads);
+            assert_eq!(colors, serial, "{name} at {threads} threads");
+        }
+    }
+}
+
+#[test]
+fn eb_bit_parallel_is_bit_identical_to_serial() {
+    for (name, g) in fixture_graphs() {
+        let serial = color_serial(&g, |v, c, s| eb_bit::color_with(v, c, s));
+        assert!(validate::is_proper_d1(&g, &serial), "{name}");
+        let mask = vec![true; g.n()];
+        for threads in THREAD_COUNTS {
+            let mut colors = vec![0 as Color; g.n()];
+            eb_bit::color_par(&LocalView { graph: &g, mask: &mask }, &mut colors, threads);
+            assert_eq!(colors, serial, "{name} at {threads} threads");
+        }
+    }
+}
+
+#[test]
+fn nb_bit_parallel_is_bit_identical_to_serial() {
+    // D2 is ~degree^2 work per vertex: smaller fixtures
+    let graphs = vec![
+        ("hex_mesh 6^3".to_string(), hex_mesh(6, 6, 6)),
+        ("gnm".to_string(), gnm(800, 3_200, 5)),
+        ("pref_attach".to_string(), ba::preferential_attachment(700, 4, 9)),
+    ];
+    for partial in [false, true] {
+        for (name, g) in &graphs {
+            let serial = color_serial(g, |v, c, s| nb_bit::color_with(v, c, partial, s));
+            let mask = vec![true; g.n()];
+            for threads in THREAD_COUNTS {
+                let mut colors = vec![0 as Color; g.n()];
+                nb_bit::color_par(
+                    &LocalView { graph: g, mask: &mask },
+                    &mut colors,
+                    partial,
+                    threads,
+                );
+                assert_eq!(colors, serial, "{name} partial={partial} threads={threads}");
+            }
+        }
+    }
+}
+
+#[test]
+fn jp_parallel_winner_pass_matches_serial() {
+    for (name, g) in fixture_graphs() {
+        let mask = vec![true; g.n()];
+        let mut serial = vec![0 as Color; g.n()];
+        jp::color(&LocalView { graph: &g, mask: &mask }, &mut serial, 42);
+        for threads in [2usize, 8] {
+            let mut colors = vec![0 as Color; g.n()];
+            jp::color_with(
+                &LocalView { graph: &g, mask: &mask },
+                &mut colors,
+                42,
+                &mut KernelScratch::new(threads),
+            );
+            assert_eq!(colors, serial, "{name} at {threads} threads");
+        }
+    }
+}
+
+#[test]
+fn masked_subsets_stay_identical_across_thread_counts() {
+    // pinned ghosts + partial masks exercise the constraint path
+    let g = gnm(2_000, 9_000, 11);
+    let mut mask = vec![false; g.n()];
+    let mut base = vec![0 as Color; g.n()];
+    for v in 0..g.n() {
+        if v % 3 == 0 {
+            mask[v] = true; // to color
+        } else if v % 3 == 1 {
+            base[v] = (v % 7 + 1) as Color; // pinned constraint
+        }
+    }
+    let view = LocalView { graph: &g, mask: &mask };
+    let mut serial = base.clone();
+    vb_bit::color(&view, &mut serial);
+    for threads in THREAD_COUNTS {
+        let mut colors = base.clone();
+        vb_bit::color_par(&view, &mut colors, threads);
+        assert_eq!(colors, serial, "threads={threads}");
+    }
+}
+
+#[test]
+fn distributed_d1_is_proper_and_thread_count_invariant() {
+    // end-to-end D1 with the boundary-first ordering: proper for every
+    // partitioner, and the full distributed result (colors + stats) is
+    // identical whatever the on-node thread count.
+    let g = gnm(1_500, 9_000, 3);
+    for pk in [PartitionKind::EdgeBalanced, PartitionKind::Hash] {
+        let part = partition::partition(&g, 6, pk, 13);
+        let mut reference: Option<Vec<Color>> = None;
+        for threads in THREAD_COUNTS {
+            let cfg = DistConfig { problem: Problem::D1, threads, seed: 5, ..Default::default() };
+            let r =
+                color_distributed(&g, &part, cfg, CostModel::zero(), &NativeBackend(cfg.kernel));
+            assert!(validate::is_proper_d1(&g, &r.colors), "{pk:?} threads={threads}");
+            match &reference {
+                None => reference = Some(r.colors),
+                Some(expect) => {
+                    assert_eq!(&r.colors, expect, "{pk:?} threads={threads} diverged")
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn distributed_d2_thread_count_invariant() {
+    let g = hex_mesh(6, 6, 4);
+    let part = partition::partition(&g, 4, PartitionKind::Block, 1);
+    let mut reference: Option<Vec<Color>> = None;
+    for threads in THREAD_COUNTS {
+        let cfg = DistConfig { problem: Problem::D2, threads, seed: 9, ..Default::default() };
+        let r = color_distributed(&g, &part, cfg, CostModel::zero(), &NativeBackend(cfg.kernel));
+        assert!(validate::is_proper_d2(&g, &r.colors), "threads={threads}");
+        match &reference {
+            None => reference = Some(r.colors),
+            Some(expect) => assert_eq!(&r.colors, expect, "threads={threads}"),
+        }
+    }
+}
+
+#[test]
+fn boundary_first_overlap_preserves_exchange_consistency() {
+    // after LocalGraph::build + the driver run, every rank's view of the
+    // final coloring must agree with the owners' (exercises the split
+    // send/recv exchange under the boundary-first id layout)
+    let g = hex_mesh(6, 6, 8);
+    for two in [false, true] {
+        let part = partition::partition(&g, 6, PartitionKind::EdgeBalanced, 3);
+        let lgs = run_ranks(6, CostModel::zero(), |c| LocalGraph::build(c, &g, &part, two));
+        for lg in &lgs {
+            // boundary prefix invariants
+            assert_eq!(lg.boundary_d1.len(), lg.n_boundary1, "two={two}");
+            assert_eq!(lg.boundary_d2.len(), lg.n_boundary2, "two={two}");
+            assert!(lg.boundary_d1.iter().all(|&v| (v as usize) < lg.n_boundary1));
+        }
+        let cfg = DistConfig {
+            problem: Problem::D1,
+            two_ghost_layers: two,
+            threads: 2,
+            ..Default::default()
+        };
+        let r = color_distributed(&g, &part, cfg, CostModel::zero(), &NativeBackend(cfg.kernel));
+        assert!(validate::is_proper_d1(&g, &r.colors), "two={two}");
+    }
+}

@@ -1,0 +1,45 @@
+#!/usr/bin/env bash
+# Repo verification: build, tests, lints, and the PR-1 perf smoke.
+#
+#   scripts/verify.sh          # build + test + lint + perf smoke
+#   scripts/verify.sh --quick  # build + test only
+#
+# clippy/rustfmt steps are skipped (with a notice) when the components
+# are not installed; the build and test steps are always required.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+quick=0
+[ "${1:-}" = "--quick" ] && quick=1
+
+echo "== cargo build --release =="
+cargo build --release
+
+echo "== cargo test -q =="
+cargo test -q
+
+if [ "$quick" = "1" ]; then
+  echo "verify: OK (quick)"
+  exit 0
+fi
+
+if cargo clippy --version >/dev/null 2>&1; then
+  echo "== cargo clippy (-D warnings) =="
+  cargo clippy --all-targets -- -D warnings
+else
+  echo "== clippy not installed; skipping =="
+fi
+
+if cargo fmt --version >/dev/null 2>&1; then
+  echo "== cargo fmt --check =="
+  cargo fmt --all -- --check || {
+    echo "fmt check failed (non-fatal: repo predates rustfmt enforcement)"
+  }
+else
+  echo "== rustfmt not installed; skipping =="
+fi
+
+echo "== micro_kernels PR-1 smoke (writes BENCH_pr1.json) =="
+BENCH_PR1=1 BENCH_REPS="${BENCH_REPS:-3}" cargo bench --bench micro_kernels
+
+echo "verify: OK"
