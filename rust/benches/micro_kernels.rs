@@ -7,15 +7,21 @@
 //! BENCH_REPS (default 7) runs after one warmup.
 //!
 //! Set `BENCH_PR1=1` (as `scripts/verify.sh` does) to run only the
-//! serial-vs-parallel smoke suite and write `BENCH_pr1.json`; the JSON
-//! schema is documented in `rust/benches/README.md`.
+//! serial-vs-parallel smoke suite and write `BENCH_pr1.json`; set
+//! `BENCH_PR2=1` to run the dense-vs-sparse exchange and
+//! serial-vs-pooled detection smoke and write `BENCH_pr2.json`.  Both
+//! JSON schemas are documented in `rust/benches/README.md`.
 
 use std::time::Instant;
 
 use dist_color::coloring::distributed::ghost::LocalGraph;
-use dist_color::coloring::local::{eb_bit, greedy, jp, nb_bit, vb_bit, LocalView};
+use dist_color::coloring::distributed::{
+    detect_conflicts, exchange_delta, exchange_full, DistConfig, ExchangeScratch,
+};
+use dist_color::coloring::local::{eb_bit, greedy, jp, nb_bit, vb_bit, KernelScratch, LocalView};
 use dist_color::coloring::Color;
-use dist_color::distributed::{run_ranks, CostModel};
+use dist_color::distributed::comm::encode_u32s;
+use dist_color::distributed::{run_ranks, CommStats, CostModel};
 use dist_color::graph::generators::{ba, erdos_renyi::gnm, mesh};
 use dist_color::graph::Graph;
 use dist_color::partition;
@@ -139,9 +145,185 @@ fn pr1_smoke() {
     assert_all_identical(&rows);
 }
 
+/// Per-rank message/byte deltas of one exchange experiment.
+struct ExchangeCost {
+    max_messages_per_round: f64,
+    max_bytes_per_round: f64,
+}
+
+/// Run `delta_rounds` boundary-delta exchanges over a 16-rank slab
+/// ("1D chain") mesh partition, either through the sparse neighbor
+/// collective (`exchange_delta`) or through the dense `alltoallv` the
+/// pre-PR2 hot path used, and report the per-rank per-round maxima.
+fn measure_exchange(
+    g: &Graph,
+    part: &partition::Partition,
+    ranks: usize,
+    delta_rounds: usize,
+    dense: bool,
+) -> ExchangeCost {
+    let per_rank: Vec<CommStats> = run_ranks(ranks, CostModel::zero(), |c| {
+        let lg = LocalGraph::build(c, g, part, false);
+        let mut colors: Vec<Color> = vec![0; lg.n_local + lg.n_ghost];
+        for v in 0..lg.n_local {
+            colors[v] = (v % 7 + 1) as Color;
+        }
+        exchange_full(c, &lg, &mut colors);
+        let recolored: Vec<u32> = (0..lg.n_boundary1 as u32).collect();
+        let mut xscratch = ExchangeScratch::new();
+        let before = c.stats();
+        for round in 0..delta_rounds {
+            if dense {
+                // the pre-PR2 shape: one message to every rank, empty
+                // payloads included
+                let p = c.nranks() as usize;
+                let me = c.rank() as usize;
+                let mut bufs: Vec<Vec<u8>> = Vec::with_capacity(p);
+                for r in 0..p {
+                    let mut payload: Vec<u32> = Vec::new();
+                    if r != me {
+                        let sp = &lg.subs_pos[r];
+                        let mut si = 0usize;
+                        for &v in &recolored {
+                            while si < sp.len() && sp[si].0 < v {
+                                si += 1;
+                            }
+                            while si < sp.len() && sp[si].0 == v {
+                                payload.push(sp[si].1);
+                                payload.push(colors[v as usize]);
+                                si += 1;
+                            }
+                        }
+                    }
+                    bufs.push(encode_u32s(&payload));
+                }
+                let got = c.alltoallv(60_000 + round as u64, bufs);
+                for (r, buf) in got.into_iter().enumerate() {
+                    for pair in buf.chunks_exact(8) {
+                        let pos = u32::from_le_bytes(pair[..4].try_into().unwrap());
+                        let col = u32::from_le_bytes(pair[4..].try_into().unwrap());
+                        let gl = lg.ghost_from[r][pos as usize];
+                        colors[gl as usize] = col;
+                    }
+                }
+            } else {
+                exchange_delta(c, &lg, &mut colors, &recolored, round + 1, &mut xscratch);
+            }
+        }
+        let after = c.stats();
+        CommStats {
+            messages: after.messages - before.messages,
+            bytes_sent: after.bytes_sent - before.bytes_sent,
+            collectives: after.collectives - before.collectives,
+            modeled_ns: after.modeled_ns - before.modeled_ns,
+            wall_ns: after.wall_ns - before.wall_ns,
+        }
+    });
+    let max_msgs = per_rank.iter().map(|s| s.messages).max().unwrap_or(0);
+    let max_bytes = per_rank.iter().map(|s| s.bytes_sent).max().unwrap_or(0);
+    ExchangeCost {
+        max_messages_per_round: max_msgs as f64 / delta_rounds as f64,
+        max_bytes_per_round: max_bytes as f64 / delta_rounds as f64,
+    }
+}
+
+/// Dense-vs-sparse exchange volume + serial-vs-pooled conflict
+/// detection, written to `BENCH_pr2.json`.
+fn pr2_smoke() {
+    let reps: usize =
+        std::env::var("BENCH_REPS").ok().and_then(|s| s.parse().ok()).unwrap_or(5);
+
+    // ---- exchange volume on a 16-slab chain mesh -----------------------
+    let ranks = 16usize;
+    let delta_rounds = 8usize;
+    let (mx, my, mz) = (8usize, 8usize, 2 * ranks);
+    eprintln!("pr2 smoke: hex_mesh({mx}, {my}, {mz}) over {ranks} slab ranks ...");
+    let g = mesh::hex_mesh(mx, my, mz);
+    let part = partition::block(&g, ranks);
+    let dense = measure_exchange(&g, &part, ranks, delta_rounds, true);
+    let sparse = measure_exchange(&g, &part, ranks, delta_rounds, false);
+    let msg_reduction = dense.max_messages_per_round / sparse.max_messages_per_round.max(1.0);
+    println!(
+        "exchange  dense : {:>6.1} msgs/rank/round {:>10.0} bytes/rank/round",
+        dense.max_messages_per_round, dense.max_bytes_per_round
+    );
+    println!(
+        "exchange  sparse: {:>6.1} msgs/rank/round {:>10.0} bytes/rank/round ({msg_reduction:.1}x fewer msgs)",
+        sparse.max_messages_per_round, sparse.max_bytes_per_round
+    );
+
+    // ---- conflict detection: serial vs pooled --------------------------
+    let (dn, dm, dseed) = (100_000usize, 800_000usize, 4u64);
+    eprintln!("pr2 smoke: gnm({dn}, {dm}) hash-partitioned over 8 ranks ...");
+    let dg = gnm(dn, dm, dseed);
+    let dpart = partition::hash(&dg, 8, 1);
+    let mut lgs = run_ranks(8, CostModel::zero(), |c| LocalGraph::build(c, &dg, &dpart, false));
+    let lg = lgs.remove(0);
+    // adversarial colors: plenty of same-color cross-rank pairs, so the
+    // scan both walks all of E_g and exercises the loser pushes
+    let colors: Vec<Color> = lg.gids.iter().map(|&gid| 1 + (gid % 4) as Color).collect();
+    let cfg = DistConfig::default();
+    let detect_threads = 8usize;
+    let serial_scratch = KernelScratch::new(1);
+    let pooled_scratch = KernelScratch::new(detect_threads);
+    let (mut sll, mut sgl) = (Vec::new(), Vec::new());
+    let mut serial_count = 0u64;
+    let serial_ms = median_ms(reps, || {
+        sll.clear();
+        sgl.clear();
+        serial_count =
+            detect_conflicts(&lg, &colors, cfg, &serial_scratch.executor(), &mut sll, &mut sgl);
+    });
+    let (mut pll, mut pgl) = (Vec::new(), Vec::new());
+    let mut pooled_count = 0u64;
+    let pooled_ms = median_ms(reps, || {
+        pll.clear();
+        pgl.clear();
+        pooled_count =
+            detect_conflicts(&lg, &colors, cfg, &pooled_scratch.executor(), &mut pll, &mut pgl);
+    });
+    let identical = sll == pll && sgl == pgl && serial_count == pooled_count;
+    let speedup = serial_ms / pooled_ms;
+    println!(
+        "detect_d1 serial: {serial_ms:>8.2} ms   pooled({detect_threads}t): {pooled_ms:>8.2} ms \
+         ({speedup:.2}x) identical={identical}"
+    );
+
+    let json = format!(
+        "{{\n  \"bench\": \"micro_kernels_pr2\",\n  \"schema\": 1,\n  \"reps\": {reps},\n  \
+         \"host_cores\": {},\n  \"exchange\": {{\n    \
+         \"graph\": {{\"kind\": \"hex_mesh\", \"nx\": {mx}, \"ny\": {my}, \"nz\": {mz}}},\n    \
+         \"ranks\": {ranks},\n    \"delta_rounds\": {delta_rounds},\n    \
+         \"dense\": {{\"max_messages_per_rank_round\": {:.1}, \"max_bytes_per_rank_round\": {:.0}}},\n    \
+         \"sparse\": {{\"max_messages_per_rank_round\": {:.1}, \"max_bytes_per_rank_round\": {:.0}}},\n    \
+         \"message_reduction\": {msg_reduction:.2}\n  }},\n  \"detect\": {{\n    \
+         \"graph\": {{\"kind\": \"gnm\", \"n\": {dn}, \"m\": {dm}, \"seed\": {dseed}}},\n    \
+         \"ranks\": 8,\n    \"threads\": {detect_threads},\n    \
+         \"serial_ms\": {serial_ms:.3},\n    \"pooled_ms\": {pooled_ms:.3},\n    \
+         \"speedup\": {speedup:.3},\n    \"identical_to_serial\": {identical}\n  }}\n}}\n",
+        std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1),
+        dense.max_messages_per_round,
+        dense.max_bytes_per_round,
+        sparse.max_messages_per_round,
+        sparse.max_bytes_per_round,
+    );
+    std::fs::write("BENCH_pr2.json", &json).expect("writing BENCH_pr2.json");
+    println!("-> BENCH_pr2.json");
+    // asserted after the JSON is on disk, so a regression is recorded
+    assert!(identical, "pooled detection diverged from serial");
+    assert!(
+        sparse.max_messages_per_round < dense.max_messages_per_round,
+        "sparse exchange did not reduce message count"
+    );
+}
+
 fn main() {
     if std::env::var("BENCH_PR1").is_ok_and(|v| v == "1") {
         pr1_smoke();
+        return;
+    }
+    if std::env::var("BENCH_PR2").is_ok_and(|v| v == "1") {
+        pr2_smoke();
         return;
     }
     let reps: usize =

@@ -13,15 +13,24 @@
 //! Construction also establishes the color-update subscriptions: every
 //! rank registers its ghost GIDs with their owners, so later exchanges
 //! send only (position, color) pairs along these subscription lists.
+//!
+//! Registration and the owner-fetch rounds are *sparse* collectives
+//! ([`Comm::sparse_alltoallv`]): each rank talks only to the owners of
+//! its ghosts (and, symmetrically, to its subscribers), so construction
+//! traffic scales with the partition's cut, not with `p²`.  The
+//! resulting neighbor-rank sets are recorded as
+//! [`LocalGraph::send_ranks`] / [`LocalGraph::recv_ranks`], the fixed
+//! topology every later boundary-color exchange iterates.
 
 use crate::distributed::comm::{decode_u32s, encode_u32s, Comm};
 use crate::graph::{Graph, GraphBuilder, VId};
 use crate::partition::Partition;
 
-/// Base tags for the construction-phase collectives.
+/// Base tags for the construction-phase collectives (each sparse
+/// collective consumes `tag..tag+3`).
 const TAG_REG: u64 = 10_000;
-const TAG_FETCH_REQ: u64 = 10_002;
-const TAG_FETCH_REP: u64 = 10_004;
+const TAG_FETCH_REQ: u64 = 10_010;
+const TAG_FETCH_REP: u64 = 10_020;
 
 /// A rank's local graph: owned vertices, ghosts, and comm metadata.
 ///
@@ -65,6 +74,16 @@ pub struct LocalGraph {
     /// Per rank: local indices of *ghosts* we receive from that rank,
     /// in the same order as the owner's `subs_out` entry for us.
     pub ghost_from: Vec<Vec<u32>>,
+    /// Ranks with a non-empty `subs_out` entry (ascending): the peers
+    /// every boundary-color send targets.  `|send_ranks|` is this
+    /// rank's cut degree — exchange message counts scale with it, not
+    /// with `nranks`.
+    pub send_ranks: Vec<u32>,
+    /// Ranks with a non-empty `ghost_from` entry (ascending): the peers
+    /// every boundary-color receive drains.  Symmetric with the
+    /// senders' `send_ranks` (r is in our `recv_ranks` iff we are in
+    /// r's `send_ranks`).
+    pub recv_ranks: Vec<u32>,
 }
 
 impl LocalGraph {
@@ -178,7 +197,10 @@ impl LocalGraph {
         }
 
         // ---- color-update subscriptions -------------------------------
-        // send all ghost gids to their owners; keep our side's ordering
+        // register all ghost gids with their owners over a *sparse*
+        // collective: each rank contacts only the owners of its ghosts,
+        // and the owners learn their subscriber set from the arrivals —
+        // this is where the run's fixed neighbor topology comes from
         let mut req_by_rank: Vec<Vec<VId>> = vec![Vec::new(); p];
         let mut ghost_from: Vec<Vec<u32>> = vec![Vec::new(); p];
         for (i, &u) in gids[n_local..].iter().enumerate() {
@@ -186,24 +208,32 @@ impl LocalGraph {
             req_by_rank[o].push(u);
             ghost_from[o].push((n_local + i) as u32);
         }
-        let bufs: Vec<Vec<u8>> = req_by_rank.iter().map(|v| encode_u32s(v)).collect();
-        let got = comm.alltoallv(TAG_REG, bufs);
+        let recv_ranks: Vec<u32> =
+            (0..p as u32).filter(|&r| !ghost_from[r as usize].is_empty()).collect();
+        let bufs: Vec<Vec<u8>> = recv_ranks
+            .iter()
+            .map(|&r| encode_u32s(&req_by_rank[r as usize]))
+            .collect();
+        let got = comm.sparse_alltoallv(TAG_REG, &recv_ranks, bufs);
         let mut subs_out: Vec<Vec<u32>> = vec![Vec::new(); p];
         // Every subscribed vertex must sit in the boundary prefix; the
         // comm/compute overlap in `color_rank` is only sound because the
         // colors shipped by the boundary-first send are final by then.
         let subs_bound = if two_layers { n_boundary2 } else { n_boundary1 };
-        for (r, buf) in got.into_iter().enumerate() {
+        for (r, buf) in got {
             let want = decode_u32s(&buf);
-            subs_out[r] = want
+            debug_assert!(!want.is_empty(), "empty subscription from rank {r}");
+            subs_out[r as usize] = want
                 .iter()
                 .map(|gv| *lid.get(gv).expect("subscribed vertex not owned"))
                 .collect();
             debug_assert!(
-                subs_out[r].iter().all(|&l| (l as usize) < subs_bound),
+                subs_out[r as usize].iter().all(|&l| (l as usize) < subs_bound),
                 "subscription outside the boundary prefix"
             );
         }
+        let send_ranks: Vec<u32> =
+            (0..p as u32).filter(|&r| !subs_out[r as usize].is_empty()).collect();
         let subs_pos: Vec<Vec<(u32, u32)>> = subs_out
             .iter()
             .map(|subs| {
@@ -278,6 +308,8 @@ impl LocalGraph {
             subs_out,
             subs_pos,
             ghost_from,
+            send_ranks,
+            recv_ranks,
         }
     }
 
@@ -296,7 +328,10 @@ impl LocalGraph {
 
 /// Generic owner-fetch: for each gid in `wants` (any order), ask its
 /// owner to compute `reply(gid)` (a u32 list); returns replies in
-/// `wants` order.  Two alltoallv rounds; length-prefixed records.
+/// `wants` order.  The request round is a sparse collective (only the
+/// owners of `wants` are contacted); owners learn the requester set
+/// from the arrivals, so the reply round runs over the now-known
+/// topology.  Length-prefixed records.
 fn fetch(
     comm: &mut Comm,
     part: &Partition,
@@ -313,33 +348,36 @@ fn fetch(
         slot.push((o, req[o].len()));
         req[o].push(v);
     }
-    let bufs: Vec<Vec<u8>> = req.iter().map(|v| encode_u32s(v)).collect();
-    let got = comm.alltoallv(TAG_FETCH_REQ, bufs);
+    let owners: Vec<u32> = (0..p as u32).filter(|&r| !req[r as usize].is_empty()).collect();
+    let bufs: Vec<Vec<u8>> = owners.iter().map(|&r| encode_u32s(&req[r as usize])).collect();
+    let got = comm.sparse_alltoallv(TAG_FETCH_REQ, &owners, bufs);
     // build replies: for each requested gid, [len, data...]
-    let mut rep_bufs: Vec<Vec<u8>> = Vec::with_capacity(p);
-    for buf in &got {
-        let gs = decode_u32s(buf);
-        let mut out: Vec<u32> = Vec::with_capacity(gs.len() * 2);
-        for gv in gs {
-            let data = reply(gv);
-            out.push(data.len() as u32);
-            out.extend_from_slice(&data);
-        }
-        rep_bufs.push(encode_u32s(&out));
-    }
-    let reps = comm.alltoallv(TAG_FETCH_REP, rep_bufs);
-    // split records per source rank
-    let mut records: Vec<Vec<Vec<u32>>> = Vec::with_capacity(p);
-    for buf in &reps {
+    let requesters: Vec<u32> = got.iter().map(|&(from, _)| from).collect();
+    let rep_bufs: Vec<Vec<u8>> = got
+        .iter()
+        .map(|(_, buf)| {
+            let gs = decode_u32s(buf);
+            let mut out: Vec<u32> = Vec::with_capacity(gs.len() * 2);
+            for gv in gs {
+                let data = reply(gv);
+                out.push(data.len() as u32);
+                out.extend_from_slice(&data);
+            }
+            encode_u32s(&out)
+        })
+        .collect();
+    let reps = comm.neighbor_alltoallv(TAG_FETCH_REP, &requesters, rep_bufs, &owners);
+    // split records per owner rank (reps[i] came from owners[i])
+    let mut records: Vec<Vec<Vec<u32>>> = vec![Vec::new(); p];
+    for (&o, buf) in owners.iter().zip(&reps) {
         let xs = decode_u32s(buf);
-        let mut recs = Vec::new();
+        let recs = &mut records[o as usize];
         let mut i = 0usize;
         while i < xs.len() {
             let len = xs[i] as usize;
             recs.push(xs[i + 1..i + 1 + len].to_vec());
             i += 1 + len;
         }
-        records.push(recs);
     }
     // reassemble in `wants` order
     let mut taken = vec![0usize; p];
@@ -495,6 +533,40 @@ mod tests {
                     .map(|&gl| lgs[r].gids[gl as usize])
                     .collect();
                 assert_eq!(sent, expect, "owner {o} -> rank {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn neighbor_topology_matches_subscriptions() {
+        let g = gnm(120, 500, 13);
+        for (nparts, two) in [(5usize, false), (4, true)] {
+            let part = hash(&g, nparts, 2);
+            let lgs = build_all(&g, &part, two);
+            for (r, lg) in lgs.iter().enumerate() {
+                // send_ranks/recv_ranks are exactly the non-empty lists
+                let send: Vec<u32> = (0..nparts as u32)
+                    .filter(|&q| !lg.subs_out[q as usize].is_empty())
+                    .collect();
+                let recv: Vec<u32> = (0..nparts as u32)
+                    .filter(|&q| !lg.ghost_from[q as usize].is_empty())
+                    .collect();
+                assert_eq!(lg.send_ranks, send, "rank {r} two={two}");
+                assert_eq!(lg.recv_ranks, recv, "rank {r} two={two}");
+                assert!(!lg.send_ranks.contains(&(r as u32)));
+                // symmetry: q receives from us iff we send to q
+                for &q in &lg.send_ranks {
+                    assert!(
+                        lgs[q as usize].recv_ranks.contains(&(r as u32)),
+                        "rank {q} missing {r} in recv_ranks"
+                    );
+                }
+                for &q in &lg.recv_ranks {
+                    assert!(
+                        lgs[q as usize].send_ranks.contains(&(r as u32)),
+                        "rank {q} missing {r} in send_ranks"
+                    );
+                }
             }
         }
     }

@@ -15,10 +15,15 @@
 //! 4. `Allreduce(conflicts, SUM)`; while > 0: recolor losers locally,
 //!    communicate *only changed* boundary colors, re-detect.
 //!
-//! The on-node kernels run data-parallel over [`DistConfig::threads`]
-//! workers (bit-identical to serial — see `util::par`), and each rank
-//! reuses one [`KernelScratch`] plus the recolor mask/loser buffers
-//! across all speculative rounds.
+//! The on-node kernels *and* the conflict-detection scans run
+//! data-parallel over [`DistConfig::threads`] workers (bit-identical to
+//! serial — see `util::par`) on the rank's persistent worker pool, and
+//! each rank reuses one [`KernelScratch`] (which owns that pool) plus
+//! the recolor mask/loser/exchange buffers across all speculative
+//! rounds.  Every boundary-color exchange is a *neighbor* collective
+//! over [`ghost::LocalGraph::send_ranks`] /
+//! [`ghost::LocalGraph::recv_ranks`]: per-round message count scales
+//! with the partition's cut degree, not with the rank count.
 //!
 //! The D1-2GL variant (§3.4) additionally *predicts* the recoloring of
 //! ghost losers: ghosts carry full adjacency in the second-layer build,
@@ -41,6 +46,7 @@ use crate::distributed::cost::CommStats;
 use crate::graph::{Graph, VId};
 use crate::partition::Partition;
 use crate::util::gid_rand;
+use crate::util::par;
 use crate::util::timer::SplitTimer;
 use ghost::LocalGraph;
 
@@ -256,8 +262,11 @@ pub fn color_rank(
 
     let n_all = lg.n_local + lg.n_ghost;
     let mut colors: Vec<Color> = vec![0; n_all];
-    // per-rank kernel scratch, reused by every kernel call this rank makes
+    // per-rank kernel scratch (owns the persistent worker pool), reused
+    // by every kernel call this rank makes; `exec` is a cheap handle on
+    // the same pool for the detection scans
     let mut scratch = KernelScratch::new(cfg.threads);
+    let exec = scratch.executor();
 
     // ---- initial local coloring (ghosts unknown/uncolored), overlapped
     // with the boundary-color exchange (§3): color the boundary prefix,
@@ -307,11 +316,13 @@ pub fn color_rank(
     let mut round = 0usize;
     let mut local_losers: Vec<u32> = Vec::new();
     let mut ghost_losers: Vec<u32> = Vec::new();
+    let mut xscratch = ExchangeScratch::new();
     loop {
         local_losers.clear();
         ghost_losers.clear();
-        let found = timers
-            .comp(|| detect_conflicts(&lg, &colors, cfg, &mut local_losers, &mut ghost_losers));
+        let found = timers.comp(|| {
+            detect_conflicts(&lg, &colors, cfg, &exec, &mut local_losers, &mut ghost_losers)
+        });
         conflicts_total += found;
         let global = timers.comm(|| comm.allreduce_sum(TAG_REDUCE + 2 * round as u64, found));
         if global == 0 {
@@ -353,7 +364,7 @@ pub fn color_rank(
 
         // communicate only the recolored owned vertices
         comm_rounds += 1;
-        timers.comm(|| exchange_delta(comm, &lg, &mut colors, &local_losers, round));
+        timers.comm(|| exchange_delta(comm, &lg, &mut colors, &local_losers, round, &mut xscratch));
     }
 
     let owned_colors = (0..lg.n_local)
@@ -375,72 +386,90 @@ pub fn color_rank(
 
 /// Detect cross-rank conflicts into the caller's reusable buffers
 /// (cleared by the caller; sorted + deduped on return).  Returns the
-/// count of conflicts involving a local vertex.
-fn detect_conflicts(
+/// count of conflicts involving a local vertex.  The scans fan out over
+/// `exec` in contiguous in-order chunks and the per-chunk loser vectors
+/// are concatenated in chunk order before the sort+dedup, so losers and
+/// counts are identical to the serial scan at every thread count.
+pub fn detect_conflicts(
     lg: &LocalGraph,
     colors: &[Color],
     cfg: DistConfig,
+    exec: &par::Executor,
     local_losers: &mut Vec<u32>,
     ghost_losers: &mut Vec<u32>,
 ) -> u64 {
     match cfg.problem {
-        Problem::D1 => detect_d1(lg, colors, cfg, local_losers, ghost_losers),
-        Problem::D2 => detect_d2(lg, colors, cfg, false, local_losers),
-        Problem::PD2 => detect_d2(lg, colors, cfg, true, local_losers),
+        Problem::D1 => detect_d1(lg, colors, cfg, exec, local_losers, ghost_losers),
+        Problem::D2 => detect_d2(lg, colors, cfg, false, exec, local_losers),
+        Problem::PD2 => detect_d2(lg, colors, cfg, true, exec, local_losers),
     }
 }
 
 /// Algorithm 3 with the §3.4 optimization: scan only ghosts' adjacency
 /// (`E_g`), since every cross-rank conflict edge is incident to a ghost.
+/// The ghost range is chunked across the pool.
 fn detect_d1(
     lg: &LocalGraph,
     colors: &[Color],
     cfg: DistConfig,
+    exec: &par::Executor,
     local_losers: &mut Vec<u32>,
     ghost_losers: &mut Vec<u32>,
 ) -> u64 {
-    let mut count = 0u64;
     let nl = lg.n_local as u32;
-    for gl in nl..(lg.n_local + lg.n_ghost) as u32 {
-        let cg = colors[gl as usize];
-        if cg == 0 {
-            continue;
-        }
-        for &u in lg.graph.neighbors(gl) {
-            if colors[u as usize] != cg {
+    let parts = exec.map_range_chunks(lg.n_ghost, |range| {
+        let mut count = 0u64;
+        let mut locals: Vec<u32> = Vec::new();
+        let mut ghosts: Vec<u32> = Vec::new();
+        for gi in range {
+            let gl = (lg.n_local + gi) as u32;
+            let cg = colors[gl as usize];
+            if cg == 0 {
                 continue;
             }
-            if u < nl {
-                // local-ghost conflict
-                count += 1;
-                match conflict::resolve(
-                    cfg.seed,
-                    cfg.recolor_degrees,
-                    lg.gids[u as usize] as u64,
-                    lg.degrees[u as usize],
-                    lg.gids[gl as usize] as u64,
-                    lg.degrees[gl as usize],
-                ) {
-                    conflict::Loser::First => local_losers.push(u),
-                    conflict::Loser::Second => ghost_losers.push(gl),
+            for &u in lg.graph.neighbors(gl) {
+                if colors[u as usize] != cg {
+                    continue;
                 }
-            } else if u < gl {
-                // ghost-ghost conflict (2GL only): owners resolve it; we
-                // track the loser for recolor prediction.
-                if conflict::first_loses(
-                    cfg.seed,
-                    cfg.recolor_degrees,
-                    lg.gids[u as usize] as u64,
-                    lg.degrees[u as usize],
-                    lg.gids[gl as usize] as u64,
-                    lg.degrees[gl as usize],
-                ) {
-                    ghost_losers.push(u);
-                } else {
-                    ghost_losers.push(gl);
+                if u < nl {
+                    // local-ghost conflict
+                    count += 1;
+                    match conflict::resolve(
+                        cfg.seed,
+                        cfg.recolor_degrees,
+                        lg.gids[u as usize] as u64,
+                        lg.degrees[u as usize],
+                        lg.gids[gl as usize] as u64,
+                        lg.degrees[gl as usize],
+                    ) {
+                        conflict::Loser::First => locals.push(u),
+                        conflict::Loser::Second => ghosts.push(gl),
+                    }
+                } else if u < gl {
+                    // ghost-ghost conflict (2GL only): owners resolve it;
+                    // we track the loser for recolor prediction.
+                    if conflict::first_loses(
+                        cfg.seed,
+                        cfg.recolor_degrees,
+                        lg.gids[u as usize] as u64,
+                        lg.degrees[u as usize],
+                        lg.gids[gl as usize] as u64,
+                        lg.degrees[gl as usize],
+                    ) {
+                        ghosts.push(u);
+                    } else {
+                        ghosts.push(gl);
+                    }
                 }
             }
         }
+        (count, locals, ghosts)
+    });
+    let mut count = 0u64;
+    for (c, locals, ghosts) in parts {
+        count += c;
+        local_losers.extend_from_slice(&locals);
+        ghost_losers.extend_from_slice(&ghosts);
     }
     local_losers.sort_unstable();
     local_losers.dedup();
@@ -450,47 +479,58 @@ fn detect_d1(
 }
 
 /// Algorithm 5: distance-2 conflicts for boundary-d2 vertices; with
-/// `partial`, only two-hop conflicts count (PD2, §3.6).
+/// `partial`, only two-hop conflicts count (PD2, §3.6).  The
+/// `boundary_d2` worklist is chunked across the pool.
 fn detect_d2(
     lg: &LocalGraph,
     colors: &[Color],
     cfg: DistConfig,
     partial: bool,
+    exec: &par::Executor,
     local_losers: &mut Vec<u32>,
 ) -> u64 {
     let nl = lg.n_local as u32;
-    let mut count = 0u64;
-    for &v in &lg.boundary_d2 {
-        let cv = colors[v as usize];
-        if cv == 0 {
-            continue;
-        }
-        let v_loses = |x: u32| -> bool {
-            conflict::first_loses(
-                cfg.seed,
-                cfg.recolor_degrees,
-                lg.gids[v as usize] as u64,
-                lg.degrees[v as usize],
-                lg.gids[x as usize] as u64,
-                lg.degrees[x as usize],
-            )
-        };
-        for &u in lg.graph.neighbors(v as VId) {
-            if !partial && u >= nl && colors[u as usize] == cv {
-                count += 1;
-                if v_loses(u) {
-                    local_losers.push(v);
-                }
+    let parts = exec.map_chunks(&lg.boundary_d2, |chunk| {
+        let mut count = 0u64;
+        let mut losers: Vec<u32> = Vec::new();
+        for &v in chunk {
+            let cv = colors[v as usize];
+            if cv == 0 {
+                continue;
             }
-            for &x in lg.graph.neighbors(u) {
-                if x != v as VId && x >= nl && colors[x as usize] == cv {
+            let v_loses = |x: u32| -> bool {
+                conflict::first_loses(
+                    cfg.seed,
+                    cfg.recolor_degrees,
+                    lg.gids[v as usize] as u64,
+                    lg.degrees[v as usize],
+                    lg.gids[x as usize] as u64,
+                    lg.degrees[x as usize],
+                )
+            };
+            for &u in lg.graph.neighbors(v as VId) {
+                if !partial && u >= nl && colors[u as usize] == cv {
                     count += 1;
-                    if v_loses(x) {
-                        local_losers.push(v);
+                    if v_loses(u) {
+                        losers.push(v);
+                    }
+                }
+                for &x in lg.graph.neighbors(u) {
+                    if x != v as VId && x >= nl && colors[x as usize] == cv {
+                        count += 1;
+                        if v_loses(x) {
+                            losers.push(v);
+                        }
                     }
                 }
             }
         }
+        (count, losers)
+    });
+    let mut count = 0u64;
+    for (c, losers) in parts {
+        count += c;
+        local_losers.extend_from_slice(&losers);
     }
     local_losers.sort_unstable();
     local_losers.dedup();
@@ -542,8 +582,26 @@ fn recolor_predictive(
 // boundary color exchange
 // -----------------------------------------------------------------------
 
-/// Initial all-to-all exchange of all subscribed boundary colors.
-fn exchange_full(comm: &mut Comm, lg: &LocalGraph, colors: &mut [Color]) {
+/// Reusable per-rank staging buffers for the delta exchanges: one
+/// payload vector per send-neighbor, cleared (not reallocated) every
+/// fix round.  The wire buffers themselves are necessarily fresh — the
+/// channel takes ownership of every message — but the O(p)
+/// `Vec<Vec<u8>>` the dense exchange rebuilt per round is gone, and the
+/// staging capacity persists across all rounds of a run.
+#[derive(Debug, Default)]
+pub struct ExchangeScratch {
+    payloads: Vec<Vec<u32>>,
+}
+
+impl ExchangeScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+/// Initial exchange of all subscribed boundary colors with the actual
+/// neighbor ranks (one message per cut neighbor, not per rank).
+pub fn exchange_full(comm: &mut Comm, lg: &LocalGraph, colors: &mut [Color]) {
     exchange_full_send(comm, lg, colors);
     exchange_full_recv(comm, lg, colors);
 }
@@ -551,38 +609,28 @@ fn exchange_full(comm: &mut Comm, lg: &LocalGraph, colors: &mut [Color]) {
 /// Send half of the initial exchange.  Sends never block on this
 /// substrate (unbounded channels — the analogue of `MPI_Isend`), so the
 /// driver launches this before coloring the interior and overlaps the
-/// exchange with that computation (§3).  Empty payloads still go out:
-/// the receive half expects one message per peer.
-fn exchange_full_send(comm: &mut Comm, lg: &LocalGraph, colors: &[Color]) {
-    let p = lg.nranks as usize;
-    let me = lg.rank as usize;
-    debug_assert!(lg.subs_out[me].is_empty(), "self-subscription");
-    for r in 0..p {
-        if r == me {
-            continue;
-        }
-        let payload: Vec<u32> = lg.subs_out[r]
+/// exchange with that computation (§3).  Only the ranks that actually
+/// subscribe to our boundary (`lg.send_ranks`) get a message.
+pub fn exchange_full_send(comm: &mut Comm, lg: &LocalGraph, colors: &[Color]) {
+    debug_assert!(lg.subs_out[lg.rank as usize].is_empty(), "self-subscription");
+    for &r in &lg.send_ranks {
+        let payload: Vec<u32> = lg.subs_out[r as usize]
             .iter()
             .map(|&l| colors[l as usize])
             .collect();
-        comm.send(r as u32, TAG_COLORS, encode_u32s(&payload));
+        comm.send(r, TAG_COLORS, encode_u32s(&payload));
     }
 }
 
-/// Receive half of the initial exchange: blocks until every peer's
+/// Receive half of the initial exchange: blocks until every neighbor's
 /// boundary colors arrive, then installs them on our ghosts.
-fn exchange_full_recv(comm: &mut Comm, lg: &LocalGraph, colors: &mut [Color]) {
-    let p = lg.nranks as usize;
-    let me = lg.rank as usize;
-    for r in 0..p {
-        if r == me {
-            debug_assert!(lg.ghost_from[r].is_empty(), "self-ghost");
-            continue;
-        }
-        let buf = comm.recv(r as u32, TAG_COLORS);
+pub fn exchange_full_recv(comm: &mut Comm, lg: &LocalGraph, colors: &mut [Color]) {
+    debug_assert!(lg.ghost_from[lg.rank as usize].is_empty(), "self-ghost");
+    for &r in &lg.recv_ranks {
+        let buf = comm.recv(r, TAG_COLORS);
         let cs = decode_u32s(&buf);
-        debug_assert_eq!(cs.len(), lg.ghost_from[r].len());
-        for (&gl, &c) in lg.ghost_from[r].iter().zip(cs.iter()) {
+        debug_assert_eq!(cs.len(), lg.ghost_from[r as usize].len());
+        for (&gl, &c) in lg.ghost_from[r as usize].iter().zip(cs.iter()) {
             colors[gl as usize] = c;
         }
     }
@@ -591,21 +639,29 @@ fn exchange_full_recv(comm: &mut Comm, lg: &LocalGraph, colors: &mut [Color]) {
 /// Delta exchange: send (position, color) pairs for just-recolored owned
 /// vertices along each subscription list ("after the initial all-to-all
 /// boundary exchange, we only communicate the colors of boundary
-/// vertices that have been recolored", §3.2).
-fn exchange_delta(
+/// vertices that have been recolored", §3.2).  Runs as a neighbor
+/// collective over the cut topology: per-round messages are
+/// O(neighbor ranks), not O(p), and empty deltas still flow to
+/// neighbors (the receive half expects one message per neighbor — the
+/// delta payload *content* is what shrinks, per §3.2).
+pub fn exchange_delta(
     comm: &mut Comm,
     lg: &LocalGraph,
     colors: &mut [Color],
     recolored: &[u32],
     round: usize,
+    scratch: &mut ExchangeScratch,
 ) {
-    let p = lg.nranks as usize;
-    let mut bufs: Vec<Vec<u8>> = Vec::with_capacity(p);
-    for r in 0..p {
+    if scratch.payloads.len() < lg.send_ranks.len() {
+        scratch.payloads.resize(lg.send_ranks.len(), Vec::new());
+    }
+    let mut bufs: Vec<Vec<u8>> = Vec::with_capacity(lg.send_ranks.len());
+    for (i, &r) in lg.send_ranks.iter().enumerate() {
         // merge the (sorted) recolored set against the sorted
         // (local idx -> subscription position) index
-        let sp = &lg.subs_pos[r];
-        let mut payload: Vec<u32> = Vec::new();
+        let sp = &lg.subs_pos[r as usize];
+        let payload = &mut scratch.payloads[i];
+        payload.clear();
         let mut si = 0usize;
         for &v in recolored {
             while si < sp.len() && sp[si].0 < v {
@@ -617,13 +673,14 @@ fn exchange_delta(
                 si += 1;
             }
         }
-        bufs.push(encode_u32s(&payload));
+        bufs.push(encode_u32s(payload));
     }
-    let got = comm.alltoallv(TAG_COLORS + 1 + round as u64, bufs);
-    for (r, buf) in got.into_iter().enumerate() {
+    let tag = TAG_COLORS + 1 + round as u64;
+    let got = comm.neighbor_alltoallv(tag, &lg.send_ranks, bufs, &lg.recv_ranks);
+    for (&r, buf) in lg.recv_ranks.iter().zip(got) {
         let xs = decode_u32s(&buf);
         for pair in xs.chunks_exact(2) {
-            let gl = lg.ghost_from[r][pair[0] as usize];
+            let gl = lg.ghost_from[r as usize][pair[0] as usize];
             colors[gl as usize] = pair[1];
         }
     }

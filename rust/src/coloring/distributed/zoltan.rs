@@ -12,7 +12,7 @@
 //! * conflict resolution is the pure random rule (no degree heuristic).
 
 use super::ghost::LocalGraph;
-use super::{assemble, conflict, exchange_delta, exchange_full, RankOutcome, RunResult};
+use super::{assemble, conflict, exchange_delta, exchange_full, ExchangeScratch, RankOutcome, RunResult};
 use crate::coloring::{Color, Problem};
 use crate::distributed::comm::Comm;
 use crate::distributed::{run_ranks, CostModel};
@@ -91,6 +91,7 @@ fn zoltan_rank(comm: &mut Comm, g: &Graph, part: &Partition, cfg: ZoltanConfig) 
     let mut recolored_total = 0u64;
     let mut round = 0usize;
     let mut first_exchange_done = false;
+    let mut xscratch = ExchangeScratch::new();
     loop {
         // color next batch
         let batch: Vec<u32> = timers.comp(|| {
@@ -112,7 +113,7 @@ fn zoltan_rank(comm: &mut Comm, g: &Graph, part: &Partition, cfg: ZoltanConfig) 
             } else {
                 let mut sorted = batch.clone();
                 sorted.sort_unstable();
-                exchange_delta(comm, &lg, &mut colors, &sorted, 100_000 + round);
+                exchange_delta(comm, &lg, &mut colors, &sorted, 100_000 + round, &mut xscratch);
             }
         });
 

@@ -12,7 +12,6 @@ use crate::coloring::local::{KernelScratch, LocalView};
 use crate::coloring::Color;
 use crate::graph::VId;
 use crate::util::bitset::BitSet;
-use crate::util::par;
 
 /// Color the masked vertices of `view` to fixpoint, serially.
 /// Returns #rounds.
@@ -32,7 +31,7 @@ pub fn color_with(view: &LocalView, colors: &mut [Color], scratch: &mut KernelSc
     debug_assert_eq!(colors.len(), n);
     debug_assert_eq!(view.mask.len(), n);
 
-    let threads = scratch.threads;
+    let exec = scratch.executor();
     let prio = scratch.prio32(n);
     let mut work: Vec<VId> = (0..n as VId)
         .filter(|&v| view.mask[v as usize] && colors[v as usize] == 0)
@@ -45,7 +44,7 @@ pub fn color_with(view: &LocalView, colors: &mut [Color], scratch: &mut KernelSc
         // assignment pass (identical to VB_BIT): snapshot + staged writes
         let staged: Vec<(VId, Color)> = {
             let snapshot: &[Color] = colors;
-            par::flat_map_chunks(threads, &work, |chunk| {
+            exec.flat_map_chunks(&work, |chunk| {
                 let mut forbidden = BitSet::with_capacity(64);
                 let mut out: Vec<(VId, Color)> = Vec::with_capacity(chunk.len());
                 for &v in chunk {
@@ -73,7 +72,7 @@ pub fn color_with(view: &LocalView, colors: &mut [Color], scratch: &mut KernelSc
         let mut uncolor: Vec<VId> = {
             let snapshot: &[Color] = colors;
             let in_work: &[bool] = &in_work;
-            par::flat_map_chunks(threads, &work, |chunk| {
+            exec.flat_map_chunks(&work, |chunk| {
                 let mut out: Vec<VId> = Vec::new();
                 for &v in chunk {
                     let cv = snapshot[v as usize];

@@ -11,7 +11,6 @@ use crate::coloring::local::{KernelScratch, LocalView};
 use crate::coloring::Color;
 use crate::graph::VId;
 use crate::util::bitset::BitSet;
-use crate::util::par;
 
 /// Jones–Plassmann over the masked vertices. Returns #rounds.
 pub fn color(view: &LocalView, colors: &mut [Color], seed: u64) -> usize {
@@ -31,7 +30,7 @@ pub fn color_with(
 ) -> usize {
     let g = view.graph;
     let n = g.n();
-    let threads = scratch.threads;
+    let exec = scratch.executor();
     let prio = scratch.prio64(n, seed);
     let mut active: Vec<VId> = (0..n as VId)
         .filter(|&v| view.mask[v as usize] && colors[v as usize] == 0)
@@ -43,7 +42,7 @@ pub fn color_with(
         rounds += 1;
         let winners: Vec<VId> = {
             let snapshot: &[Color] = colors;
-            par::flat_map_chunks(threads, &active, |chunk| {
+            exec.flat_map_chunks(&active, |chunk| {
                 chunk
                     .iter()
                     .copied()

@@ -58,10 +58,16 @@ impl std::str::FromStr for LocalKernel {
 /// hashed tie-break priorities, which the speculative fix loop used to
 /// recompute from scratch on every kernel call (§Perf iteration 3 —
 /// O(n_all) per recolor round for worklists of a handful of vertices).
-#[derive(Clone, Debug)]
+///
+/// At `threads > 1` the scratch also owns the rank's persistent
+/// [`crate::util::par::WorkerPool`]: workers park on a condvar between
+/// kernel passes instead of paying a ~10µs scoped spawn per call, which
+/// dominated on the small loser worklists of the fix loop.
 pub struct KernelScratch {
     /// Worker threads for the bit kernels' passes (0 = one per core).
     pub threads: usize,
+    /// Persistent per-rank worker pool (`None` when effectively serial).
+    pool: Option<crate::util::par::WorkerPool>,
     /// `mix32(i)` for local ids `0..prio32.len()` — seed-independent.
     prio32: Vec<u32>,
     /// `gid_rand(seed, i)` cache for Jones–Plassmann (seed-dependent).
@@ -71,7 +77,18 @@ pub struct KernelScratch {
 
 impl KernelScratch {
     pub fn new(threads: usize) -> Self {
-        KernelScratch { threads, prio32: Vec::new(), prio64: Vec::new(), prio64_seed: None }
+        let pool = (crate::util::par::resolve_threads(threads) > 1)
+            .then(|| crate::util::par::WorkerPool::new(threads));
+        KernelScratch { threads, pool, prio32: Vec::new(), prio64: Vec::new(), prio64_seed: None }
+    }
+
+    /// Cheap handle (a cloned `Arc`) for running chunked passes on this
+    /// rank's pool; serial when the scratch was built with one thread.
+    pub fn executor(&self) -> crate::util::par::Executor {
+        match &self.pool {
+            Some(pool) => pool.executor(),
+            None => crate::util::par::Executor::serial(),
+        }
     }
 
     /// Local hashed priorities for ids `0..n` (extended on demand, never
@@ -102,6 +119,17 @@ impl KernelScratch {
 impl Default for KernelScratch {
     fn default() -> Self {
         Self::new(1)
+    }
+}
+
+impl std::fmt::Debug for KernelScratch {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("KernelScratch")
+            .field("threads", &self.threads)
+            .field("pooled", &self.pool.is_some())
+            .field("prio32_cached", &self.prio32.len())
+            .field("prio64_cached", &self.prio64.len())
+            .finish()
     }
 }
 

@@ -14,7 +14,6 @@ use crate::coloring::local::{KernelScratch, LocalView};
 use crate::coloring::Color;
 use crate::graph::VId;
 use crate::util::bitset::BitSet;
-use crate::util::par;
 
 /// Distance-2 (or partial distance-2) coloring of masked vertices,
 /// serially.  Returns #rounds to fixpoint.
@@ -41,7 +40,7 @@ pub fn color_with(
     debug_assert_eq!(colors.len(), n);
     debug_assert_eq!(view.mask.len(), n);
 
-    let threads = scratch.threads;
+    let exec = scratch.executor();
     let prio = scratch.prio32(n);
     let mut work: Vec<VId> = (0..n as VId)
         .filter(|&v| view.mask[v as usize] && colors[v as usize] == 0)
@@ -52,7 +51,7 @@ pub fn color_with(
         rounds += 1;
         let staged: Vec<(VId, Color)> = {
             let snapshot: &[Color] = colors;
-            par::flat_map_chunks(threads, &work, |chunk| {
+            exec.flat_map_chunks(&work, |chunk| {
                 let mut forbidden = BitSet::with_capacity(256);
                 let mut out: Vec<(VId, Color)> = Vec::with_capacity(chunk.len());
                 for &v in chunk {
@@ -86,7 +85,7 @@ pub fn color_with(
         // unless partial.  Uncolor the higher-indexed masked loser.
         let next: Vec<VId> = {
             let snapshot: &[Color] = colors;
-            par::flat_map_chunks(threads, &work, |chunk| {
+            exec.flat_map_chunks(&work, |chunk| {
                 let mut out: Vec<VId> = Vec::new();
                 for &v in chunk {
                     let cv = snapshot[v as usize];

@@ -13,7 +13,6 @@ use crate::coloring::local::{KernelScratch, LocalView};
 use crate::coloring::Color;
 use crate::graph::VId;
 use crate::util::bitset::BitSet;
-use crate::util::par;
 
 /// Color the masked vertices of `view` to fixpoint, serially.
 /// Returns #rounds.
@@ -42,7 +41,7 @@ pub fn color_with(view: &LocalView, colors: &mut [Color], scratch: &mut KernelSc
     debug_assert_eq!(colors.len(), n);
     debug_assert_eq!(view.mask.len(), n);
 
-    let threads = scratch.threads;
+    let exec = scratch.executor(); // persistent pool: no spawn per pass
     // hashed tie-break priorities, cached across calls (§Perf iteration 2+3)
     let prio = scratch.prio32(n);
     // worklist of vertices still to color
@@ -57,7 +56,7 @@ pub fn color_with(view: &LocalView, colors: &mut [Color], scratch: &mut KernelSc
         // writes), one forbidden bitset per worker
         let staged: Vec<(VId, Color)> = {
             let snapshot: &[Color] = colors;
-            par::flat_map_chunks(threads, &work, |chunk| {
+            exec.flat_map_chunks(&work, |chunk| {
                 let mut forbidden = BitSet::with_capacity(64);
                 let mut out: Vec<(VId, Color)> = Vec::with_capacity(chunk.len());
                 for &v in chunk {
@@ -82,7 +81,7 @@ pub fn color_with(view: &LocalView, colors: &mut [Color], scratch: &mut KernelSc
         // scanning `work` suffices.
         let next_work: Vec<VId> = {
             let snapshot: &[Color] = colors;
-            par::flat_map_chunks(threads, &work, |chunk| {
+            exec.flat_map_chunks(&work, |chunk| {
                 chunk
                     .iter()
                     .copied()

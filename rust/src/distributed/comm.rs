@@ -2,9 +2,37 @@
 //!
 //! `run_ranks(p, cost, f)` spawns `p` scoped threads, each receiving a
 //! [`Comm`] handle.  Point-to-point messages are `Vec<u8>` over per-rank
-//! mpsc channels with selective receive; collectives are implemented on
-//! top (gather-to-0 + broadcast), which is semantically exact and fast
-//! enough at p <= 256.
+//! mpsc channels with selective receive.  On top of that, three kinds of
+//! collective:
+//!
+//! * **Neighbor collectives** — [`Comm::neighbor_alltoallv`] exchanges
+//!   personalized payloads over a *known sparse topology* (both sides
+//!   name their peers), so per-round message count scales with the
+//!   partition's cut degree, not `p`.  This is what the boundary-color
+//!   exchanges of the coloring fix loop use.  When only the send side
+//!   knows the topology, [`Comm::sparse_alltoallv`] first discovers each
+//!   rank's incoming-message count with a tree-allreduced indicator
+//!   vector (the substrate's stand-in for MPI's NBX /
+//!   `MPI_Dist_graph_create_adjacent`), then ships payloads
+//!   point-to-point — used once per `LocalGraph` build for subscription
+//!   registration and ghost fetches.
+//! * **Tree reductions** — `allreduce_sum`/`allreduce_max`/`barrier` run
+//!   a binomial-tree reduce to rank 0 plus a binomial-tree broadcast:
+//!   O(log p) depth instead of the old serialize-through-rank-0 O(p)
+//!   chain, matching the `ceil(log2 p)` α-step accounting of
+//!   [`CostModel::collective_ns`].  Internal tree hops use raw
+//!   (unaccounted) sends so `CommStats::messages` keeps meaning
+//!   "application payload messages".
+//! * **Dense all-to-all** — [`Comm::alltoallv`] loops over all `p`
+//!   ranks.  Retained as the baseline the benches compare the neighbor
+//!   collectives against (`BENCH_PR2=1`); the coloring hot path no
+//!   longer uses it.
+//!
+//! Tag discipline: a collective may consume `tag..tag+3` (tree reduce,
+//! tree broadcast, payload), so callers space tags by at least 3 when
+//! issuing back-to-back collectives with distinct tags.  Reusing one tag
+//! for *sequential* collectives is safe — selective receive plus
+//! per-channel FIFO keeps rounds apart.
 
 use std::collections::VecDeque;
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -103,6 +131,65 @@ impl Comm {
         out
     }
 
+    /// Personalized exchange over a *known* sparse topology: `bufs[i]`
+    /// goes to `send_to[i]`, and exactly one payload is received from
+    /// each rank in `recv_from` (returned in `recv_from` order).  Both
+    /// sides must agree on the topology — rank r appears in our
+    /// `recv_from` iff we appear in r's `send_to` — which
+    /// `LocalGraph::build` establishes once per run.  Message count is
+    /// O(|send_to|), independent of `nranks`.
+    pub fn neighbor_alltoallv(
+        &mut self,
+        tag: u64,
+        send_to: &[u32],
+        bufs: Vec<Vec<u8>>,
+        recv_from: &[u32],
+    ) -> Vec<Vec<u8>> {
+        assert_eq!(send_to.len(), bufs.len());
+        self.stats.collectives += 1;
+        for (&r, buf) in send_to.iter().zip(bufs) {
+            debug_assert_ne!(r, self.rank, "self-send in neighbor collective");
+            self.send(r, tag, buf);
+        }
+        recv_from.iter().map(|&r| self.recv(r, tag)).collect()
+    }
+
+    /// Personalized exchange where only the *send* side knows the
+    /// topology (the substrate's stand-in for MPI's NBX sparse data
+    /// exchange): each rank first learns its incoming-message count from
+    /// a tree-allreduced indicator vector (O(log p) raw hops carrying
+    /// `4p` bytes), then payloads travel point-to-point.  Returns every
+    /// incoming `(from, payload)` in arrival order — callers index by
+    /// `from` for determinism.  Consumes tags `tag..tag+3`.
+    pub fn sparse_alltoallv(
+        &mut self,
+        tag: u64,
+        peers: &[u32],
+        bufs: Vec<Vec<u8>>,
+    ) -> Vec<(u32, Vec<u8>)> {
+        assert_eq!(peers.len(), bufs.len());
+        self.stats.collectives += 1;
+        let p = self.nranks as usize;
+        let mut counts = vec![0u32; p];
+        for &r in peers {
+            debug_assert_ne!(r, self.rank, "self-send in sparse collective");
+            counts[r as usize] += 1;
+        }
+        // the discovery is a reduce + a broadcast, each moving the
+        // 4p-byte counts vector: two tree phases, same accounting as
+        // `reduce_then_bcast`
+        self.stats.modeled_ns += 2 * self.cost.collective_ns(p, 4 * p);
+        self.allreduce_u32_sum_vec(tag, &mut counts);
+        let expect = counts[self.rank as usize] as usize;
+        for (&r, buf) in peers.iter().zip(bufs) {
+            self.send(r, tag + 2, buf);
+        }
+        let t0 = Instant::now();
+        let out = (0..expect).map(|_| self.recv_any(tag + 2)).collect();
+        self.stats.wall_ns += t0.elapsed().as_nanos() as u64;
+        out
+    }
+
     /// Sum-allreduce of a u64 (the `Allreduce(conflicts, SUM)` of Alg. 2).
     pub fn allreduce_sum(&mut self, tag: u64, x: u64) -> u64 {
         self.reduce_then_bcast(tag, x, |a, b| a + b)
@@ -113,62 +200,87 @@ impl Comm {
         self.reduce_then_bcast(tag, x, |a, b| a.max(b))
     }
 
+    /// Binomial-tree reduce to rank 0 + binomial-tree broadcast:
+    /// O(log p) depth (the old implementation serialized all `p - 1`
+    /// contributions through rank 0).  Modeled time charges the tree's
+    /// `ceil(log2 p)` α-steps for each of the two phases.
     fn reduce_then_bcast(&mut self, tag: u64, x: u64, op: impl Fn(u64, u64) -> u64) -> u64 {
         self.stats.collectives += 1;
-        self.stats.modeled_ns += self.cost.collective_ns(self.nranks as usize, 8);
+        self.stats.modeled_ns += 2 * self.cost.collective_ns(self.nranks as usize, 8);
+        let out = self.tree_allreduce_bytes(tag, x.to_le_bytes().to_vec(), |acc, other| {
+            let a = u64::from_le_bytes(acc[..8].try_into().unwrap());
+            let b = u64::from_le_bytes(other[..8].try_into().unwrap());
+            acc.copy_from_slice(&op(a, b).to_le_bytes());
+        });
+        u64::from_le_bytes(out[..8].try_into().unwrap())
+    }
+
+    /// Element-wise sum-allreduce of a u32 vector over the same binomial
+    /// tree (feeds the sparse-exchange discovery).  All ranks must pass
+    /// equal-length vectors.
+    fn allreduce_u32_sum_vec(&mut self, tag: u64, v: &mut [u32]) {
+        let out = self.tree_allreduce_bytes(tag, encode_u32s(v), |acc, other| {
+            debug_assert_eq!(acc.len(), other.len());
+            for (a, b) in acc.chunks_exact_mut(4).zip(other.chunks_exact(4)) {
+                let s = u32::from_le_bytes(a.try_into().unwrap())
+                    .wrapping_add(u32::from_le_bytes(b.try_into().unwrap()));
+                a.copy_from_slice(&s.to_le_bytes());
+            }
+        });
+        for (x, c) in v.iter_mut().zip(out.chunks_exact(4)) {
+            *x = u32::from_le_bytes(c.try_into().unwrap());
+        }
+    }
+
+    /// Binomial-tree allreduce of an opaque byte payload: reduce to rank
+    /// 0 with `combine(acc, incoming)`, then broadcast the result back
+    /// down the tree.  Uses raw (unaccounted) hops on `tag` (reduce) and
+    /// `tag + 1` (broadcast).  Works for any `p >= 1`.
+    fn tree_allreduce_bytes(
+        &mut self,
+        tag: u64,
+        mine: Vec<u8>,
+        combine: impl Fn(&mut Vec<u8>, &[u8]),
+    ) -> Vec<u8> {
         let p = self.nranks;
+        let rank = self.rank;
+        let mut acc = mine;
         if p == 1 {
-            return x;
+            return acc;
         }
-        if self.rank == 0 {
-            let mut acc = x;
-            for r in 1..p {
-                let b = self.recv_raw(r, tag);
-                acc = op(acc, u64::from_le_bytes(b.try_into().unwrap()));
+        // reduce: each rank absorbs children (rank + mask for masks
+        // below its lowest set bit), then forwards to rank - lowbit
+        let mut mask = 1u32;
+        while mask < p {
+            if rank & mask != 0 {
+                self.send_raw(rank - mask, tag, std::mem::take(&mut acc));
+                break;
             }
-            for r in 1..p {
-                self.send_raw(r, tag + 1, acc.to_le_bytes().to_vec());
+            let child = rank + mask;
+            if child < p {
+                let b = self.recv_raw(child, tag);
+                combine(&mut acc, &b);
             }
-            acc
-        } else {
-            self.send_raw(0, tag, x.to_le_bytes().to_vec());
-            let b = self.recv_raw(0, tag + 1);
-            u64::from_le_bytes(b.try_into().unwrap())
+            mask <<= 1;
         }
+        // broadcast: mirror image of the reduce tree
+        let lowbit = if rank == 0 { p.next_power_of_two() } else { rank & rank.wrapping_neg() };
+        if rank != 0 {
+            acc = self.recv_raw(rank - lowbit, tag + 1);
+        }
+        let mut m = lowbit >> 1;
+        while m >= 1 {
+            if rank + m < p {
+                self.send_raw(rank + m, tag + 1, acc.clone());
+            }
+            m >>= 1;
+        }
+        acc
     }
 
     /// Barrier (allreduce of nothing).
     pub fn barrier(&mut self, tag: u64) {
         self.allreduce_max(tag, 0);
-    }
-
-    /// Gather per-rank stats onto rank 0 (None elsewhere).
-    pub fn gather_stats(&mut self, tag: u64) -> Option<Vec<CommStats>> {
-        let p = self.nranks;
-        let mine = self.stats;
-        if self.rank == 0 {
-            let mut all = vec![mine];
-            for r in 1..p {
-                let b = self.recv_raw(r, tag);
-                let mut it = b.chunks_exact(8);
-                let mut next = || u64::from_le_bytes(it.next().unwrap().try_into().unwrap());
-                all.push(CommStats {
-                    messages: next(),
-                    bytes_sent: next(),
-                    collectives: next(),
-                    modeled_ns: next(),
-                    wall_ns: next(),
-                });
-            }
-            Some(all)
-        } else {
-            let mut b = Vec::with_capacity(40);
-            for x in [mine.messages, mine.bytes_sent, mine.collectives, mine.modeled_ns, mine.wall_ns] {
-                b.extend_from_slice(&x.to_le_bytes());
-            }
-            self.send_raw(0, tag, b);
-            None
-        }
     }
 
     // raw send/recv that do not count toward user-visible stats
@@ -190,6 +302,21 @@ impl Comm {
             let pkt = self.inbox.recv().expect("rank channel closed");
             if pkt.0 == from && pkt.1 == tag {
                 return pkt.2;
+            }
+            self.pending.push_back(pkt);
+        }
+    }
+
+    /// Blocking receive of the next message with `tag` from *any* rank.
+    fn recv_any(&mut self, tag: u64) -> (u32, Vec<u8>) {
+        if let Some(pos) = self.pending.iter().position(|&(_, t, _)| t == tag) {
+            let (f, _, payload) = self.pending.remove(pos).unwrap();
+            return (f, payload);
+        }
+        loop {
+            let pkt = self.inbox.recv().expect("rank channel closed");
+            if pkt.1 == tag {
+                return (pkt.0, pkt.2);
             }
             self.pending.push_back(pkt);
         }
@@ -280,16 +407,95 @@ mod tests {
 
     #[test]
     fn allreduce_sum_over_ranks() {
-        let out = run_ranks(8, CostModel::zero(), |c| {
-            c.allreduce_sum(100, c.rank() as u64 + 1)
-        });
-        assert_eq!(out, vec![36; 8]);
+        // p sweep covers power-of-two, odd, and deep non-power trees
+        for p in [1usize, 2, 3, 8, 17] {
+            let expect = (p * (p + 1) / 2) as u64;
+            let out = run_ranks(p, CostModel::zero(), |c| {
+                c.allreduce_sum(100, c.rank() as u64 + 1)
+            });
+            assert_eq!(out, vec![expect; p], "p={p}");
+        }
     }
 
     #[test]
     fn allreduce_max_over_ranks() {
-        let out = run_ranks(5, CostModel::zero(), |c| c.allreduce_max(10, c.rank() as u64));
-        assert_eq!(out, vec![4; 5]);
+        for p in [2usize, 3, 5, 17] {
+            let out = run_ranks(p, CostModel::zero(), |c| c.allreduce_max(10, c.rank() as u64));
+            assert_eq!(out, vec![p as u64 - 1; p], "p={p}");
+        }
+    }
+
+    #[test]
+    fn allreduce_vec_sums_elementwise() {
+        let out = run_ranks(7, CostModel::zero(), |c| {
+            let mut v = vec![c.rank(), 1, 100 + c.rank()];
+            c.allreduce_u32_sum_vec(500, &mut v);
+            v
+        });
+        for v in out {
+            assert_eq!(v, vec![21, 7, 721]);
+        }
+    }
+
+    #[test]
+    fn neighbor_alltoallv_ring() {
+        // each rank sends to (r+1) % p and receives from (r-1+p) % p
+        let p = 6u32;
+        let out = run_ranks(p as usize, CostModel::zero(), |c| {
+            let me = c.rank();
+            let next = (me + 1) % p;
+            let prev = (me + p - 1) % p;
+            let got = c.neighbor_alltoallv(900, &[next], vec![vec![me as u8]], &[prev]);
+            (got, c.stats().messages)
+        });
+        for (r, (got, messages)) in out.into_iter().enumerate() {
+            let prev = ((r + p as usize - 1) % p as usize) as u8;
+            assert_eq!(got, vec![vec![prev]]);
+            assert_eq!(messages, 1, "one message per rank, not p-1");
+        }
+    }
+
+    #[test]
+    fn sparse_alltoallv_discovers_incoming_counts() {
+        // rank r sends one payload to every rank below it
+        let out = run_ranks(5, CostModel::zero(), |c| {
+            let me = c.rank();
+            let peers: Vec<u32> = (0..me).collect();
+            let bufs: Vec<Vec<u8>> = peers.iter().map(|&r| vec![me as u8, r as u8]).collect();
+            c.sparse_alltoallv(700, &peers, bufs)
+        });
+        for (r, got) in out.into_iter().enumerate() {
+            // rank r hears from every rank above it, each payload [from, r]
+            assert_eq!(got.len(), 5 - 1 - r);
+            for (from, payload) in got {
+                assert!(from as usize > r);
+                assert_eq!(payload, vec![from as u8, r as u8]);
+            }
+        }
+    }
+
+    #[test]
+    fn sequential_sparse_exchanges_may_reuse_a_tag() {
+        // ghost.rs calls fetch() twice with the same base tag; the
+        // discovery allreduce acts as a barrier keeping rounds apart
+        run_ranks(4, CostModel::zero(), |c| {
+            for round in 0..3u8 {
+                let me = c.rank();
+                let peer = me ^ 1; // pairs (0,1) and (2,3)
+                let got = c.sparse_alltoallv(600, &[peer], vec![vec![round, me as u8]]);
+                assert_eq!(got.len(), 1);
+                assert_eq!(got[0], (peer, vec![round, peer as u8]), "round {round}");
+            }
+        });
+    }
+
+    #[test]
+    fn sparse_alltoallv_empty_everywhere_completes() {
+        // nobody sends: the discovery round alone must not wedge
+        run_ranks(4, CostModel::zero(), |c| {
+            let got = c.sparse_alltoallv(800, &[], vec![]);
+            assert!(got.is_empty());
+        });
     }
 
     #[test]

@@ -2,11 +2,13 @@
 //!
 //! The paper runs on MPI ranks, one per GPU.  Here a "rank" is an OS
 //! thread with a [`comm::Comm`] handle providing the collective and
-//! point-to-point semantics the coloring algorithms need: `alltoallv`,
-//! `allreduce` (the `Allreduce(conflicts, SUM)` of Algorithm 2), barriers
-//! and tagged sends.  Per-rank byte/message/round counters plus an
-//! interconnect [`cost::CostModel`] reproduce the communication-time
-//! series of Figures 4, 9 and 12 in a hardware-independent way.
+//! point-to-point semantics the coloring algorithms need:
+//! `neighbor_alltoallv`/`sparse_alltoallv` (personalized exchanges over
+//! the partition's cut topology), binomial-tree `allreduce` (the
+//! `Allreduce(conflicts, SUM)` of Algorithm 2), barriers and tagged
+//! sends.  Per-rank byte/message/round counters plus an interconnect
+//! [`cost::CostModel`] reproduce the communication-time series of
+//! Figures 4, 9 and 12 in a hardware-independent way.
 
 pub mod comm;
 pub mod cost;

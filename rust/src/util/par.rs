@@ -2,19 +2,30 @@
 //!
 //! The paper's on-node coloring is Deveci et al.'s bit-based kernels
 //! running data-parallel over the worklist; this module is the Rust twin
-//! of that execution model: a scoped-thread chunked map with no external
-//! dependencies (`std::thread::scope` is already the idiom of the rank
-//! runtime in `distributed/comm.rs`).
+//! of that execution model: a chunked map with no external dependencies.
+//! Two execution strategies share one contract:
 //!
-//! Determinism contract: [`map_chunks`] splits the input into contiguous
-//! in-order chunks and returns the per-chunk results **in chunk order**,
-//! so any algorithm whose chunk function is a pure map over a snapshot
-//! (the Jacobi formulation of VB_BIT/EB_BIT/NB_BIT) produces output that
-//! is bit-identical for every thread count — asserted by
-//! `rust/tests/parallel_kernels.rs`.
+//! * [`map_chunks`] / [`flat_map_chunks`] — scoped threads spawned per
+//!   call (`std::thread::scope`, the idiom of the rank runtime in
+//!   `distributed/comm.rs`).  Simple, but a spawn is ~10µs, which
+//!   dominates on the small loser worklists of the speculative fix loop.
+//! * [`WorkerPool`] / [`Executor`] — a persistent pool whose workers
+//!   park on a condvar between jobs; waking them costs ~1µs.  Each rank
+//!   owns one pool through `KernelScratch`, and every kernel pass and
+//!   conflict-detection scan of a round reuses it.
+//!
+//! Determinism contract (both strategies): the input splits into
+//! contiguous in-order chunks and per-chunk results are returned **in
+//! chunk order**, so any algorithm whose chunk function is a pure map
+//! over a snapshot (the Jacobi formulation of VB_BIT/EB_BIT/NB_BIT)
+//! produces output that is bit-identical for every thread count —
+//! asserted by `rust/tests/parallel_kernels.rs`.
 
 use std::cell::Cell;
+use std::fmt;
 use std::ops::Range;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
 
 use crate::util::timer::thread_cpu_now;
 
@@ -23,6 +34,10 @@ use crate::util::timer::thread_cpu_now;
 /// Chunk boundaries never affect results, so this is safe to tune.
 const MIN_ITEMS_PER_THREAD: usize = 512;
 
+/// The pooled analogue of [`MIN_ITEMS_PER_THREAD`]: a condvar wake is
+/// ~1µs, so pooled fan-out pays off on much smaller worklists.
+const MIN_ITEMS_PER_POOL_WORKER: usize = 64;
+
 thread_local! {
     /// CPU nanoseconds burned by this thread's *workers* in `map_chunks`
     /// fan-outs (monotone counter).  `SplitTimer::comp` measures the
@@ -30,6 +45,13 @@ thread_local! {
     /// crediting worker CPU here keeps per-rank comp accounting honest
     /// when the kernels run with threads > 1.
     static WORKER_CPU_NS: Cell<u64> = const { Cell::new(0) };
+
+    /// True while this thread is executing a pool chunk.  Submitting a
+    /// nested job to the pool from inside a chunk would deadlock it (the
+    /// inner `run` would wait on a slot the outer job can never release
+    /// because this thread still owes its chunk), so [`Executor`] checks
+    /// this flag and degrades nested maps to the inline serial path.
+    static IN_POOL_CHUNK: Cell<bool> = const { Cell::new(false) };
 }
 
 /// Monotone per-thread counter of worker CPU time (ns) spent on this
@@ -41,6 +63,13 @@ pub fn worker_cpu_ns() -> u64 {
 
 fn credit_worker_cpu(ns: u64) {
     WORKER_CPU_NS.with(|c| c.set(c.get() + ns));
+}
+
+/// Run one claimed chunk with the re-entrancy flag raised.
+fn run_chunk_guarded(task: &(dyn Fn(usize) + Sync), i: usize) {
+    IN_POOL_CHUNK.with(|c| c.set(true));
+    task(i);
+    IN_POOL_CHUNK.with(|c| c.set(false));
 }
 
 /// Resolve a thread-count knob: `0` means one worker per available core.
@@ -121,9 +150,266 @@ pub fn flat_map_chunks<T: Sync, R: Send>(
     items: &[T],
     f: impl Fn(&[T]) -> Vec<R> + Sync,
 ) -> Vec<R> {
-    let parts = map_chunks(threads, items, f);
+    concat_parts(map_chunks(threads, items, f))
+}
+
+// ---------------------------------------------------------------------
+// persistent worker pool
+// ---------------------------------------------------------------------
+
+/// Lifetime-erased job closure: `f(chunk_index)`.  The pointee outlives
+/// the job because [`PoolCore::run`] clears the slot and returns only
+/// after every chunk has finished.
+struct TaskPtr(*const (dyn Fn(usize) + Sync));
+
+// SAFETY: the pointee is `Sync` (safe to call from any thread) and the
+// run protocol guarantees it is never dereferenced after `run` returns.
+unsafe impl Send for TaskPtr {}
+
+struct PoolState {
+    /// Current job, if any.
+    task: Option<TaskPtr>,
+    /// Bumped per job so a worker never mixes chunks of two jobs.
+    epoch: u64,
+    nchunks: usize,
+    /// Next unclaimed chunk index.
+    next: usize,
+    /// Chunks completed (job done when `finished == nchunks`).
+    finished: usize,
+    /// CPU ns burned by pool workers on the current job.
+    worker_ns: u64,
+    shutdown: bool,
+}
+
+struct PoolCore {
+    state: Mutex<PoolState>,
+    /// Workers park here between jobs.
+    work: Condvar,
+    /// The submitter parks here until `finished == nchunks`.
+    done: Condvar,
+}
+
+impl PoolCore {
+    /// Execute `task(0..nchunks)` across the pool.  The calling thread
+    /// claims chunks too, so the job completes even with zero live
+    /// workers.  Returns worker (not caller) CPU ns spent on the job.
+    fn run(&self, nchunks: usize, task: &(dyn Fn(usize) + Sync)) -> u64 {
+        let mut st = self.state.lock().unwrap();
+        // shared Executor handles could in principle race on the slot;
+        // serialize submitters rather than corrupt a job
+        while st.task.is_some() {
+            st = self.done.wait(st).unwrap();
+        }
+        st.epoch += 1;
+        st.task = Some(TaskPtr(task as *const _));
+        st.nchunks = nchunks;
+        st.next = 0;
+        st.finished = 0;
+        st.worker_ns = 0;
+        drop(st);
+        self.work.notify_all();
+        let mut st = self.state.lock().unwrap();
+        while st.next < st.nchunks {
+            let i = st.next;
+            st.next += 1;
+            drop(st);
+            run_chunk_guarded(task, i);
+            st = self.state.lock().unwrap();
+            st.finished += 1;
+        }
+        while st.finished < st.nchunks {
+            st = self.done.wait(st).unwrap();
+        }
+        let ns = st.worker_ns;
+        st.task = None;
+        drop(st);
+        self.done.notify_all();
+        ns
+    }
+
+    fn worker_loop(&self) {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if st.shutdown {
+                return;
+            }
+            if st.task.is_some() && st.next < st.nchunks {
+                let task = st.task.as_ref().unwrap().0;
+                let epoch = st.epoch;
+                while st.task.is_some() && st.epoch == epoch && st.next < st.nchunks {
+                    let i = st.next;
+                    st.next += 1;
+                    drop(st);
+                    let t0 = thread_cpu_now();
+                    // SAFETY: a chunk was claimed under the lock, so the
+                    // job (and its closure) cannot complete before this
+                    // chunk's `finished` increment below.
+                    let task_ref: &(dyn Fn(usize) + Sync) = unsafe { &*task };
+                    run_chunk_guarded(task_ref, i);
+                    let dt = thread_cpu_now().saturating_sub(t0);
+                    st = self.state.lock().unwrap();
+                    st.worker_ns += dt.as_nanos() as u64;
+                    st.finished += 1;
+                    if st.finished == st.nchunks {
+                        self.done.notify_all();
+                    }
+                }
+            } else {
+                st = self.work.wait(st).unwrap();
+            }
+        }
+    }
+}
+
+/// A persistent chunk-executing thread pool: `threads - 1` workers
+/// parked on a condvar (the submitting thread is the last worker).
+/// Owned by a rank's `KernelScratch`; kernels and detection passes grab
+/// cheap [`Executor`] handles via [`WorkerPool::executor`].
+pub struct WorkerPool {
+    threads: usize,
+    core: Arc<PoolCore>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Pool sized for `threads` total workers (0 = one per core).
+    pub fn new(threads: usize) -> WorkerPool {
+        let threads = resolve_threads(threads);
+        let core = Arc::new(PoolCore {
+            state: Mutex::new(PoolState {
+                task: None,
+                epoch: 0,
+                nchunks: 0,
+                next: 0,
+                finished: 0,
+                worker_ns: 0,
+                shutdown: false,
+            }),
+            work: Condvar::new(),
+            done: Condvar::new(),
+        });
+        let handles = (1..threads)
+            .map(|i| {
+                let core = Arc::clone(&core);
+                std::thread::Builder::new()
+                    .name(format!("par-pool-{i}"))
+                    .spawn(move || core.worker_loop())
+                    .expect("spawning pool worker")
+            })
+            .collect();
+        WorkerPool { threads, core, handles }
+    }
+
+    /// Total workers (including the submitting thread).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// A cheap, clonable handle for running chunked maps on this pool.
+    pub fn executor(&self) -> Executor {
+        Executor { threads: self.threads, core: Some(Arc::clone(&self.core)) }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.core.state.lock().unwrap().shutdown = true;
+        self.core.work.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl fmt::Debug for WorkerPool {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("WorkerPool").field("threads", &self.threads).finish()
+    }
+}
+
+/// Handle for chunked maps: pooled when built from a [`WorkerPool`],
+/// serial otherwise.  Same in-order chunk contract as [`map_chunks`].
+#[derive(Clone)]
+pub struct Executor {
+    threads: usize,
+    core: Option<Arc<PoolCore>>,
+}
+
+impl Executor {
+    /// An executor that runs everything on the calling thread.
+    pub fn serial() -> Executor {
+        Executor { threads: 1, core: None }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// [`map_chunks`] over an index range with no backing slice: `f`
+    /// receives contiguous in-order sub-ranges of `0..len`; results come
+    /// back in chunk order.
+    pub fn map_range_chunks<R: Send>(
+        &self,
+        len: usize,
+        f: impl Fn(Range<usize>) -> R + Sync,
+    ) -> Vec<R> {
+        // nested submission from inside a pool chunk would deadlock the
+        // pool — run such (and serial / small) maps inline instead
+        let nested = IN_POOL_CHUNK.with(|c| c.get());
+        let k = match &self.core {
+            Some(_) if !nested => self.threads.min(len / MIN_ITEMS_PER_POOL_WORKER).max(1),
+            _ => 1,
+        };
+        if k <= 1 {
+            return vec![f(0..len)];
+        }
+        let core = self.core.as_ref().unwrap();
+        let ranges = chunk_ranges(len, k);
+        let slots: Vec<Mutex<Option<R>>> = (0..k).map(|_| Mutex::new(None)).collect();
+        let worker_ns = core.run(k, &|i| {
+            let r = f(ranges[i].clone());
+            *slots[i].lock().unwrap() = Some(r);
+        });
+        credit_worker_cpu(worker_ns);
+        slots
+            .into_iter()
+            .map(|s| s.into_inner().unwrap().expect("pool chunk not run"))
+            .collect()
+    }
+
+    /// Pooled twin of [`map_chunks`] (same determinism contract).
+    pub fn map_chunks<T: Sync, R: Send>(
+        &self,
+        items: &[T],
+        f: impl Fn(&[T]) -> R + Sync,
+    ) -> Vec<R> {
+        self.map_range_chunks(items.len(), |r| f(&items[r]))
+    }
+
+    /// Pooled twin of [`flat_map_chunks`].
+    pub fn flat_map_chunks<T: Sync, R: Send>(
+        &self,
+        items: &[T],
+        f: impl Fn(&[T]) -> Vec<R> + Sync,
+    ) -> Vec<R> {
+        concat_parts(self.map_chunks(items, f))
+    }
+}
+
+impl fmt::Debug for Executor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("Executor")
+            .field("threads", &self.threads)
+            .field("pooled", &self.core.is_some())
+            .finish()
+    }
+}
+
+/// Concatenate per-chunk vectors in chunk order (no re-copy when there
+/// is only one chunk — the serial path).
+fn concat_parts<R>(parts: Vec<Vec<R>>) -> Vec<R> {
     match <[_; 1]>::try_from(parts) {
-        Ok([only]) => only, // serial path: no re-copy
+        Ok([only]) => only,
         Err(parts) => {
             let mut out = Vec::with_capacity(parts.iter().map(Vec::len).sum());
             for mut p in parts {
@@ -195,5 +481,89 @@ mod tests {
     fn resolve_auto_is_positive() {
         assert!(resolve_threads(0) >= 1);
         assert_eq!(resolve_threads(5), 5);
+    }
+
+    #[test]
+    fn pooled_map_matches_spawned_for_any_thread_count() {
+        let items: Vec<u64> = (0..20_000).collect();
+        let serial: Vec<u64> = items.iter().map(|x| x * 3 + 1).collect();
+        for threads in [1usize, 2, 3, 8] {
+            let pool = WorkerPool::new(threads);
+            let exec = pool.executor();
+            let out = exec.flat_map_chunks(&items, |chunk| {
+                chunk.iter().map(|x| x * 3 + 1).collect::<Vec<u64>>()
+            });
+            assert_eq!(out, serial, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn pool_is_reusable_across_many_jobs() {
+        // the speculative fix loop submits hundreds of small jobs; the
+        // pool must not wedge or leak chunks between them
+        let pool = WorkerPool::new(4);
+        let exec = pool.executor();
+        let items: Vec<u32> = (0..4_096).collect();
+        for round in 0..200u32 {
+            let out = exec.map_chunks(&items, |c| c.iter().map(|&x| x ^ round).sum::<u32>());
+            let expect: u32 = items.iter().map(|&x| x ^ round).sum();
+            assert_eq!(out.into_iter().sum::<u32>(), expect, "round {round}");
+        }
+    }
+
+    #[test]
+    fn map_range_chunks_is_in_order_and_exact() {
+        let pool = WorkerPool::new(8);
+        let exec = pool.executor();
+        let parts = exec.map_range_chunks(10_000, |r| r.clone());
+        let mut expect = 0usize;
+        for r in parts {
+            assert_eq!(r.start, expect);
+            expect = r.end;
+        }
+        assert_eq!(expect, 10_000);
+    }
+
+    #[test]
+    fn executor_outliving_pool_still_completes_on_caller() {
+        let exec = {
+            let pool = WorkerPool::new(4);
+            pool.executor()
+        }; // pool (and its workers) dropped here
+        let items: Vec<u32> = (0..10_000).collect();
+        let out = exec.map_chunks(&items, |c| c.len());
+        assert_eq!(out.into_iter().sum::<usize>(), 10_000);
+    }
+
+    #[test]
+    fn serial_executor_never_chunks() {
+        let exec = Executor::serial();
+        let items: Vec<u32> = (0..100_000).collect();
+        let out = exec.map_chunks(&items, |c| c.len());
+        assert_eq!(out, vec![100_000]);
+    }
+
+    #[test]
+    fn nested_submission_runs_inline_instead_of_deadlocking() {
+        // submitting to the pool from inside a pool chunk must not wedge
+        // (the inner map degrades to the serial path on that thread)
+        let pool = WorkerPool::new(4);
+        let exec = pool.executor();
+        let outer: Vec<u32> = (0..2_048).collect();
+        let out = exec.map_chunks(&outer, |chunk| {
+            let inner: Vec<u32> = (0..512).collect();
+            let nested = exec.map_chunks(&inner, |c| c.len());
+            assert_eq!(nested, vec![512], "nested map must run as one inline chunk");
+            chunk.len()
+        });
+        assert_eq!(out.iter().sum::<usize>(), 2_048);
+    }
+
+    #[test]
+    fn tiny_pooled_inputs_run_inline() {
+        let pool = WorkerPool::new(8);
+        let exec = pool.executor();
+        let out = exec.map_chunks(&[1u32, 2, 3], |c| c.to_vec());
+        assert_eq!(out, vec![vec![1, 2, 3]]);
     }
 }

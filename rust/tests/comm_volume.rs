@@ -1,0 +1,119 @@
+//! Communication-volume tests for the sparse neighbor topology (PR 2):
+//! on a 1D-chain mesh partition the per-rank message count per delta
+//! round must scale with the number of neighbor *ranks* (2 on a chain),
+//! not with the total rank count — plus tree-allreduce equivalence
+//! against the linear definition for awkward rank counts.
+
+use dist_color::coloring::distributed::ghost::LocalGraph;
+use dist_color::coloring::distributed::{
+    color_rank, exchange_delta, exchange_full, DistConfig, ExchangeScratch, NativeBackend,
+};
+use dist_color::coloring::{validate, Color};
+use dist_color::distributed::{run_ranks, CostModel};
+use dist_color::graph::generators::mesh::hex_mesh;
+use dist_color::partition;
+
+/// 16 two-deep slabs of a periodic mesh: every rank has exactly two
+/// neighbor ranks (the slabs above and below).
+const CHAIN_RANKS: usize = 16;
+
+fn chain_fixture() -> (dist_color::graph::Graph, dist_color::partition::Partition) {
+    let g = hex_mesh(4, 4, 2 * CHAIN_RANKS);
+    let part = partition::block(&g, CHAIN_RANKS);
+    (g, part)
+}
+
+#[test]
+fn chain_partition_has_two_neighbor_ranks() {
+    let (g, part) = chain_fixture();
+    let lgs = run_ranks(CHAIN_RANKS, CostModel::zero(), |c| {
+        LocalGraph::build(c, &g, &part, false)
+    });
+    for lg in &lgs {
+        assert_eq!(lg.send_ranks.len(), 2, "rank {}", lg.rank);
+        assert_eq!(lg.recv_ranks.len(), 2, "rank {}", lg.rank);
+    }
+}
+
+#[test]
+fn delta_round_sends_at_most_two_messages_per_neighbor() {
+    // the ISSUE acceptance bound: <= 2 * neighbor-rank count messages
+    // per rank per delta round (the dense exchange sent p - 1 = 15)
+    let (g, part) = chain_fixture();
+    let per_rank = run_ranks(CHAIN_RANKS, CostModel::zero(), |c| {
+        let lg = LocalGraph::build(c, &g, &part, false);
+        let mut colors: Vec<Color> = vec![0; lg.n_local + lg.n_ghost];
+        for v in 0..lg.n_local {
+            colors[v] = (v % 5 + 1) as Color;
+        }
+        exchange_full(c, &lg, &mut colors);
+        let recolored: Vec<u32> = (0..lg.n_boundary1 as u32).collect();
+        let mut xscratch = ExchangeScratch::new();
+        let before = c.stats().messages;
+        exchange_delta(c, &lg, &mut colors, &recolored, 1, &mut xscratch);
+        let sent = c.stats().messages - before;
+        (sent, lg.send_ranks.len() as u64)
+    });
+    for (rank, (sent, neighbors)) in per_rank.into_iter().enumerate() {
+        assert_eq!(neighbors, 2, "rank {rank}");
+        assert!(
+            sent <= 2 * neighbors,
+            "rank {rank} sent {sent} messages in one delta round (> 2 * {neighbors})"
+        );
+        // exactly one message per send-neighbor on this substrate
+        assert_eq!(sent, neighbors, "rank {rank}");
+    }
+}
+
+#[test]
+fn full_d1_run_messages_scale_with_neighbors_not_ranks() {
+    // end-to-end: build (registration + degree fetch request/reply =
+    // 3 * neighbors) + one full exchange + one delta per extra comm
+    // round, each costing `neighbors` messages
+    let (g, part) = chain_fixture();
+    let cfg = DistConfig::default();
+    let outcomes = run_ranks(CHAIN_RANKS, CostModel::zero(), |c| {
+        color_rank(c, &g, &part, cfg, &NativeBackend(cfg.kernel))
+    });
+    let mut colors = vec![0 as Color; g.n()];
+    for o in &outcomes {
+        for &(v, c) in &o.owned_colors {
+            colors[v as usize] = c;
+        }
+    }
+    assert!(validate::is_proper_d1(&g, &colors));
+    for (rank, o) in outcomes.iter().enumerate() {
+        let neighbors = 2u64;
+        let bound = (o.comm_rounds as u64 + 3) * neighbors;
+        assert!(
+            o.comm.messages <= bound,
+            "rank {rank}: {} messages over {} comm rounds (bound {bound})",
+            o.comm.messages,
+            o.comm_rounds
+        );
+        // and nowhere near the dense O(p)-per-round regime
+        let dense_floor = (o.comm_rounds as u64) * (CHAIN_RANKS as u64 - 1);
+        assert!(
+            o.comm.messages < dense_floor,
+            "rank {rank}: sparse path should beat dense {dense_floor}"
+        );
+    }
+}
+
+#[test]
+fn tree_allreduce_matches_linear_reference() {
+    // satellite: equivalence with the linear (definitional) result for
+    // power-of-two, odd, and deep non-power-of-two rank counts
+    for p in [1usize, 2, 3, 8, 17] {
+        let sums = run_ranks(p, CostModel::zero(), |c| {
+            c.allreduce_sum(2_000, (c.rank() as u64 + 1) * 3)
+        });
+        let linear_sum: u64 = (1..=p as u64).map(|r| r * 3).sum();
+        assert_eq!(sums, vec![linear_sum; p], "sum p={p}");
+
+        let maxes = run_ranks(p, CostModel::zero(), |c| {
+            c.allreduce_max(2_100, 1000 - c.rank() as u64)
+        });
+        assert_eq!(maxes, vec![1000; p], "max p={p}");
+    }
+}

@@ -42,4 +42,7 @@ fi
 echo "== micro_kernels PR-1 smoke (writes BENCH_pr1.json) =="
 BENCH_PR1=1 BENCH_REPS="${BENCH_REPS:-3}" cargo bench --bench micro_kernels
 
+echo "== micro_kernels PR-2 smoke (writes BENCH_pr2.json) =="
+BENCH_PR2=1 BENCH_REPS="${BENCH_REPS:-3}" cargo bench --bench micro_kernels
+
 echo "verify: OK"
