@@ -1,6 +1,8 @@
 //! Regenerate *all* of the paper's tables and figures at a chosen scale
 //! in one run.  Each `cargo bench` target covers one figure in depth;
-//! this example is the quick single-entry-point version.
+//! this example is the quick single-entry-point version.  Every
+//! speculative measurement goes through `bench::run_algo`, which drives
+//! the Session/Plan/Run API (one-shot per algo × graph × rank count).
 //!
 //! ```sh
 //! cargo run --release --example paper_figures            # scale 1

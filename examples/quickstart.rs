@@ -1,14 +1,14 @@
-//! Quickstart: color a graph on 4 simulated GPU ranks and validate.
+//! Quickstart: the Session → Plan → Run lifecycle on 4 simulated GPU
+//! ranks.
 //!
 //! ```sh
 //! cargo run --release --example quickstart
 //! ```
 
-use dist_color::coloring::distributed::{color_distributed, DistConfig, NativeBackend};
-use dist_color::coloring::{validate, Problem};
-use dist_color::distributed::CostModel;
+use dist_color::coloring::validate;
 use dist_color::graph::generators;
 use dist_color::partition::{self, PartitionKind};
+use dist_color::session::{GhostLayers, ProblemSpec, Session};
 
 fn main() {
     // 1. build (or load) a graph — here a 3D hexahedral mesh like the
@@ -19,35 +19,45 @@ fn main() {
     // 2. partition it, as the target application would (§3.7)
     let part = partition::partition(&g, 4, PartitionKind::EdgeBalanced, 42);
 
-    // 3. distributed distance-1 coloring with the recolor-degrees
-    //    heuristic (the paper's best configuration); threads: 0 lets
-    //    every rank's on-node kernel use all available cores — the
-    //    coloring is bit-identical for any thread count
-    let cfg = DistConfig {
-        problem: Problem::D1,
-        recolor_degrees: true,
-        threads: 0,
-        ..Default::default()
-    };
-    let result =
-        color_distributed(&g, &part, cfg, CostModel::default(), &NativeBackend(cfg.kernel));
+    // 3. Session: the long-lived rank runtime.  threads(0) gives every
+    //    rank's on-node kernels one worker per core (the default) — the
+    //    coloring is bit-identical for any thread count.
+    let session = Session::builder().ranks(4).threads(0).seed(42).build();
 
-    // 4. inspect + validate
+    // 4. Plan: each rank ingests only its own adjacency rows and builds
+    //    its ghost layers + cut topology exactly once.  A two-layer plan
+    //    serves D1 (as 2GL), D2 and PD2 — construction is shared.
+    let plan = session.plan(&g, &part, GhostLayers::Two);
     println!(
-        "colors={} comm_rounds={} conflicts_fixed={}",
+        "plan: {} ranks, {} ghosts total, {} construction msgs",
+        plan.nranks(),
+        plan.total_ghosts(),
+        plan.build_stats().messages
+    );
+
+    // 5. Run distance-1 with the recolor-degrees heuristic (the paper's
+    //    best configuration) and validate.
+    let result = plan.run(ProblemSpec::d1());
+    println!(
+        "D1: colors={} comm_rounds={} conflicts_fixed={}",
         result.stats.colors_used, result.stats.comm_rounds, result.stats.conflicts
     );
     assert!(validate::is_proper_d1(&g, &result.colors));
     println!("coloring is proper");
 
-    // 5. distance-2 on the same graph (preconditioner / Jacobian uses)
-    let cfg = DistConfig { problem: Problem::D2, ..cfg };
-    let result =
-        color_distributed(&g, &part, cfg, CostModel::default(), &NativeBackend(cfg.kernel));
+    // 6. Distance-2 on the SAME plan (preconditioner / Jacobian uses):
+    //    no ghost layer is rebuilt, no worker pool respawned — only the
+    //    run phase executes.
+    let result = plan.run(ProblemSpec::d2());
     println!(
         "distance-2: colors={} rounds={}",
         result.stats.colors_used, result.stats.comm_rounds
     );
     assert!(validate::is_proper_d2(&g, &result.colors));
     println!("distance-2 coloring is proper");
+
+    // 7. Repeated runs are bit-identical — the recoloring-loop use case.
+    let again = plan.run(ProblemSpec::d2());
+    assert_eq!(again.colors, result.colors);
+    println!("re-run on the plan is bit-identical");
 }

@@ -5,19 +5,21 @@
 //!
 //! Demonstrates:
 //!  * the max-degree > 6000 -> EB_BIT selection rule,
-//!  * recolor-degrees vs baseline: colors and conflict counts,
+//!  * recolor-degrees vs baseline: colors and conflict counts — both
+//!    rules run on the *same plan* per partition (the Session API's
+//!    heuristic-ablation use case: one construction, many runs),
 //!  * partitioner sensitivity (locality vs hash) on irregular graphs.
 //!
 //! ```sh
 //! cargo run --release --example social_network_d1
 //! ```
 
-use dist_color::coloring::distributed::{color_distributed, DistConfig, NativeBackend};
 use dist_color::coloring::local::select_kernel_by_degree;
-use dist_color::coloring::{validate, Problem};
+use dist_color::coloring::validate;
 use dist_color::distributed::CostModel;
 use dist_color::graph::generators::ba;
 use dist_color::partition::{self, PartitionKind};
+use dist_color::session::{GhostLayers, ProblemSpec, Session};
 
 fn main() {
     // heavy-tailed "social network": preferential attachment
@@ -34,8 +36,8 @@ fn main() {
     let kernel = select_kernel_by_degree(g.max_degree());
     println!("selected local kernel (max-degree rule, par. 3.2): {kernel:?}");
 
-    let cost = CostModel::default();
     let ranks = 8;
+    let session = Session::builder().ranks(ranks).cost(CostModel::default()).build();
 
     println!(
         "\n{:<14} {:<10} {:>8} {:>10} {:>9} {:>10}",
@@ -43,15 +45,12 @@ fn main() {
     );
     for pk in [PartitionKind::Bfs, PartitionKind::Hash] {
         let part = partition::partition(&g, ranks, pk, 3);
+        // one plan per partition; both conflict rules reuse it
+        let plan = session.plan(&g, &part, GhostLayers::One);
         for rd in [false, true] {
-            let cfg = DistConfig {
-                problem: Problem::D1,
-                recolor_degrees: rd,
-                kernel,
-                ..Default::default()
-            };
+            let spec = ProblemSpec::d1().with_recolor_degrees(rd).with_kernel(kernel);
             let t = std::time::Instant::now();
-            let r = color_distributed(&g, &part, cfg, cost, &NativeBackend(kernel));
+            let r = plan.run(spec);
             let wall = t.elapsed().as_secs_f64() * 1e3;
             assert!(validate::is_proper_d1(&g, &r.colors));
             println!(

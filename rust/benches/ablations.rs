@@ -14,12 +14,12 @@
 //! Env: BENCH_SCALE (default 2), BENCH_RANKS (default 16).
 
 use dist_color::coloring::distributed::zoltan::{color_zoltan, ZoltanConfig};
-use dist_color::coloring::distributed::{color_distributed, DistConfig, NativeBackend};
 use dist_color::coloring::local::LocalKernel;
-use dist_color::coloring::{validate, Problem};
+use dist_color::coloring::validate;
 use dist_color::distributed::CostModel;
 use dist_color::graph::generators::{ba, mesh};
 use dist_color::partition::{self, metrics, PartitionKind};
+use dist_color::session::{GhostLayers, ProblemSpec, Session};
 
 fn main() {
     let scale: usize =
@@ -29,6 +29,9 @@ fn main() {
     let cost = CostModel::default();
     let mesh_g = mesh::hex_mesh(16 * scale, 16, 8);
     let social = ba::preferential_attachment(4000 * scale, 8, 3);
+    // one Session for every speculative experiment below: the rank
+    // runtime and worker pools persist across all plans and runs
+    let session = Session::builder().ranks(ranks).cost(cost).build();
 
     // ---- A: partitioner ablation ---------------------------------------
     println!("== A: partitioner -> cut / conflicts / rounds / comp (D1, {ranks} ranks) ==");
@@ -45,8 +48,8 @@ fn main() {
         ] {
             let part = partition::partition(g, ranks, pk, 42);
             let cut = metrics::edge_cut(g, &part);
-            let cfg = DistConfig { problem: Problem::D1, ..Default::default() };
-            let r = color_distributed(g, &part, cfg, cost, &NativeBackend(cfg.kernel));
+            let plan = session.plan(g, &part, GhostLayers::One);
+            let r = plan.run(ProblemSpec::d1());
             assert!(validate::is_proper_d1(g, &r.colors));
             println!(
                 "{:<10} {:<14} {:>10} {:>10} {:>7} {:>10.2} {:>7}",
@@ -84,14 +87,16 @@ fn main() {
     println!("\n== C: local kernel ablation (social graph, {ranks} ranks) ==");
     println!("{:<16} {:>10} {:>10} {:>7} {:>7}", "kernel", "comp_ms", "conflicts", "rounds", "colors");
     let part = partition::edge_balanced(&social, ranks);
+    // the kernel ablation is the plan-reuse case: one ghost build, four
+    // kernels run over it with zero reconstruction
+    let kernel_plan = session.plan(&social, &part, GhostLayers::One);
     for kernel in [
         LocalKernel::VbBit,
         LocalKernel::EbBit,
         LocalKernel::Greedy,
         LocalKernel::JonesPlassmann,
     ] {
-        let cfg = DistConfig { problem: Problem::D1, kernel, ..Default::default() };
-        let r = color_distributed(&social, &part, cfg, cost, &NativeBackend(kernel));
+        let r = kernel_plan.run(ProblemSpec::d1().with_kernel(kernel));
         assert!(validate::is_proper_d1(&social, &r.colors));
         println!(
             "{:<16} {:>10.2} {:>10} {:>7} {:>7}",
@@ -106,8 +111,12 @@ fn main() {
     // ---- D: device-factor crossover ---------------------------------------
     println!("\n== D: DEVICE_FACTOR crossover vs Zoltan (mesh, {ranks} ranks) ==");
     let part = partition::edge_balanced(&mesh_g, ranks);
-    let cfg = DistConfig { problem: Problem::D1, ..Default::default() };
-    let ours = color_distributed(&mesh_g, &part, cfg, cost, &NativeBackend(cfg.kernel));
+    // one-shot comparison vs Zoltan: fold construction back into the
+    // bill so both sides pay their build
+    let plan_d = session.plan(&mesh_g, &part, GhostLayers::One);
+    let mut ours = plan_d.run(ProblemSpec::d1());
+    let b = plan_d.build_stats();
+    ours.stats.include_build(b.wall_ns, b.modeled_ns, b.bytes);
     let zol = color_zoltan(&mesh_g, &part, ZoltanConfig::default(), cost);
     println!("{:>8} {:>12} {:>12} {:>8}", "factor", "ours_ms", "zoltan_ms", "winner");
     for factor in [1.0f64, 2.0, 5.0, 10.0, 25.0, 100.0] {

@@ -6,11 +6,10 @@
 //! Env: BENCH_SCALE (default 4), BENCH_MAXRANKS (default 32).
 
 use dist_color::bench::{run_algo, write_csv, Algo, Measurement};
-use dist_color::coloring::distributed::{color_distributed, DistConfig, NativeBackend};
-use dist_color::coloring::Problem;
 use dist_color::distributed::CostModel;
 use dist_color::graph::generators::mesh;
 use dist_color::partition;
+use dist_color::session::{GhostLayers, ProblemSpec, Session};
 
 fn main() {
     let scale: usize =
@@ -31,15 +30,13 @@ fn main() {
     let mut total = 0usize;
     while ranks <= maxranks {
         let part = partition::edge_balanced(&queen, ranks);
-        let base_cfg = DistConfig {
-            problem: Problem::D1,
-            recolor_degrees: false,
-            two_ghost_layers: false,
-            ..Default::default()
-        };
-        let tgl_cfg = DistConfig { two_ghost_layers: true, ..base_cfg };
-        let rb = color_distributed(&queen, &part, base_cfg, cost, &NativeBackend(base_cfg.kernel));
-        let r2 = color_distributed(&queen, &part, tgl_cfg, cost, &NativeBackend(tgl_cfg.kernel));
+        // base and 2GL differ only in the plan's ghost depth; the spec
+        // (plain random rule) is shared
+        let session = Session::builder().ranks(ranks).cost(cost).build();
+        let base_plan = session.plan(&queen, &part, GhostLayers::One);
+        let tgl_plan = session.plan(&queen, &part, GhostLayers::Two);
+        let rb = base_plan.run(ProblemSpec::d1_baseline());
+        let r2 = tgl_plan.run(ProblemSpec::d1_baseline());
         println!(
             "{:>6} {:>14} {:>10} {:>14} {:>12}",
             ranks, rb.stats.comm_rounds, r2.stats.comm_rounds, rb.stats.bytes, r2.stats.bytes
@@ -65,15 +62,19 @@ fn main() {
     let mut ranks = 8usize;
     while ranks <= maxranks {
         let part = partition::edge_balanced(&queen, ranks);
-        let base_cfg = DistConfig {
-            problem: Problem::D1,
-            recolor_degrees: false,
-            two_ghost_layers: false,
-            ..Default::default()
+        // high-latency *end-to-end* totals: fold each plan's build comm
+        // back in, since 2GL's extra round savings trade against its
+        // heavier one-time construction
+        let session = Session::builder().ranks(ranks).cost(hl).build();
+        let run_one_shot = |layers| {
+            let plan = session.plan(&queen, &part, layers);
+            let mut r = plan.run(ProblemSpec::d1_baseline());
+            let b = plan.build_stats();
+            r.stats.include_build(b.wall_ns, b.modeled_ns, b.bytes);
+            r
         };
-        let tgl_cfg = DistConfig { two_ghost_layers: true, ..base_cfg };
-        let rb = color_distributed(&queen, &part, base_cfg, hl, &NativeBackend(base_cfg.kernel));
-        let r2 = color_distributed(&queen, &part, tgl_cfg, hl, &NativeBackend(tgl_cfg.kernel));
+        let rb = run_one_shot(GhostLayers::One);
+        let r2 = run_one_shot(GhostLayers::Two);
         println!(
             "{:>6} {:>14.2} {:>12.2}",
             ranks,

@@ -9,22 +9,28 @@
 //! Set `BENCH_PR1=1` (as `scripts/verify.sh` does) to run only the
 //! serial-vs-parallel smoke suite and write `BENCH_pr1.json`; set
 //! `BENCH_PR2=1` to run the dense-vs-sparse exchange and
-//! serial-vs-pooled detection smoke and write `BENCH_pr2.json`.  Both
-//! JSON schemas are documented in `rust/benches/README.md`.
+//! serial-vs-pooled detection smoke and write `BENCH_pr2.json`; set
+//! `BENCH_PR3=1` to run the Session/Plan/Run reuse smoke (plan-build vs
+//! per-run time split, zero-reconstruction check) and write
+//! `BENCH_pr3.json`.  All JSON schemas are documented in
+//! `rust/benches/README.md`.
 
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::time::Instant;
 
 use dist_color::coloring::distributed::ghost::LocalGraph;
 use dist_color::coloring::distributed::{
-    detect_conflicts, exchange_delta, exchange_full, DistConfig, ExchangeScratch,
+    color_distributed, detect_conflicts, exchange_delta, exchange_full, DistConfig,
+    ExchangeScratch, NativeBackend,
 };
 use dist_color::coloring::local::{eb_bit, greedy, jp, nb_bit, vb_bit, KernelScratch, LocalView};
 use dist_color::coloring::Color;
 use dist_color::distributed::comm::encode_u32s;
 use dist_color::distributed::{run_ranks, CommStats, CostModel};
 use dist_color::graph::generators::{ba, erdos_renyi::gnm, mesh};
-use dist_color::graph::Graph;
+use dist_color::graph::{Graph, VId};
 use dist_color::partition;
+use dist_color::session::{GhostLayers, GraphSource, ProblemSpec, RankSlab, Session};
 
 fn median_ms(reps: usize, mut f: impl FnMut()) -> f64 {
     f(); // warmup
@@ -317,6 +323,112 @@ fn pr2_smoke() {
     );
 }
 
+/// A `GraphSource` wrapper that counts `load_rank` calls: the witness
+/// that repeated `plan.run()` performs zero graph (re)ingestion and
+/// zero ghost-layer construction.
+struct CountingSource<'g> {
+    g: &'g Graph,
+    loads: AtomicUsize,
+}
+
+impl GraphSource for CountingSource<'_> {
+    fn n_vertices(&self) -> usize {
+        self.g.n()
+    }
+    fn load_rank(&self, rank: u32, owned: &[VId]) -> RankSlab {
+        self.loads.fetch_add(1, Ordering::Relaxed);
+        GraphSource::load_rank(self.g, rank, owned)
+    }
+}
+
+/// Session/Plan/Run reuse smoke: records the plan-build vs per-run time
+/// split and enforces (a) repeated runs re-ingest nothing, (b) plan runs
+/// and the one-shot `color_distributed` wrapper are bit-identical.
+/// Written to `BENCH_pr3.json`.
+fn pr3_smoke() {
+    let reps: usize =
+        std::env::var("BENCH_REPS").ok().and_then(|s| s.parse().ok()).unwrap_or(5);
+    let ranks = 8usize;
+    let (mx, my, mz) = (16usize, 16usize, 32usize);
+    eprintln!("pr3 smoke: hex_mesh({mx}, {my}, {mz}) over {ranks} edge-balanced ranks ...");
+    let g = mesh::hex_mesh(mx, my, mz);
+    let part = partition::edge_balanced(&g, ranks);
+    let source = CountingSource { g: &g, loads: AtomicUsize::new(0) };
+    let session = Session::builder().ranks(ranks).cost(CostModel::default()).threads(1).build();
+
+    // ---- plan build vs run time split (one-layer D1) -------------------
+    let plan_build_ms = median_ms(reps, || {
+        let p = session.plan(&source, &part, GhostLayers::One);
+        std::hint::black_box(p.total_ghosts());
+    });
+    let loads_before = source.loads.load(Ordering::Relaxed);
+    let plan = session.plan(&source, &part, GhostLayers::One);
+    assert_eq!(source.loads.load(Ordering::Relaxed), loads_before + ranks);
+    let spec = ProblemSpec::d1();
+    let first = plan.run(spec);
+    let mut runs_identical = true;
+    let run_ms = median_ms(reps, || {
+        let r = plan.run(spec);
+        runs_identical &= r.colors == first.colors;
+    });
+    // the hard zero-reconstruction gate: N runs later, still exactly one
+    // slab ingestion per rank
+    assert_eq!(
+        source.loads.load(Ordering::Relaxed),
+        loads_before + ranks,
+        "plan.run() re-ingested the graph"
+    );
+
+    // ---- one-shot wrapper on the same workload -------------------------
+    let cfg = DistConfig { seed: 42, threads: 1, ..Default::default() };
+    let mut wrapper = color_distributed(&g, &part, cfg, CostModel::default(), &NativeBackend(cfg.kernel));
+    let oneshot_ms = median_ms(reps, || {
+        wrapper = color_distributed(&g, &part, cfg, CostModel::default(), &NativeBackend(cfg.kernel));
+    });
+    let wrapper_identical = wrapper.colors == first.colors;
+    let reuse_speedup = oneshot_ms / run_ms;
+    println!(
+        "plan build: {plan_build_ms:>8.2} ms   plan run: {run_ms:>8.2} ms   \
+         one-shot: {oneshot_ms:>8.2} ms ({reuse_speedup:.2}x per-run saving)"
+    );
+
+    // ---- shared two-layer plan: 2GL + D2 + PD2-style reuse --------------
+    let plan2 = session.plan(&source, &part, GhostLayers::Two);
+    let run_2gl_ms = median_ms(reps, || {
+        let r = plan2.run(ProblemSpec::d1());
+        std::hint::black_box(r.stats.colors_used);
+    });
+    let run_d2_ms = median_ms(reps, || {
+        let r = plan2.run(ProblemSpec::d2());
+        std::hint::black_box(r.stats.colors_used);
+    });
+    println!(
+        "two-layer plan shared: 2GL run {run_2gl_ms:.2} ms, D2 run {run_d2_ms:.2} ms \
+         (one construction for both)"
+    );
+
+    let json = format!(
+        "{{\n  \"bench\": \"micro_kernels_pr3\",\n  \"schema\": 1,\n  \"reps\": {reps},\n  \
+         \"host_cores\": {},\n  \
+         \"graph\": {{\"kind\": \"hex_mesh\", \"nx\": {mx}, \"ny\": {my}, \"nz\": {mz}}},\n  \
+         \"ranks\": {ranks},\n  \"d1\": {{\n    \
+         \"plan_build_ms\": {plan_build_ms:.3},\n    \"run_ms\": {run_ms:.3},\n    \
+         \"oneshot_ms\": {oneshot_ms:.3},\n    \"reuse_speedup\": {reuse_speedup:.3},\n    \
+         \"build_fraction_of_oneshot\": {:.3}\n  }},\n  \"shared_two_layer\": {{\n    \
+         \"run_2gl_ms\": {run_2gl_ms:.3},\n    \"run_d2_ms\": {run_d2_ms:.3}\n  }},\n  \
+         \"source_loads_per_plan\": {},\n  \"runs_identical\": {runs_identical},\n  \
+         \"wrapper_identical\": {wrapper_identical}\n}}\n",
+        std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1),
+        (plan_build_ms / oneshot_ms).clamp(0.0, 1.0),
+        ranks,
+    );
+    std::fs::write("BENCH_pr3.json", &json).expect("writing BENCH_pr3.json");
+    println!("-> BENCH_pr3.json");
+    // asserted after the JSON is on disk, so a regression is recorded
+    assert!(runs_identical, "repeated plan.run() diverged");
+    assert!(wrapper_identical, "Session and color_distributed colorings diverged");
+}
+
 fn main() {
     if std::env::var("BENCH_PR1").is_ok_and(|v| v == "1") {
         pr1_smoke();
@@ -324,6 +436,10 @@ fn main() {
     }
     if std::env::var("BENCH_PR2").is_ok_and(|v| v == "1") {
         pr2_smoke();
+        return;
+    }
+    if std::env::var("BENCH_PR3").is_ok_and(|v| v == "1") {
+        pr3_smoke();
         return;
     }
     let reps: usize =

@@ -6,13 +6,12 @@ pub mod profiles;
 pub mod suite;
 
 use crate::coloring::distributed::zoltan::{color_zoltan, ZoltanConfig};
-use crate::coloring::distributed::{
-    color_distributed, DistConfig, LocalBackend, NativeBackend, RunResult,
-};
+use crate::coloring::distributed::{LocalBackend, RunResult};
 use crate::coloring::{validate, Problem};
 use crate::distributed::CostModel;
 use crate::graph::Graph;
 use crate::partition::{self, PartitionKind};
+use crate::session::{GhostLayers, ProblemSpec, Session};
 
 /// Which algorithm an experiment runs.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -121,6 +120,42 @@ impl Measurement {
     }
 }
 
+/// [`ProblemSpec`] + ghost-layer choice for a speculative (non-Zoltan)
+/// experiment algorithm.
+fn spec_of(algo: Algo, seed: u64) -> (ProblemSpec, GhostLayers) {
+    let spec = ProblemSpec {
+        problem: algo.problem(),
+        recolor_degrees: matches!(algo, Algo::D1RecolorDegree | Algo::D2 | Algo::PD2),
+        seed: Some(seed),
+        ..Default::default()
+    };
+    let layers = match algo {
+        Algo::D1Baseline | Algo::D1RecolorDegree => GhostLayers::One,
+        _ => GhostLayers::Two,
+    };
+    (spec, layers)
+}
+
+/// One-shot Session run (plan + run + build accounting) — the bench
+/// layer's equivalent of `color_distributed`, kept explicit so the
+/// harnesses exercise the Session API directly.
+fn session_one_shot(
+    g: &Graph,
+    part: &partition::Partition,
+    spec: ProblemSpec,
+    layers: GhostLayers,
+    seed: u64,
+    cost: CostModel,
+    backend: &dyn LocalBackend,
+) -> RunResult {
+    let session = Session::builder().ranks(part.nparts).cost(cost).seed(seed).build();
+    let plan = session.plan(g, part, layers);
+    let mut result = plan.run_with_backend(spec, backend);
+    let b = plan.build_stats();
+    result.stats.include_build(b.wall_ns, b.modeled_ns, b.bytes);
+    result
+}
+
 /// Run `algo` on `g` over `nranks` simulated ranks and validate.
 pub fn run_algo(
     algo: Algo,
@@ -137,18 +172,9 @@ pub fn run_algo(
             color_zoltan(g, &part, cfg, cost)
         }
         _ => {
-            let cfg = DistConfig {
-                problem: algo.problem(),
-                recolor_degrees: matches!(
-                    algo,
-                    Algo::D1RecolorDegree | Algo::D2 | Algo::PD2
-                ),
-                two_ghost_layers: algo == Algo::D1TwoGhostLayers,
-                seed,
-                ..Default::default()
-            };
-            let backend = NativeBackend(cfg.kernel);
-            color_distributed(g, &part, cfg, cost, &backend)
+            let (spec, layers) = spec_of(algo, seed);
+            let backend = crate::coloring::distributed::NativeBackend(spec.kernel);
+            session_one_shot(g, &part, spec, layers, seed, cost, &backend)
         }
     };
     measurement_of(algo, graph_name, nranks, g, &result)
@@ -194,14 +220,8 @@ pub fn run_algo_with_backend(
         "Zoltan baseline is CPU-serial by definition"
     );
     let part = partition::partition(g, nranks, PartitionKind::EdgeBalanced, seed);
-    let cfg = DistConfig {
-        problem: algo.problem(),
-        recolor_degrees: matches!(algo, Algo::D1RecolorDegree | Algo::D2 | Algo::PD2),
-        two_ghost_layers: algo == Algo::D1TwoGhostLayers,
-        seed,
-        ..Default::default()
-    };
-    let result = color_distributed(g, &part, cfg, cost, backend);
+    let (spec, layers) = spec_of(algo, seed);
+    let result = session_one_shot(g, &part, spec, layers, seed, cost, backend);
     measurement_of(algo, graph_name, nranks, g, &result)
 }
 

@@ -21,10 +21,18 @@
 //! resulting neighbor-rank sets are recorded as
 //! [`LocalGraph::send_ranks`] / [`LocalGraph::recv_ranks`], the fixed
 //! topology every later boundary-color exchange iterates.
+//!
+//! Construction reads **only the rank-local slab** (a
+//! [`RankSlab`](crate::session::source::RankSlab) of the owned rows,
+//! served by any [`GraphSource`](crate::session::source::GraphSource)):
+//! ghost adjacency and degrees come from their owners over `comm`, never
+//! from global structure, so no rank needs the whole graph in memory.
+//! [`LocalGraph::build`] survives as the in-memory compatibility shim.
 
 use crate::distributed::comm::{decode_u32s, encode_u32s, Comm};
 use crate::graph::{Graph, GraphBuilder, VId};
 use crate::partition::Partition;
+use crate::session::source::{GraphSource, RankSlab};
 
 /// Base tags for the construction-phase collectives (each sparse
 /// collective consumes `tag..tag+3`).
@@ -89,11 +97,34 @@ pub struct LocalGraph {
 impl LocalGraph {
     /// Build the local graph for `comm.rank()` from the application's
     /// global graph + partition.  Collective: all ranks must call.
+    ///
+    /// Compatibility shim over [`LocalGraph::build_from_slab`]: slices
+    /// this rank's rows out of the global CSR and forgets `g`.  New code
+    /// goes through `Session::plan`, which feeds slabs from any
+    /// [`GraphSource`].
     pub fn build(comm: &mut Comm, g: &Graph, part: &Partition, two_layers: bool) -> LocalGraph {
+        let owned_sorted: Vec<VId> = part.owned(comm.rank());
+        let slab = GraphSource::load_rank(g, comm.rank(), &owned_sorted);
+        Self::build_from_slab(comm, &slab, owned_sorted, part, two_layers)
+    }
+
+    /// Build the local graph from this rank's adjacency slab alone: the
+    /// complete rows of `owned_sorted` (ascending gids), with neighbor
+    /// entries as global ids.  Nothing here reads global edge structure —
+    /// ghost adjacency and degrees are fetched from their owners over
+    /// `comm` — which is what lets `Session::plan` ingest graphs no
+    /// single rank could hold.  Collective: all ranks must call.
+    pub(crate) fn build_from_slab(
+        comm: &mut Comm,
+        slab: &RankSlab,
+        owned_sorted: Vec<VId>,
+        part: &Partition,
+        two_layers: bool,
+    ) -> LocalGraph {
         let rank = comm.rank();
         let p = comm.nranks() as usize;
-        let owned_sorted: Vec<VId> = part.owned(rank);
         let n_local = owned_sorted.len();
+        debug_assert_eq!(slab.rows(), n_local, "slab row count != owned count");
 
         // ---- boundary-first local ordering ---------------------------
         // Group the owned vertices as [boundary-1 | boundary-2-only |
@@ -103,30 +134,30 @@ impl LocalGraph {
         // two-layer builds (a layer-2 ghost's owner sees it as boundary-2
         // at worst) — which is what lets the driver ship boundary colors
         // before the interior is colored.
-        let is_remote_adjacent = |v: VId| -> bool {
-            g.neighbors(v).iter().any(|&u| part.owner[u as usize] != rank)
-        };
-        let b1: Vec<bool> = owned_sorted.iter().map(|&v| is_remote_adjacent(v)).collect();
+        let b1: Vec<bool> = (0..n_local)
+            .map(|i| slab.row(i).iter().any(|&u| part.owner[u as usize] != rank))
+            .collect();
         // owned_sorted is ascending, so ownership tests are binary searches
-        let b2: Vec<bool> = owned_sorted
-            .iter()
-            .enumerate()
-            .map(|(i, &v)| {
+        let b2: Vec<bool> = (0..n_local)
+            .map(|i| {
                 b1[i]
-                    || g.neighbors(v)
+                    || slab
+                        .row(i)
                         .iter()
                         .any(|&u| owned_sorted.binary_search(&u).is_ok_and(|j| b1[j]))
             })
             .collect();
-        let mut owned: Vec<VId> = Vec::with_capacity(n_local);
-        owned.extend(owned_sorted.iter().enumerate().filter(|&(i, _)| b1[i]).map(|(_, &v)| v));
-        let n_boundary1 = owned.len();
-        owned.extend(
-            owned_sorted.iter().enumerate().filter(|&(i, _)| !b1[i] && b2[i]).map(|(_, &v)| v),
-        );
-        let n_boundary2 = owned.len();
-        owned.extend(owned_sorted.iter().enumerate().filter(|&(i, _)| !b2[i]).map(|(_, &v)| v));
-        debug_assert_eq!(owned.len(), n_local);
+        // `order[li]` = ascending-gid index of the li-th vertex of the
+        // boundary-first layout; the slab stays indexed by ascending
+        // position, so every row access below goes through `order`.
+        let mut order: Vec<usize> = Vec::with_capacity(n_local);
+        order.extend((0..n_local).filter(|&i| b1[i]));
+        let n_boundary1 = order.len();
+        order.extend((0..n_local).filter(|&i| !b1[i] && b2[i]));
+        let n_boundary2 = order.len();
+        order.extend((0..n_local).filter(|&i| !b2[i]));
+        debug_assert_eq!(order.len(), n_local);
+        let owned: Vec<VId> = order.iter().map(|&i| owned_sorted[i]).collect();
 
         // global -> local map for owned vertices
         let mut lid = std::collections::HashMap::<VId, u32>::with_capacity(n_local * 2);
@@ -136,8 +167,8 @@ impl LocalGraph {
 
         // ---- first-layer ghosts -------------------------------------
         let mut ghosts1: Vec<VId> = Vec::new();
-        for &v in &owned {
-            for &u in g.neighbors(v) {
+        for &i in &order {
+            for &u in slab.row(i) {
                 if part.owner[u as usize] != rank && !lid.contains_key(&u) {
                     lid.insert(u, 0); // placeholder, fixed below
                     ghosts1.push(u);
@@ -156,8 +187,12 @@ impl LocalGraph {
         let mut ghosts2: Vec<VId> = Vec::new();
         if two_layers {
             let replies = fetch(comm, part, &ghosts1, |v| {
-                let mut out = vec![g.degree(v) as u32];
-                out.extend_from_slice(g.neighbors(v));
+                // owner-side: v is one of *our* owned vertices
+                let i = owned_sorted.binary_search(&v).expect("fetch of a non-owned vertex");
+                let row = slab.row(i);
+                let mut out = Vec::with_capacity(row.len() + 1);
+                out.push(row.len() as u32);
+                out.extend_from_slice(row);
                 out
             });
             ghost_adj = replies;
@@ -184,12 +219,15 @@ impl LocalGraph {
         gids.extend_from_slice(&ghosts1);
         gids.extend_from_slice(&ghosts2);
 
-        // ---- degrees: owned from g, ghosts fetched from owners --------
+        // ---- degrees: owned from the slab, ghosts fetched from owners --
         let all_ghosts: Vec<VId> = gids[n_local..].to_vec();
-        let deg_replies = fetch(comm, part, &all_ghosts, |v| vec![g.degree(v) as u32]);
+        let deg_replies = fetch(comm, part, &all_ghosts, |v| {
+            let i = owned_sorted.binary_search(&v).expect("fetch of a non-owned vertex");
+            vec![slab.degree(i) as u32]
+        });
         let mut degrees: Vec<u32> = Vec::with_capacity(n_local + n_ghost);
-        for &v in &owned {
-            degrees.push(g.degree(v) as u32);
+        for &i in &order {
+            degrees.push(slab.degree(i) as u32);
         }
         for r in &deg_replies {
             debug_assert_eq!(r.len(), 1);
@@ -249,10 +287,10 @@ impl LocalGraph {
 
         // ---- local CSR -------------------------------------------------
         let nl = n_local + n_ghost;
-        let mut b = GraphBuilder::with_edge_capacity(nl, owned.iter().map(|&v| g.degree(v)).sum());
-        for (i, &v) in owned.iter().enumerate() {
-            for &u in g.neighbors(v) {
-                b.edge(i as VId, lid[&u]);
+        let mut b = GraphBuilder::with_edge_capacity(nl, slab.arcs());
+        for (li, &i) in order.iter().enumerate() {
+            for &u in slab.row(i) {
+                b.edge(li as VId, lid[&u]);
             }
         }
         if two_layers {
@@ -320,9 +358,11 @@ impl LocalGraph {
     }
 
     /// Interior vertices: owned, no ghost neighbor (never conflict,
-    /// §2.4).  A contiguous suffix under the boundary-first ordering.
-    pub fn interior(&self) -> Vec<u32> {
-        (self.n_boundary1 as u32..self.n_local as u32).collect()
+    /// §2.4).  A contiguous id suffix under the boundary-first ordering,
+    /// so this is just the range — no allocation, iterate it directly.
+    #[inline]
+    pub fn interior(&self) -> std::ops::Range<u32> {
+        self.n_boundary1 as u32..self.n_local as u32
     }
 }
 
@@ -435,7 +475,7 @@ mod tests {
                     lg.boundary_d2,
                     (0..lg.n_boundary2 as u32).collect::<Vec<u32>>()
                 );
-                assert_eq!(lg.interior(), (lg.n_boundary1 as u32..lg.n_local as u32).collect::<Vec<u32>>());
+                assert_eq!(lg.interior(), lg.n_boundary1 as u32..lg.n_local as u32);
                 // every vertex another rank subscribes to sits in the
                 // prefix whose colors the overlapped send ships
                 let bound = if two { lg.n_boundary2 } else { lg.n_boundary1 };

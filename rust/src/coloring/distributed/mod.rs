@@ -33,6 +33,14 @@
 //! overwritten by the owner's authoritative update at the next exchange,
 //! so correctness never depends on them (mirroring the paper's
 //! temporarily-recolor-then-restore ghosts trick).
+//!
+//! **API note.** The stable public surface is [`crate::session`]
+//! (Session → Plan → Run): construction paid once, runs repeatable.
+//! [`color_distributed`] is kept as the one-shot compatibility wrapper
+//! over that lifecycle.  The driver pieces below (`color_rank`,
+//! `detect_conflicts`, the `exchange_*` family, `ExchangeScratch`) are
+//! internals exposed `#[doc(hidden)]` solely for this repo's white-box
+//! benches and tests — they may change without notice.
 
 pub mod conflict;
 pub mod ghost;
@@ -41,7 +49,7 @@ pub mod zoltan;
 use crate::coloring::local::{color_local_with, nb_bit, KernelScratch, LocalKernel, LocalView};
 use crate::coloring::{colors_used, Color, Problem};
 use crate::distributed::comm::{decode_u32s, encode_u32s, Comm};
-use crate::distributed::{run_ranks, CostModel};
+use crate::distributed::CostModel;
 use crate::distributed::cost::CommStats;
 use crate::graph::{Graph, VId};
 use crate::partition::Partition;
@@ -65,7 +73,10 @@ pub struct DistConfig {
     /// Local kernel for the native backend.
     pub kernel: LocalKernel,
     /// Worker threads per rank for the on-node kernel passes (0 = one
-    /// per available core).  Colorings are identical for every value.
+    /// per available core, which is also the default).  Colorings are
+    /// identical for every value.  The CLI exposes this as `--threads`
+    /// (default 0) and feeds it to `SessionBuilder::threads`; library
+    /// callers set it here or on the builder directly.
     pub threads: usize,
     pub seed: u64,
     /// Safety cap on recoloring rounds.
@@ -79,7 +90,7 @@ impl Default for DistConfig {
             recolor_degrees: true,
             two_ghost_layers: false,
             kernel: LocalKernel::VbBit,
-            threads: 1,
+            threads: 0,
             seed: 42,
             max_rounds: 500,
         }
@@ -123,6 +134,15 @@ pub trait LocalBackend: Sync {
 /// The native (pure Rust) kernels.
 pub struct NativeBackend(pub LocalKernel);
 
+thread_local! {
+    /// Lazy per-thread serial scratch for no-scratch [`NativeBackend`]
+    /// calls: the old path constructed a fresh `KernelScratch::new(1)`
+    /// per call, re-growing the priority caches every time; this one
+    /// persists (and keeps its caches warm) for the thread's lifetime.
+    static SERIAL_SCRATCH: std::cell::RefCell<KernelScratch> =
+        std::cell::RefCell::new(KernelScratch::new(1));
+}
+
 impl LocalBackend for NativeBackend {
     fn color(
         &self,
@@ -131,7 +151,9 @@ impl LocalBackend for NativeBackend {
         colors: &mut [Color],
         seed: u64,
     ) -> usize {
-        self.color_with_scratch(problem, view, colors, seed, &mut KernelScratch::new(1))
+        SERIAL_SCRATCH.with(|s| {
+            self.color_with_scratch(problem, view, colors, seed, &mut s.borrow_mut())
+        })
     }
 
     fn color_with_scratch(
@@ -189,6 +211,16 @@ impl RunStats {
     pub fn wall_ns(&self) -> u64 {
         self.comp_ns + self.comm_wall_ns
     }
+
+    /// Fold a plan's construction costs into these (run-phase) stats —
+    /// how the one-shot [`color_distributed`] wrapper keeps ghost-build
+    /// traffic on the bill.  Plan-reusing callers skip this: their
+    /// construction is amortized and reported by `Plan::build_stats`.
+    pub fn include_build(&mut self, wall_ns: u64, modeled_ns: u64, bytes: u64) {
+        self.comm_wall_ns += wall_ns;
+        self.comm_modeled_ns += modeled_ns;
+        self.bytes += bytes;
+    }
 }
 
 /// Result of a full distributed run.
@@ -199,7 +231,12 @@ pub struct RunResult {
     pub stats: RunStats,
 }
 
-/// Run the distributed coloring across `part.nparts` simulated ranks.
+/// One-shot distributed coloring across `part.nparts` simulated ranks —
+/// a thin compatibility wrapper over the [`crate::session`] lifecycle
+/// (build a Session, plan once, run once).  Colorings are bit-identical
+/// to driving the Session API directly (enforced by
+/// `tests/session_api.rs`); callers that color the same topology more
+/// than once should hold the `Plan` themselves instead.
 pub fn color_distributed(
     g: &Graph,
     part: &Partition,
@@ -207,15 +244,35 @@ pub fn color_distributed(
     cost: CostModel,
     backend: &dyn LocalBackend,
 ) -> RunResult {
-    let outcomes = run_ranks(part.nparts, cost, |comm| {
-        color_rank(comm, g, part, cfg, backend)
-    });
-    assemble(g, outcomes, part.nparts)
+    use crate::session::{GhostLayers, ProblemSpec, Session};
+    let session = Session::builder()
+        .ranks(part.nparts)
+        .cost(cost)
+        .threads(cfg.threads)
+        .seed(cfg.seed)
+        .build();
+    let layers = match cfg.problem {
+        Problem::D1 if !cfg.two_ghost_layers => GhostLayers::One,
+        _ => GhostLayers::Two, // D2/PD2 always need the 2-hop view (§3.5)
+    };
+    let plan = session.plan(g, part, layers);
+    let spec = ProblemSpec {
+        problem: cfg.problem,
+        recolor_degrees: cfg.recolor_degrees,
+        kernel: cfg.kernel,
+        seed: None,
+        max_rounds: cfg.max_rounds,
+    };
+    let mut out = plan.run_with_backend(spec, backend);
+    // one-shot semantics: construction cost is part of this run's bill
+    let b = plan.build_stats();
+    out.stats.include_build(b.wall_ns, b.modeled_ns, b.bytes);
+    out
 }
 
 /// Combine per-rank outcomes into a global color array + stats.
-pub fn assemble(g: &Graph, outcomes: Vec<RankOutcome>, nranks: usize) -> RunResult {
-    let mut colors = vec![0 as Color; g.n()];
+pub(crate) fn assemble(n_global: usize, outcomes: Vec<RankOutcome>, nranks: usize) -> RunResult {
+    let mut colors = vec![0 as Color; n_global];
     let mut stats = RunStats {
         nranks,
         comm_rounds: 0,
@@ -245,7 +302,11 @@ pub fn assemble(g: &Graph, outcomes: Vec<RankOutcome>, nranks: usize) -> RunResu
     RunResult { colors, stats }
 }
 
-/// The per-rank body of Algorithm 2.
+/// Build-then-run per-rank body of Algorithm 2 (the pre-Session shape,
+/// kept for white-box comm-volume tests): constructs this rank's
+/// `LocalGraph` and a fresh scratch, then runs one coloring over them.
+/// `Session::plan` + `Plan::run` split these phases instead.
+#[doc(hidden)]
 pub fn color_rank(
     comm: &mut Comm,
     g: &Graph,
@@ -257,15 +318,35 @@ pub fn color_rank(
         Problem::D1 => cfg.two_ghost_layers,
         Problem::D2 | Problem::PD2 => true, // §3.5: D2 needs the 2-hop view
     };
-    let mut timers = SplitTimer::new();
-    let lg = timers.comm(|| LocalGraph::build(comm, g, part, two_layers));
+    let mut build_timer = SplitTimer::new();
+    let lg = build_timer.comm(|| LocalGraph::build(comm, g, part, two_layers));
+    let mut scratch = KernelScratch::new(cfg.threads);
+    let mut out = color_rank_planned(comm, &lg, cfg, backend, &mut scratch);
+    out.timers.comm += build_timer.comm;
+    out
+}
 
+/// The run phase of Algorithm 2 over an already-built `LocalGraph`:
+/// everything [`color_rank`] did after construction.  Performs zero
+/// ghost-layer work — `Plan::run` calls this with the plan's per-rank
+/// graphs and the session's persistent scratch.
+pub(crate) fn color_rank_planned(
+    comm: &mut Comm,
+    lg: &LocalGraph,
+    cfg: DistConfig,
+    backend: &dyn LocalBackend,
+    scratch: &mut KernelScratch,
+) -> RankOutcome {
+    let two_layers = match cfg.problem {
+        Problem::D1 => cfg.two_ghost_layers,
+        Problem::D2 | Problem::PD2 => true, // §3.5: D2 needs the 2-hop view
+    };
+    let mut timers = SplitTimer::new();
     let n_all = lg.n_local + lg.n_ghost;
     let mut colors: Vec<Color> = vec![0; n_all];
-    // per-rank kernel scratch (owns the persistent worker pool), reused
-    // by every kernel call this rank makes; `exec` is a cheap handle on
-    // the same pool for the detection scans
-    let mut scratch = KernelScratch::new(cfg.threads);
+    // `scratch` is the rank's persistent kernel state (priority caches +
+    // worker pool), reused by every kernel call; `exec` is a cheap
+    // handle on the same pool for the detection scans
     let exec = scratch.executor();
 
     // ---- initial local coloring (ghosts unknown/uncolored), overlapped
@@ -284,12 +365,12 @@ pub fn color_rank(
                 &LocalView { graph: &lg.graph, mask: &mask },
                 &mut colors,
                 seed0,
-                &mut scratch,
+                scratch,
             )
         });
     }
     let mut comm_rounds = 1usize;
-    timers.comm(|| exchange_full_send(comm, &lg, &colors));
+    timers.comm(|| exchange_full_send(comm, lg, &colors));
     if pre < lg.n_local {
         mask[..pre].fill(false);
         mask[pre..lg.n_local].fill(true);
@@ -299,14 +380,14 @@ pub fn color_rank(
                 &LocalView { graph: &lg.graph, mask: &mask },
                 &mut colors,
                 seed0,
-                &mut scratch,
+                scratch,
             )
         });
         mask[pre..lg.n_local].fill(false);
     } else {
         mask[..pre].fill(false);
     }
-    timers.comm(|| exchange_full_recv(comm, &lg, &mut colors));
+    timers.comm(|| exchange_full_recv(comm, lg, &mut colors));
 
     // ---- speculative fix loop -------------------------------------------
     // `mask` (all false again) and the loser vectors are reused across
@@ -321,7 +402,7 @@ pub fn color_rank(
         local_losers.clear();
         ghost_losers.clear();
         let found = timers.comp(|| {
-            detect_conflicts(&lg, &colors, cfg, &exec, &mut local_losers, &mut ghost_losers)
+            detect_conflicts(lg, &colors, cfg, &exec, &mut local_losers, &mut ghost_losers)
         });
         conflicts_total += found;
         let global = timers.comm(|| comm.allreduce_sum(TAG_REDUCE + 2 * round as u64, found));
@@ -344,7 +425,7 @@ pub fn color_rank(
             if two_layers && cfg.problem == Problem::D1 {
                 // 2GL: consistent global-priority greedy over the cut
                 // region, predicting ghost losers' new colors too.
-                recolor_predictive(&lg, &mut colors, &local_losers, &ghost_losers, cfg.seed);
+                recolor_predictive(lg, &mut colors, &local_losers, &ghost_losers, cfg.seed);
             } else {
                 for &v in &local_losers {
                     mask[v as usize] = true;
@@ -354,7 +435,7 @@ pub fn color_rank(
                     &LocalView { graph: &lg.graph, mask: &mask },
                     &mut colors,
                     cfg.seed ^ ((round as u64) << 8) ^ lg.rank as u64,
-                    &mut scratch,
+                    scratch,
                 );
                 for &v in &local_losers {
                     mask[v as usize] = false;
@@ -364,7 +445,7 @@ pub fn color_rank(
 
         // communicate only the recolored owned vertices
         comm_rounds += 1;
-        timers.comm(|| exchange_delta(comm, &lg, &mut colors, &local_losers, round, &mut xscratch));
+        timers.comm(|| exchange_delta(comm, lg, &mut colors, &local_losers, round, &mut xscratch));
     }
 
     let owned_colors = (0..lg.n_local)
@@ -390,6 +471,7 @@ pub fn color_rank(
 /// `exec` in contiguous in-order chunks and the per-chunk loser vectors
 /// are concatenated in chunk order before the sort+dedup, so losers and
 /// counts are identical to the serial scan at every thread count.
+#[doc(hidden)]
 pub fn detect_conflicts(
     lg: &LocalGraph,
     colors: &[Color],
@@ -589,6 +671,7 @@ fn recolor_predictive(
 /// `Vec<Vec<u8>>` the dense exchange rebuilt per round is gone, and the
 /// staging capacity persists across all rounds of a run.
 #[derive(Debug, Default)]
+#[doc(hidden)]
 pub struct ExchangeScratch {
     payloads: Vec<Vec<u32>>,
 }
@@ -601,6 +684,7 @@ impl ExchangeScratch {
 
 /// Initial exchange of all subscribed boundary colors with the actual
 /// neighbor ranks (one message per cut neighbor, not per rank).
+#[doc(hidden)]
 pub fn exchange_full(comm: &mut Comm, lg: &LocalGraph, colors: &mut [Color]) {
     exchange_full_send(comm, lg, colors);
     exchange_full_recv(comm, lg, colors);
@@ -611,6 +695,7 @@ pub fn exchange_full(comm: &mut Comm, lg: &LocalGraph, colors: &mut [Color]) {
 /// driver launches this before coloring the interior and overlaps the
 /// exchange with that computation (§3).  Only the ranks that actually
 /// subscribe to our boundary (`lg.send_ranks`) get a message.
+#[doc(hidden)]
 pub fn exchange_full_send(comm: &mut Comm, lg: &LocalGraph, colors: &[Color]) {
     debug_assert!(lg.subs_out[lg.rank as usize].is_empty(), "self-subscription");
     for &r in &lg.send_ranks {
@@ -624,6 +709,7 @@ pub fn exchange_full_send(comm: &mut Comm, lg: &LocalGraph, colors: &[Color]) {
 
 /// Receive half of the initial exchange: blocks until every neighbor's
 /// boundary colors arrive, then installs them on our ghosts.
+#[doc(hidden)]
 pub fn exchange_full_recv(comm: &mut Comm, lg: &LocalGraph, colors: &mut [Color]) {
     debug_assert!(lg.ghost_from[lg.rank as usize].is_empty(), "self-ghost");
     for &r in &lg.recv_ranks {
@@ -644,6 +730,7 @@ pub fn exchange_full_recv(comm: &mut Comm, lg: &LocalGraph, colors: &mut [Color]
 /// O(neighbor ranks), not O(p), and empty deltas still flow to
 /// neighbors (the receive half expects one message per neighbor — the
 /// delta payload *content* is what shrinks, per §3.2).
+#[doc(hidden)]
 pub fn exchange_delta(
     comm: &mut Comm,
     lg: &LocalGraph,

@@ -48,7 +48,7 @@ pub fn color_zoltan(
     cost: CostModel,
 ) -> RunResult {
     let outcomes = run_ranks(part.nparts, cost, |comm| zoltan_rank(comm, g, part, cfg));
-    assemble(g, outcomes, part.nparts)
+    assemble(g.n(), outcomes, part.nparts)
 }
 
 fn zoltan_rank(comm: &mut Comm, g: &Graph, part: &Partition, cfg: ZoltanConfig) -> RankOutcome {

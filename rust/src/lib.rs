@@ -5,6 +5,40 @@
 //! Distributed GPU Environments"* (2021) as a three-layer Rust + JAX +
 //! Pallas system.
 //!
+//! ## The Session → Plan → Run lifecycle
+//!
+//! The public API lives in [`session`] and splits the work the way the
+//! paper's target deployments use it — construction once, many runs:
+//!
+//! ```no_run
+//! use dist_color::session::{GhostLayers, ProblemSpec, Session};
+//! use dist_color::{graph::generators, partition};
+//!
+//! let g = generators::from_spec("mesh:16x16x16").unwrap();
+//! let part = partition::edge_balanced(&g, 8);
+//!
+//! // 1. Session: the rank runtime — persistent per-rank worker pools
+//! //    and kernel scratch, an interconnect cost model, a seed.
+//! let session = Session::builder().ranks(8).threads(0).seed(42).build();
+//!
+//! // 2. Plan: each rank ingests only its own rows (any `GraphSource`;
+//! //    streaming sources never materialize the global edge set on a
+//! //    rank) and builds ghost layers + cut topology exactly once.
+//! let plan = session.plan(&g, &part, GhostLayers::Two);
+//!
+//! // 3. Run, repeatedly and cheaply: D1(2GL), D2, PD2, kernel and
+//! //    heuristic ablations — all reuse the plan's construction.
+//! let d1 = plan.run(ProblemSpec::d1());
+//! let d2 = plan.run(ProblemSpec::d2());
+//! assert!(d1.stats.colors_used <= d2.stats.colors_used);
+//! ```
+//!
+//! `coloring::distributed::color_distributed` remains as the one-shot
+//! wrapper over this lifecycle for legacy call sites; its colorings are
+//! bit-identical to the Session path.
+//!
+//! ## Layers
+//!
 //! * **L3 (this crate)** — the distributed coordinator: simulated-MPI rank
 //!   runtime, ghost layers, speculative coloring driver (Algorithm 2),
 //!   conflict rules (Algorithms 3–5), the novel recolor-degrees heuristic,
@@ -23,4 +57,7 @@ pub mod distributed;
 pub mod graph;
 pub mod partition;
 pub mod runtime;
+pub mod session;
 pub mod util;
+
+pub use session::{GhostLayers, Plan, ProblemSpec, Session};

@@ -13,12 +13,12 @@ use std::process::ExitCode;
 
 use dist_color::bench::{run_algo, run_algo_with_backend, Algo};
 use dist_color::coloring::distributed::zoltan::{color_zoltan, ZoltanConfig};
-use dist_color::coloring::distributed::{color_distributed, DistConfig, NativeBackend};
 use dist_color::coloring::{validate, Problem};
 use dist_color::distributed::CostModel;
 use dist_color::graph::{generators, io, stats::GraphStats, Graph};
 use dist_color::partition::{self, PartitionKind};
 use dist_color::runtime::PjrtBackend;
+use dist_color::session::{GhostLayers, ProblemSpec, Session};
 
 fn main() -> ExitCode {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -65,7 +65,7 @@ COLOR FLAGS:
   --ranks N           simulated MPI ranks / GPUs               [4]
   --backend B         native | pjrt                            [native]
   --partitioner P     block | edge | bfs | hash                [edge]
-  --threads T         on-node kernel threads per rank; 0=auto  [1]
+  --threads T         on-node kernel threads per rank; 0=auto  [0]
   --seed S            RNG seed                                 [42]
   --artifacts DIR     artifact dir for --backend pjrt          [artifacts]
 ";
@@ -129,7 +129,7 @@ fn cmd_color(f: Flags) -> Result<(), String> {
     let g = load_graph(spec)?;
     let ranks = f.usize_or("ranks", 4)?;
     let seed = f.u64_or("seed", 42)?;
-    let threads = f.usize_or("threads", 1)?;
+    let threads = f.usize_or("threads", 0)?;
     let algo = f.get_or("algo", "d1");
     let backend_name = f.get_or("backend", "native");
     let pk: PartitionKind = f.get_or("partitioner", "edge").parse()?;
@@ -148,36 +148,34 @@ fn cmd_color(f: Flags) -> Result<(), String> {
             (color_zoltan(&g, &part, cfg, cost), problem)
         }
         name => {
-            let (problem, rd, two) = match name {
-                "d1" => (Problem::D1, true, false),
-                "d1-baseline" => (Problem::D1, false, false),
-                "d1-2gl" => (Problem::D1, true, true),
-                "d2" => (Problem::D2, true, false),
-                "pd2" => (Problem::PD2, true, false),
+            // Session lifecycle: build the rank runtime, ingest the
+            // graph into a plan once, run the requested problem on it.
+            let (problem, rd, layers) = match name {
+                "d1" => (Problem::D1, true, GhostLayers::One),
+                "d1-baseline" => (Problem::D1, false, GhostLayers::One),
+                "d1-2gl" => (Problem::D1, true, GhostLayers::Two),
+                "d2" => (Problem::D2, true, GhostLayers::Two),
+                "pd2" => (Problem::PD2, true, GhostLayers::Two),
                 other => return Err(format!("unknown --algo `{other}`")),
             };
-            let cfg = DistConfig {
-                problem,
-                recolor_degrees: rd,
-                two_ghost_layers: two,
-                threads,
-                seed,
-                ..Default::default()
-            };
-            let result = match backend_name.as_str() {
-                "native" => {
-                    color_distributed(&g, &part, cfg, cost, &NativeBackend(cfg.kernel))
-                }
+            let session =
+                Session::builder().ranks(ranks).cost(cost).threads(threads).seed(seed).build();
+            let plan = session.plan(&g, &part, layers);
+            let pspec = ProblemSpec { problem, recolor_degrees: rd, ..Default::default() };
+            let mut result = match backend_name.as_str() {
+                "native" => plan.run(pspec),
                 "pjrt" => {
                     let dir = f.get_or("artifacts", "artifacts");
                     let backend = PjrtBackend::from_dir(&dir).map_err(|e| e.to_string())?;
-                    let r = color_distributed(&g, &part, cfg, cost, &backend);
+                    let r = plan.run_with_backend(pspec, &backend);
                     let (exe, fb) = backend.stats();
                     println!("pjrt: {exe} kernel executions, {fb} native fallbacks");
                     r
                 }
                 other => return Err(format!("unknown --backend `{other}`")),
             };
+            let b = plan.build_stats();
+            result.stats.include_build(b.wall_ns, b.modeled_ns, b.bytes);
             (result, problem)
         }
     };

@@ -1,0 +1,467 @@
+//! The public Session → Plan → Run lifecycle — the crate's front door.
+//!
+//! The paper's motivating workloads color the *same* distributed
+//! topology many times (Sarıyüce-style iterative recoloring; D1-then-D2
+//! ablations on one mesh; Jacobian probing with several seeds), so the
+//! API splits construction from execution:
+//!
+//! 1. **[`Session`]** — built once per process
+//!    (`Session::builder().ranks(p).cost(model).threads(t).seed(s).build()`).
+//!    Owns the rank runtime: one persistent
+//!    [`KernelScratch`](crate::coloring::local::KernelScratch) per rank,
+//!    which in turn owns that rank's persistent worker pool.  Pools park
+//!    between runs instead of respawning per call.
+//! 2. **[`Plan`]** — `session.plan(&source, &part, GhostLayers::Two)`
+//!    builds every rank's `LocalGraph` (ghost layers, subscription
+//!    lists, neighbor topology) exactly once, pulling rows through a
+//!    [`GraphSource`] so no rank ever materializes the global edge set.
+//!    A two-layer plan serves D1-2GL, D2 and PD2 runs — they share the
+//!    layer-1 ghost structure — while a one-layer plan serves plain D1.
+//! 3. **[`Plan::run`]** — executes one coloring described by a
+//!    [`ProblemSpec`], reusing all plan state.  Repeated runs
+//!    (recoloring loops, kernel/heuristic ablations, D1-then-D2 on one
+//!    topology) perform **zero** ghost-layer construction and spawn no
+//!    new worker pools; given equal specs they are bit-identical.
+//!
+//! `color_distributed` survives as a thin one-shot wrapper over this
+//! lifecycle, so legacy call sites keep their exact colorings.
+//!
+//! ```no_run
+//! use dist_color::session::{GhostLayers, ProblemSpec, Session};
+//! use dist_color::{graph::generators, partition};
+//!
+//! let g = generators::from_spec("mesh:16x16x16").unwrap();
+//! let part = partition::edge_balanced(&g, 8);
+//! let session = Session::builder().ranks(8).threads(0).seed(42).build();
+//! let plan = session.plan(&g, &part, GhostLayers::Two);
+//! let d1 = plan.run(ProblemSpec::d1());          // D1 (2GL on this plan)
+//! let d2 = plan.run(ProblemSpec::d2());          // same ghosts, no rebuild
+//! assert_eq!(d1.colors.len(), g.n());
+//! assert!(d2.stats.comm_rounds >= 1);
+//! ```
+
+pub mod source;
+
+pub use source::{EdgeStreamSource, GraphSliceSource, GraphSource, RankSlab};
+
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::coloring::distributed::ghost::LocalGraph;
+use crate::coloring::distributed::{
+    assemble, color_rank_planned, DistConfig, LocalBackend, NativeBackend, RunResult,
+};
+use crate::coloring::local::{KernelScratch, LocalKernel};
+use crate::coloring::Problem;
+use crate::distributed::{run_ranks, CostModel};
+use crate::partition::Partition;
+
+/// How many ghost layers a plan builds (§2.4, §3.4).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GhostLayers {
+    /// First-layer ghosts only: plain D1.
+    One,
+    /// Two layers (ghosts carry full adjacency): D1-2GL, D2 and PD2 all
+    /// run on one such plan.
+    Two,
+}
+
+/// Builder for [`Session`].  Defaults: 1 rank, default α–β cost model,
+/// `threads = 0` (one kernel worker per available core; the CLI's
+/// `--threads` flag is just a front-end that calls `.threads(..)`),
+/// seed 42.
+#[derive(Clone, Copy, Debug)]
+pub struct SessionBuilder {
+    ranks: usize,
+    cost: CostModel,
+    threads: usize,
+    seed: u64,
+}
+
+impl SessionBuilder {
+    /// Number of simulated MPI ranks ("GPUs").
+    pub fn ranks(mut self, ranks: usize) -> Self {
+        assert!(ranks >= 1, "a session needs at least one rank");
+        self.ranks = ranks;
+        self
+    }
+
+    /// Interconnect cost model for modeled communication time.
+    pub fn cost(mut self, cost: CostModel) -> Self {
+        self.cost = cost;
+        self
+    }
+
+    /// On-node kernel workers per rank (0 = one per available core).
+    /// Colorings are bit-identical for every value.
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.threads = threads;
+        self
+    }
+
+    /// Base RNG seed; individual runs may override via
+    /// [`ProblemSpec::seed`].
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Materialize the session: spawns each rank's persistent worker
+    /// pool (when `threads != 1`) up front, so plan and run calls never
+    /// pay pool construction.
+    pub fn build(self) -> Session {
+        let scratch =
+            (0..self.ranks).map(|_| Mutex::new(KernelScratch::new(self.threads))).collect();
+        Session {
+            nranks: self.ranks,
+            cost: self.cost,
+            threads: self.threads,
+            seed: self.seed,
+            scratch,
+            run_gate: Mutex::new(()),
+        }
+    }
+}
+
+impl Default for SessionBuilder {
+    fn default() -> Self {
+        SessionBuilder { ranks: 1, cost: CostModel::default(), threads: 0, seed: 42 }
+    }
+}
+
+/// A long-lived coloring service instance: the rank runtime plus every
+/// rank's persistent kernel scratch (priority caches + worker pool).
+/// Construct with [`Session::builder`], then derive [`Plan`]s.
+pub struct Session {
+    nranks: usize,
+    cost: CostModel,
+    threads: usize,
+    seed: u64,
+    /// Per-rank persistent scratch; locked by that rank's thread for the
+    /// duration of each run.
+    scratch: Vec<Mutex<KernelScratch>>,
+    /// Serializes runs: rank threads hold their scratch lock across
+    /// blocking collectives, so two interleaved runs could otherwise
+    /// deadlock (A's rank 0 holds scratch[0] awaiting A's rank 1, which
+    /// waits on scratch[1] held by B's rank 1, which awaits B's rank 0,
+    /// which waits on scratch[0]).  One gate, held for the whole run,
+    /// makes the per-rank locks uncontended.
+    run_gate: Mutex<()>,
+}
+
+impl Session {
+    pub fn builder() -> SessionBuilder {
+        SessionBuilder::default()
+    }
+
+    pub fn nranks(&self) -> usize {
+        self.nranks
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    pub fn cost(&self) -> CostModel {
+        self.cost
+    }
+
+    /// Build a [`Plan`]: every rank ingests its slab from `source` and
+    /// constructs its `LocalGraph` (ghosts, subscriptions, neighbor
+    /// topology) — the one-time cost all of the plan's runs amortize.
+    /// Collective over all `nranks` simulated ranks.
+    pub fn plan<S: GraphSource + ?Sized>(
+        &self,
+        source: &S,
+        part: &Partition,
+        layers: GhostLayers,
+    ) -> Plan<'_> {
+        assert_eq!(
+            part.nparts, self.nranks,
+            "partition has {} parts but the session has {} ranks",
+            part.nparts, self.nranks
+        );
+        assert_eq!(
+            source.n_vertices(),
+            part.owner.len(),
+            "source vertex count does not match the partition"
+        );
+        let two = layers == GhostLayers::Two;
+        let per_rank = run_ranks(self.nranks, self.cost, |comm| {
+            let rank = comm.rank();
+            let t0 = Instant::now();
+            let owned = part.owned(rank);
+            let slab = source.load_rank(rank, &owned);
+            let lg = LocalGraph::build_from_slab(comm, &slab, owned, part, two);
+            (lg, comm.stats(), t0.elapsed().as_nanos() as u64)
+        });
+        let mut build = PlanBuildStats::default();
+        let mut locals = Vec::with_capacity(per_rank.len());
+        for (lg, stats, wall_ns) in per_rank {
+            build.wall_ns = build.wall_ns.max(wall_ns);
+            build.modeled_ns = build.modeled_ns.max(stats.modeled_ns);
+            build.bytes += stats.bytes_sent;
+            build.messages += stats.messages;
+            locals.push(lg);
+        }
+        Plan { session: self, n_global: source.n_vertices(), two_layers: two, locals, build }
+    }
+}
+
+impl std::fmt::Debug for Session {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Session")
+            .field("nranks", &self.nranks)
+            .field("threads", &self.threads)
+            .field("seed", &self.seed)
+            .finish()
+    }
+}
+
+/// Construction-phase accounting of a plan (rank maxima for times, sums
+/// for counters) — what one-shot wrappers fold back into their reported
+/// stats so build traffic stays visible.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PlanBuildStats {
+    /// Max per-rank wall time of slab ingestion + LocalGraph build.
+    pub wall_ns: u64,
+    /// Max per-rank modeled (α–β) construction comm time.
+    pub modeled_ns: u64,
+    /// Total construction bytes sent across ranks.
+    pub bytes: u64,
+    /// Total construction messages across ranks.
+    pub messages: u64,
+}
+
+/// What one [`Plan::run`] colors and how.  D1-vs-2GL is a property of
+/// the *plan* (its ghost layers), not of the spec: a D1 spec on a
+/// two-layer plan runs the 2GL predictive recoloring of §3.4.
+#[derive(Clone, Copy, Debug)]
+pub struct ProblemSpec {
+    pub problem: Problem,
+    /// Algorithm 4's recolorDegrees flag (the novel heuristic, §3.3).
+    pub recolor_degrees: bool,
+    /// Local kernel for the native backend.
+    pub kernel: LocalKernel,
+    /// Per-run seed override; `None` uses the session seed.
+    pub seed: Option<u64>,
+    /// Safety cap on recoloring rounds.
+    pub max_rounds: usize,
+}
+
+impl Default for ProblemSpec {
+    fn default() -> Self {
+        ProblemSpec {
+            problem: Problem::D1,
+            recolor_degrees: true,
+            kernel: LocalKernel::VbBit,
+            seed: None,
+            max_rounds: 500,
+        }
+    }
+}
+
+impl ProblemSpec {
+    /// Distance-1 with the recolor-degrees heuristic (the paper's best
+    /// configuration).
+    pub fn d1() -> Self {
+        Self::default()
+    }
+
+    /// Distance-1 with the plain random conflict rule.
+    pub fn d1_baseline() -> Self {
+        ProblemSpec { recolor_degrees: false, ..Self::default() }
+    }
+
+    /// Distance-2 (needs a [`GhostLayers::Two`] plan).
+    pub fn d2() -> Self {
+        ProblemSpec { problem: Problem::D2, ..Self::default() }
+    }
+
+    /// Partial distance-2 (needs a [`GhostLayers::Two`] plan).
+    pub fn pd2() -> Self {
+        ProblemSpec { problem: Problem::PD2, ..Self::default() }
+    }
+
+    pub fn with_kernel(mut self, kernel: LocalKernel) -> Self {
+        self.kernel = kernel;
+        self
+    }
+
+    pub fn with_recolor_degrees(mut self, on: bool) -> Self {
+        self.recolor_degrees = on;
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = Some(seed);
+        self
+    }
+}
+
+/// A reusable coloring plan: per-rank `LocalGraph`s (ghost layers,
+/// subscription lists, cut topology) built once by [`Session::plan`].
+/// Every [`Plan::run`] reuses this state wholesale.
+pub struct Plan<'s> {
+    session: &'s Session,
+    n_global: usize,
+    two_layers: bool,
+    locals: Vec<LocalGraph>,
+    build: PlanBuildStats,
+}
+
+impl Plan<'_> {
+    pub fn nranks(&self) -> usize {
+        self.session.nranks
+    }
+
+    /// True for [`GhostLayers::Two`] plans.
+    pub fn two_layers(&self) -> bool {
+        self.two_layers
+    }
+
+    /// Global vertex count this plan colors.
+    pub fn n_global(&self) -> usize {
+        self.n_global
+    }
+
+    /// Construction-phase accounting (see [`PlanBuildStats`]).
+    pub fn build_stats(&self) -> PlanBuildStats {
+        self.build
+    }
+
+    /// Total ghost vertices across ranks (both layers) — a cheap proxy
+    /// for the plan's memory footprint beyond the owned slabs.
+    pub fn total_ghosts(&self) -> usize {
+        self.locals.iter().map(|lg| lg.n_ghost).sum()
+    }
+
+    /// Execute one coloring with the native kernels.  Runs with equal
+    /// specs are bit-identical; no construction work is repeated.
+    pub fn run(&self, spec: ProblemSpec) -> RunResult {
+        self.run_with_backend(spec, &NativeBackend(spec.kernel))
+    }
+
+    /// [`Plan::run`] with an explicit local backend (the PJRT path).
+    pub fn run_with_backend(&self, spec: ProblemSpec, backend: &dyn LocalBackend) -> RunResult {
+        assert!(
+            self.two_layers || spec.problem == Problem::D1,
+            "{} needs the two-hop ghost view: build the plan with GhostLayers::Two",
+            spec.problem
+        );
+        let cfg = DistConfig {
+            problem: spec.problem,
+            recolor_degrees: spec.recolor_degrees,
+            two_ghost_layers: self.two_layers,
+            kernel: spec.kernel,
+            threads: self.session.threads,
+            seed: spec.seed.unwrap_or(self.session.seed),
+            max_rounds: spec.max_rounds,
+        };
+        // one run at a time per session: rank threads hold their scratch
+        // locks across blocking collectives (see `Session::run_gate`)
+        let _gate = self.session.run_gate.lock().expect("session run gate poisoned");
+        let outcomes = run_ranks(self.session.nranks, self.session.cost, |comm| {
+            let rank = comm.rank() as usize;
+            let mut scratch =
+                self.session.scratch[rank].lock().expect("rank scratch poisoned");
+            color_rank_planned(comm, &self.locals[rank], cfg, backend, &mut scratch)
+        });
+        assemble(self.n_global, outcomes, self.session.nranks)
+    }
+}
+
+impl std::fmt::Debug for Plan<'_> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Plan")
+            .field("nranks", &self.session.nranks)
+            .field("n_global", &self.n_global)
+            .field("two_layers", &self.two_layers)
+            .field("total_ghosts", &self.total_ghosts())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coloring::validate;
+    use crate::graph::generators::{erdos_renyi::gnm, mesh::hex_mesh};
+    use crate::partition;
+
+    #[test]
+    fn plan_runs_are_proper_and_repeatable() {
+        let g = hex_mesh(6, 6, 6);
+        let part = partition::edge_balanced(&g, 4);
+        let session = Session::builder().ranks(4).cost(CostModel::zero()).threads(1).build();
+        let plan = session.plan(&g, &part, GhostLayers::One);
+        let a = plan.run(ProblemSpec::d1());
+        let b = plan.run(ProblemSpec::d1());
+        assert!(validate::is_proper_d1(&g, &a.colors));
+        assert_eq!(a.colors, b.colors);
+        assert_eq!(a.stats.comm_rounds, b.stats.comm_rounds);
+    }
+
+    #[test]
+    fn two_layer_plan_serves_d1_d2_and_pd2() {
+        let g = gnm(250, 900, 5);
+        let part = partition::hash(&g, 5, 1);
+        let session = Session::builder().ranks(5).cost(CostModel::zero()).threads(1).build();
+        let plan = session.plan(&g, &part, GhostLayers::Two);
+        let d1 = plan.run(ProblemSpec::d1());
+        assert!(validate::is_proper_d1(&g, &d1.colors));
+        let d2 = plan.run(ProblemSpec::d2());
+        assert!(validate::is_proper_d2(&g, &d2.colors));
+        let pd2 = plan.run(ProblemSpec::pd2());
+        assert!(validate::is_proper_pd2(&g, &pd2.colors));
+    }
+
+    #[test]
+    #[should_panic(expected = "GhostLayers::Two")]
+    fn d2_on_one_layer_plan_panics() {
+        let g = hex_mesh(4, 4, 4);
+        let part = partition::block(&g, 2);
+        let session = Session::builder().ranks(2).cost(CostModel::zero()).threads(1).build();
+        let plan = session.plan(&g, &part, GhostLayers::One);
+        let _ = plan.run(ProblemSpec::d2());
+    }
+
+    #[test]
+    fn seed_override_changes_coloring_seed_reuse_restores_it() {
+        let g = gnm(300, 1500, 2);
+        let part = partition::hash(&g, 4, 3);
+        let session = Session::builder().ranks(4).cost(CostModel::zero()).threads(1).seed(7).build();
+        let plan = session.plan(&g, &part, GhostLayers::One);
+        let base = plan.run(ProblemSpec::d1());
+        let other = plan.run(ProblemSpec::d1().with_seed(99));
+        let again = plan.run(ProblemSpec::d1().with_seed(7));
+        assert_eq!(base.colors, again.colors, "explicit session seed must match default");
+        assert!(validate::is_proper_d1(&g, &other.colors));
+    }
+
+    #[test]
+    fn build_stats_record_construction_traffic() {
+        let g = hex_mesh(6, 6, 8);
+        let part = partition::block(&g, 4);
+        let session = Session::builder().ranks(4).cost(CostModel::zero()).threads(1).build();
+        let one = session.plan(&g, &part, GhostLayers::One);
+        let two = session.plan(&g, &part, GhostLayers::Two);
+        assert!(one.build_stats().messages > 0);
+        // the second layer's adjacency fetch strictly adds traffic
+        assert!(two.build_stats().bytes > one.build_stats().bytes);
+        assert!(two.total_ghosts() >= one.total_ghosts());
+    }
+
+    #[test]
+    #[should_panic(expected = "parts")]
+    fn mismatched_partition_panics() {
+        let g = hex_mesh(4, 4, 4);
+        let part = partition::block(&g, 3);
+        let session = Session::builder().ranks(4).cost(CostModel::zero()).threads(1).build();
+        let _ = session.plan(&g, &part, GhostLayers::One);
+    }
+}

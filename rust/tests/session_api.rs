@@ -1,0 +1,168 @@
+//! Session/Plan/Run API tests (PR 3): plan-reuse determinism,
+//! Session-vs-`color_distributed` bit-equality at several thread counts,
+//! zero reconstruction across repeated runs, and the streaming
+//! `GraphSource` path where no rank ever holds the global edge set.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use dist_color::coloring::distributed::{color_distributed, DistConfig, NativeBackend};
+use dist_color::coloring::{validate, Problem};
+use dist_color::distributed::CostModel;
+use dist_color::graph::generators::{erdos_renyi::gnm, mesh::hex_mesh};
+use dist_color::graph::VId;
+use dist_color::partition::{self, PartitionKind};
+use dist_color::session::{EdgeStreamSource, GhostLayers, GraphSource, ProblemSpec, RankSlab, Session};
+
+const THREAD_COUNTS: [usize; 2] = [1, 8];
+
+#[test]
+fn plan_rerun_is_bit_identical_at_every_thread_count() {
+    let g = gnm(2_000, 9_000, 3);
+    let part = partition::partition(&g, 6, PartitionKind::Hash, 13);
+    let mut reference: Option<Vec<u32>> = None;
+    for threads in THREAD_COUNTS {
+        let session =
+            Session::builder().ranks(6).cost(CostModel::zero()).threads(threads).seed(5).build();
+        let plan = session.plan(&g, &part, GhostLayers::One);
+        let a = plan.run(ProblemSpec::d1());
+        let b = plan.run(ProblemSpec::d1());
+        assert!(validate::is_proper_d1(&g, &a.colors), "threads={threads}");
+        assert_eq!(a.colors, b.colors, "rerun diverged at threads={threads}");
+        assert_eq!(a.stats.comm_rounds, b.stats.comm_rounds);
+        assert_eq!(a.stats.conflicts, b.stats.conflicts);
+        // ...and across thread counts (the kernels' Jacobi invariant)
+        match &reference {
+            None => reference = Some(a.colors),
+            Some(expect) => assert_eq!(&a.colors, expect, "threads={threads} diverged"),
+        }
+    }
+}
+
+#[test]
+fn session_matches_one_shot_wrapper_bit_for_bit() {
+    // the wrapper IS the session path, but this pins the equivalence
+    // (config mapping, seeds, scratch reuse) for every problem flavor
+    let g = gnm(1_500, 7_000, 11);
+    let part = partition::partition(&g, 5, PartitionKind::EdgeBalanced, 2);
+    for threads in THREAD_COUNTS {
+        for (problem, two, layers) in [
+            (Problem::D1, false, GhostLayers::One),
+            (Problem::D1, true, GhostLayers::Two),
+            (Problem::D2, false, GhostLayers::Two),
+            (Problem::PD2, false, GhostLayers::Two),
+        ] {
+            let cfg = DistConfig {
+                problem,
+                two_ghost_layers: two,
+                threads,
+                seed: 21,
+                ..Default::default()
+            };
+            let wrapper =
+                color_distributed(&g, &part, cfg, CostModel::zero(), &NativeBackend(cfg.kernel));
+            let session = Session::builder()
+                .ranks(5)
+                .cost(CostModel::zero())
+                .threads(threads)
+                .seed(21)
+                .build();
+            let plan = session.plan(&g, &part, layers);
+            let spec = ProblemSpec { problem, ..Default::default() };
+            let direct = plan.run(spec);
+            assert_eq!(
+                wrapper.colors, direct.colors,
+                "{problem} two={two} threads={threads}"
+            );
+            assert_eq!(wrapper.stats.comm_rounds, direct.stats.comm_rounds);
+            assert_eq!(wrapper.stats.conflicts, direct.stats.conflicts);
+        }
+    }
+}
+
+/// A source that counts slab ingestions: plan construction must load
+/// each rank exactly once and runs must never load again.
+struct CountingSource<'g> {
+    g: &'g dist_color::graph::Graph,
+    loads: AtomicUsize,
+}
+
+impl GraphSource for CountingSource<'_> {
+    fn n_vertices(&self) -> usize {
+        self.g.n()
+    }
+    fn load_rank(&self, rank: u32, owned: &[VId]) -> RankSlab {
+        self.loads.fetch_add(1, Ordering::Relaxed);
+        GraphSource::load_rank(self.g, rank, owned)
+    }
+}
+
+#[test]
+fn repeated_runs_perform_zero_reconstruction() {
+    let g = hex_mesh(6, 6, 8);
+    let part = partition::block(&g, 4);
+    let source = CountingSource { g: &g, loads: AtomicUsize::new(0) };
+    let session = Session::builder().ranks(4).cost(CostModel::zero()).threads(1).build();
+    let plan = session.plan(&source, &part, GhostLayers::Two);
+    assert_eq!(source.loads.load(Ordering::Relaxed), 4, "one ingestion per rank");
+    let d1 = plan.run(ProblemSpec::d1());
+    let d2 = plan.run(ProblemSpec::d2());
+    let again = plan.run(ProblemSpec::d1());
+    assert_eq!(source.loads.load(Ordering::Relaxed), 4, "run re-ingested the graph");
+    assert!(validate::is_proper_d1(&g, &d1.colors));
+    assert!(validate::is_proper_d2(&g, &d2.colors));
+    assert_eq!(d1.colors, again.colors);
+    // run-phase stats carry no construction traffic; the plan reports it
+    assert!(plan.build_stats().messages > 0);
+    assert!(plan.build_stats().bytes > 0);
+}
+
+#[test]
+fn streaming_source_colors_correctly_without_global_residency() {
+    // replay the edge set as a chunked stream: each rank retains only
+    // its own slab (+ one in-flight chunk), far below the global size
+    let g = gnm(10_000, 40_000, 17);
+    let part = partition::partition(&g, 8, PartitionKind::EdgeBalanced, 9);
+    let source = EdgeStreamSource::new(g.n(), 1024, |emit| {
+        for v in 0..g.n() as VId {
+            for &u in g.neighbors(v) {
+                if u > v {
+                    emit(v, u);
+                }
+            }
+        }
+    });
+    let session = Session::builder().ranks(8).cost(CostModel::zero()).threads(1).seed(1).build();
+    let streamed = session.plan(&source, &part, GhostLayers::One).run(ProblemSpec::d1());
+    assert!(validate::is_proper_d1(&g, &streamed.colors));
+
+    // peak resident edge records on any rank stay below the global edge
+    // count — the "too large for one GPU" witness
+    let peak = source.peak_resident_edges();
+    assert!(peak > 0);
+    assert!(
+        peak < g.m(),
+        "peak resident {} not below global edge count {}",
+        peak,
+        g.m()
+    );
+
+    // and the streamed slab path is bit-identical to in-memory ingestion
+    let in_memory = session.plan(&g, &part, GhostLayers::One).run(ProblemSpec::d1());
+    assert_eq!(streamed.colors, in_memory.colors);
+}
+
+#[test]
+fn one_session_many_partitions_and_problems() {
+    // a session survives plan churn: different partitions, layer counts
+    // and problems, all on the same persistent rank runtime
+    let g = gnm(800, 4_000, 23);
+    let session = Session::builder().ranks(4).cost(CostModel::zero()).threads(2).seed(3).build();
+    for pk in [PartitionKind::Block, PartitionKind::Hash] {
+        let part = partition::partition(&g, 4, pk, 7);
+        let one = session.plan(&g, &part, GhostLayers::One);
+        assert!(validate::is_proper_d1(&g, &one.run(ProblemSpec::d1()).colors), "{pk:?}");
+        let two = session.plan(&g, &part, GhostLayers::Two);
+        assert!(validate::is_proper_d1(&g, &two.run(ProblemSpec::d1()).colors), "{pk:?}");
+        assert!(validate::is_proper_d2(&g, &two.run(ProblemSpec::d2()).colors), "{pk:?}");
+    }
+}

@@ -15,6 +15,10 @@ quick=0
 echo "== cargo build --release =="
 cargo build --release
 
+echo "== cargo build --examples --benches =="
+# all 16 binary call sites ride the Session API; API drift must fail here
+cargo build --examples --benches
+
 echo "== cargo test -q =="
 cargo test -q
 
@@ -44,5 +48,8 @@ BENCH_PR1=1 BENCH_REPS="${BENCH_REPS:-3}" cargo bench --bench micro_kernels
 
 echo "== micro_kernels PR-2 smoke (writes BENCH_pr2.json) =="
 BENCH_PR2=1 BENCH_REPS="${BENCH_REPS:-3}" cargo bench --bench micro_kernels
+
+echo "== micro_kernels PR-3 smoke (writes BENCH_pr3.json) =="
+BENCH_PR3=1 BENCH_REPS="${BENCH_REPS:-3}" cargo bench --bench micro_kernels
 
 echo "verify: OK"
