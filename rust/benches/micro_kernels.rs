@@ -12,8 +12,10 @@
 //! serial-vs-pooled detection smoke and write `BENCH_pr2.json`; set
 //! `BENCH_PR3=1` to run the Session/Plan/Run reuse smoke (plan-build vs
 //! per-run time split, zero-reconstruction check) and write
-//! `BENCH_pr3.json`.  All JSON schemas are documented in
-//! `rust/benches/README.md`.
+//! `BENCH_pr3.json`; set `BENCH_PR4=1` to run the serial-round vs
+//! double-buffered fix-loop ablation (with the bit-parity gate and the
+//! `overlap_saved` counter) and write `BENCH_pr4.json`.  All JSON
+//! schemas are documented in `rust/benches/README.md`.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::time::Instant;
@@ -429,6 +431,71 @@ fn pr3_smoke() {
     assert!(wrapper_identical, "Session and color_distributed colorings diverged");
 }
 
+/// Serial-round vs double-buffered fix loop on a cut-heavy hash
+/// partition, with the bit-parity gate and the `overlap_saved` counter,
+/// written to `BENCH_pr4.json`.
+fn pr4_smoke() {
+    let reps: usize =
+        std::env::var("BENCH_REPS").ok().and_then(|s| s.parse().ok()).unwrap_or(5);
+    let ranks = 8usize;
+    let (n, m, seed) = (60_000usize, 360_000usize, 11u64);
+    eprintln!("pr4 smoke: gnm({n}, {m}) hash-partitioned over {ranks} ranks ...");
+    let g = gnm(n, m, seed);
+    // hash partition: maximally cut-heavy, so the fix loop actually runs
+    // several delta rounds and the overlap window is exercised
+    let part = partition::hash(&g, ranks, 1);
+    let session =
+        Session::builder().ranks(ranks).cost(CostModel::default()).threads(1).seed(42).build();
+    let plan = session.plan(&g, &part, GhostLayers::One);
+    let db_spec = ProblemSpec::d1();
+    let serial_spec = ProblemSpec::d1().with_double_buffer(false);
+
+    // parity gate first, so a divergence fails before any timing
+    let db = plan.run(db_spec);
+    let serial = plan.run(serial_spec);
+    let identical = db.colors == serial.colors
+        && db.stats.comm_rounds == serial.stats.comm_rounds
+        && db.stats.conflicts == serial.stats.conflicts;
+    let rounds = db.stats.comm_rounds;
+    let conflicts = db.stats.conflicts;
+    let overlap_saved_ms = db.stats.overlap_saved_ns as f64 / 1e6;
+
+    let db_ms = median_ms(reps, || {
+        let r = plan.run(db_spec);
+        std::hint::black_box(r.stats.colors_used);
+    });
+    let serial_ms = median_ms(reps, || {
+        let r = plan.run(serial_spec);
+        std::hint::black_box(r.stats.colors_used);
+    });
+    let speedup = serial_ms / db_ms;
+    println!(
+        "fix loop  serial rounds: {serial_ms:>8.2} ms   double-buffered: {db_ms:>8.2} ms \
+         ({speedup:.2}x) rounds={rounds} conflicts={conflicts} \
+         overlap_saved={overlap_saved_ms:.3} ms identical={identical}"
+    );
+
+    let json = format!(
+        "{{\n  \"bench\": \"micro_kernels_pr4\",\n  \"schema\": 1,\n  \"reps\": {reps},\n  \
+         \"host_cores\": {},\n  \
+         \"graph\": {{\"kind\": \"gnm\", \"n\": {n}, \"m\": {m}, \"seed\": {seed}}},\n  \
+         \"ranks\": {ranks},\n  \"partition\": \"hash\",\n  \
+         \"comm_rounds\": {rounds},\n  \"conflicts\": {conflicts},\n  \
+         \"serial_round_ms\": {serial_ms:.3},\n  \"double_buffered_ms\": {db_ms:.3},\n  \
+         \"speedup\": {speedup:.3},\n  \"overlap_saved_ms\": {overlap_saved_ms:.3},\n  \
+         \"identical_to_serial\": {identical}\n}}\n",
+        std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1),
+    );
+    std::fs::write("BENCH_pr4.json", &json).expect("writing BENCH_pr4.json");
+    println!("-> BENCH_pr4.json");
+    // asserted after the JSON is on disk, so a regression is recorded
+    assert!(identical, "double-buffered coloring diverged from serial rounds");
+    assert!(
+        conflicts == 0 || db.stats.overlap_saved_ns > 0,
+        "fix rounds ran but no detection was overlapped"
+    );
+}
+
 fn main() {
     if std::env::var("BENCH_PR1").is_ok_and(|v| v == "1") {
         pr1_smoke();
@@ -440,6 +507,10 @@ fn main() {
     }
     if std::env::var("BENCH_PR3").is_ok_and(|v| v == "1") {
         pr3_smoke();
+        return;
+    }
+    if std::env::var("BENCH_PR4").is_ok_and(|v| v == "1") {
+        pr4_smoke();
         return;
     }
     let reps: usize =

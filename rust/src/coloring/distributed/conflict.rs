@@ -13,7 +13,24 @@
 //!
 //! Because every term is a pure function of (GID, degree), the decision
 //! is globally consistent — tested by the symmetry property below.
+//!
+//! This module also hosts the **per-candidate scan primitives** the
+//! detection passes are built from.  A *candidate* is the unit of
+//! conflict scanning — a ghost vertex for D1 (every cross-rank conflict
+//! edge is incident to a ghost, §3.4), a boundary-d2 owned vertex for
+//! D2/PD2 (Algorithm 5) — and each candidate's scan reads a bounded,
+//! known set of colors (its own plus its 1- or 2-hop neighborhood).
+//! That read-set locality is what the double-buffered fix loop exploits:
+//! it scans every candidate *early* (while the round's delta exchange is
+//! still in flight), then uses [`mark_dirty_d1`] / [`mark_dirty_d2`] to
+//! find exactly the candidates whose read set intersects the ghost
+//! colors the exchange actually changed, and re-scans only those.
+//! Because per-candidate results are pure functions of the colors read,
+//! replacing the dirty candidates' early results with their re-scan
+//! reproduces the serial full-scan output bit-for-bit.
 
+use super::ghost::LocalGraph;
+use crate::coloring::Color;
 use crate::util::gid_rand;
 
 /// Which endpoint of a conflict edge must be recolored.
@@ -67,6 +84,181 @@ pub fn first_loses(
     deg_b: u32,
 ) -> bool {
     resolve(seed, recolor_degrees, gid_a, deg_a, gid_b, deg_b) == Loser::First
+}
+
+// ---------------------------------------------------------------------
+// per-candidate scan primitives (shared by the full and split detectors)
+// ---------------------------------------------------------------------
+
+/// Scan one D1 candidate (ghost `gl`, Algorithm 3 restricted to `E_g`):
+/// count its same-color conflicts and report losers through the sinks.
+/// Local-ghost conflicts resolve via [`resolve`]; ghost-ghost conflicts
+/// (2GL only) are attributed to the higher-id ghost so each unordered
+/// pair is scanned by exactly one candidate.  Pure in `colors`: the
+/// result depends only on `colors[gl]` and `colors[u]` for `u ∈ N(gl)`,
+/// which is the contract [`mark_dirty_d1`] relies on.
+#[inline]
+pub(crate) fn scan_ghost_d1(
+    lg: &LocalGraph,
+    colors: &[Color],
+    seed: u64,
+    recolor_degrees: bool,
+    gl: u32,
+    on_local_loser: &mut impl FnMut(u32),
+    on_ghost_loser: &mut impl FnMut(u32),
+) -> u64 {
+    let nl = lg.n_local as u32;
+    let cg = colors[gl as usize];
+    if cg == 0 {
+        return 0;
+    }
+    let mut count = 0u64;
+    for &u in lg.graph.neighbors(gl) {
+        if colors[u as usize] != cg {
+            continue;
+        }
+        if u < nl {
+            // local-ghost conflict
+            count += 1;
+            match resolve(
+                seed,
+                recolor_degrees,
+                lg.gids[u as usize] as u64,
+                lg.degrees[u as usize],
+                lg.gids[gl as usize] as u64,
+                lg.degrees[gl as usize],
+            ) {
+                Loser::First => on_local_loser(u),
+                Loser::Second => on_ghost_loser(gl),
+            }
+        } else if u < gl {
+            // ghost-ghost conflict (2GL only): owners resolve it; we
+            // track the loser for recolor prediction.
+            if first_loses(
+                seed,
+                recolor_degrees,
+                lg.gids[u as usize] as u64,
+                lg.degrees[u as usize],
+                lg.gids[gl as usize] as u64,
+                lg.degrees[gl as usize],
+            ) {
+                on_ghost_loser(u);
+            } else {
+                on_ghost_loser(gl);
+            }
+        }
+    }
+    count
+}
+
+/// Scan one D2/PD2 candidate (owned boundary-d2 vertex `v`, Algorithm
+/// 5): count its distance-2 (and, unless `partial`, distance-1)
+/// conflicts against remote vertices and report `v` through the sink
+/// when it loses.  Pure in `colors`: reads `colors[v]`, `colors[u]` for
+/// `u ∈ N(v)` and `colors[x]` for `x ∈ N(N(v))` — the contract
+/// [`mark_dirty_d2`] relies on.
+#[inline]
+pub(crate) fn scan_vertex_d2(
+    lg: &LocalGraph,
+    colors: &[Color],
+    seed: u64,
+    recolor_degrees: bool,
+    partial: bool,
+    v: u32,
+    on_loser: &mut impl FnMut(u32),
+) -> u64 {
+    let nl = lg.n_local as u32;
+    let cv = colors[v as usize];
+    if cv == 0 {
+        return 0;
+    }
+    let v_loses = |x: u32| -> bool {
+        first_loses(
+            seed,
+            recolor_degrees,
+            lg.gids[v as usize] as u64,
+            lg.degrees[v as usize],
+            lg.gids[x as usize] as u64,
+            lg.degrees[x as usize],
+        )
+    };
+    let mut count = 0u64;
+    for &u in lg.graph.neighbors(v) {
+        if !partial && u >= nl && colors[u as usize] == cv {
+            count += 1;
+            if v_loses(u) {
+                on_loser(v);
+            }
+        }
+        for &x in lg.graph.neighbors(u) {
+            if x != v && x >= nl && colors[x as usize] == cv {
+                count += 1;
+                if v_loses(x) {
+                    on_loser(v);
+                }
+            }
+        }
+    }
+    count
+}
+
+/// Mark every D1 candidate whose scan read set intersects `updated`
+/// (the ghost local-ids whose colors the just-completed delta exchange
+/// changed).  Candidate `gl` reads `colors[gl]` and `colors[N(gl)]`, so
+/// by CSR symmetry the dirty set is exactly `updated ∪ N(updated)`
+/// restricted to the ghost id range.  Newly marked candidates are
+/// appended to `marked` (so the caller can re-scan and later clear just
+/// those flags); cost is O(Σ deg(updated)), not O(|E_g|).
+pub(crate) fn mark_dirty_d1(
+    lg: &LocalGraph,
+    updated: &[u32],
+    dirty: &mut [bool],
+    marked: &mut Vec<u32>,
+) {
+    let nl = lg.n_local as u32;
+    let mut mark = |x: u32| {
+        if x >= nl && !dirty[x as usize] {
+            dirty[x as usize] = true;
+            marked.push(x);
+        }
+    };
+    for &g in updated {
+        mark(g);
+        for &w in lg.graph.neighbors(g) {
+            mark(w);
+        }
+    }
+}
+
+/// Mark every D2/PD2 candidate whose scan read set intersects `updated`.
+/// Candidate `v` reads colors within two hops, so by CSR symmetry the
+/// dirty set is `(N(updated) ∪ N(N(updated)))` restricted to the owned
+/// boundary-d2 prefix `0..n_boundary2` (the candidate worklist — a
+/// contiguous prefix under the boundary-first ordering).  Over-marking
+/// never affects results (a re-scan over unchanged colors reproduces
+/// the early result); under-marking would, so the walk mirrors the scan
+/// read set exactly.
+pub(crate) fn mark_dirty_d2(
+    lg: &LocalGraph,
+    updated: &[u32],
+    dirty: &mut [bool],
+    marked: &mut Vec<u32>,
+) {
+    let nb2 = lg.n_boundary2 as u32;
+    let mut mark = |x: u32| {
+        if x < nb2 && !dirty[x as usize] {
+            dirty[x as usize] = true;
+            marked.push(x);
+        }
+    };
+    for &g in updated {
+        for &w in lg.graph.neighbors(g) {
+            mark(w);
+            for &x in lg.graph.neighbors(w) {
+                mark(x);
+            }
+        }
+    }
 }
 
 #[cfg(test)]

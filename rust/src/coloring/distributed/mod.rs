@@ -15,6 +15,24 @@
 //! 4. `Allreduce(conflicts, SUM)`; while > 0: recolor losers locally,
 //!    communicate *only changed* boundary colors, re-detect.
 //!
+//! **Double-buffered delta rounds.**  With
+//! [`DistConfig::double_buffer`] (the default), step 4's delta exchange
+//! for round *r* is split into start/finish halves
+//! ([`Comm::neighbor_alltoallv_start`] / `_finish`) and round *r + 1*'s
+//! conflict detection runs *early* — between the halves, while the
+//! exchange is in flight — over the colors that are already stable
+//! (owned colors, and every ghost the incoming deltas turn out not to
+//! touch).  When the receive completes, only the candidates whose scan
+//! read set intersects the ghosts that actually changed are re-scanned
+//! (`conflict::mark_dirty_*`), and their early results are replaced at
+//! a deterministic merge point, so losers, counts and therefore
+//! colorings are **bit-identical** to the serial-round path at every
+//! thread and rank count (`tests/round_overlap.rs` pins the full
+//! matrix).  Message count and order per round are unchanged
+//! (`tests/comm_volume.rs`); the saved receive-wait is reported as
+//! [`RankOutcome::overlap_saved_ns`] / [`RunStats::overlap_saved_ns`].
+//! `--no-double-buffer` (CLI) ablates the overlap for benches.
+//!
 //! The on-node kernels *and* the conflict-detection scans run
 //! data-parallel over [`DistConfig::threads`] workers (bit-identical to
 //! serial — see `util::par`) on the rank's persistent worker pool, and
@@ -81,6 +99,13 @@ pub struct DistConfig {
     pub seed: u64,
     /// Safety cap on recoloring rounds.
     pub max_rounds: usize,
+    /// Double-buffer the fix loop's delta rounds: overlap each round's
+    /// boundary-delta exchange with the next round's early conflict
+    /// detection (default on).  Colorings are bit-identical either way —
+    /// this trades a bounded amount of redundant re-scanning for hiding
+    /// the exchange's receive wait.  The CLI exposes the ablation as
+    /// `--no-double-buffer`.
+    pub double_buffer: bool,
 }
 
 impl Default for DistConfig {
@@ -93,6 +118,7 @@ impl Default for DistConfig {
             threads: 0,
             seed: 42,
             max_rounds: 500,
+            double_buffer: true,
         }
     }
 }
@@ -183,6 +209,11 @@ pub struct RankOutcome {
     pub conflicts: u64,
     /// Vertices this rank recolored over all rounds.
     pub recolored: u64,
+    /// Wall nanoseconds of conflict-detection compute executed while a
+    /// delta exchange was in flight (the double-buffered rounds' hidden
+    /// latency; 0 when [`DistConfig::double_buffer`] is off or the run
+    /// converges without fix rounds).
+    pub overlap_saved_ns: u64,
     pub timers: SplitTimer,
     pub comm: CommStats,
 }
@@ -199,6 +230,9 @@ pub struct RunStats {
     pub comm_wall_ns: u64,
     pub comm_modeled_ns: u64,
     pub bytes: u64,
+    /// Max per-rank detection compute overlapped with in-flight delta
+    /// exchanges (see [`RankOutcome::overlap_saved_ns`]).
+    pub overlap_saved_ns: u64,
 }
 
 impl RunStats {
@@ -262,6 +296,7 @@ pub fn color_distributed(
         kernel: cfg.kernel,
         seed: None,
         max_rounds: cfg.max_rounds,
+        double_buffer: cfg.double_buffer,
     };
     let mut out = plan.run_with_backend(spec, backend);
     // one-shot semantics: construction cost is part of this run's bill
@@ -283,6 +318,7 @@ pub(crate) fn assemble(n_global: usize, outcomes: Vec<RankOutcome>, nranks: usiz
         comm_wall_ns: 0,
         comm_modeled_ns: 0,
         bytes: 0,
+        overlap_saved_ns: 0,
     };
     for o in outcomes {
         for (v, c) in o.owned_colors {
@@ -291,6 +327,7 @@ pub(crate) fn assemble(n_global: usize, outcomes: Vec<RankOutcome>, nranks: usiz
         stats.comm_rounds = stats.comm_rounds.max(o.comm_rounds);
         stats.conflicts += o.conflicts;
         stats.recolored += o.recolored;
+        stats.overlap_saved_ns = stats.overlap_saved_ns.max(o.overlap_saved_ns);
         stats.comp_ns = stats.comp_ns.max(o.timers.comp.as_nanos() as u64);
         stats.comm_wall_ns = stats
             .comm_wall_ns
@@ -321,7 +358,8 @@ pub fn color_rank(
     let mut build_timer = SplitTimer::new();
     let lg = build_timer.comm(|| LocalGraph::build(comm, g, part, two_layers));
     let mut scratch = KernelScratch::new(cfg.threads);
-    let mut out = color_rank_planned(comm, &lg, cfg, backend, &mut scratch);
+    let mut xscratch = ExchangeScratch::new();
+    let mut out = color_rank_planned(comm, &lg, cfg, backend, &mut scratch, &mut xscratch);
     out.timers.comm += build_timer.comm;
     out
 }
@@ -336,6 +374,7 @@ pub(crate) fn color_rank_planned(
     cfg: DistConfig,
     backend: &dyn LocalBackend,
     scratch: &mut KernelScratch,
+    xscratch: &mut ExchangeScratch,
 ) -> RankOutcome {
     let two_layers = match cfg.problem {
         Problem::D1 => cfg.two_ghost_layers,
@@ -390,21 +429,30 @@ pub(crate) fn color_rank_planned(
     timers.comm(|| exchange_full_recv(comm, lg, &mut colors));
 
     // ---- speculative fix loop -------------------------------------------
-    // `mask` (all false again) and the loser vectors are reused across
-    // rounds instead of reallocating per round.
+    // `mask` (all false again), the loser vectors and `xscratch` are
+    // reused across rounds instead of reallocating per round.
+    //
+    // Round structure (detection leads each iteration's *tail* so the
+    // double-buffered path can fold it into the exchange window):
+    //   detect round 0 (nothing in flight — always a full scan)
+    //   loop: allreduce; recolor losers; then either
+    //     serial rounds:        exchange_delta; full detect
+    //     double-buffered:      exchange start; EARLY detect (overlap);
+    //                           exchange finish; fixup detect (re-scan
+    //                           only candidates the deltas dirtied)
+    // Both arms produce bit-identical losers/counts (see detect_fixup),
+    // so the coloring and round count never depend on the knob.
     let mut conflicts_total = 0u64;
     let mut recolored_total = 0u64;
     let mut round = 0usize;
+    let mut overlap_saved_ns = 0u64;
     let mut local_losers: Vec<u32> = Vec::new();
     let mut ghost_losers: Vec<u32> = Vec::new();
-    let mut xscratch = ExchangeScratch::new();
+    let mut found = timers.comp(|| {
+        detect_conflicts(lg, &colors, cfg, &exec, &mut local_losers, &mut ghost_losers)
+    });
+    conflicts_total += found;
     loop {
-        local_losers.clear();
-        ghost_losers.clear();
-        let found = timers.comp(|| {
-            detect_conflicts(lg, &colors, cfg, &exec, &mut local_losers, &mut ghost_losers)
-        });
-        conflicts_total += found;
         let global = timers.comm(|| comm.allreduce_sum(TAG_REDUCE + 2 * round as u64, found));
         if global == 0 {
             break;
@@ -445,7 +493,30 @@ pub(crate) fn color_rank_planned(
 
         // communicate only the recolored owned vertices
         comm_rounds += 1;
-        timers.comm(|| exchange_delta(comm, lg, &mut colors, &local_losers, round, &mut xscratch));
+        if cfg.double_buffer {
+            timers.comm(|| exchange_delta_start(comm, lg, &colors, &local_losers, round, xscratch));
+            // early scan while the exchange drains: owned colors are
+            // final for this round, ghost colors are speculative — any
+            // candidate the incoming deltas invalidate is re-scanned in
+            // detect_fixup below
+            let t0 = std::time::Instant::now();
+            let early = timers.comp(|| detect_early(lg, &colors, cfg, &exec));
+            overlap_saved_ns += t0.elapsed().as_nanos() as u64;
+            timers.comm(|| exchange_delta_finish(comm, lg, &mut colors, round, xscratch));
+            local_losers.clear();
+            ghost_losers.clear();
+            found = timers.comp(|| {
+                detect_fixup(lg, &colors, cfg, &exec, early, xscratch, &mut local_losers, &mut ghost_losers)
+            });
+        } else {
+            timers.comm(|| exchange_delta(comm, lg, &mut colors, &local_losers, round, xscratch));
+            local_losers.clear();
+            ghost_losers.clear();
+            found = timers.comp(|| {
+                detect_conflicts(lg, &colors, cfg, &exec, &mut local_losers, &mut ghost_losers)
+            });
+        }
+        conflicts_total += found;
     }
 
     let owned_colors = (0..lg.n_local)
@@ -456,6 +527,7 @@ pub(crate) fn color_rank_planned(
         comm_rounds,
         conflicts: conflicts_total,
         recolored: recolored_total,
+        overlap_saved_ns,
         timers,
         comm: comm.stats(),
     }
@@ -489,7 +561,9 @@ pub fn detect_conflicts(
 
 /// Algorithm 3 with the §3.4 optimization: scan only ghosts' adjacency
 /// (`E_g`), since every cross-rank conflict edge is incident to a ghost.
-/// The ghost range is chunked across the pool.
+/// The ghost range is chunked across the pool; the per-candidate scan
+/// is [`conflict::scan_ghost_d1`], shared with the double-buffered
+/// early/fixup path so the two detectors cannot drift apart.
 fn detect_d1(
     lg: &LocalGraph,
     colors: &[Color],
@@ -498,52 +572,21 @@ fn detect_d1(
     local_losers: &mut Vec<u32>,
     ghost_losers: &mut Vec<u32>,
 ) -> u64 {
-    let nl = lg.n_local as u32;
     let parts = exec.map_range_chunks(lg.n_ghost, |range| {
         let mut count = 0u64;
         let mut locals: Vec<u32> = Vec::new();
         let mut ghosts: Vec<u32> = Vec::new();
         for gi in range {
             let gl = (lg.n_local + gi) as u32;
-            let cg = colors[gl as usize];
-            if cg == 0 {
-                continue;
-            }
-            for &u in lg.graph.neighbors(gl) {
-                if colors[u as usize] != cg {
-                    continue;
-                }
-                if u < nl {
-                    // local-ghost conflict
-                    count += 1;
-                    match conflict::resolve(
-                        cfg.seed,
-                        cfg.recolor_degrees,
-                        lg.gids[u as usize] as u64,
-                        lg.degrees[u as usize],
-                        lg.gids[gl as usize] as u64,
-                        lg.degrees[gl as usize],
-                    ) {
-                        conflict::Loser::First => locals.push(u),
-                        conflict::Loser::Second => ghosts.push(gl),
-                    }
-                } else if u < gl {
-                    // ghost-ghost conflict (2GL only): owners resolve it;
-                    // we track the loser for recolor prediction.
-                    if conflict::first_loses(
-                        cfg.seed,
-                        cfg.recolor_degrees,
-                        lg.gids[u as usize] as u64,
-                        lg.degrees[u as usize],
-                        lg.gids[gl as usize] as u64,
-                        lg.degrees[gl as usize],
-                    ) {
-                        ghosts.push(u);
-                    } else {
-                        ghosts.push(gl);
-                    }
-                }
-            }
+            count += conflict::scan_ghost_d1(
+                lg,
+                colors,
+                cfg.seed,
+                cfg.recolor_degrees,
+                gl,
+                &mut |u| locals.push(u),
+                &mut |g| ghosts.push(g),
+            );
         }
         (count, locals, ghosts)
     });
@@ -562,7 +605,9 @@ fn detect_d1(
 
 /// Algorithm 5: distance-2 conflicts for boundary-d2 vertices; with
 /// `partial`, only two-hop conflicts count (PD2, §3.6).  The
-/// `boundary_d2` worklist is chunked across the pool.
+/// `boundary_d2` worklist is chunked across the pool; the per-candidate
+/// scan is [`conflict::scan_vertex_d2`], shared with the
+/// double-buffered early/fixup path.
 fn detect_d2(
     lg: &LocalGraph,
     colors: &[Color],
@@ -571,41 +616,19 @@ fn detect_d2(
     exec: &par::Executor,
     local_losers: &mut Vec<u32>,
 ) -> u64 {
-    let nl = lg.n_local as u32;
     let parts = exec.map_chunks(&lg.boundary_d2, |chunk| {
         let mut count = 0u64;
         let mut losers: Vec<u32> = Vec::new();
         for &v in chunk {
-            let cv = colors[v as usize];
-            if cv == 0 {
-                continue;
-            }
-            let v_loses = |x: u32| -> bool {
-                conflict::first_loses(
-                    cfg.seed,
-                    cfg.recolor_degrees,
-                    lg.gids[v as usize] as u64,
-                    lg.degrees[v as usize],
-                    lg.gids[x as usize] as u64,
-                    lg.degrees[x as usize],
-                )
-            };
-            for &u in lg.graph.neighbors(v as VId) {
-                if !partial && u >= nl && colors[u as usize] == cv {
-                    count += 1;
-                    if v_loses(u) {
-                        losers.push(v);
-                    }
-                }
-                for &x in lg.graph.neighbors(u) {
-                    if x != v as VId && x >= nl && colors[x as usize] == cv {
-                        count += 1;
-                        if v_loses(x) {
-                            losers.push(v);
-                        }
-                    }
-                }
-            }
+            count += conflict::scan_vertex_d2(
+                lg,
+                colors,
+                cfg.seed,
+                cfg.recolor_degrees,
+                partial,
+                v,
+                &mut |l| losers.push(l),
+            );
         }
         (count, losers)
     });
@@ -616,6 +639,209 @@ fn detect_d2(
     }
     local_losers.sort_unstable();
     local_losers.dedup();
+    count
+}
+
+// -----------------------------------------------------------------------
+// double-buffered detection: early scan + post-recv fixup
+// -----------------------------------------------------------------------
+
+/// Per-candidate results of an early (pre-recv) conflict scan, tagged by
+/// the candidate that produced them so [`detect_fixup`] can discard and
+/// re-derive exactly the entries the incoming deltas invalidated.
+#[derive(Debug, Default)]
+#[doc(hidden)]
+pub struct EarlyScan {
+    /// (candidate, conflicts counted while scanning it); only nonzero
+    /// entries are stored, so this stays proportional to the conflict
+    /// count, not the candidate count.
+    counts: Vec<(u32, u64)>,
+    /// (candidate, local loser it reported).
+    locals: Vec<(u32, u32)>,
+    /// (candidate, ghost loser it reported) — 2GL prediction input.
+    ghosts: Vec<(u32, u32)>,
+}
+
+/// Run the full candidate scan for `cfg.problem` against the *current*
+/// colors (owned colors final, ghost colors possibly about to be
+/// superseded by the in-flight delta exchange), keeping results
+/// per-candidate.  Chunked over the pool like the plain detectors; the
+/// per-candidate values are independent of chunking, so the final merge
+/// in [`detect_fixup`] is thread-count-invariant.
+fn detect_early(
+    lg: &LocalGraph,
+    colors: &[Color],
+    cfg: DistConfig,
+    exec: &par::Executor,
+) -> EarlyScan {
+    let parts: Vec<EarlyScan> = match cfg.problem {
+        Problem::D1 => exec.map_range_chunks(lg.n_ghost, |range| {
+            let mut s = EarlyScan::default();
+            for gi in range {
+                let gl = (lg.n_local + gi) as u32;
+                let EarlyScan { counts, locals, ghosts } = &mut s;
+                let c = conflict::scan_ghost_d1(
+                    lg,
+                    colors,
+                    cfg.seed,
+                    cfg.recolor_degrees,
+                    gl,
+                    &mut |u| locals.push((gl, u)),
+                    &mut |g| ghosts.push((gl, g)),
+                );
+                if c > 0 {
+                    counts.push((gl, c));
+                }
+            }
+            s
+        }),
+        Problem::D2 | Problem::PD2 => {
+            let partial = cfg.problem == Problem::PD2;
+            exec.map_chunks(&lg.boundary_d2, |chunk| {
+                let mut s = EarlyScan::default();
+                for &v in chunk {
+                    let EarlyScan { counts, locals, .. } = &mut s;
+                    let c = conflict::scan_vertex_d2(
+                        lg,
+                        colors,
+                        cfg.seed,
+                        cfg.recolor_degrees,
+                        partial,
+                        v,
+                        &mut |l| locals.push((v, l)),
+                    );
+                    if c > 0 {
+                        counts.push((v, c));
+                    }
+                }
+                s
+            })
+        }
+    };
+    let mut out = EarlyScan::default();
+    for mut p in parts {
+        out.counts.append(&mut p.counts);
+        out.locals.append(&mut p.locals);
+        out.ghosts.append(&mut p.ghosts);
+    }
+    out
+}
+
+/// Merge an [`EarlyScan`] with the ghost updates the just-finished delta
+/// exchange installed (`xscratch.updated`): keep every entry whose
+/// candidate's read set the deltas did not touch, re-scan the dirty
+/// candidates against the post-install colors, and emit the combined
+/// sorted+deduped losers and total count.  The output is bit-identical
+/// to a full [`detect_conflicts`] over the post-install colors: clean
+/// candidates read the same colors either way, and dirty candidates are
+/// recomputed from scratch.
+#[allow(clippy::too_many_arguments)]
+fn detect_fixup(
+    lg: &LocalGraph,
+    colors: &[Color],
+    cfg: DistConfig,
+    exec: &par::Executor,
+    early: EarlyScan,
+    xscratch: &mut ExchangeScratch,
+    local_losers: &mut Vec<u32>,
+    ghost_losers: &mut Vec<u32>,
+) -> u64 {
+    // mark the candidates whose scan reads intersect the installed
+    // updates; `dirty` flags + the `marked` list live in the exchange
+    // scratch so the flag array is allocated once per plan, not per round
+    let n_all = lg.n_local + lg.n_ghost;
+    if xscratch.dirty.len() < n_all {
+        xscratch.dirty.resize(n_all, false);
+    }
+    xscratch.marked.clear();
+    if !xscratch.updated.is_empty() {
+        match cfg.problem {
+            Problem::D1 => {
+                conflict::mark_dirty_d1(lg, &xscratch.updated, &mut xscratch.dirty, &mut xscratch.marked)
+            }
+            Problem::D2 | Problem::PD2 => {
+                conflict::mark_dirty_d2(lg, &xscratch.updated, &mut xscratch.dirty, &mut xscratch.marked)
+            }
+        }
+    }
+
+    // keep the clean candidates' early results
+    let dirty = &xscratch.dirty;
+    let mut count = 0u64;
+    for &(cand, c) in &early.counts {
+        if !dirty[cand as usize] {
+            count += c;
+        }
+    }
+    for &(cand, l) in &early.locals {
+        if !dirty[cand as usize] {
+            local_losers.push(l);
+        }
+    }
+    for &(cand, g) in &early.ghosts {
+        if !dirty[cand as usize] {
+            ghost_losers.push(g);
+        }
+    }
+
+    // re-scan the dirty candidates with the authoritative colors
+    let mut cands = std::mem::take(&mut xscratch.marked);
+    cands.sort_unstable();
+    let parts = match cfg.problem {
+        Problem::D1 => exec.map_chunks(&cands, |chunk| {
+            let mut c = 0u64;
+            let mut locals: Vec<u32> = Vec::new();
+            let mut ghosts: Vec<u32> = Vec::new();
+            for &gl in chunk {
+                c += conflict::scan_ghost_d1(
+                    lg,
+                    colors,
+                    cfg.seed,
+                    cfg.recolor_degrees,
+                    gl,
+                    &mut |u| locals.push(u),
+                    &mut |g| ghosts.push(g),
+                );
+            }
+            (c, locals, ghosts)
+        }),
+        Problem::D2 | Problem::PD2 => {
+            let partial = cfg.problem == Problem::PD2;
+            exec.map_chunks(&cands, |chunk| {
+                let mut c = 0u64;
+                let mut losers: Vec<u32> = Vec::new();
+                for &v in chunk {
+                    c += conflict::scan_vertex_d2(
+                        lg,
+                        colors,
+                        cfg.seed,
+                        cfg.recolor_degrees,
+                        partial,
+                        v,
+                        &mut |l| losers.push(l),
+                    );
+                }
+                (c, losers, Vec::new())
+            })
+        }
+    };
+    for (c, locals, ghosts) in parts {
+        count += c;
+        local_losers.extend_from_slice(&locals);
+        ghost_losers.extend_from_slice(&ghosts);
+    }
+
+    // clear exactly the flags we set, keeping the scratch reusable
+    for &x in &cands {
+        xscratch.dirty[x as usize] = false;
+    }
+    cands.clear();
+    xscratch.marked = cands; // hand the capacity back
+
+    local_losers.sort_unstable();
+    local_losers.dedup();
+    ghost_losers.sort_unstable();
+    ghost_losers.dedup();
     count
 }
 
@@ -664,21 +890,47 @@ fn recolor_predictive(
 // boundary color exchange
 // -----------------------------------------------------------------------
 
-/// Reusable per-rank staging buffers for the delta exchanges: one
-/// payload vector per send-neighbor, cleared (not reallocated) every
-/// fix round.  The wire buffers themselves are necessarily fresh — the
-/// channel takes ownership of every message — but the O(p)
-/// `Vec<Vec<u8>>` the dense exchange rebuilt per round is gone, and the
-/// staging capacity persists across all rounds of a run.
+/// Reusable per-rank staging for the delta exchanges, **double
+/// buffered**: two independent staging generations, flipped at every
+/// [`exchange_delta_start`], so the buffers backing an in-flight send
+/// are never the ones the next round stages into (the `MPI_Isend`
+/// buffer-validity discipline — on the channel substrate the wire takes
+/// ownership of each encoded message, but the staging generations keep
+/// the overlap pattern honest and the capacity warm across rounds).
+/// The O(p) `Vec<Vec<u8>>` the dense exchange rebuilt per round is
+/// gone; everything here persists across all rounds of a run, and —
+/// plan-owned since PR 4 — across all runs of a plan.
+///
+/// The receive half also records which ghost colors it actually changed
+/// (`updated`), plus the dirty flag array + marked list the
+/// double-buffered fixup scan uses; keeping them here gives the whole
+/// overlap machinery one allocation site per rank.
 #[derive(Debug, Default)]
 #[doc(hidden)]
 pub struct ExchangeScratch {
-    payloads: Vec<Vec<u32>>,
+    /// Two staging generations (one payload vector per send-neighbor).
+    gens: [Vec<Vec<u32>>; 2],
+    /// Generation the *next* start call stages into.
+    cur: usize,
+    /// Ghost local-ids whose colors the last finish call changed.
+    updated: Vec<u32>,
+    /// Candidate dirty flags for [`detect_fixup`] (lazily sized, flags
+    /// cleared after every use).
+    dirty: Vec<bool>,
+    /// Scratch list of candidates marked dirty this round.
+    marked: Vec<u32>,
 }
 
 impl ExchangeScratch {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Ghost local-ids whose colors the most recent
+    /// [`exchange_delta_finish`] (or fused [`exchange_delta`]) actually
+    /// changed — the write set the double-buffered fixup scan keys off.
+    pub fn updated(&self) -> &[u32] {
+        &self.updated
     }
 }
 
@@ -730,6 +982,9 @@ pub fn exchange_full_recv(comm: &mut Comm, lg: &LocalGraph, colors: &mut [Color]
 /// O(neighbor ranks), not O(p), and empty deltas still flow to
 /// neighbors (the receive half expects one message per neighbor — the
 /// delta payload *content* is what shrinks, per §3.2).
+///
+/// Fused start + finish; the double-buffered fix loop calls the halves
+/// directly with detection in between, with identical wire behavior.
 #[doc(hidden)]
 pub fn exchange_delta(
     comm: &mut Comm,
@@ -739,15 +994,37 @@ pub fn exchange_delta(
     round: usize,
     scratch: &mut ExchangeScratch,
 ) {
-    if scratch.payloads.len() < lg.send_ranks.len() {
-        scratch.payloads.resize(lg.send_ranks.len(), Vec::new());
+    exchange_delta_start(comm, lg, colors, recolored, round, scratch);
+    exchange_delta_finish(comm, lg, colors, round, scratch);
+}
+
+/// Send half of [`exchange_delta`]: stage (position, color) pairs into
+/// the scratch's current generation, flip generations, and post the
+/// sends (non-blocking on this substrate).  Owned colors read here are
+/// final for the round, so the caller may compute — e.g. run the early
+/// conflict scan — before calling [`exchange_delta_finish`].
+#[doc(hidden)]
+pub fn exchange_delta_start(
+    comm: &mut Comm,
+    lg: &LocalGraph,
+    colors: &[Color],
+    recolored: &[u32],
+    round: usize,
+    scratch: &mut ExchangeScratch,
+) {
+    // stage into the current generation and flip: the other generation
+    // (any still-notionally-in-flight round) is never touched here
+    let gen = &mut scratch.gens[scratch.cur];
+    scratch.cur ^= 1;
+    if gen.len() < lg.send_ranks.len() {
+        gen.resize(lg.send_ranks.len(), Vec::new());
     }
     let mut bufs: Vec<Vec<u8>> = Vec::with_capacity(lg.send_ranks.len());
     for (i, &r) in lg.send_ranks.iter().enumerate() {
         // merge the (sorted) recolored set against the sorted
         // (local idx -> subscription position) index
         let sp = &lg.subs_pos[r as usize];
-        let payload = &mut scratch.payloads[i];
+        let payload = &mut gen[i];
         payload.clear();
         let mut si = 0usize;
         for &v in recolored {
@@ -763,12 +1040,33 @@ pub fn exchange_delta(
         bufs.push(encode_u32s(payload));
     }
     let tag = TAG_COLORS + 1 + round as u64;
-    let got = comm.neighbor_alltoallv(tag, &lg.send_ranks, bufs, &lg.recv_ranks);
+    comm.neighbor_alltoallv_start(tag, &lg.send_ranks, bufs);
+}
+
+/// Receive half of [`exchange_delta`]: drain one delta from every
+/// neighbor, install the authoritative ghost colors, and record the
+/// ghosts whose color actually changed in `scratch.updated` (the 2GL
+/// predictions that were already right install as no-ops and stay out
+/// of the update set — fewer candidates for the fixup re-scan).
+#[doc(hidden)]
+pub fn exchange_delta_finish(
+    comm: &mut Comm,
+    lg: &LocalGraph,
+    colors: &mut [Color],
+    round: usize,
+    scratch: &mut ExchangeScratch,
+) {
+    let tag = TAG_COLORS + 1 + round as u64;
+    let got = comm.neighbor_alltoallv_finish(tag, &lg.recv_ranks);
+    scratch.updated.clear();
     for (&r, buf) in lg.recv_ranks.iter().zip(got) {
         let xs = decode_u32s(&buf);
         for pair in xs.chunks_exact(2) {
             let gl = lg.ghost_from[r as usize][pair[0] as usize];
-            colors[gl as usize] = pair[1];
+            if colors[gl as usize] != pair[1] {
+                colors[gl as usize] = pair[1];
+                scratch.updated.push(gl);
+            }
         }
     }
 }
@@ -902,5 +1200,35 @@ mod tests {
         let b = run(&g, 6, Problem::D1, true, false);
         assert_eq!(a.colors, b.colors);
         assert_eq!(a.stats.comm_rounds, b.stats.comm_rounds);
+    }
+
+    #[test]
+    fn double_buffered_rounds_match_serial_rounds_bit_for_bit() {
+        // the PR-4 invariant at unit granularity (tests/round_overlap.rs
+        // pins the full matrix): hash partition so conflicts are plentiful
+        let g = gnm(400, 2000, 11);
+        let part = partition::hash(&g, 8, 2);
+        for (problem, two) in [
+            (Problem::D1, false),
+            (Problem::D1, true),
+            (Problem::D2, true),
+            (Problem::PD2, true),
+        ] {
+            let on = DistConfig {
+                problem,
+                two_ghost_layers: two,
+                seed: 9,
+                ..Default::default()
+            };
+            assert!(on.double_buffer, "double buffering must default on");
+            let off = DistConfig { double_buffer: false, ..on };
+            let a = color_distributed(&g, &part, on, CostModel::zero(), &NativeBackend(on.kernel));
+            let b =
+                color_distributed(&g, &part, off, CostModel::zero(), &NativeBackend(off.kernel));
+            assert_eq!(a.colors, b.colors, "{problem} two={two}");
+            assert_eq!(a.stats.comm_rounds, b.stats.comm_rounds, "{problem} two={two}");
+            assert_eq!(a.stats.conflicts, b.stats.conflicts, "{problem} two={two}");
+            assert_eq!(b.stats.overlap_saved_ns, 0, "serial rounds report no overlap");
+        }
     }
 }

@@ -144,6 +144,8 @@ fn zoltan_rank(comm: &mut Comm, g: &Graph, part: &Partition, cfg: ZoltanConfig) 
         comm_rounds,
         conflicts: conflicts_total,
         recolored: recolored_total,
+        // Zoltan's supersteps are strictly phased; no exchange overlap
+        overlap_saved_ns: 0,
         timers,
         comm: comm.stats(),
     }

@@ -145,12 +145,33 @@ impl Comm {
         bufs: Vec<Vec<u8>>,
         recv_from: &[u32],
     ) -> Vec<Vec<u8>> {
+        self.neighbor_alltoallv_start(tag, send_to, bufs);
+        self.neighbor_alltoallv_finish(tag, recv_from)
+    }
+
+    /// Start half of [`Comm::neighbor_alltoallv`]: post every send and
+    /// return immediately (sends never block on this substrate — the
+    /// analogue of `MPI_Ineighbor_alltoallv`).  The caller owes a
+    /// matching [`Comm::neighbor_alltoallv_finish`] with the same `tag`,
+    /// and may compute between the halves — the fix loop's
+    /// double-buffered rounds overlap next-round conflict detection with
+    /// the in-flight exchange this way, exactly as `color_rank` overlaps
+    /// the initial exchange with interior coloring.  Message count and
+    /// stats accounting are identical to the fused call.
+    pub fn neighbor_alltoallv_start(&mut self, tag: u64, send_to: &[u32], bufs: Vec<Vec<u8>>) {
         assert_eq!(send_to.len(), bufs.len());
         self.stats.collectives += 1;
         for (&r, buf) in send_to.iter().zip(bufs) {
             debug_assert_ne!(r, self.rank, "self-send in neighbor collective");
             self.send(r, tag, buf);
         }
+    }
+
+    /// Finish half of [`Comm::neighbor_alltoallv`]: block until one
+    /// payload has arrived from every rank in `recv_from` (returned in
+    /// `recv_from` order).  Pairs with a prior
+    /// [`Comm::neighbor_alltoallv_start`] on the same `tag`.
+    pub fn neighbor_alltoallv_finish(&mut self, tag: u64, recv_from: &[u32]) -> Vec<Vec<u8>> {
         recv_from.iter().map(|&r| self.recv(r, tag)).collect()
     }
 
@@ -452,6 +473,30 @@ mod tests {
             let prev = ((r + p as usize - 1) % p as usize) as u8;
             assert_eq!(got, vec![vec![prev]]);
             assert_eq!(messages, 1, "one message per rank, not p-1");
+        }
+    }
+
+    #[test]
+    fn split_neighbor_alltoallv_matches_fused_and_allows_compute_between() {
+        // ring exchange through the start/finish halves: same messages,
+        // same payloads, with (simulated) compute between the halves
+        let p = 6u32;
+        let out = run_ranks(p as usize, CostModel::zero(), |c| {
+            let me = c.rank();
+            let next = (me + 1) % p;
+            let prev = (me + p - 1) % p;
+            c.neighbor_alltoallv_start(910, &[next], vec![vec![me as u8]]);
+            // overlap window: arbitrary local compute while the wire drains
+            let overlap: u32 = (0..1000u32).map(|x| x.wrapping_mul(31)).sum();
+            std::hint::black_box(overlap);
+            let got = c.neighbor_alltoallv_finish(910, &[prev]);
+            (got, c.stats().messages, c.stats().collectives)
+        });
+        for (r, (got, messages, collectives)) in out.into_iter().enumerate() {
+            let prev = ((r + p as usize - 1) % p as usize) as u8;
+            assert_eq!(got, vec![vec![prev]]);
+            assert_eq!(messages, 1, "split halves must not change message count");
+            assert_eq!(collectives, 1, "split halves count as one collective");
         }
     }
 

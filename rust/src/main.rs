@@ -67,8 +67,14 @@ COLOR FLAGS:
   --partitioner P     block | edge | bfs | hash                [edge]
   --threads T         on-node kernel threads per rank; 0=auto  [0]
   --seed S            RNG seed                                 [42]
+  --no-double-buffer  serial-round ablation: do not overlap the
+                      delta exchanges with early conflict detection
+                      (colorings are bit-identical either way)
   --artifacts DIR     artifact dir for --backend pjrt          [artifacts]
 ";
+
+/// Flags that take no value (presence = true).
+const BOOL_FLAGS: [&str; 1] = ["no-double-buffer"];
 
 struct Flags(std::collections::HashMap<String, String>);
 
@@ -101,6 +107,11 @@ fn parse_flags(args: &[String]) -> Result<Flags, String> {
         let key = a
             .strip_prefix("--")
             .ok_or_else(|| format!("expected --flag, got `{a}`"))?;
+        if BOOL_FLAGS.contains(&key) {
+            map.insert(key.to_string(), "1".to_string());
+            i += 1;
+            continue;
+        }
         let val = args
             .get(i + 1)
             .ok_or_else(|| format!("--{key} needs a value"))?;
@@ -161,7 +172,12 @@ fn cmd_color(f: Flags) -> Result<(), String> {
             let session =
                 Session::builder().ranks(ranks).cost(cost).threads(threads).seed(seed).build();
             let plan = session.plan(&g, &part, layers);
-            let pspec = ProblemSpec { problem, recolor_degrees: rd, ..Default::default() };
+            let pspec = ProblemSpec {
+                problem,
+                recolor_degrees: rd,
+                double_buffer: f.get("no-double-buffer").is_none(),
+                ..Default::default()
+            };
             let mut result = match backend_name.as_str() {
                 "native" => plan.run(pspec),
                 "pjrt" => {
@@ -196,11 +212,12 @@ fn cmd_color(f: Flags) -> Result<(), String> {
         result.stats.colors_used, result.stats.comm_rounds, result.stats.conflicts, proper
     );
     println!(
-        "wall={:.1}ms comp(max)={:.1}ms comm(modeled,max)={:.3}ms bytes={}",
+        "wall={:.1}ms comp(max)={:.1}ms comm(modeled,max)={:.3}ms bytes={} overlap_saved(max)={:.3}ms",
         wall.as_secs_f64() * 1e3,
         result.stats.comp_ns as f64 / 1e6,
         result.stats.comm_modeled_ns as f64 / 1e6,
-        result.stats.bytes
+        result.stats.bytes,
+        result.stats.overlap_saved_ns as f64 / 1e6
     );
     if !proper {
         return Err("coloring is NOT proper".into());

@@ -49,7 +49,8 @@ use std::time::Instant;
 
 use crate::coloring::distributed::ghost::LocalGraph;
 use crate::coloring::distributed::{
-    assemble, color_rank_planned, DistConfig, LocalBackend, NativeBackend, RunResult,
+    assemble, color_rank_planned, DistConfig, ExchangeScratch, LocalBackend, NativeBackend,
+    RunResult,
 };
 use crate::coloring::local::{KernelScratch, LocalKernel};
 use crate::coloring::Problem;
@@ -208,7 +209,8 @@ impl Session {
             build.messages += stats.messages;
             locals.push(lg);
         }
-        Plan { session: self, n_global: source.n_vertices(), two_layers: two, locals, build }
+        let xscratch = (0..self.nranks).map(|_| Mutex::new(ExchangeScratch::new())).collect();
+        Plan { session: self, n_global: source.n_vertices(), two_layers: two, locals, build, xscratch }
     }
 }
 
@@ -251,6 +253,12 @@ pub struct ProblemSpec {
     pub seed: Option<u64>,
     /// Safety cap on recoloring rounds.
     pub max_rounds: usize,
+    /// Double-buffer the fix loop's delta rounds (default on): each
+    /// round's boundary-delta exchange overlaps the next round's early
+    /// conflict detection.  Bit-identical colorings either way — see
+    /// [`DistConfig::double_buffer`]; `false` is the benches' serial-
+    /// round ablation (CLI `--no-double-buffer`).
+    pub double_buffer: bool,
 }
 
 impl Default for ProblemSpec {
@@ -261,6 +269,7 @@ impl Default for ProblemSpec {
             kernel: LocalKernel::VbBit,
             seed: None,
             max_rounds: 500,
+            double_buffer: true,
         }
     }
 }
@@ -301,6 +310,13 @@ impl ProblemSpec {
         self.seed = Some(seed);
         self
     }
+
+    /// Toggle the double-buffered delta rounds (on by default; `false`
+    /// runs the serial-round ablation).
+    pub fn with_double_buffer(mut self, on: bool) -> Self {
+        self.double_buffer = on;
+        self
+    }
 }
 
 /// A reusable coloring plan: per-rank `LocalGraph`s (ghost layers,
@@ -312,6 +328,12 @@ pub struct Plan<'s> {
     two_layers: bool,
     locals: Vec<LocalGraph>,
     build: PlanBuildStats,
+    /// Per-rank delta-exchange staging (the double-buffered generations
+    /// plus the fixup scan's dirty flags) — the plan-owned second
+    /// scratch generation next to the session's `KernelScratch`.
+    /// Owning it here keeps the capacity warm across every run of the
+    /// plan and sizes the dirty flags once per topology.
+    xscratch: Vec<Mutex<ExchangeScratch>>,
 }
 
 impl Plan<'_> {
@@ -361,6 +383,7 @@ impl Plan<'_> {
             threads: self.session.threads,
             seed: spec.seed.unwrap_or(self.session.seed),
             max_rounds: spec.max_rounds,
+            double_buffer: spec.double_buffer,
         };
         // one run at a time per session: rank threads hold their scratch
         // locks across blocking collectives (see `Session::run_gate`)
@@ -369,7 +392,9 @@ impl Plan<'_> {
             let rank = comm.rank() as usize;
             let mut scratch =
                 self.session.scratch[rank].lock().expect("rank scratch poisoned");
-            color_rank_planned(comm, &self.locals[rank], cfg, backend, &mut scratch)
+            let mut xscratch =
+                self.xscratch[rank].lock().expect("rank exchange scratch poisoned");
+            color_rank_planned(comm, &self.locals[rank], cfg, backend, &mut scratch, &mut xscratch)
         });
         assemble(self.n_global, outcomes, self.session.nranks)
     }

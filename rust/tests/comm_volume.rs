@@ -6,7 +6,8 @@
 
 use dist_color::coloring::distributed::ghost::LocalGraph;
 use dist_color::coloring::distributed::{
-    color_rank, exchange_delta, exchange_full, DistConfig, ExchangeScratch, NativeBackend,
+    color_rank, exchange_delta, exchange_delta_finish, exchange_delta_start, exchange_full,
+    DistConfig, ExchangeScratch, NativeBackend,
 };
 use dist_color::coloring::{validate, Color};
 use dist_color::distributed::{run_ranks, CostModel};
@@ -96,6 +97,76 @@ fn full_d1_run_messages_scale_with_neighbors_not_ranks() {
         assert!(
             o.comm.messages < dense_floor,
             "rank {rank}: sparse path should beat dense {dense_floor}"
+        );
+    }
+}
+
+#[test]
+fn split_delta_round_sends_same_messages_as_fused() {
+    // PR 4: the double-buffered start/finish halves must keep the exact
+    // message and byte budget of the fused delta round — overlap changes
+    // *when* detection runs, never *what* goes on the wire
+    let (g, part) = chain_fixture();
+    let per_rank = run_ranks(CHAIN_RANKS, CostModel::zero(), |c| {
+        let lg = LocalGraph::build(c, &g, &part, false);
+        let mut colors: Vec<Color> = vec![0; lg.n_local + lg.n_ghost];
+        for v in 0..lg.n_local {
+            colors[v] = (v % 5 + 1) as Color;
+        }
+        exchange_full(c, &lg, &mut colors);
+        let recolored: Vec<u32> = (0..lg.n_boundary1 as u32).collect();
+        let mut xscratch = ExchangeScratch::new();
+        // fused round
+        let s0 = c.stats();
+        exchange_delta(c, &lg, &mut colors, &recolored, 1, &mut xscratch);
+        let fused_msgs = c.stats().messages - s0.messages;
+        let fused_bytes = c.stats().bytes_sent - s0.bytes_sent;
+        // split round, with the overlap window between the halves
+        let s1 = c.stats();
+        exchange_delta_start(c, &lg, &colors, &recolored, 2, &mut xscratch);
+        let after_start = c.stats().messages - s1.messages;
+        exchange_delta_finish(c, &lg, &mut colors, 2, &mut xscratch);
+        let split_msgs = c.stats().messages - s1.messages;
+        let split_bytes = c.stats().bytes_sent - s1.bytes_sent;
+        (fused_msgs, fused_bytes, after_start, split_msgs, split_bytes, lg.send_ranks.len() as u64)
+    });
+    for (rank, (fm, fb, mid, sm, sb, neighbors)) in per_rank.into_iter().enumerate() {
+        assert_eq!(neighbors, 2, "rank {rank}");
+        assert_eq!(sm, fm, "rank {rank}: split round changed the message count");
+        assert_eq!(sb, fb, "rank {rank}: split round changed the byte volume");
+        assert_eq!(mid, sm, "rank {rank}: finish posted messages (all sends belong to start)");
+        assert!(sm <= 2 * neighbors, "rank {rank}: {sm} messages in one delta round");
+    }
+}
+
+#[test]
+fn double_buffering_changes_timing_not_message_count() {
+    // PR 4 end-to-end: an identical D1 run with the overlap on and off
+    // must put the same messages, bytes and rounds on the wire (still
+    // within the ≤ 2·neighbors-per-delta-round chain budget), and color
+    // identically
+    let (g, part) = chain_fixture();
+    let on_cfg = DistConfig::default();
+    assert!(on_cfg.double_buffer, "double buffering must be the default");
+    let off_cfg = DistConfig { double_buffer: false, ..DistConfig::default() };
+    let on = run_ranks(CHAIN_RANKS, CostModel::zero(), |c| {
+        color_rank(c, &g, &part, on_cfg, &NativeBackend(on_cfg.kernel))
+    });
+    let off = run_ranks(CHAIN_RANKS, CostModel::zero(), |c| {
+        color_rank(c, &g, &part, off_cfg, &NativeBackend(off_cfg.kernel))
+    });
+    for (rank, (a, b)) in on.iter().zip(&off).enumerate() {
+        assert_eq!(a.comm.messages, b.comm.messages, "rank {rank}: message count changed");
+        assert_eq!(a.comm.bytes_sent, b.comm.bytes_sent, "rank {rank}: byte volume changed");
+        assert_eq!(a.comm_rounds, b.comm_rounds, "rank {rank}: round count changed");
+        assert_eq!(a.owned_colors, b.owned_colors, "rank {rank}: coloring changed");
+        let neighbors = 2u64;
+        let bound = (a.comm_rounds as u64 + 3) * neighbors;
+        assert!(
+            a.comm.messages <= bound,
+            "rank {rank}: {} messages over {} rounds (bound {bound})",
+            a.comm.messages,
+            a.comm_rounds
         );
     }
 }

@@ -141,6 +141,73 @@ fn property_distributed_d2_always_proper() {
 }
 
 #[test]
+fn property_fuzz_random_configs_are_conflict_free_and_wrapper_equals_session() {
+    // PR 4 satellite: ≥ 64 randomized draws of generator × partition ×
+    // seed × ghost layers, all on the new default (double-buffered)
+    // path.  Every draw must (a) produce a conflict-free coloring for
+    // its problem flavor and (b) color identically through the one-shot
+    // wrapper and the Session lifecycle — including across a thread-
+    // count split between the two (the kernels' Jacobi invariant).
+    use dist_color::graph::generators::lattice::road_lattice;
+    use dist_color::graph::generators::rgg::random_geometric;
+    use dist_color::graph::generators::rmat::rmat;
+    use dist_color::session::{GhostLayers, ProblemSpec, Session};
+
+    for case in 0..64u64 {
+        let mut rng = Rng::new(case ^ 0xF00D_CAFE);
+        let g: Graph = match rng.below(4) {
+            0 => {
+                let n = 20 + rng.below(180) as usize;
+                gnm(n, (3 * n).max(1), case ^ 0x9)
+            }
+            1 => rmat(5 + rng.below(2) as u32, 4 + rng.below(4) as usize, case ^ 0x33),
+            2 => random_geometric(60 + rng.below(160) as usize, 4.0 + rng.below(4) as f64, case),
+            _ => road_lattice(4 + rng.below(10) as usize, 4 + rng.below(10) as usize, case),
+        };
+        let nparts = 1 + rng.below(8) as usize;
+        let pk = match rng.below(4) {
+            0 => PartitionKind::Block,
+            1 => PartitionKind::EdgeBalanced,
+            2 => PartitionKind::Bfs,
+            _ => PartitionKind::Hash,
+        };
+        let part = partition::partition(&g, nparts, pk, case);
+        let (problem, two, layers) = match rng.below(4) {
+            0 => (Problem::D1, false, GhostLayers::One),
+            1 => (Problem::D1, true, GhostLayers::Two),
+            2 => (Problem::D2, true, GhostLayers::Two),
+            _ => (Problem::PD2, true, GhostLayers::Two),
+        };
+        let seed = rng.next_u64();
+        let ctx = format!("case {case}: {problem} {pk:?} nparts={nparts} seed={seed}");
+        let cfg = DistConfig {
+            problem,
+            two_ghost_layers: two,
+            seed,
+            threads: 1,
+            ..Default::default()
+        };
+        assert!(cfg.double_buffer, "fuzz must exercise the default overlapped path");
+        let wrapper =
+            color_distributed(&g, &part, cfg, CostModel::zero(), &NativeBackend(cfg.kernel));
+        assert!(validate::is_proper(problem, &g, &wrapper.colors), "improper: {ctx}");
+        // Session path at a different thread count: still bit-identical
+        let threads = if case % 2 == 0 { 1 } else { 8 };
+        let session = Session::builder()
+            .ranks(nparts)
+            .cost(CostModel::zero())
+            .threads(threads)
+            .seed(seed)
+            .build();
+        let plan = session.plan(&g, &part, layers);
+        let direct = plan.run(ProblemSpec { problem, ..Default::default() });
+        assert_eq!(wrapper.colors, direct.colors, "wrapper != session: {ctx}");
+        assert_eq!(wrapper.stats.comm_rounds, direct.stats.comm_rounds, "{ctx}");
+        assert_eq!(wrapper.stats.conflicts, direct.stats.conflicts, "{ctx}");
+    }
+}
+
+#[test]
 fn property_colors_used_never_exceeds_serial_worst_case_bound() {
     use dist_color::coloring::local::greedy::{serial_greedy, Ordering};
     for case in 0..20u64 {

@@ -1,0 +1,146 @@
+//! PR 4: the double-buffered delta rounds' bit-parity matrix.
+//!
+//! The fix loop may overlap each round's boundary-delta exchange with
+//! the next round's early conflict detection (`DistConfig::
+//! double_buffer`, default on), but the coloring must remain
+//! **bit-identical** to the serial-round path — across problems
+//! (D1-2GL, D2, PD2), graph families (rmat, rgg, chain lattice), rank
+//! counts (1, 2, 8, 17) and thread counts (1, 8).  `scripts/verify.sh
+//! --matrix` re-runs this suite with `DIST_TEST_THREADS` pinned to each
+//! thread count in turn, so the parity matrix is exercised both ways
+//! even on hosts where the default sweep is trimmed.
+
+use std::collections::HashMap;
+
+use dist_color::coloring::{validate, Problem};
+use dist_color::distributed::CostModel;
+use dist_color::graph::generators::lattice::road_lattice;
+use dist_color::graph::generators::rgg::random_geometric;
+use dist_color::graph::generators::rmat::rmat;
+use dist_color::graph::Graph;
+use dist_color::partition::{self, PartitionKind};
+use dist_color::session::{GhostLayers, ProblemSpec, Session};
+
+const RANK_COUNTS: [usize; 4] = [1, 2, 8, 17];
+
+/// Thread counts to sweep: the full {1, 8} matrix by default, or the
+/// single count named by `DIST_TEST_THREADS` (how `verify.sh --matrix`
+/// pins each arm of the sweep in its own process).
+fn thread_counts() -> Vec<usize> {
+    match std::env::var("DIST_TEST_THREADS") {
+        Ok(s) => vec![s.trim().parse().expect("DIST_TEST_THREADS must be a thread count")],
+        Err(_) => vec![1, 8],
+    }
+}
+
+/// The graph family axis: scale-free (rmat), geometric (rgg) and
+/// road-like (chain lattice, block-partitioned into a 1D chain).
+fn graphs() -> Vec<(&'static str, Graph, PartitionKind)> {
+    vec![
+        ("rmat", rmat(7, 6, 5), PartitionKind::Hash),
+        ("rgg", random_geometric(300, 6.0, 7), PartitionKind::Hash),
+        ("chain-lattice", road_lattice(16, 12, 3), PartitionKind::Block),
+    ]
+}
+
+fn spec_for(problem: Problem) -> ProblemSpec {
+    match problem {
+        Problem::D1 => ProblemSpec::d1(), // 2GL on the two-layer plans below
+        Problem::D2 => ProblemSpec::d2(),
+        Problem::PD2 => ProblemSpec::pd2(),
+    }
+}
+
+#[test]
+fn double_buffered_colorings_match_serial_rounds_across_the_matrix() {
+    // reference coloring per (graph, ranks, problem): double-buffered
+    // and serial, at every rank count and thread count, must all agree
+    let mut reference: HashMap<(String, usize, String), Vec<u32>> = HashMap::new();
+    for (name, g, pk) in graphs() {
+        for &ranks in &RANK_COUNTS {
+            let part = partition::partition(&g, ranks, pk, 13);
+            for threads in thread_counts() {
+                let session = Session::builder()
+                    .ranks(ranks)
+                    .cost(CostModel::zero())
+                    .threads(threads)
+                    .seed(29)
+                    .build();
+                let plan = session.plan(&g, &part, GhostLayers::Two);
+                for problem in [Problem::D1, Problem::D2, Problem::PD2] {
+                    let ctx = format!("{name} {problem} ranks={ranks} threads={threads}");
+                    let spec = spec_for(problem);
+                    let on = plan.run(spec);
+                    let off = plan.run(spec.with_double_buffer(false));
+                    assert_eq!(on.colors, off.colors, "overlap changed the coloring: {ctx}");
+                    assert_eq!(
+                        on.stats.comm_rounds, off.stats.comm_rounds,
+                        "overlap changed the round count: {ctx}"
+                    );
+                    assert_eq!(
+                        on.stats.conflicts, off.stats.conflicts,
+                        "overlap changed the conflict count: {ctx}"
+                    );
+                    assert_eq!(
+                        off.stats.overlap_saved_ns, 0,
+                        "serial rounds must report no overlap: {ctx}"
+                    );
+                    let proper = match problem {
+                        Problem::D1 => validate::is_proper_d1(&g, &on.colors),
+                        Problem::D2 => validate::is_proper_d2(&g, &on.colors),
+                        Problem::PD2 => validate::is_proper_pd2(&g, &on.colors),
+                    };
+                    assert!(proper, "improper coloring: {ctx}");
+                    // ...and identical across the thread axis too
+                    let key = (name.to_string(), ranks, problem.to_string());
+                    match reference.get(&key) {
+                        None => {
+                            reference.insert(key, on.colors);
+                        }
+                        Some(expect) => assert_eq!(&on.colors, expect, "thread divergence: {ctx}"),
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn cut_heavy_partition_reports_overlap_savings() {
+    // the fixture of `hash_partition_worst_case_still_proper`: a hash
+    // partition guaranteed to conflict, so fix rounds (and with them the
+    // overlap window) actually run
+    let g = dist_color::graph::generators::erdos_renyi::gnm(300, 1500, 5);
+    let part = partition::hash(&g, 8, 3);
+    let session =
+        Session::builder().ranks(8).cost(CostModel::zero()).threads(1).seed(42).build();
+    let plan = session.plan(&g, &part, GhostLayers::One);
+    let on = plan.run(ProblemSpec::d1());
+    assert!(on.stats.conflicts > 0, "fixture must actually conflict");
+    assert!(
+        on.stats.overlap_saved_ns > 0,
+        "double-buffered rounds hid no detection latency"
+    );
+    let off = plan.run(ProblemSpec::d1().with_double_buffer(false));
+    assert_eq!(off.stats.overlap_saved_ns, 0);
+    assert_eq!(on.colors, off.colors);
+}
+
+#[test]
+fn overlap_knob_survives_plan_reuse() {
+    // alternating double-buffered and serial runs on one plan must not
+    // leak state (the plan-owned exchange scratch is shared by both)
+    let g = random_geometric(400, 7.0, 21);
+    let part = partition::partition(&g, 6, PartitionKind::Hash, 2);
+    let session =
+        Session::builder().ranks(6).cost(CostModel::zero()).threads(2).seed(11).build();
+    let plan = session.plan(&g, &part, GhostLayers::Two);
+    let a = plan.run(ProblemSpec::d2());
+    let b = plan.run(ProblemSpec::d2().with_double_buffer(false));
+    let c = plan.run(ProblemSpec::d2());
+    let d = plan.run(ProblemSpec::d2().with_double_buffer(false));
+    assert_eq!(a.colors, b.colors);
+    assert_eq!(a.colors, c.colors);
+    assert_eq!(a.colors, d.colors);
+    assert!(validate::is_proper_d2(&g, &a.colors));
+}

@@ -1,8 +1,13 @@
 #!/usr/bin/env bash
-# Repo verification: build, tests, lints, and the PR-1 perf smoke.
+# Repo verification: build, tests, lints, and the per-PR perf smokes.
 #
-#   scripts/verify.sh          # build + test + lint + perf smoke
-#   scripts/verify.sh --quick  # build + test only
+#   scripts/verify.sh           # build + test + lint + perf smokes
+#   scripts/verify.sh --quick   # build + test only
+#   scripts/verify.sh --matrix  # build + test, then re-run the test
+#                               # suite with DIST_TEST_THREADS pinned to
+#                               # 1 and then 8, so the round-overlap
+#                               # bit-parity matrix is exercised at both
+#                               # thread counts (then lints + smokes)
 #
 # clippy/rustfmt steps are skipped (with a notice) when the components
 # are not installed; the build and test steps are always required.
@@ -10,7 +15,11 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 
 quick=0
-[ "${1:-}" = "--quick" ] && quick=1
+matrix=0
+case "${1:-}" in
+  --quick) quick=1 ;;
+  --matrix) matrix=1 ;;
+esac
 
 echo "== cargo build --release =="
 cargo build --release
@@ -21,6 +30,16 @@ cargo build --examples --benches
 
 echo "== cargo test -q =="
 cargo test -q
+
+if [ "$matrix" = "1" ]; then
+  # the round-overlap parity matrix defaults to sweeping threads {1, 8}
+  # in-process; this re-runs the whole suite with each count pinned so
+  # both arms are also exercised as the *only* configuration
+  for t in 1 8; do
+    echo "== cargo test -q (DIST_TEST_THREADS=$t) =="
+    DIST_TEST_THREADS=$t cargo test -q
+  done
+fi
 
 if [ "$quick" = "1" ]; then
   echo "verify: OK (quick)"
@@ -51,5 +70,8 @@ BENCH_PR2=1 BENCH_REPS="${BENCH_REPS:-3}" cargo bench --bench micro_kernels
 
 echo "== micro_kernels PR-3 smoke (writes BENCH_pr3.json) =="
 BENCH_PR3=1 BENCH_REPS="${BENCH_REPS:-3}" cargo bench --bench micro_kernels
+
+echo "== micro_kernels PR-4 smoke (writes BENCH_pr4.json) =="
+BENCH_PR4=1 BENCH_REPS="${BENCH_REPS:-3}" cargo bench --bench micro_kernels
 
 echo "verify: OK"
