@@ -14,7 +14,10 @@
 //! per-run time split, zero-reconstruction check) and write
 //! `BENCH_pr3.json`; set `BENCH_PR4=1` to run the serial-round vs
 //! double-buffered fix-loop ablation (with the bit-parity gate and the
-//! `overlap_saved` counter) and write `BENCH_pr4.json`.  All JSON
+//! `overlap_saved` counter) and write `BENCH_pr4.json`; set
+//! `BENCH_PR5=1` to run the flat vs hierarchical (node × GPU) topology
+//! comparison (bit-parity gate, inter-node byte/message reduction,
+//! collective-depth change) and write `BENCH_pr5.json`.  All JSON
 //! schemas are documented in `rust/benches/README.md`.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -28,7 +31,7 @@ use dist_color::coloring::distributed::{
 use dist_color::coloring::local::{eb_bit, greedy, jp, nb_bit, vb_bit, KernelScratch, LocalView};
 use dist_color::coloring::Color;
 use dist_color::distributed::comm::encode_u32s;
-use dist_color::distributed::{run_ranks, CommStats, CostModel};
+use dist_color::distributed::{run_ranks, CommStats, CostModel, Topology};
 use dist_color::graph::generators::{ba, erdos_renyi::gnm, mesh};
 use dist_color::graph::{Graph, VId};
 use dist_color::partition;
@@ -225,6 +228,7 @@ fn measure_exchange(
             collectives: after.collectives - before.collectives,
             modeled_ns: after.modeled_ns - before.modeled_ns,
             wall_ns: after.wall_ns - before.wall_ns,
+            ..Default::default()
         }
     });
     let max_msgs = per_rank.iter().map(|s| s.messages).max().unwrap_or(0);
@@ -496,6 +500,104 @@ fn pr4_smoke() {
     );
 }
 
+/// Flat vs hierarchical (4 GPUs/node) topology on the 16-rank chain
+/// fixture: same coloring bit-for-bit, with the modeled inter-node
+/// byte/message reduction and the collective-depth change recorded.
+/// Written to `BENCH_pr5.json`.
+fn pr5_smoke() {
+    let ranks = 16usize;
+    let gpus_per_node = 4u32;
+    let (mx, my, mz) = (8usize, 8usize, 2 * ranks);
+    eprintln!("pr5 smoke: hex_mesh({mx}, {my}, {mz}) over {ranks} slab ranks ...");
+    let g = mesh::hex_mesh(mx, my, mz);
+    let part = partition::block(&g, ranks);
+    let flat_topo = Topology::flat(CostModel::default());
+    let hier_topo = Topology::nvlink_ib(gpus_per_node);
+
+    let run_with = |topo: Topology| {
+        let session = Session::builder()
+            .ranks(ranks)
+            .topology(topo)
+            .threads(1)
+            .seed(42)
+            .build();
+        let plan = session.plan(&g, &part, GhostLayers::One);
+        plan.run(ProblemSpec::d1())
+    };
+    let flat = run_with(flat_topo);
+    let hier = run_with(hier_topo);
+
+    // the tentpole invariant: topology changes accounting and collective
+    // schedule only
+    let identical = flat.colors == hier.colors
+        && flat.stats.comm_rounds == hier.stats.comm_rounds
+        && flat.stats.conflicts == hier.stats.conflicts;
+    let same_wire = flat.stats.bytes == hier.stats.bytes
+        && flat.stats.intra_messages + flat.stats.inter_messages
+            == hier.stats.intra_messages + hier.stats.inter_messages;
+
+    let inter_byte_reduction = flat.stats.bytes as f64 / hier.stats.inter_bytes.max(1) as f64;
+    let inter_hop_reduction =
+        flat.stats.coll_inter_hops as f64 / hier.stats.coll_inter_hops.max(1) as f64;
+    let (flat_si, flat_se) = flat_topo.collective_steps(ranks);
+    let (hier_si, hier_se) = hier_topo.collective_steps(ranks);
+    println!(
+        "topology  flat: {} B all inter-node | {} inter tree hops | depth {flat_si}+{flat_se}",
+        flat.stats.bytes, flat.stats.coll_inter_hops
+    );
+    println!(
+        "topology  hier: {} B intra + {} B inter ({inter_byte_reduction:.2}x fewer inter bytes) \
+         | {} intra + {} inter tree hops ({inter_hop_reduction:.2}x fewer inter hops) \
+         | depth {hier_si}+{hier_se} identical={identical}",
+        hier.stats.intra_bytes,
+        hier.stats.inter_bytes,
+        hier.stats.coll_intra_hops,
+        hier.stats.coll_inter_hops
+    );
+
+    let json = format!(
+        "{{\n  \"bench\": \"micro_kernels_pr5\",\n  \"schema\": 1,\n  \
+         \"graph\": {{\"kind\": \"hex_mesh\", \"nx\": {mx}, \"ny\": {my}, \"nz\": {mz}}},\n  \
+         \"ranks\": {ranks},\n  \"gpus_per_node\": {gpus_per_node},\n  \
+         \"flat\": {{\n    \"bytes\": {},\n    \"messages\": {},\n    \
+         \"inter_bytes\": {},\n    \"coll_inter_hops\": {},\n    \
+         \"modeled_ns\": {},\n    \"collective_steps\": [{flat_si}, {flat_se}]\n  }},\n  \
+         \"hier\": {{\n    \"bytes\": {},\n    \"intra_bytes\": {},\n    \
+         \"inter_bytes\": {},\n    \"intra_messages\": {},\n    \"inter_messages\": {},\n    \
+         \"coll_intra_hops\": {},\n    \"coll_inter_hops\": {},\n    \
+         \"modeled_ns\": {},\n    \"collective_steps\": [{hier_si}, {hier_se}]\n  }},\n  \
+         \"inter_byte_reduction\": {inter_byte_reduction:.3},\n  \
+         \"inter_hop_reduction\": {inter_hop_reduction:.3},\n  \
+         \"identical_to_flat\": {identical},\n  \"same_wire_totals\": {same_wire}\n}}\n",
+        flat.stats.bytes,
+        flat.stats.intra_messages + flat.stats.inter_messages,
+        flat.stats.inter_bytes,
+        flat.stats.coll_inter_hops,
+        flat.stats.comm_modeled_ns,
+        hier.stats.bytes,
+        hier.stats.intra_bytes,
+        hier.stats.inter_bytes,
+        hier.stats.intra_messages,
+        hier.stats.inter_messages,
+        hier.stats.coll_intra_hops,
+        hier.stats.coll_inter_hops,
+        hier.stats.comm_modeled_ns,
+    );
+    std::fs::write("BENCH_pr5.json", &json).expect("writing BENCH_pr5.json");
+    println!("-> BENCH_pr5.json");
+    // asserted after the JSON is on disk, so a regression is recorded
+    assert!(identical, "hierarchical topology changed the coloring");
+    assert!(same_wire, "hierarchical topology changed the wire totals");
+    assert!(
+        hier.stats.inter_bytes < flat.stats.bytes,
+        "modeled inter-node bytes must drop below the flat model's total bytes"
+    );
+    assert!(
+        hier.stats.coll_inter_hops < flat.stats.coll_inter_hops,
+        "node-leader collectives must cross nodes less than the flat tree"
+    );
+}
+
 fn main() {
     if std::env::var("BENCH_PR1").is_ok_and(|v| v == "1") {
         pr1_smoke();
@@ -511,6 +613,10 @@ fn main() {
     }
     if std::env::var("BENCH_PR4").is_ok_and(|v| v == "1") {
         pr4_smoke();
+        return;
+    }
+    if std::env::var("BENCH_PR5").is_ok_and(|v| v == "1") {
+        pr5_smoke();
         return;
     }
     let reps: usize =

@@ -67,7 +67,7 @@ pub mod zoltan;
 use crate::coloring::local::{color_local_with, nb_bit, KernelScratch, LocalKernel, LocalView};
 use crate::coloring::{colors_used, Color, Problem};
 use crate::distributed::comm::{decode_u32s, encode_u32s, Comm};
-use crate::distributed::CostModel;
+use crate::distributed::{CostModel, Topology};
 use crate::distributed::cost::CommStats;
 use crate::graph::{Graph, VId};
 use crate::partition::Partition;
@@ -106,6 +106,13 @@ pub struct DistConfig {
     /// the exchange's receive wait.  The CLI exposes the ablation as
     /// `--no-double-buffer`.
     pub double_buffer: bool,
+    /// Hierarchical node × GPU topology for the run (`None` = flat: the
+    /// run's `CostModel` on every hop).  Affects modeled accounting and
+    /// collective schedule only — colorings are bit-identical either
+    /// way.  The CLI exposes this as `--gpus-per-node` (+
+    /// `--inter-alpha-ns` / `--inter-beta-ps`); Session callers use
+    /// `SessionBuilder::topology`.
+    pub topology: Option<Topology>,
 }
 
 impl Default for DistConfig {
@@ -119,6 +126,7 @@ impl Default for DistConfig {
             seed: 42,
             max_rounds: 500,
             double_buffer: true,
+            topology: None,
         }
     }
 }
@@ -233,6 +241,21 @@ pub struct RunStats {
     /// Max per-rank detection compute overlapped with in-flight delta
     /// exchanges (see [`RankOutcome::overlap_saved_ns`]).
     pub overlap_saved_ns: u64,
+    /// Hop-class split of the run's wire traffic (sums over ranks;
+    /// `intra + inter == messages/bytes totals`).  Flat topologies class
+    /// everything inter-node.
+    pub intra_messages: u64,
+    pub inter_messages: u64,
+    pub intra_bytes: u64,
+    pub inter_bytes: u64,
+    /// Rank-max modeled comm time charged on intra-node links.
+    pub comm_modeled_intra_ns: u64,
+    /// Rank-max modeled comm time charged on inter-node links.
+    pub comm_modeled_inter_ns: u64,
+    /// Raw collective tree hops by class (sums over ranks) — the
+    /// node-leader schedule witness.
+    pub coll_intra_hops: u64,
+    pub coll_inter_hops: u64,
 }
 
 impl RunStats {
@@ -271,6 +294,12 @@ pub struct RunResult {
 /// to driving the Session API directly (enforced by
 /// `tests/session_api.rs`); callers that color the same topology more
 /// than once should hold the `Plan` themselves instead.
+///
+/// `cost` prices every hop of the default flat topology.  When
+/// [`DistConfig::topology`] is set it takes precedence wholesale — the
+/// `Topology` carries its own intra/inter α–β pairs and `cost` is not
+/// consulted (same precedence as `SessionBuilder::cost` vs
+/// `SessionBuilder::topology`).
 pub fn color_distributed(
     g: &Graph,
     part: &Partition,
@@ -279,12 +308,15 @@ pub fn color_distributed(
     backend: &dyn LocalBackend,
 ) -> RunResult {
     use crate::session::{GhostLayers, ProblemSpec, Session};
-    let session = Session::builder()
+    let mut builder = Session::builder()
         .ranks(part.nparts)
         .cost(cost)
         .threads(cfg.threads)
-        .seed(cfg.seed)
-        .build();
+        .seed(cfg.seed);
+    if let Some(topo) = cfg.topology {
+        builder = builder.topology(topo);
+    }
+    let session = builder.build();
     let layers = match cfg.problem {
         Problem::D1 if !cfg.two_ghost_layers => GhostLayers::One,
         _ => GhostLayers::Two, // D2/PD2 always need the 2-hop view (§3.5)
@@ -319,6 +351,14 @@ pub(crate) fn assemble(n_global: usize, outcomes: Vec<RankOutcome>, nranks: usiz
         comm_modeled_ns: 0,
         bytes: 0,
         overlap_saved_ns: 0,
+        intra_messages: 0,
+        inter_messages: 0,
+        intra_bytes: 0,
+        inter_bytes: 0,
+        comm_modeled_intra_ns: 0,
+        comm_modeled_inter_ns: 0,
+        coll_intra_hops: 0,
+        coll_inter_hops: 0,
     };
     for o in outcomes {
         for (v, c) in o.owned_colors {
@@ -334,6 +374,14 @@ pub(crate) fn assemble(n_global: usize, outcomes: Vec<RankOutcome>, nranks: usiz
             .max(o.timers.comm.as_nanos() as u64);
         stats.comm_modeled_ns = stats.comm_modeled_ns.max(o.comm.modeled_ns);
         stats.bytes += o.comm.bytes_sent;
+        stats.intra_messages += o.comm.intra_messages;
+        stats.inter_messages += o.comm.inter_messages;
+        stats.intra_bytes += o.comm.intra_bytes;
+        stats.inter_bytes += o.comm.inter_bytes;
+        stats.comm_modeled_intra_ns = stats.comm_modeled_intra_ns.max(o.comm.intra_modeled_ns);
+        stats.comm_modeled_inter_ns = stats.comm_modeled_inter_ns.max(o.comm.inter_modeled_ns);
+        stats.coll_intra_hops += o.comm.coll_intra_hops;
+        stats.coll_inter_hops += o.comm.coll_inter_hops;
     }
     stats.colors_used = colors_used(&colors);
     RunResult { colors, stats }

@@ -17,12 +17,18 @@
 //!   point-to-point — used once per `LocalGraph` build for subscription
 //!   registration and ghost fetches.
 //! * **Tree reductions** — `allreduce_sum`/`allreduce_max`/`barrier` run
-//!   a binomial-tree reduce to rank 0 plus a binomial-tree broadcast:
-//!   O(log p) depth instead of the old serialize-through-rank-0 O(p)
-//!   chain, matching the `ceil(log2 p)` α-step accounting of
-//!   [`CostModel::collective_ns`].  Internal tree hops use raw
-//!   (unaccounted) sends so `CommStats::messages` keeps meaning
-//!   "application payload messages".
+//!   a **topology-aware** reduce to rank 0 plus the mirror broadcast:
+//!   each node first reduces over an intra-node binomial tree to its
+//!   node leader (lowest rank on the node), then the leaders alone run a
+//!   binomial tree across nodes — so only O(log #nodes) hops cross the
+//!   expensive inter-node links, matching the hierarchical
+//!   `(intra_steps, inter_steps)` accounting of
+//!   [`Topology::collective_phase_ns`].  Under the flat topology
+//!   (`gpus_per_node == 1`, the [`run_ranks`] default) this degenerates
+//!   to exactly the plain rank-level binomial tree.  Internal tree hops
+//!   use raw (payload-unaccounted) sends so `CommStats::messages` keeps
+//!   meaning "application payload messages"; the hops themselves are
+//!   tallied by class in `CommStats::coll_{intra,inter}_hops`.
 //! * **Dense all-to-all** — [`Comm::alltoallv`] loops over all `p`
 //!   ranks.  Retained as the baseline the benches compare the neighbor
 //!   collectives against (`BENCH_PR2=1`); the coloring hot path no
@@ -38,7 +44,7 @@ use std::collections::VecDeque;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::time::Instant;
 
-use super::cost::{CommStats, CostModel};
+use super::cost::{CommStats, CostModel, Topology};
 
 type Packet = (u32, u64, Vec<u8>); // (from, tag, payload)
 
@@ -50,7 +56,7 @@ pub struct Comm {
     inbox: Receiver<Packet>,
     /// out-of-order packets waiting for a matching recv
     pending: VecDeque<Packet>,
-    cost: CostModel,
+    topo: Topology,
     stats: CommStats,
 }
 
@@ -69,15 +75,36 @@ impl Comm {
         self.stats
     }
 
+    /// The inter-node (reference) α–β pair; under a flat topology this
+    /// is *the* cost model, as before the hierarchy existed.
     pub fn cost_model(&self) -> CostModel {
-        self.cost
+        self.topo.inter
+    }
+
+    /// The node × GPU topology this communicator prices hops with.
+    pub fn topology(&self) -> Topology {
+        self.topo
     }
 
     /// Tagged send. Never blocks (unbounded channel).
     pub fn send(&mut self, to: u32, tag: u64, payload: Vec<u8>) {
+        let bytes = payload.len() as u64;
+        // classify once: pricing and the stats split must always agree
+        let intra = self.topo.same_node(self.rank, to);
+        let model = if intra { &self.topo.intra } else { &self.topo.inter };
+        let ns = model.msg_ns(payload.len());
         self.stats.messages += 1;
-        self.stats.bytes_sent += payload.len() as u64;
-        self.stats.modeled_ns += self.cost.msg_ns(payload.len());
+        self.stats.bytes_sent += bytes;
+        self.stats.modeled_ns += ns;
+        if intra {
+            self.stats.intra_messages += 1;
+            self.stats.intra_bytes += bytes;
+            self.stats.intra_modeled_ns += ns;
+        } else {
+            self.stats.inter_messages += 1;
+            self.stats.inter_bytes += bytes;
+            self.stats.inter_modeled_ns += ns;
+        }
         self.senders[to as usize]
             .send((self.rank, tag, payload))
             .expect("rank channel closed");
@@ -114,8 +141,7 @@ impl Comm {
         let me = self.rank;
         let p = self.nranks;
         let mut out: Vec<Vec<u8>> = (0..p).map(|_| Vec::new()).collect();
-        let mut iter = bufs.into_iter().enumerate();
-        for (r, buf) in iter.by_ref() {
+        for (r, buf) in bufs.into_iter().enumerate() {
             let r = r as u32;
             if r == me {
                 out[me as usize] = buf;
@@ -199,7 +225,7 @@ impl Comm {
         // the discovery is a reduce + a broadcast, each moving the
         // 4p-byte counts vector: two tree phases, same accounting as
         // `reduce_then_bcast`
-        self.stats.modeled_ns += 2 * self.cost.collective_ns(p, 4 * p);
+        self.charge_collective(2, 4 * p);
         self.allreduce_u32_sum_vec(tag, &mut counts);
         let expect = counts[self.rank as usize] as usize;
         for (&r, buf) in peers.iter().zip(bufs) {
@@ -221,13 +247,26 @@ impl Comm {
         self.reduce_then_bcast(tag, x, |a, b| a.max(b))
     }
 
-    /// Binomial-tree reduce to rank 0 + binomial-tree broadcast:
-    /// O(log p) depth (the old implementation serialized all `p - 1`
-    /// contributions through rank 0).  Modeled time charges the tree's
-    /// `ceil(log2 p)` α-steps for each of the two phases.
+    /// Account `phases` collective tree phases moving `bytes` per rank
+    /// over the hierarchical (intra-tree + node-leader-tree) schedule,
+    /// split by hop class.  Flat topologies charge everything inter.
+    fn charge_collective(&mut self, phases: u64, bytes: usize) {
+        let (intra, inter) = self.topo.collective_phase_ns(self.nranks as usize, bytes);
+        self.stats.intra_modeled_ns += phases * intra;
+        self.stats.inter_modeled_ns += phases * inter;
+        self.stats.modeled_ns += phases * (intra + inter);
+    }
+
+    /// Topology-aware tree reduce to rank 0 + mirror broadcast:
+    /// intra-node trees feed a node-leader tree, so depth is
+    /// O(log gpus_per_node + log #nodes) with only the leader hops
+    /// crossing nodes (the old implementation serialized all `p - 1`
+    /// contributions through rank 0; the PR-2 flat binomial tree sent
+    /// every hop over the same links).  Modeled time charges each
+    /// sub-tree's α-steps on its own link class, twice (two phases).
     fn reduce_then_bcast(&mut self, tag: u64, x: u64, op: impl Fn(u64, u64) -> u64) -> u64 {
         self.stats.collectives += 1;
-        self.stats.modeled_ns += 2 * self.cost.collective_ns(self.nranks as usize, 8);
+        self.charge_collective(2, 8);
         let out = self.tree_allreduce_bytes(tag, x.to_le_bytes().to_vec(), |acc, other| {
             let a = u64::from_le_bytes(acc[..8].try_into().unwrap());
             let b = u64::from_le_bytes(other[..8].try_into().unwrap());
@@ -253,10 +292,26 @@ impl Comm {
         }
     }
 
-    /// Binomial-tree allreduce of an opaque byte payload: reduce to rank
-    /// 0 with `combine(acc, incoming)`, then broadcast the result back
-    /// down the tree.  Uses raw (unaccounted) hops on `tag` (reduce) and
-    /// `tag + 1` (broadcast).  Works for any `p >= 1`.
+    /// Hierarchical tree allreduce of an opaque byte payload: reduce to
+    /// rank 0 with `combine(acc, incoming)`, then broadcast the result
+    /// back down the mirror trees.  Four phases, all over raw
+    /// (payload-unaccounted, hop-counted) sends on `tag` (reduce) and
+    /// `tag + 1` (broadcast):
+    ///
+    /// 1. intra-node binomial reduce (over each node's local indices) to
+    ///    the node leader — the lowest rank on the node;
+    /// 2. binomial reduce over node leaders (by node index) to rank 0 —
+    ///    the only hops that cross nodes;
+    /// 3. broadcast over node leaders, mirroring phase 2;
+    /// 4. intra-node broadcast from each leader, mirroring phase 1.
+    ///
+    /// With `gpus_per_node == 1` (the flat default) phases 1 and 4 are
+    /// empty and node index == rank, so the schedule is bit-for-bit the
+    /// PR-2 flat binomial tree.  Correct for any `p >= 1` and any
+    /// `gpus_per_node`, including a partially filled last node.  The
+    /// combine order differs between topologies, which is invisible to
+    /// callers: every op reduced here (`+`, `max`, element-wise
+    /// `wrapping_add`) is associative and commutative.
     fn tree_allreduce_bytes(
         &mut self,
         tag: u64,
@@ -269,30 +324,70 @@ impl Comm {
         if p == 1 {
             return acc;
         }
-        // reduce: each rank absorbs children (rank + mask for masks
-        // below its lowest set bit), then forwards to rank - lowbit
+        let gpn = self.topo.gpus_per_node.max(1);
+        let node = rank / gpn;
+        let node_base = node * gpn;
+        let local = rank - node_base;
+        let node_size = gpn.min(p - node_base);
+        let nnodes = p.div_ceil(gpn);
+
+        // ---- 1. intra-node reduce to the node leader (local index 0):
+        // each rank absorbs children (local + mask for masks below its
+        // lowest set bit), then forwards to local - lowbit
         let mut mask = 1u32;
-        while mask < p {
-            if rank & mask != 0 {
-                self.send_raw(rank - mask, tag, std::mem::take(&mut acc));
+        while mask < node_size {
+            if local & mask != 0 {
+                self.send_raw(node_base + (local - mask), tag, std::mem::take(&mut acc));
                 break;
             }
-            let child = rank + mask;
-            if child < p {
-                let b = self.recv_raw(child, tag);
+            let child = local + mask;
+            if child < node_size {
+                let b = self.recv_raw(node_base + child, tag);
                 combine(&mut acc, &b);
             }
             mask <<= 1;
         }
-        // broadcast: mirror image of the reduce tree
-        let lowbit = if rank == 0 { p.next_power_of_two() } else { rank & rank.wrapping_neg() };
-        if rank != 0 {
-            acc = self.recv_raw(rank - lowbit, tag + 1);
+
+        if local == 0 {
+            // ---- 2. reduce over node leaders, by node index ----------
+            let mut mask = 1u32;
+            while mask < nnodes {
+                if node & mask != 0 {
+                    self.send_raw((node - mask) * gpn, tag, std::mem::take(&mut acc));
+                    break;
+                }
+                let child = node + mask;
+                if child < nnodes {
+                    let b = self.recv_raw(child * gpn, tag);
+                    combine(&mut acc, &b);
+                }
+                mask <<= 1;
+            }
+            // ---- 3. broadcast over node leaders: mirror of phase 2 ---
+            let lowbit =
+                if node == 0 { nnodes.next_power_of_two() } else { node & node.wrapping_neg() };
+            if node != 0 {
+                acc = self.recv_raw((node - lowbit) * gpn, tag + 1);
+            }
+            let mut m = lowbit >> 1;
+            while m >= 1 {
+                if node + m < nnodes {
+                    self.send_raw((node + m) * gpn, tag + 1, acc.clone());
+                }
+                m >>= 1;
+            }
+        }
+
+        // ---- 4. intra-node broadcast: mirror of phase 1 --------------
+        let lowbit =
+            if local == 0 { node_size.next_power_of_two() } else { local & local.wrapping_neg() };
+        if local != 0 {
+            acc = self.recv_raw(node_base + (local - lowbit), tag + 1);
         }
         let mut m = lowbit >> 1;
         while m >= 1 {
-            if rank + m < p {
-                self.send_raw(rank + m, tag + 1, acc.clone());
+            if local + m < node_size {
+                self.send_raw(node_base + local + m, tag + 1, acc.clone());
             }
             m >>= 1;
         }
@@ -304,8 +399,14 @@ impl Comm {
         self.allreduce_max(tag, 0);
     }
 
-    // raw send/recv that do not count toward user-visible stats
+    // raw send/recv for collective tree hops: not payload messages, but
+    // tallied by hop class so tests and benches can pin the schedule
     fn send_raw(&mut self, to: u32, tag: u64, payload: Vec<u8>) {
+        if self.topo.same_node(self.rank, to) {
+            self.stats.coll_intra_hops += 1;
+        } else {
+            self.stats.coll_inter_hops += 1;
+        }
         self.senders[to as usize]
             .send((self.rank, tag, payload))
             .expect("rank channel closed");
@@ -382,11 +483,25 @@ pub fn decode_u64s(b: &[u8]) -> Vec<u64> {
         .collect()
 }
 
-/// Spawn `nranks` rank threads running `f` and return their results in
-/// rank order.  Panics in any rank propagate.
+/// Spawn `nranks` rank threads running `f` under the degenerate flat
+/// topology (every hop priced by `cost`) and return their results in
+/// rank order.  Panics in any rank propagate.  Hierarchy-aware callers
+/// use [`run_ranks_topo`]; this wrapper keeps every pre-topology call
+/// site bit-identical.
 pub fn run_ranks<T: Send>(
     nranks: usize,
     cost: CostModel,
+    f: impl Fn(&mut Comm) -> T + Sync,
+) -> Vec<T> {
+    run_ranks_topo(nranks, Topology::flat(cost), f)
+}
+
+/// [`run_ranks`] with an explicit node × GPU [`Topology`]: rank `r`
+/// lives on node `r / topo.gpus_per_node`, hops are priced by class,
+/// and the tree collectives reduce within nodes before crossing them.
+pub fn run_ranks_topo<T: Send>(
+    nranks: usize,
+    topo: Topology,
     f: impl Fn(&mut Comm) -> T + Sync,
 ) -> Vec<T> {
     assert!(nranks >= 1);
@@ -409,7 +524,7 @@ pub fn run_ranks<T: Send>(
                     senders,
                     inbox,
                     pending: VecDeque::new(),
-                    cost,
+                    topo,
                     stats: CommStats::default(),
                 };
                 f(&mut comm)
@@ -610,5 +725,114 @@ mod tests {
                 c.barrier(1000 + i * 2);
             }
         });
+    }
+
+    #[test]
+    fn hierarchical_allreduce_matches_linear_for_any_node_packing() {
+        // rank-count sweep (power-of-two, odd, deep non-power) crossed
+        // with node sizes that divide, straddle, and exceed p
+        for p in [1usize, 2, 3, 5, 8, 16, 17] {
+            for gpn in [1u32, 2, 3, 4, 32] {
+                let topo = Topology::hierarchical(gpn, CostModel::zero(), CostModel::zero());
+                let expect: u64 = (1..=p as u64).sum();
+                let sums = run_ranks_topo(p, topo, |c| c.allreduce_sum(100, c.rank() as u64 + 1));
+                assert_eq!(sums, vec![expect; p], "sum p={p} gpn={gpn}");
+                let maxes =
+                    run_ranks_topo(p, topo, |c| c.allreduce_max(200, 1000 - c.rank() as u64));
+                assert_eq!(maxes, vec![1000; p], "max p={p} gpn={gpn}");
+            }
+        }
+    }
+
+    #[test]
+    fn hierarchical_vec_allreduce_and_sparse_exchange_work() {
+        // the u32-vector tree (sparse-exchange discovery) over a 3-node
+        // hierarchy, plus a full sparse exchange on top of it
+        let topo = Topology::nvlink_ib(3);
+        let out = run_ranks_topo(7, topo, |c| {
+            let mut v = vec![c.rank(), 1, 100 + c.rank()];
+            c.allreduce_u32_sum_vec(500, &mut v);
+            v
+        });
+        for v in out {
+            assert_eq!(v, vec![21, 7, 721]);
+        }
+        let got = run_ranks_topo(5, topo, |c| {
+            let me = c.rank();
+            let peers: Vec<u32> = (0..me).collect();
+            let bufs: Vec<Vec<u8>> = peers.iter().map(|&r| vec![me as u8, r as u8]).collect();
+            c.sparse_alltoallv(700, &peers, bufs)
+        });
+        for (r, got) in got.into_iter().enumerate() {
+            assert_eq!(got.len(), 5 - 1 - r);
+            for (from, payload) in got {
+                assert_eq!(payload, vec![from as u8, r as u8]);
+            }
+        }
+    }
+
+    #[test]
+    fn node_leader_tree_moves_fewer_inter_node_hops() {
+        // 16 ranks: flat tree = 2·(p-1) = 30 hops, all inter-node;
+        // 4-per-node leader tree crosses nodes only 2·(#nodes-1) = 6
+        // times and keeps the other 24 hops on-node
+        let hop_sums = |topo: Topology| {
+            let stats = run_ranks_topo(16, topo, |c| {
+                c.allreduce_sum(300, c.rank() as u64);
+                c.stats()
+            });
+            (
+                stats.iter().map(|s| s.coll_intra_hops).sum::<u64>(),
+                stats.iter().map(|s| s.coll_inter_hops).sum::<u64>(),
+            )
+        };
+        let (flat_intra, flat_inter) = hop_sums(Topology::flat(CostModel::zero()));
+        assert_eq!((flat_intra, flat_inter), (0, 30));
+        let (hier_intra, hier_inter) =
+            hop_sums(Topology::hierarchical(4, CostModel::zero(), CostModel::zero()));
+        assert_eq!((hier_intra, hier_inter), (24, 6));
+        assert!(hier_inter < flat_inter);
+        // same total work, different placement
+        assert_eq!(hier_intra + hier_inter, flat_intra + flat_inter);
+    }
+
+    #[test]
+    fn send_accounting_splits_by_hop_class() {
+        let topo = Topology::hierarchical(2, CostModel::nvlink(), CostModel::default());
+        let out = run_ranks_topo(4, topo, |c| {
+            if c.rank() == 0 {
+                c.send(1, 1, vec![0u8; 100]); // same node (0,1)
+                c.send(2, 2, vec![0u8; 50]); // other node (2,3)
+            } else if c.rank() == 1 {
+                c.recv(0, 1);
+            } else if c.rank() == 2 {
+                c.recv(0, 2);
+            }
+            c.stats()
+        });
+        let s = out[0];
+        assert_eq!((s.messages, s.intra_messages, s.inter_messages), (2, 1, 1));
+        assert_eq!((s.bytes_sent, s.intra_bytes, s.inter_bytes), (150, 100, 50));
+        assert_eq!(s.intra_modeled_ns, CostModel::nvlink().msg_ns(100));
+        assert_eq!(s.inter_modeled_ns, CostModel::default().msg_ns(50));
+        assert_eq!(s.modeled_ns, s.intra_modeled_ns + s.inter_modeled_ns);
+    }
+
+    #[test]
+    fn flat_runs_class_every_hop_inter_node() {
+        let out = run_ranks(2, CostModel::default(), |c| {
+            if c.rank() == 0 {
+                c.send(1, 1, vec![0u8; 64]);
+            } else {
+                c.recv(0, 1);
+            }
+            c.barrier(10);
+            c.stats()
+        });
+        assert_eq!(out[0].intra_messages, 0);
+        assert_eq!(out[0].inter_messages, 1);
+        assert_eq!(out[0].intra_bytes, 0);
+        assert_eq!(out[0].coll_intra_hops, 0);
+        assert!(out[0].coll_inter_hops > 0, "barrier hops must be classed inter under flat");
     }
 }

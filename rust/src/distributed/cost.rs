@@ -1,15 +1,37 @@
-//! Interconnect cost model: α–β (latency–bandwidth) accounting.
+//! Interconnect cost model: α–β (latency–bandwidth) accounting, flat or
+//! hierarchical (node × GPU).
 //!
 //! In-process channels make real message passing essentially free, which
 //! would hide the communication scaling the paper measures on InfiniBand.
 //! Every comm operation therefore also *accounts* modeled time:
-//! `t(msg) = α + β · bytes`, collectives pay `ceil(log2(p))` α-steps.
-//! Reported "comm time" = wall time blocked in comm + modeled time, and
-//! both are recorded separately so benches can report either.
+//! `t(msg) = α + ⌈β · bytes⌉`, collectives pay `ceil(log2(p))` α-steps
+//! (zero when `p == 1`: nothing moves).  Reported "comm time" = wall time
+//! blocked in comm + modeled time, and both are recorded separately so
+//! benches can report either.
+//!
+//! The paper's testbed is a *hybrid* hierarchy (§5, AiMOS): ranks are
+//! GPUs packed several to a node, NVLink-class links inside a node,
+//! InfiniBand between nodes.  [`Topology`] captures that shape — a
+//! rank→node mapping (`gpus_per_node`) plus separate intra-node and
+//! inter-node α–β pairs — and the communicator uses it to (a) price every
+//! point-to-point hop by its class and (b) schedule collectives as
+//! intra-node trees feeding a node-leader tree.  A flat topology
+//! (`gpus_per_node == 1`, both pairs equal) is the degenerate default and
+//! reproduces the pre-topology behavior exactly.
 
-/// α–β interconnect model. Defaults approximate one NVLink/IB hop as in
+/// `ceil(log2(x))` for tree depths; 0 for `x <= 1`.
+#[inline]
+fn ceil_log2(x: usize) -> u64 {
+    if x <= 1 {
+        0
+    } else {
+        (usize::BITS - (x - 1).leading_zeros()) as u64
+    }
+}
+
+/// α–β interconnect model. Defaults approximate one InfiniBand hop as in
 /// the paper's AiMOS testbed (1.5 µs latency, 10 GB/s effective).
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct CostModel {
     /// Per-message latency in nanoseconds.
     pub alpha_ns: u64,
@@ -35,21 +57,149 @@ impl CostModel {
         CostModel { alpha_ns: 50_000, beta_ps_per_byte: 100 }
     }
 
-    #[inline]
-    pub fn msg_ns(&self, bytes: usize) -> u64 {
-        self.alpha_ns + (self.beta_ps_per_byte * bytes as u64) / 1000
+    /// An NVLink-class intra-node link (sub-µs latency, ~40 GB/s) — the
+    /// default `intra` pair of hierarchical topologies.
+    pub fn nvlink() -> Self {
+        CostModel { alpha_ns: 700, beta_ps_per_byte: 25 }
     }
 
-    /// Modeled time of one collective step over `p` ranks moving `bytes`
-    /// per rank: log-tree latency plus serialized bandwidth term.
+    /// Bandwidth term of one `bytes`-byte transfer, rounded **up** so
+    /// every nonempty message pays a positive bandwidth charge (a floor
+    /// here modeled sub-10-byte boundary deltas as bandwidth-free).
+    #[inline]
+    fn beta_ns(&self, bytes: usize) -> u64 {
+        (self.beta_ps_per_byte * bytes as u64).div_ceil(1000)
+    }
+
+    #[inline]
+    pub fn msg_ns(&self, bytes: usize) -> u64 {
+        self.alpha_ns + self.beta_ns(bytes)
+    }
+
+    /// Modeled time of one collective tree phase over `p` ranks moving
+    /// `bytes` per rank: `ceil(log2(p))` α-steps plus one serialized
+    /// bandwidth term; zero when `p <= 1` (a single rank moves nothing).
     #[inline]
     pub fn collective_ns(&self, p: usize, bytes: usize) -> u64 {
-        let steps = (usize::BITS - p.max(1).leading_zeros()) as u64;
-        self.alpha_ns * steps + (self.beta_ps_per_byte * bytes as u64) / 1000
+        let steps = ceil_log2(p);
+        if steps == 0 {
+            return 0;
+        }
+        self.alpha_ns * steps + self.beta_ns(bytes)
+    }
+}
+
+/// Hierarchical node × GPU topology: rank `r` lives on node
+/// `r / gpus_per_node`; hops inside a node are priced by `intra`, hops
+/// between nodes by `inter`.  [`Topology::flat`] (one GPU per "node",
+/// both pairs equal) is the degenerate default — every hop is then
+/// classed inter-node and collectives reduce over the plain rank-level
+/// binomial tree, exactly the pre-topology behavior.
+///
+/// The topology changes **modeled accounting and collective schedule
+/// only**: colorings, rounds and conflict counts are bit-identical to
+/// the flat path (`tests/topology.rs` pins this across problems and
+/// rank counts).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Topology {
+    /// Ranks ("GPUs") per node, >= 1.
+    pub gpus_per_node: u32,
+    /// α–β pair for hops within a node (NVLink-class).
+    pub intra: CostModel,
+    /// α–β pair for hops between nodes (InfiniBand-class).
+    pub inter: CostModel,
+}
+
+impl Default for Topology {
+    fn default() -> Self {
+        Topology::flat(CostModel::default())
+    }
+}
+
+impl Topology {
+    /// The degenerate flat topology: one GPU per node, `cost` on every
+    /// hop.  Behaves exactly like the pre-topology `CostModel`-only
+    /// communicator.
+    pub fn flat(cost: CostModel) -> Topology {
+        Topology { gpus_per_node: 1, intra: cost, inter: cost }
+    }
+
+    /// A node × GPU hierarchy with explicit link models.
+    pub fn hierarchical(gpus_per_node: u32, intra: CostModel, inter: CostModel) -> Topology {
+        assert!(gpus_per_node >= 1, "a node holds at least one GPU");
+        Topology { gpus_per_node, intra, inter }
+    }
+
+    /// The paper-flavored hierarchy: NVLink-class links inside a node,
+    /// default InfiniBand-class links between nodes.
+    pub fn nvlink_ib(gpus_per_node: u32) -> Topology {
+        Topology::hierarchical(gpus_per_node, CostModel::nvlink(), CostModel::default())
+    }
+
+    /// Node index of `rank`.
+    #[inline]
+    pub fn node_of(&self, rank: u32) -> u32 {
+        rank / self.gpus_per_node.max(1)
+    }
+
+    /// Do two ranks share a node?
+    #[inline]
+    pub fn same_node(&self, a: u32, b: u32) -> bool {
+        self.node_of(a) == self.node_of(b)
+    }
+
+    /// Number of nodes holding `p` ranks.
+    #[inline]
+    pub fn nodes(&self, p: usize) -> usize {
+        p.div_ceil(self.gpus_per_node.max(1) as usize)
+    }
+
+    /// The α–β pair pricing a hop from `a` to `b`.
+    #[inline]
+    pub fn link(&self, a: u32, b: u32) -> &CostModel {
+        if self.same_node(a, b) {
+            &self.intra
+        } else {
+            &self.inter
+        }
+    }
+
+    /// α-step depths of one hierarchical collective tree phase over `p`
+    /// ranks, as `(intra_steps, inter_steps)`: `ceil(log2(node size))`
+    /// within each node plus `ceil(log2(node count))` across node
+    /// leaders.  Flat topologies give `(0, ceil(log2(p)))`.
+    pub fn collective_steps(&self, p: usize) -> (u64, u64) {
+        if p <= 1 {
+            return (0, 0);
+        }
+        let gpn = self.gpus_per_node.max(1) as usize;
+        (ceil_log2(gpn.min(p)), ceil_log2(self.nodes(p)))
+    }
+
+    /// Modeled time of one hierarchical collective tree phase over `p`
+    /// ranks moving `bytes` per rank, split `(intra_ns, inter_ns)`.
+    /// Each sub-tree that actually has depth pays its α-steps plus one
+    /// bandwidth term on its link class; a flat topology therefore
+    /// charges exactly `(0, inter.collective_ns(p, bytes))`.
+    pub fn collective_phase_ns(&self, p: usize, bytes: usize) -> (u64, u64) {
+        let (si, se) = self.collective_steps(p);
+        let intra = if si > 0 { self.intra.alpha_ns * si + self.intra.beta_ns(bytes) } else { 0 };
+        let inter = if se > 0 { self.inter.alpha_ns * se + self.inter.beta_ns(bytes) } else { 0 };
+        (intra, inter)
     }
 }
 
 /// Per-rank communication statistics, accumulated by [`super::Comm`].
+///
+/// The aggregate counters (`messages`, `bytes_sent`, `modeled_ns`) keep
+/// their pre-topology meaning; the `intra_*`/`inter_*` fields split the
+/// same traffic by hop class (`intra + inter == total` for messages and
+/// bytes, and for `modeled_ns` up to the per-field max taken by
+/// [`CommStats::merge`]).  Under a flat topology every hop is classed
+/// inter-node.  `coll_*_hops` count the raw binomial-tree hops of the
+/// collectives by class — the schedule witness for the node-leader
+/// trees — and are deliberately *not* part of `messages`, which keeps
+/// meaning "application payload messages".
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct CommStats {
     pub messages: u64,
@@ -59,6 +209,22 @@ pub struct CommStats {
     pub modeled_ns: u64,
     /// Wall-clock time spent blocked in comm calls.
     pub wall_ns: u64,
+    /// Payload messages that stayed within a node.
+    pub intra_messages: u64,
+    /// Payload messages that crossed between nodes.
+    pub inter_messages: u64,
+    /// Payload bytes that stayed within a node.
+    pub intra_bytes: u64,
+    /// Payload bytes that crossed between nodes.
+    pub inter_bytes: u64,
+    /// Modeled time charged on intra-node links.
+    pub intra_modeled_ns: u64,
+    /// Modeled time charged on inter-node links.
+    pub inter_modeled_ns: u64,
+    /// Raw collective tree hops within a node.
+    pub coll_intra_hops: u64,
+    /// Raw collective tree hops between nodes.
+    pub coll_inter_hops: u64,
 }
 
 impl CommStats {
@@ -68,6 +234,14 @@ impl CommStats {
         self.collectives += other.collectives;
         self.modeled_ns = self.modeled_ns.max(other.modeled_ns);
         self.wall_ns = self.wall_ns.max(other.wall_ns);
+        self.intra_messages += other.intra_messages;
+        self.inter_messages += other.inter_messages;
+        self.intra_bytes += other.intra_bytes;
+        self.inter_bytes += other.inter_bytes;
+        self.intra_modeled_ns = self.intra_modeled_ns.max(other.intra_modeled_ns);
+        self.inter_modeled_ns = self.inter_modeled_ns.max(other.inter_modeled_ns);
+        self.coll_intra_hops += other.coll_intra_hops;
+        self.coll_inter_hops += other.coll_inter_hops;
     }
 }
 
@@ -83,12 +257,30 @@ mod tests {
     }
 
     #[test]
-    fn collective_scales_with_log_p() {
+    fn msg_cost_rounds_bandwidth_up() {
+        // the PR-5 fix: a 1-byte message at 100 ps/byte used to truncate
+        // to a zero bandwidth term; now every nonempty message pays >= 1ns
         let m = CostModel::default();
-        let t2 = m.collective_ns(2, 0);
-        let t128 = m.collective_ns(128, 0);
-        assert_eq!(t2, 2 * m.alpha_ns);
-        assert_eq!(t128, 8 * m.alpha_ns);
+        assert_eq!(m.msg_ns(1), m.alpha_ns + 1);
+        assert_eq!(m.msg_ns(9), m.alpha_ns + 1);
+        assert_eq!(m.msg_ns(10), m.alpha_ns + 1);
+        assert_eq!(m.msg_ns(11), m.alpha_ns + 2);
+        // empty messages still pay latency only
+        assert_eq!(m.msg_ns(0), m.alpha_ns);
+    }
+
+    #[test]
+    fn collective_scales_with_ceil_log_p() {
+        // the PR-5 fix: the old formula charged floor(log2 p) + 1 steps
+        // (and a nonzero α at p == 1); the module doc promises ceil(log2 p)
+        let m = CostModel::default();
+        assert_eq!(m.collective_ns(1, 0), 0);
+        assert_eq!(m.collective_ns(1, 1 << 20), 0);
+        assert_eq!(m.collective_ns(2, 0), m.alpha_ns);
+        assert_eq!(m.collective_ns(3, 0), 2 * m.alpha_ns);
+        assert_eq!(m.collective_ns(4, 0), 2 * m.alpha_ns);
+        assert_eq!(m.collective_ns(128, 0), 7 * m.alpha_ns);
+        assert_eq!(m.collective_ns(129, 0), 8 * m.alpha_ns);
     }
 
     #[test]
@@ -100,12 +292,117 @@ mod tests {
 
     #[test]
     fn stats_merge_takes_max_time_sum_bytes() {
-        let mut a = CommStats { messages: 1, bytes_sent: 10, collectives: 2, modeled_ns: 5, wall_ns: 7 };
-        let b = CommStats { messages: 2, bytes_sent: 20, collectives: 1, modeled_ns: 9, wall_ns: 3 };
+        let mut a = CommStats {
+            messages: 1,
+            bytes_sent: 10,
+            collectives: 2,
+            modeled_ns: 5,
+            wall_ns: 7,
+            ..Default::default()
+        };
+        let b = CommStats {
+            messages: 2,
+            bytes_sent: 20,
+            collectives: 1,
+            modeled_ns: 9,
+            wall_ns: 3,
+            ..Default::default()
+        };
         a.merge(&b);
         assert_eq!(a.messages, 3);
         assert_eq!(a.bytes_sent, 30);
         assert_eq!(a.modeled_ns, 9);
         assert_eq!(a.wall_ns, 7);
+    }
+
+    #[test]
+    fn stats_merge_sums_hop_class_counters() {
+        let mut a = CommStats {
+            intra_messages: 1,
+            inter_messages: 2,
+            intra_bytes: 10,
+            inter_bytes: 20,
+            coll_intra_hops: 3,
+            coll_inter_hops: 4,
+            ..Default::default()
+        };
+        let b = CommStats {
+            intra_messages: 5,
+            inter_messages: 6,
+            intra_bytes: 50,
+            inter_bytes: 60,
+            coll_intra_hops: 7,
+            coll_inter_hops: 8,
+            ..Default::default()
+        };
+        a.merge(&b);
+        assert_eq!(
+            (a.intra_messages, a.inter_messages, a.intra_bytes, a.inter_bytes),
+            (6, 8, 60, 80)
+        );
+        assert_eq!((a.coll_intra_hops, a.coll_inter_hops), (10, 12));
+    }
+
+    #[test]
+    fn flat_topology_degenerates_to_the_plain_model() {
+        let m = CostModel::default();
+        let t = Topology::flat(m);
+        assert_eq!(t.gpus_per_node, 1);
+        for p in [1usize, 2, 3, 8, 17, 128] {
+            // ceil(log2 p) == trailing_zeros(next_power_of_two(p))
+            let expect = p.next_power_of_two().trailing_zeros() as u64;
+            assert_eq!(t.collective_steps(p), (0, expect), "p={p}");
+        }
+        // every hop is inter-node and priced by the flat model
+        assert!(!t.same_node(0, 1));
+        assert_eq!(t.link(0, 5).msg_ns(100), m.msg_ns(100));
+        assert_eq!(t.collective_phase_ns(8, 64), (0, m.collective_ns(8, 64)));
+    }
+
+    #[test]
+    fn hierarchical_node_mapping() {
+        let t = Topology::nvlink_ib(4);
+        assert_eq!(t.node_of(0), 0);
+        assert_eq!(t.node_of(3), 0);
+        assert_eq!(t.node_of(4), 1);
+        assert_eq!(t.node_of(15), 3);
+        assert!(t.same_node(4, 7));
+        assert!(!t.same_node(3, 4));
+        assert_eq!(t.nodes(16), 4);
+        assert_eq!(t.nodes(17), 5);
+        assert_eq!(t.nodes(1), 1);
+        assert_eq!(t.link(0, 1).alpha_ns, CostModel::nvlink().alpha_ns);
+        assert_eq!(t.link(0, 4).alpha_ns, CostModel::default().alpha_ns);
+    }
+
+    #[test]
+    fn hierarchical_collective_steps_split_the_depth() {
+        let t = Topology::nvlink_ib(4);
+        // 16 ranks on 4 nodes: 2 intra steps + 2 leader steps
+        assert_eq!(t.collective_steps(16), (2, 2));
+        // single node: pure intra tree
+        assert_eq!(t.collective_steps(4), (2, 0));
+        assert_eq!(t.collective_steps(3), (2, 0));
+        // single rank: nothing moves
+        assert_eq!(t.collective_steps(1), (0, 0));
+        // 17 ranks on 5 nodes: 2 intra + 3 leader steps
+        assert_eq!(t.collective_steps(17), (2, 3));
+        // inter-node depth is below the flat tree's ceil(log2 16) = 4
+        let flat = Topology::flat(CostModel::default());
+        assert_eq!(flat.collective_steps(16), (0, 4));
+        assert!(t.collective_steps(16).1 < flat.collective_steps(16).1);
+    }
+
+    #[test]
+    fn hierarchical_phase_cost_prices_each_subtree_by_its_link() {
+        let intra = CostModel { alpha_ns: 10, beta_ps_per_byte: 1_000 };
+        let inter = CostModel { alpha_ns: 100, beta_ps_per_byte: 10_000 };
+        let t = Topology::hierarchical(4, intra, inter);
+        let (i, e) = t.collective_phase_ns(16, 8);
+        assert_eq!(i, 10 * 2 + 8); // 2 intra α-steps + ⌈8·1000/1000⌉
+        assert_eq!(e, 100 * 2 + 80); // 2 leader α-steps + ⌈8·10000/1000⌉
+        // zero-depth subtrees charge nothing, not even a β term
+        assert_eq!(t.collective_phase_ns(4, 8), (10 * 2 + 8, 0));
+        assert_eq!(t.collective_phase_ns(1, 8), (0, 0));
     }
 }

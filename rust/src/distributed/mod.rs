@@ -4,14 +4,17 @@
 //! thread with a [`comm::Comm`] handle providing the collective and
 //! point-to-point semantics the coloring algorithms need:
 //! `neighbor_alltoallv`/`sparse_alltoallv` (personalized exchanges over
-//! the partition's cut topology), binomial-tree `allreduce` (the
+//! the partition's cut topology), topology-aware tree `allreduce` (the
 //! `Allreduce(conflicts, SUM)` of Algorithm 2), barriers and tagged
 //! sends.  Per-rank byte/message/round counters plus an interconnect
-//! [`cost::CostModel`] reproduce the communication-time series of
-//! Figures 4, 9 and 12 in a hardware-independent way.
+//! [`cost::CostModel`] — optionally arranged into a hierarchical
+//! node × GPU [`cost::Topology`] (NVLink-class links within a node,
+//! InfiniBand-class between, node-leader collectives) — reproduce the
+//! communication-time series of Figures 4, 9 and 12 in a
+//! hardware-independent way.
 
 pub mod comm;
 pub mod cost;
 
-pub use comm::{run_ranks, Comm};
-pub use cost::{CommStats, CostModel};
+pub use comm::{run_ranks, run_ranks_topo, Comm};
+pub use cost::{CommStats, CostModel, Topology};

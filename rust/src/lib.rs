@@ -11,6 +11,7 @@
 //! paper's target deployments use it — construction once, many runs:
 //!
 //! ```no_run
+//! use dist_color::distributed::Topology;
 //! use dist_color::session::{GhostLayers, ProblemSpec, Session};
 //! use dist_color::{graph::generators, partition};
 //!
@@ -18,8 +19,17 @@
 //! let part = partition::edge_balanced(&g, 8);
 //!
 //! // 1. Session: the rank runtime — persistent per-rank worker pools
-//! //    and kernel scratch, an interconnect cost model, a seed.
-//! let session = Session::builder().ranks(8).threads(0).seed(42).build();
+//! //    and kernel scratch, an interconnect model, a seed.  The
+//! //    topology packs ranks ("GPUs") onto nodes: NVLink-class links
+//! //    inside a node, InfiniBand-class between, and collectives that
+//! //    reduce within each node before crossing between node leaders.
+//! //    Omit `.topology(..)` for a flat interconnect.
+//! let session = Session::builder()
+//!     .ranks(8)
+//!     .topology(Topology::nvlink_ib(4)) // 8 GPUs on 2 nodes
+//!     .threads(0)
+//!     .seed(42)
+//!     .build();
 //!
 //! // 2. Plan: each rank ingests only its own rows (any `GraphSource`;
 //! //    streaming sources never materialize the global edge set on a
@@ -28,9 +38,13 @@
 //!
 //! // 3. Run, repeatedly and cheaply: D1(2GL), D2, PD2, kernel and
 //! //    heuristic ablations — all reuse the plan's construction.
+//! //    Topology affects modeled accounting and collective schedule
+//! //    only: colorings are bit-identical to the flat path, and
+//! //    `RunStats` reports the intra/inter hop-class split.
 //! let d1 = plan.run(ProblemSpec::d1());
 //! let d2 = plan.run(ProblemSpec::d2());
 //! assert!(d1.stats.colors_used <= d2.stats.colors_used);
+//! assert_eq!(d1.stats.intra_bytes + d1.stats.inter_bytes, d1.stats.bytes);
 //! ```
 //!
 //! `coloring::distributed::color_distributed` remains as the one-shot

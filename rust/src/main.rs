@@ -14,7 +14,7 @@ use std::process::ExitCode;
 use dist_color::bench::{run_algo, run_algo_with_backend, Algo};
 use dist_color::coloring::distributed::zoltan::{color_zoltan, ZoltanConfig};
 use dist_color::coloring::{validate, Problem};
-use dist_color::distributed::CostModel;
+use dist_color::distributed::{CostModel, Topology};
 use dist_color::graph::{generators, io, stats::GraphStats, Graph};
 use dist_color::partition::{self, PartitionKind};
 use dist_color::runtime::PjrtBackend;
@@ -70,6 +70,14 @@ COLOR FLAGS:
   --no-double-buffer  serial-round ablation: do not overlap the
                       delta exchanges with early conflict detection
                       (colorings are bit-identical either way)
+  --gpus-per-node N   hierarchical node x GPU topology: pack N ranks
+                      per node (NVLink-class links inside a node,
+                      inter-node links between; node-leader
+                      collectives).  1 = flat topology            [1]
+  --inter-alpha-ns A  inter-node latency (ns), with --gpus-per-node
+                      > 1                                      [1500]
+  --inter-beta-ps B   inter-node per-byte cost (ps), with
+                      --gpus-per-node > 1                       [100]
   --artifacts DIR     artifact dir for --backend pjrt          [artifacts]
 ";
 
@@ -146,6 +154,27 @@ fn cmd_color(f: Flags) -> Result<(), String> {
     let pk: PartitionKind = f.get_or("partitioner", "edge").parse()?;
     let part = partition::partition(&g, ranks, pk, seed);
     let cost = CostModel::default();
+    let gpus_per_node = f.usize_or("gpus-per-node", 1)? as u32;
+    if gpus_per_node == 0 {
+        return Err("--gpus-per-node must be at least 1".into());
+    }
+    if gpus_per_node == 1 && (f.get("inter-alpha-ns").is_some() || f.get("inter-beta-ps").is_some())
+    {
+        return Err(
+            "--inter-alpha-ns/--inter-beta-ps only apply to a hierarchical topology: \
+             pass --gpus-per-node N (N > 1) as well"
+                .into(),
+        );
+    }
+    let topo = if gpus_per_node > 1 {
+        let inter = CostModel {
+            alpha_ns: f.u64_or("inter-alpha-ns", cost.alpha_ns)?,
+            beta_ps_per_byte: f.u64_or("inter-beta-ps", cost.beta_ps_per_byte)?,
+        };
+        Topology::hierarchical(gpus_per_node, CostModel::nvlink(), inter)
+    } else {
+        Topology::flat(cost)
+    };
 
     let t0 = std::time::Instant::now();
     let (result, problem) = match algo.as_str() {
@@ -156,6 +185,12 @@ fn cmd_color(f: Flags) -> Result<(), String> {
                 _ => Problem::PD2,
             };
             let cfg = ZoltanConfig { problem, seed, ..Default::default() };
+            if f.get("no-double-buffer").is_some() {
+                println!(
+                    "note: --no-double-buffer does not apply to the Zoltan baseline \
+                     (its supersteps are strictly phased, §4)"
+                );
+            }
             (color_zoltan(&g, &part, cfg, cost), problem)
         }
         name => {
@@ -169,8 +204,13 @@ fn cmd_color(f: Flags) -> Result<(), String> {
                 "pd2" => (Problem::PD2, true, GhostLayers::Two),
                 other => return Err(format!("unknown --algo `{other}`")),
             };
-            let session =
-                Session::builder().ranks(ranks).cost(cost).threads(threads).seed(seed).build();
+            let session = Session::builder()
+                .ranks(ranks)
+                .cost(cost)
+                .topology(topo)
+                .threads(threads)
+                .seed(seed)
+                .build();
             let plan = session.plan(&g, &part, layers);
             let pspec = ProblemSpec {
                 problem,
@@ -219,6 +259,25 @@ fn cmd_color(f: Flags) -> Result<(), String> {
         result.stats.bytes,
         result.stats.overlap_saved_ns as f64 / 1e6
     );
+    if gpus_per_node > 1 {
+        if algo.starts_with("zoltan") {
+            println!("note: the Zoltan baseline runs on the flat topology (CPU-only, §4)");
+        } else {
+            let (si, se) = topo.collective_steps(ranks);
+            println!(
+                "topology: {gpus_per_node} GPUs/node over {} nodes | intra {} msgs / {} B | \
+                 inter {} msgs / {} B | collective depth {si}+{se} (intra+leader), \
+                 tree hops intra={} inter={}",
+                topo.nodes(ranks),
+                result.stats.intra_messages,
+                result.stats.intra_bytes,
+                result.stats.inter_messages,
+                result.stats.inter_bytes,
+                result.stats.coll_intra_hops,
+                result.stats.coll_inter_hops
+            );
+        }
+    }
     if !proper {
         return Err("coloring is NOT proper".into());
     }

@@ -54,7 +54,7 @@ use crate::coloring::distributed::{
 };
 use crate::coloring::local::{KernelScratch, LocalKernel};
 use crate::coloring::Problem;
-use crate::distributed::{run_ranks, CostModel};
+use crate::distributed::{run_ranks_topo, CostModel, Topology};
 use crate::partition::Partition;
 
 /// How many ghost layers a plan builds (§2.4, §3.4).
@@ -67,14 +67,15 @@ pub enum GhostLayers {
     Two,
 }
 
-/// Builder for [`Session`].  Defaults: 1 rank, default α–β cost model,
-/// `threads = 0` (one kernel worker per available core; the CLI's
-/// `--threads` flag is just a front-end that calls `.threads(..)`),
-/// seed 42.
+/// Builder for [`Session`].  Defaults: 1 rank, default α–β cost model
+/// arranged as a flat topology, `threads = 0` (one kernel worker per
+/// available core; the CLI's `--threads` flag is just a front-end that
+/// calls `.threads(..)`), seed 42.
 #[derive(Clone, Copy, Debug)]
 pub struct SessionBuilder {
     ranks: usize,
     cost: CostModel,
+    topology: Option<Topology>,
     threads: usize,
     seed: u64,
 }
@@ -87,9 +88,24 @@ impl SessionBuilder {
         self
     }
 
-    /// Interconnect cost model for modeled communication time.
+    /// Interconnect cost model for modeled communication time, applied
+    /// as a *flat* topology (every hop priced alike).  Ignored when
+    /// [`SessionBuilder::topology`] is also set — the topology carries
+    /// its own α–β pairs.
     pub fn cost(mut self, cost: CostModel) -> Self {
         self.cost = cost;
+        self
+    }
+
+    /// Hierarchical node × GPU topology (§5's AiMOS shape): rank `r`
+    /// lives on node `r / gpus_per_node`, hops are priced intra- vs
+    /// inter-node, and the tree collectives reduce within each node
+    /// before crossing between node leaders.  Changes modeled accounting
+    /// and collective schedule **only** — colorings, rounds and conflict
+    /// counts stay bit-identical to the flat path.  The CLI front-end is
+    /// `--gpus-per-node` / `--inter-alpha-ns` / `--inter-beta-ps`.
+    pub fn topology(mut self, topo: Topology) -> Self {
+        self.topology = Some(topo);
         self
     }
 
@@ -116,6 +132,7 @@ impl SessionBuilder {
         Session {
             nranks: self.ranks,
             cost: self.cost,
+            topo: self.topology.unwrap_or(Topology::flat(self.cost)),
             threads: self.threads,
             seed: self.seed,
             scratch,
@@ -126,7 +143,13 @@ impl SessionBuilder {
 
 impl Default for SessionBuilder {
     fn default() -> Self {
-        SessionBuilder { ranks: 1, cost: CostModel::default(), threads: 0, seed: 42 }
+        SessionBuilder {
+            ranks: 1,
+            cost: CostModel::default(),
+            topology: None,
+            threads: 0,
+            seed: 42,
+        }
     }
 }
 
@@ -136,6 +159,7 @@ impl Default for SessionBuilder {
 pub struct Session {
     nranks: usize,
     cost: CostModel,
+    topo: Topology,
     threads: usize,
     seed: u64,
     /// Per-rank persistent scratch; locked by that rank's thread for the
@@ -167,8 +191,16 @@ impl Session {
         self.seed
     }
 
+    /// The flat reference cost model ([`SessionBuilder::cost`]); the
+    /// active hop pricing is [`Session::topology`].
     pub fn cost(&self) -> CostModel {
         self.cost
+    }
+
+    /// The node × GPU topology every collective run of this session
+    /// executes under (flat unless [`SessionBuilder::topology`] was set).
+    pub fn topology(&self) -> Topology {
+        self.topo
     }
 
     /// Build a [`Plan`]: every rank ingests its slab from `source` and
@@ -192,7 +224,7 @@ impl Session {
             "source vertex count does not match the partition"
         );
         let two = layers == GhostLayers::Two;
-        let per_rank = run_ranks(self.nranks, self.cost, |comm| {
+        let per_rank = run_ranks_topo(self.nranks, self.topo, |comm| {
             let rank = comm.rank();
             let t0 = Instant::now();
             let owned = part.owned(rank);
@@ -384,11 +416,15 @@ impl Plan<'_> {
             seed: spec.seed.unwrap_or(self.session.seed),
             max_rounds: spec.max_rounds,
             double_buffer: spec.double_buffer,
+            // the session's topology already reached the Comm via
+            // run_ranks_topo; DistConfig::topology only steers the
+            // one-shot wrapper's Session construction
+            topology: None,
         };
         // one run at a time per session: rank threads hold their scratch
         // locks across blocking collectives (see `Session::run_gate`)
         let _gate = self.session.run_gate.lock().expect("session run gate poisoned");
-        let outcomes = run_ranks(self.session.nranks, self.session.cost, |comm| {
+        let outcomes = run_ranks_topo(self.session.nranks, self.session.topo, |comm| {
             let rank = comm.rank() as usize;
             let mut scratch =
                 self.session.scratch[rank].lock().expect("rank scratch poisoned");
@@ -479,6 +515,43 @@ mod tests {
         // the second layer's adjacency fetch strictly adds traffic
         assert!(two.build_stats().bytes > one.build_stats().bytes);
         assert!(two.total_ghosts() >= one.total_ghosts());
+    }
+
+    #[test]
+    fn topology_session_colors_identically_to_flat() {
+        // the PR-5 invariant at the session level: a hierarchical
+        // topology changes accounting and collective schedule only
+        let g = gnm(300, 1500, 2);
+        let part = partition::hash(&g, 8, 3);
+        let flat = Session::builder().ranks(8).cost(CostModel::zero()).threads(1).seed(7).build();
+        let hier = Session::builder()
+            .ranks(8)
+            .topology(Topology::nvlink_ib(4))
+            .threads(1)
+            .seed(7)
+            .build();
+        assert_eq!(hier.topology().gpus_per_node, 4);
+        assert_eq!(flat.topology().gpus_per_node, 1, "flat must be the default");
+        let a = plan_and_run(&flat, &g, &part);
+        let b = plan_and_run(&hier, &g, &part);
+        assert_eq!(a.colors, b.colors);
+        assert_eq!(a.stats.comm_rounds, b.stats.comm_rounds);
+        assert_eq!(a.stats.conflicts, b.stats.conflicts);
+        // hop-class split: flat traffic is all inter, hierarchical
+        // traffic is split but sums to the same totals
+        assert_eq!(a.stats.intra_bytes, 0);
+        assert_eq!(a.stats.inter_bytes, a.stats.bytes);
+        assert_eq!(b.stats.intra_bytes + b.stats.inter_bytes, b.stats.bytes);
+        assert_eq!(b.stats.bytes, a.stats.bytes, "topology must not change wire bytes");
+    }
+
+    fn plan_and_run(
+        session: &Session,
+        g: &crate::graph::Graph,
+        part: &crate::partition::Partition,
+    ) -> crate::coloring::distributed::RunResult {
+        let plan = session.plan(g, part, GhostLayers::One);
+        plan.run(ProblemSpec::d1())
     }
 
     #[test]

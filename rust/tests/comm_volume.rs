@@ -10,7 +10,7 @@ use dist_color::coloring::distributed::{
     DistConfig, ExchangeScratch, NativeBackend,
 };
 use dist_color::coloring::{validate, Color};
-use dist_color::distributed::{run_ranks, CostModel};
+use dist_color::distributed::{run_ranks, run_ranks_topo, CostModel, Topology};
 use dist_color::graph::generators::mesh::hex_mesh;
 use dist_color::partition;
 
@@ -168,6 +168,105 @@ fn double_buffering_changes_timing_not_message_count() {
             a.comm.messages,
             a.comm_rounds
         );
+    }
+}
+
+#[test]
+fn node_leader_collective_pins_inter_node_message_count() {
+    // PR 5 acceptance fixture: 16 ranks packed 4 per node.  One
+    // allreduce is a reduce + a broadcast; the flat binomial tree makes
+    // 2·(p-1) = 30 hops, every one inter-node (gpus_per_node = 1),
+    // while the node-leader tree crosses nodes only 2·(#nodes-1) = 6
+    // times and keeps 2·(p-#nodes) = 24 hops on-node.
+    let hops = |topo: Topology| {
+        let stats = run_ranks_topo(CHAIN_RANKS, topo, |c| {
+            let s = c.allreduce_sum(5_000, c.rank() as u64 + 1);
+            assert_eq!(s, (CHAIN_RANKS * (CHAIN_RANKS + 1) / 2) as u64);
+            c.stats()
+        });
+        (
+            stats.iter().map(|s| s.coll_intra_hops).sum::<u64>(),
+            stats.iter().map(|s| s.coll_inter_hops).sum::<u64>(),
+        )
+    };
+    let (flat_intra, flat_inter) = hops(Topology::flat(CostModel::zero()));
+    assert_eq!((flat_intra, flat_inter), (0, 30), "flat tree hop budget");
+    let (hier_intra, hier_inter) = hops(Topology::nvlink_ib(4));
+    assert_eq!((hier_intra, hier_inter), (24, 6), "node-leader tree hop budget");
+    assert!(hier_inter < flat_inter, "leader tree must cross nodes less");
+    assert_eq!(hier_intra + hier_inter, flat_intra + flat_inter, "same total hops");
+}
+
+#[test]
+fn chain_delta_round_splits_intra_vs_inter_exactly() {
+    // 16-rank, 4-per-node chain: each rank sends one delta to each of
+    // its two chain neighbors; node boundaries fall between ranks
+    // (3,4), (7,8), (11,12) and the periodic (15,0) — so per round the
+    // 32 messages split 24 intra / 8 inter, and a rank's split is
+    // (1,1) at a node edge and (2,0) inside a node.
+    let (g, part) = chain_fixture();
+    let topo = Topology::nvlink_ib(4);
+    let per_rank = run_ranks_topo(CHAIN_RANKS, topo, |c| {
+        let lg = LocalGraph::build(c, &g, &part, false);
+        let mut colors: Vec<Color> = vec![0; lg.n_local + lg.n_ghost];
+        for v in 0..lg.n_local {
+            colors[v] = (v % 5 + 1) as Color;
+        }
+        exchange_full(c, &lg, &mut colors);
+        let recolored: Vec<u32> = (0..lg.n_boundary1 as u32).collect();
+        let mut xscratch = ExchangeScratch::new();
+        let before = c.stats();
+        exchange_delta(c, &lg, &mut colors, &recolored, 1, &mut xscratch);
+        let after = c.stats();
+        (
+            after.intra_messages - before.intra_messages,
+            after.inter_messages - before.inter_messages,
+            after.intra_bytes - before.intra_bytes,
+            after.inter_bytes - before.inter_bytes,
+            after.bytes_sent - before.bytes_sent,
+        )
+    });
+    let mut intra_total = 0u64;
+    let mut inter_total = 0u64;
+    for (rank, (im, em, ib, eb, bytes)) in per_rank.into_iter().enumerate() {
+        let r = rank as u32;
+        let at_node_edge = r % 4 == 0 || r % 4 == 3;
+        let expect = if at_node_edge { (1u64, 1u64) } else { (2, 0) };
+        assert_eq!((im, em), expect, "rank {rank} message split");
+        assert_eq!(ib + eb, bytes, "rank {rank}: byte split must partition the total");
+        assert!(ib > 0 || im == 0, "rank {rank}: intra messages but no intra bytes");
+        intra_total += im;
+        inter_total += em;
+    }
+    assert_eq!((intra_total, inter_total), (24, 8), "per-round chain split");
+}
+
+#[test]
+fn hierarchical_chain_run_keeps_flat_wire_behavior() {
+    // end-to-end on the chain: topology must not change messages,
+    // bytes, rounds or colors — only how they are classed
+    let (g, part) = chain_fixture();
+    // the white-box color_rank entry takes its topology from the Comm
+    // (run_ranks_topo); DistConfig::topology only steers the one-shot
+    // color_distributed wrapper, so the same cfg serves both runs
+    let cfg = DistConfig::default();
+    let flat = run_ranks(CHAIN_RANKS, CostModel::zero(), |c| {
+        color_rank(c, &g, &part, cfg, &NativeBackend(cfg.kernel))
+    });
+    let hier = run_ranks_topo(CHAIN_RANKS, Topology::nvlink_ib(4), |c| {
+        color_rank(c, &g, &part, cfg, &NativeBackend(cfg.kernel))
+    });
+    for (rank, (a, b)) in flat.iter().zip(&hier).enumerate() {
+        assert_eq!(a.comm.messages, b.comm.messages, "rank {rank}: message count changed");
+        assert_eq!(a.comm.bytes_sent, b.comm.bytes_sent, "rank {rank}: byte volume changed");
+        assert_eq!(a.comm_rounds, b.comm_rounds, "rank {rank}: round count changed");
+        assert_eq!(a.owned_colors, b.owned_colors, "rank {rank}: coloring changed");
+        assert_eq!(
+            b.comm.intra_bytes + b.comm.inter_bytes,
+            b.comm.bytes_sent,
+            "rank {rank}: split must partition the bytes"
+        );
+        assert_eq!(a.comm.intra_bytes, 0, "rank {rank}: flat traffic must class inter");
     }
 }
 

@@ -1,0 +1,178 @@
+//! PR 5: the hierarchical node × GPU topology's bit-parity matrix.
+//!
+//! A [`Topology`] changes *modeled accounting and collective schedule
+//! only*: with ranks packed 4 to a node, colorings, round counts and
+//! conflict counts must be **bit-identical** to the flat path across
+//! problems (D1-2GL, D2, PD2) and rank counts (1, 2, 8, 17), and the
+//! hop-class split of `RunStats` must partition — never change — the
+//! wire totals.  `DIST_TEST_THREADS` pins the thread count the same way
+//! `tests/round_overlap.rs` does.
+
+use dist_color::coloring::{validate, Problem};
+use dist_color::distributed::{run_ranks_topo, CostModel, Topology};
+use dist_color::graph::generators::erdos_renyi::gnm;
+use dist_color::graph::generators::rmat::rmat;
+use dist_color::partition::{self, PartitionKind};
+use dist_color::session::{GhostLayers, ProblemSpec, Session};
+
+const RANK_COUNTS: [usize; 4] = [1, 2, 8, 17];
+const GPUS_PER_NODE: u32 = 4;
+
+fn threads() -> usize {
+    match std::env::var("DIST_TEST_THREADS") {
+        Ok(s) => s.trim().parse().expect("DIST_TEST_THREADS must be a thread count"),
+        Err(_) => 1,
+    }
+}
+
+fn spec_for(problem: Problem) -> ProblemSpec {
+    match problem {
+        Problem::D1 => ProblemSpec::d1(), // 2GL on the two-layer plans below
+        Problem::D2 => ProblemSpec::d2(),
+        Problem::PD2 => ProblemSpec::pd2(),
+    }
+}
+
+#[test]
+fn hierarchical_colorings_match_flat_across_the_matrix() {
+    // conflict-heavy fixtures so the fix loop (and with it the
+    // allreduces and delta exchanges) actually runs several rounds
+    let graphs = [("rmat", rmat(7, 6, 5)), ("gnm", gnm(300, 1500, 5))];
+    for (name, g) in &graphs {
+        for &ranks in &RANK_COUNTS {
+            let part = partition::partition(g, ranks, PartitionKind::Hash, 13);
+            let flat = Session::builder()
+                .ranks(ranks)
+                .cost(CostModel::default())
+                .threads(threads())
+                .seed(29)
+                .build();
+            let hier = Session::builder()
+                .ranks(ranks)
+                .topology(Topology::nvlink_ib(GPUS_PER_NODE))
+                .threads(threads())
+                .seed(29)
+                .build();
+            let fplan = flat.plan(g, &part, GhostLayers::Two);
+            let hplan = hier.plan(g, &part, GhostLayers::Two);
+            for problem in [Problem::D1, Problem::D2, Problem::PD2] {
+                let ctx = format!("{name} {problem} ranks={ranks}");
+                let spec = spec_for(problem);
+                let a = fplan.run(spec);
+                let b = hplan.run(spec);
+                assert_eq!(a.colors, b.colors, "topology changed the coloring: {ctx}");
+                assert_eq!(
+                    a.stats.comm_rounds, b.stats.comm_rounds,
+                    "topology changed the round count: {ctx}"
+                );
+                assert_eq!(
+                    a.stats.conflicts, b.stats.conflicts,
+                    "topology changed the conflict count: {ctx}"
+                );
+                let proper = match problem {
+                    Problem::D1 => validate::is_proper_d1(g, &a.colors),
+                    Problem::D2 => validate::is_proper_d2(g, &a.colors),
+                    Problem::PD2 => validate::is_proper_pd2(g, &a.colors),
+                };
+                assert!(proper, "improper coloring: {ctx}");
+                // the split partitions the (identical) wire totals
+                assert_eq!(b.stats.bytes, a.stats.bytes, "wire bytes changed: {ctx}");
+                assert_eq!(
+                    b.stats.intra_bytes + b.stats.inter_bytes,
+                    b.stats.bytes,
+                    "byte split does not partition the total: {ctx}"
+                );
+                assert_eq!(
+                    b.stats.intra_messages + b.stats.inter_messages,
+                    a.stats.intra_messages + a.stats.inter_messages,
+                    "message count changed: {ctx}"
+                );
+                // flat classes everything inter-node
+                assert_eq!(a.stats.intra_bytes, 0, "flat run had intra traffic: {ctx}");
+                assert_eq!(a.stats.inter_bytes, a.stats.bytes, "{ctx}");
+            }
+        }
+    }
+}
+
+#[test]
+fn hierarchical_runs_with_nontrivial_node_packing_report_intra_traffic() {
+    // 8 ranks at 4/node on a chain-ish partition: neighbor exchanges
+    // between ranks of one node must be classed intra
+    let g = dist_color::graph::generators::mesh::hex_mesh(4, 4, 16);
+    let part = partition::block(&g, 8);
+    let session = Session::builder()
+        .ranks(8)
+        .topology(Topology::nvlink_ib(4))
+        .threads(1)
+        .seed(3)
+        .build();
+    let plan = session.plan(&g, &part, GhostLayers::One);
+    let r = plan.run(ProblemSpec::d1());
+    assert!(validate::is_proper_d1(&g, &r.colors));
+    assert!(r.stats.intra_bytes > 0, "chain neighbors within a node must be intra");
+    assert!(r.stats.inter_bytes > 0, "node-boundary neighbors must be inter");
+    assert!(
+        r.stats.inter_bytes < r.stats.bytes,
+        "inter-node bytes must drop strictly below the flat total"
+    );
+    // the leader tree crosses nodes less than the flat tree would:
+    // every collective phase pays at most #nodes-1 inter hops instead
+    // of p-1
+    assert!(r.stats.coll_intra_hops > 0);
+    assert!(r.stats.coll_inter_hops > 0);
+    assert!(r.stats.coll_inter_hops < r.stats.coll_intra_hops);
+}
+
+#[test]
+fn hierarchical_modeled_time_splits_by_link_class() {
+    // expensive inter links + free intra links: all modeled time must
+    // land in the inter bucket of the split, and the two buckets must
+    // sum to the per-rank totals before the rank-max merge
+    let free_intra = Topology::hierarchical(4, CostModel::zero(), CostModel::default());
+    let stats = run_ranks_topo(8, free_intra, |c| {
+        if c.rank() % 4 != 0 {
+            // intra-node hop (same node as rank - 1)
+            c.send(c.rank() - 1, 1, vec![0u8; 64]);
+        }
+        if c.rank() == 0 {
+            c.send(4, 2, vec![0u8; 64]); // inter-node hop
+        }
+        // drain so the run terminates cleanly
+        if c.rank() % 4 != 3 && c.rank() + 1 < 8 {
+            c.recv(c.rank() + 1, 1);
+        }
+        if c.rank() == 4 {
+            c.recv(0, 2);
+        }
+        c.barrier(10);
+        c.stats()
+    });
+    for (rank, s) in stats.iter().enumerate() {
+        assert_eq!(
+            s.modeled_ns,
+            s.intra_modeled_ns + s.inter_modeled_ns,
+            "rank {rank}: split does not sum to the total"
+        );
+        assert_eq!(s.intra_modeled_ns, 0, "rank {rank}: free intra links charged time");
+    }
+    let inter_total: u64 = stats.iter().map(|s| s.inter_modeled_ns).sum();
+    assert!(inter_total > 0, "inter hops and leader collectives must charge time");
+}
+
+#[test]
+fn one_shot_wrapper_accepts_a_topology() {
+    use dist_color::coloring::distributed::{color_distributed, DistConfig, NativeBackend};
+    let g = gnm(200, 900, 7);
+    let part = partition::hash(&g, 8, 1);
+    let flat_cfg = DistConfig { seed: 11, threads: 1, ..Default::default() };
+    let hier_cfg =
+        DistConfig { topology: Some(Topology::nvlink_ib(4)), ..flat_cfg };
+    let a = color_distributed(&g, &part, flat_cfg, CostModel::default(), &NativeBackend(flat_cfg.kernel));
+    let b = color_distributed(&g, &part, hier_cfg, CostModel::default(), &NativeBackend(hier_cfg.kernel));
+    assert_eq!(a.colors, b.colors, "DistConfig::topology changed the coloring");
+    assert_eq!(a.stats.comm_rounds, b.stats.comm_rounds);
+    assert_eq!(a.stats.conflicts, b.stats.conflicts);
+    assert!(b.stats.intra_bytes > 0 || b.stats.inter_bytes > 0);
+    assert!(validate::is_proper_d1(&g, &a.colors));
+}

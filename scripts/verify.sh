@@ -9,8 +9,9 @@
 #                               # bit-parity matrix is exercised at both
 #                               # thread counts (then lints + smokes)
 #
-# clippy/rustfmt steps are skipped (with a notice) when the components
-# are not installed; the build and test steps are always required.
+# The clippy step is a hard gate (`-D warnings`; PR 5) — install the
+# component with `rustup component add clippy`.  rustfmt is skipped with
+# a notice when not installed; build and test are always required.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -46,12 +47,9 @@ if [ "$quick" = "1" ]; then
   exit 0
 fi
 
-if cargo clippy --version >/dev/null 2>&1; then
-  echo "== cargo clippy (-D warnings) =="
-  cargo clippy --all-targets -- -D warnings
-else
-  echo "== clippy not installed; skipping =="
-fi
+# hard lint gate (PR 5): clippy must be present and clean
+echo "== cargo clippy -q --all-targets (-D warnings) =="
+cargo clippy -q --all-targets -- -D warnings
 
 if cargo fmt --version >/dev/null 2>&1; then
   echo "== cargo fmt --check =="
@@ -73,5 +71,8 @@ BENCH_PR3=1 BENCH_REPS="${BENCH_REPS:-3}" cargo bench --bench micro_kernels
 
 echo "== micro_kernels PR-4 smoke (writes BENCH_pr4.json) =="
 BENCH_PR4=1 BENCH_REPS="${BENCH_REPS:-3}" cargo bench --bench micro_kernels
+
+echo "== micro_kernels PR-5 smoke (writes BENCH_pr5.json) =="
+BENCH_PR5=1 cargo bench --bench micro_kernels
 
 echo "verify: OK"
