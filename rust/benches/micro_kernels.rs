@@ -17,7 +17,10 @@
 //! `overlap_saved` counter) and write `BENCH_pr4.json`; set
 //! `BENCH_PR5=1` to run the flat vs hierarchical (node × GPU) topology
 //! comparison (bit-parity gate, inter-node byte/message reduction,
-//! collective-depth change) and write `BENCH_pr5.json`.  All JSON
+//! collective-depth change) and write `BENCH_pr5.json`; set
+//! `BENCH_PR6=1` to run the clean vs fault-injected comparison (the
+//! self-healing bit-parity gate, recovery counters, modeled recovery
+//! overhead, paranoid-audit cost) and write `BENCH_pr6.json`.  All JSON
 //! schemas are documented in `rust/benches/README.md`.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -31,7 +34,7 @@ use dist_color::coloring::distributed::{
 use dist_color::coloring::local::{eb_bit, greedy, jp, nb_bit, vb_bit, KernelScratch, LocalView};
 use dist_color::coloring::Color;
 use dist_color::distributed::comm::encode_u32s;
-use dist_color::distributed::{run_ranks, CommStats, CostModel, Topology};
+use dist_color::distributed::{run_ranks, CommStats, CostModel, FaultPlan, Topology};
 use dist_color::graph::generators::{ba, erdos_renyi::gnm, mesh};
 use dist_color::graph::{Graph, VId};
 use dist_color::partition;
@@ -179,7 +182,7 @@ fn measure_exchange(
         for v in 0..lg.n_local {
             colors[v] = (v % 7 + 1) as Color;
         }
-        exchange_full(c, &lg, &mut colors);
+        exchange_full(c, &lg, &mut colors).expect("bench exchange failed");
         let recolored: Vec<u32> = (0..lg.n_boundary1 as u32).collect();
         let mut xscratch = ExchangeScratch::new();
         let before = c.stats();
@@ -208,7 +211,7 @@ fn measure_exchange(
                     }
                     bufs.push(encode_u32s(&payload));
                 }
-                let got = c.alltoallv(60_000 + round as u64, bufs);
+                let got = c.alltoallv(60_000 + round as u64, bufs).expect("bench alltoallv failed");
                 for (r, buf) in got.into_iter().enumerate() {
                     for pair in buf.chunks_exact(8) {
                         let pos = u32::from_le_bytes(pair[..4].try_into().unwrap());
@@ -218,7 +221,8 @@ fn measure_exchange(
                     }
                 }
             } else {
-                exchange_delta(c, &lg, &mut colors, &recolored, round + 1, &mut xscratch);
+                exchange_delta(c, &lg, &mut colors, &recolored, round + 1, &mut xscratch)
+                    .expect("bench exchange failed");
             }
         }
         let after = c.stats();
@@ -598,6 +602,118 @@ fn pr5_smoke() {
     );
 }
 
+/// Clean vs fault-injected run on the cut-heavy hash fixture: the
+/// self-healing gate (bit-identical colors through drops, flips, dups
+/// and delays), the recovery counters, the modeled recovery overhead,
+/// and the paranoid-audit cost.  Written to `BENCH_pr6.json`.
+fn pr6_smoke() {
+    let reps: usize =
+        std::env::var("BENCH_REPS").ok().and_then(|s| s.parse().ok()).unwrap_or(5);
+    let ranks = 8usize;
+    let (n, m, seed) = (60_000usize, 360_000usize, 11u64);
+    eprintln!("pr6 smoke: gnm({n}, {m}) hash-partitioned over {ranks} ranks ...");
+    let g = gnm(n, m, seed);
+    // hash partition: maximally cut-heavy, so every fix round crosses
+    // faulty wires and the recovery machinery is actually exercised
+    let part = partition::hash(&g, ranks, 1);
+    let fault_seed = 0x9606u64; // fixed: the smoke must be reproducible
+    let (drop_ppm, flip_ppm, dup_ppm, delay_ppm, retry_budget) =
+        (50_000u32, 50_000u32, 20_000u32, 20_000u32, 16u32);
+    let fplan = FaultPlan::new(fault_seed)
+        .with_drop_ppm(drop_ppm)
+        .with_flip_ppm(flip_ppm)
+        .with_dup_ppm(dup_ppm)
+        .with_delay(delay_ppm, 25_000)
+        .with_retry_budget(retry_budget);
+    let mk_session = |faults: Option<FaultPlan>| {
+        let mut b =
+            Session::builder().ranks(ranks).cost(CostModel::default()).threads(1).seed(42);
+        if let Some(fp) = faults {
+            b = b.faults(fp);
+        }
+        b.build()
+    };
+    let clean_session = mk_session(None);
+    let clean_plan = clean_session.plan(&g, &part, GhostLayers::One);
+    let faulted_session = mk_session(Some(fplan));
+    let faulted_plan = faulted_session.plan(&g, &part, GhostLayers::One);
+    let spec = ProblemSpec::d1();
+
+    // parity gate material first, so a divergence is recorded in JSON
+    let clean = clean_plan.run(spec);
+    let faulted = faulted_plan.run(spec);
+    let identical = clean.colors == faulted.colors
+        && clean.stats.comm_rounds == faulted.stats.comm_rounds
+        && clean.stats.conflicts == faulted.stats.conflicts;
+    let same_wire = clean.stats.bytes == faulted.stats.bytes;
+    let recovery_ms = faulted.stats.fault_recovery_ns as f64 / 1e6;
+
+    let clean_ms = median_ms(reps, || {
+        let r = clean_plan.run(spec);
+        std::hint::black_box(r.stats.colors_used);
+    });
+    let faulted_ms = median_ms(reps, || {
+        let r = faulted_plan.run(spec);
+        std::hint::black_box(r.stats.colors_used);
+    });
+    let overhead = faulted_ms / clean_ms;
+
+    // paranoid audits on top of the faulted run: same coloring again,
+    // plus the per-exchange ghost-consistency checks
+    let paranoid = faulted_plan.run(spec.with_paranoid(true));
+    let paranoid_identical = paranoid.colors == clean.colors;
+    println!(
+        "faults    clean: {clean_ms:>8.2} ms   faulted: {faulted_ms:>8.2} ms ({overhead:.2}x) \
+         identical={identical}"
+    );
+    println!(
+        "faults    corruptions={} drops={} dups_dropped={} retransmits={} resyncs={} delays={} \
+         recovery={recovery_ms:.3} ms paranoid_checks={}",
+        faulted.stats.fault_corruptions,
+        faulted.stats.fault_drops,
+        faulted.stats.fault_dups_dropped,
+        faulted.stats.fault_retransmits,
+        faulted.stats.fault_resyncs,
+        faulted.stats.fault_delays,
+        paranoid.stats.paranoid_checks
+    );
+
+    let json = format!(
+        "{{\n  \"bench\": \"micro_kernels_pr6\",\n  \"schema\": 1,\n  \"reps\": {reps},\n  \
+         \"host_cores\": {},\n  \
+         \"graph\": {{\"kind\": \"gnm\", \"n\": {n}, \"m\": {m}, \"seed\": {seed}}},\n  \
+         \"ranks\": {ranks},\n  \"partition\": \"hash\",\n  \
+         \"fault_plan\": {{\"seed\": {fault_seed}, \"drop_ppm\": {drop_ppm}, \
+         \"flip_ppm\": {flip_ppm}, \"dup_ppm\": {dup_ppm}, \"delay_ppm\": {delay_ppm}, \
+         \"retry_budget\": {retry_budget}}},\n  \
+         \"clean_ms\": {clean_ms:.3},\n  \"faulted_ms\": {faulted_ms:.3},\n  \
+         \"fault_overhead\": {overhead:.3},\n  \"recovery_ms\": {recovery_ms:.3},\n  \
+         \"counters\": {{\"corruptions\": {}, \"drops\": {}, \"dups_dropped\": {}, \
+         \"retransmits\": {}, \"resyncs\": {}, \"delays\": {}}},\n  \
+         \"paranoid_checks\": {},\n  \"identical_to_clean\": {identical},\n  \
+         \"paranoid_identical\": {paranoid_identical},\n  \"same_wire_totals\": {same_wire}\n}}\n",
+        std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1),
+        faulted.stats.fault_corruptions,
+        faulted.stats.fault_drops,
+        faulted.stats.fault_dups_dropped,
+        faulted.stats.fault_retransmits,
+        faulted.stats.fault_resyncs,
+        faulted.stats.fault_delays,
+        paranoid.stats.paranoid_checks,
+    );
+    std::fs::write("BENCH_pr6.json", &json).expect("writing BENCH_pr6.json");
+    println!("-> BENCH_pr6.json");
+    // asserted after the JSON is on disk, so a regression is recorded
+    assert!(identical, "fault recovery changed the coloring");
+    assert!(same_wire, "fault recovery leaked into the logical wire totals");
+    assert!(paranoid_identical, "paranoid audits changed the coloring");
+    assert!(
+        faulted.stats.fault_retransmits > 0,
+        "fault plan injected nothing — the smoke measured a clean run"
+    );
+    assert!(paranoid.stats.paranoid_checks > 0, "paranoid run audited nothing");
+}
+
 fn main() {
     if std::env::var("BENCH_PR1").is_ok_and(|v| v == "1") {
         pr1_smoke();
@@ -617,6 +733,10 @@ fn main() {
     }
     if std::env::var("BENCH_PR5").is_ok_and(|v| v == "1") {
         pr5_smoke();
+        return;
+    }
+    if std::env::var("BENCH_PR6").is_ok_and(|v| v == "1") {
+        pr6_smoke();
         return;
     }
     let reps: usize =
@@ -712,7 +832,7 @@ fn main() {
         let ms = median_ms(reps.min(5), || {
             run_ranks(p, CostModel::zero(), |c| {
                 for i in 0..10 {
-                    c.allreduce_sum(50_000 + i * 2, 1);
+                    c.allreduce_sum(50_000 + i * 2, 1).expect("bench allreduce failed");
                 }
             });
         });

@@ -29,7 +29,7 @@
 //! from global structure, so no rank needs the whole graph in memory.
 //! [`LocalGraph::build`] survives as the in-memory compatibility shim.
 
-use crate::distributed::comm::{decode_u32s, encode_u32s, Comm};
+use crate::distributed::comm::{decode_u32s, encode_u32s, Comm, CommError};
 use crate::graph::{Graph, GraphBuilder, VId};
 use crate::partition::Partition;
 use crate::session::source::{GraphSource, RankSlab};
@@ -106,6 +106,7 @@ impl LocalGraph {
         let owned_sorted: Vec<VId> = part.owned(comm.rank());
         let slab = GraphSource::load_rank(g, comm.rank(), &owned_sorted);
         Self::build_from_slab(comm, &slab, owned_sorted, part, two_layers)
+            .expect("local graph construction failed")
     }
 
     /// Build the local graph from this rank's adjacency slab alone: the
@@ -114,13 +115,15 @@ impl LocalGraph {
     /// ghost adjacency and degrees are fetched from their owners over
     /// `comm` — which is what lets `Session::plan` ingest graphs no
     /// single rank could hold.  Collective: all ranks must call.
+    /// Comm failures (a crashed peer, a torn payload) surface as
+    /// [`CommError`] instead of panicking the rank thread.
     pub(crate) fn build_from_slab(
         comm: &mut Comm,
         slab: &RankSlab,
         owned_sorted: Vec<VId>,
         part: &Partition,
         two_layers: bool,
-    ) -> LocalGraph {
+    ) -> Result<LocalGraph, CommError> {
         let rank = comm.rank();
         let p = comm.nranks() as usize;
         let n_local = owned_sorted.len();
@@ -194,7 +197,7 @@ impl LocalGraph {
                 out.push(row.len() as u32);
                 out.extend_from_slice(row);
                 out
-            });
+            })?;
             ghost_adj = replies;
             // discover second-layer ghosts (adj[0] is the degree header,
             // not a vertex — skipping it avoids phantom ghosts)
@@ -224,7 +227,7 @@ impl LocalGraph {
         let deg_replies = fetch(comm, part, &all_ghosts, |v| {
             let i = owned_sorted.binary_search(&v).expect("fetch of a non-owned vertex");
             vec![slab.degree(i) as u32]
-        });
+        })?;
         let mut degrees: Vec<u32> = Vec::with_capacity(n_local + n_ghost);
         for &i in &order {
             degrees.push(slab.degree(i) as u32);
@@ -252,14 +255,14 @@ impl LocalGraph {
             .iter()
             .map(|&r| encode_u32s(&req_by_rank[r as usize]))
             .collect();
-        let got = comm.sparse_alltoallv(TAG_REG, &recv_ranks, bufs);
+        let got = comm.sparse_alltoallv(TAG_REG, &recv_ranks, bufs)?;
         let mut subs_out: Vec<Vec<u32>> = vec![Vec::new(); p];
         // Every subscribed vertex must sit in the boundary prefix; the
         // comm/compute overlap in `color_rank` is only sound because the
         // colors shipped by the boundary-first send are final by then.
         let subs_bound = if two_layers { n_boundary2 } else { n_boundary1 };
         for (r, buf) in got {
-            let want = decode_u32s(&buf);
+            let want = decode_u32s(&buf)?;
             debug_assert!(!want.is_empty(), "empty subscription from rank {r}");
             subs_out[r as usize] = want
                 .iter()
@@ -330,7 +333,7 @@ impl LocalGraph {
         debug_assert_eq!(boundary_d1, (0..n_boundary1 as u32).collect::<Vec<u32>>());
         debug_assert_eq!(boundary_d2, (0..n_boundary2 as u32).collect::<Vec<u32>>());
 
-        LocalGraph {
+        Ok(LocalGraph {
             rank,
             nranks: p as u32,
             n_local,
@@ -348,7 +351,7 @@ impl LocalGraph {
             ghost_from,
             send_ranks,
             recv_ranks,
-        }
+        })
     }
 
     /// Is local id `v` a ghost (either layer)?
@@ -377,7 +380,7 @@ fn fetch(
     part: &Partition,
     wants: &[VId],
     reply: impl Fn(VId) -> Vec<u32>,
-) -> Vec<Vec<u32>> {
+) -> Result<Vec<Vec<u32>>, CommError> {
     let p = comm.nranks() as usize;
     let rank = comm.rank();
     let mut req: Vec<Vec<VId>> = vec![Vec::new(); p];
@@ -390,27 +393,25 @@ fn fetch(
     }
     let owners: Vec<u32> = (0..p as u32).filter(|&r| !req[r as usize].is_empty()).collect();
     let bufs: Vec<Vec<u8>> = owners.iter().map(|&r| encode_u32s(&req[r as usize])).collect();
-    let got = comm.sparse_alltoallv(TAG_FETCH_REQ, &owners, bufs);
+    let got = comm.sparse_alltoallv(TAG_FETCH_REQ, &owners, bufs)?;
     // build replies: for each requested gid, [len, data...]
     let requesters: Vec<u32> = got.iter().map(|&(from, _)| from).collect();
-    let rep_bufs: Vec<Vec<u8>> = got
-        .iter()
-        .map(|(_, buf)| {
-            let gs = decode_u32s(buf);
-            let mut out: Vec<u32> = Vec::with_capacity(gs.len() * 2);
-            for gv in gs {
-                let data = reply(gv);
-                out.push(data.len() as u32);
-                out.extend_from_slice(&data);
-            }
-            encode_u32s(&out)
-        })
-        .collect();
-    let reps = comm.neighbor_alltoallv(TAG_FETCH_REP, &requesters, rep_bufs, &owners);
+    let mut rep_bufs: Vec<Vec<u8>> = Vec::with_capacity(got.len());
+    for (_, buf) in &got {
+        let gs = decode_u32s(buf)?;
+        let mut out: Vec<u32> = Vec::with_capacity(gs.len() * 2);
+        for gv in gs {
+            let data = reply(gv);
+            out.push(data.len() as u32);
+            out.extend_from_slice(&data);
+        }
+        rep_bufs.push(encode_u32s(&out));
+    }
+    let reps = comm.neighbor_alltoallv(TAG_FETCH_REP, &requesters, rep_bufs, &owners)?;
     // split records per owner rank (reps[i] came from owners[i])
     let mut records: Vec<Vec<Vec<u32>>> = vec![Vec::new(); p];
     for (&o, buf) in owners.iter().zip(&reps) {
-        let xs = decode_u32s(buf);
+        let xs = decode_u32s(buf)?;
         let recs = &mut records[o as usize];
         let mut i = 0usize;
         while i < xs.len() {
@@ -421,13 +422,14 @@ fn fetch(
     }
     // reassemble in `wants` order
     let mut taken = vec![0usize; p];
-    slot.iter()
+    Ok(slot
+        .iter()
         .map(|&(r, idx)| {
             debug_assert_eq!(taken[r], idx);
             taken[r] += 1;
             std::mem::take(&mut records[r][idx])
         })
-        .collect()
+        .collect())
 }
 
 #[cfg(test)]

@@ -66,8 +66,8 @@ pub mod zoltan;
 
 use crate::coloring::local::{color_local_with, nb_bit, KernelScratch, LocalKernel, LocalView};
 use crate::coloring::{colors_used, Color, Problem};
-use crate::distributed::comm::{decode_u32s, encode_u32s, Comm};
-use crate::distributed::{CostModel, Topology};
+use crate::distributed::comm::{decode_u32s, encode_u32s, Comm, CommError};
+use crate::distributed::{CostModel, FaultPlan, Topology};
 use crate::distributed::cost::CommStats;
 use crate::graph::{Graph, VId};
 use crate::partition::Partition;
@@ -78,6 +78,12 @@ use ghost::LocalGraph;
 
 const TAG_COLORS: u64 = 20_000;
 const TAG_REDUCE: u64 = 30_000;
+/// Paranoid ghost-table audits (one tag per audit epoch).
+const TAG_PARANOID: u64 = 45_000;
+/// Reliable resync streams for exchanges whose lossy stream exhausted
+/// its retry budget: `+ 0` shadows the initial full exchange,
+/// `+ 1 + round` shadows that round's delta exchange.
+const TAG_RESYNC: u64 = 60_000;
 
 /// Configuration of one distributed coloring run.
 #[derive(Clone, Copy, Debug)]
@@ -113,6 +119,22 @@ pub struct DistConfig {
     /// `--inter-alpha-ns` / `--inter-beta-ps`); Session callers use
     /// `SessionBuilder::topology`.
     pub topology: Option<Topology>,
+    /// Deterministic fault injection on every data message (`None` =
+    /// clean wires, byte-identical to a build without the fault layer).
+    /// With nonzero rates, messages are framed (checksum + sequence
+    /// number) and recovery is automatic: colorings stay bit-identical
+    /// to the fault-free run while streams survive the plan's
+    /// `retry_budget`, and exchanges whose stream exhausts it escalate
+    /// to a reliable full resync that preserves the same invariant
+    /// (`tests/fault_injection.rs` pins both).  The CLI exposes this as
+    /// `--fault-seed` + `--fault-drop-pct`/`--fault-flip-pct`.
+    pub faults: Option<FaultPlan>,
+    /// Paranoid validation (CLI `--paranoid`): audit the ghost table
+    /// against the owners' authoritative colors after every exchange,
+    /// and re-verify conflict-freedom at termination, failing the run
+    /// with per-rank diagnostics on any divergence.  Costs one extra
+    /// reliable neighbor exchange per communication round.
+    pub paranoid: bool,
 }
 
 impl Default for DistConfig {
@@ -127,6 +149,8 @@ impl Default for DistConfig {
             max_rounds: 500,
             double_buffer: true,
             topology: None,
+            faults: None,
+            paranoid: false,
         }
     }
 }
@@ -222,6 +246,9 @@ pub struct RankOutcome {
     /// latency; 0 when [`DistConfig::double_buffer`] is off or the run
     /// converges without fix rounds).
     pub overlap_saved_ns: u64,
+    /// Ghost-table entries audited by paranoid validation (0 unless
+    /// [`DistConfig::paranoid`]).
+    pub paranoid_checks: u64,
     pub timers: SplitTimer,
     pub comm: CommStats,
 }
@@ -256,6 +283,21 @@ pub struct RunStats {
     /// node-leader schedule witness.
     pub coll_intra_hops: u64,
     pub coll_inter_hops: u64,
+    /// Fault-recovery counters (sums over ranks; all zero on clean
+    /// wires — see [`CommStats`] for the per-field meaning).
+    pub fault_corruptions: u64,
+    pub fault_drops: u64,
+    pub fault_dups_dropped: u64,
+    pub fault_retransmits: u64,
+    pub fault_resyncs: u64,
+    pub fault_delays: u64,
+    /// Rank-max modeled time spent on recovery (backoff, retransmits,
+    /// injected straggler delays).  Kept out of `comm_modeled_ns` so a
+    /// recovered run and a clean run report identical baseline totals.
+    pub fault_recovery_ns: u64,
+    /// Ghost-table entries audited by paranoid validation (sum over
+    /// ranks; 0 unless the run asked for it).
+    pub paranoid_checks: u64,
 }
 
 impl RunStats {
@@ -316,6 +358,9 @@ pub fn color_distributed(
     if let Some(topo) = cfg.topology {
         builder = builder.topology(topo);
     }
+    if let Some(fp) = cfg.faults {
+        builder = builder.faults(fp);
+    }
     let session = builder.build();
     let layers = match cfg.problem {
         Problem::D1 if !cfg.two_ghost_layers => GhostLayers::One,
@@ -329,6 +374,7 @@ pub fn color_distributed(
         seed: None,
         max_rounds: cfg.max_rounds,
         double_buffer: cfg.double_buffer,
+        paranoid: cfg.paranoid,
     };
     let mut out = plan.run_with_backend(spec, backend);
     // one-shot semantics: construction cost is part of this run's bill
@@ -359,6 +405,14 @@ pub(crate) fn assemble(n_global: usize, outcomes: Vec<RankOutcome>, nranks: usiz
         comm_modeled_inter_ns: 0,
         coll_intra_hops: 0,
         coll_inter_hops: 0,
+        fault_corruptions: 0,
+        fault_drops: 0,
+        fault_dups_dropped: 0,
+        fault_retransmits: 0,
+        fault_resyncs: 0,
+        fault_delays: 0,
+        fault_recovery_ns: 0,
+        paranoid_checks: 0,
     };
     for o in outcomes {
         for (v, c) in o.owned_colors {
@@ -382,6 +436,14 @@ pub(crate) fn assemble(n_global: usize, outcomes: Vec<RankOutcome>, nranks: usiz
         stats.comm_modeled_inter_ns = stats.comm_modeled_inter_ns.max(o.comm.inter_modeled_ns);
         stats.coll_intra_hops += o.comm.coll_intra_hops;
         stats.coll_inter_hops += o.comm.coll_inter_hops;
+        stats.fault_corruptions += o.comm.fault_corruptions;
+        stats.fault_drops += o.comm.fault_drops;
+        stats.fault_dups_dropped += o.comm.fault_dups_dropped;
+        stats.fault_retransmits += o.comm.fault_retransmits;
+        stats.fault_resyncs += o.comm.fault_resyncs;
+        stats.fault_delays += o.comm.fault_delays;
+        stats.fault_recovery_ns = stats.fault_recovery_ns.max(o.comm.fault_recovery_ns);
+        stats.paranoid_checks += o.paranoid_checks;
     }
     stats.colors_used = colors_used(&colors);
     RunResult { colors, stats }
@@ -407,7 +469,9 @@ pub fn color_rank(
     let lg = build_timer.comm(|| LocalGraph::build(comm, g, part, two_layers));
     let mut scratch = KernelScratch::new(cfg.threads);
     let mut xscratch = ExchangeScratch::new();
-    let mut out = color_rank_planned(comm, &lg, cfg, backend, &mut scratch, &mut xscratch);
+    let rank = comm.rank();
+    let mut out = color_rank_planned(comm, &lg, cfg, backend, &mut scratch, &mut xscratch)
+        .unwrap_or_else(|e| panic!("rank {rank}: {e}"));
     out.timers.comm += build_timer.comm;
     out
 }
@@ -416,6 +480,11 @@ pub fn color_rank(
 /// everything [`color_rank`] did after construction.  Performs zero
 /// ghost-layer work — `Plan::run` calls this with the plan's per-rank
 /// graphs and the session's persistent scratch.
+///
+/// Comm failures that recovery cannot hide — a crashed peer, an
+/// undecodable payload, a paranoid-audit divergence — surface as
+/// `Err(CommError)` instead of panicking the rank thread, so
+/// `Plan::try_run` can report them per rank.
 pub(crate) fn color_rank_planned(
     comm: &mut Comm,
     lg: &LocalGraph,
@@ -423,7 +492,7 @@ pub(crate) fn color_rank_planned(
     backend: &dyn LocalBackend,
     scratch: &mut KernelScratch,
     xscratch: &mut ExchangeScratch,
-) -> RankOutcome {
+) -> Result<RankOutcome, CommError> {
     let two_layers = match cfg.problem {
         Problem::D1 => cfg.two_ghost_layers,
         Problem::D2 | Problem::PD2 => true, // §3.5: D2 needs the 2-hop view
@@ -457,7 +526,7 @@ pub(crate) fn color_rank_planned(
         });
     }
     let mut comm_rounds = 1usize;
-    timers.comm(|| exchange_full_send(comm, lg, &colors));
+    timers.comm(|| exchange_full_send(comm, lg, &colors))?;
     if pre < lg.n_local {
         mask[..pre].fill(false);
         mask[pre..lg.n_local].fill(true);
@@ -474,7 +543,18 @@ pub(crate) fn color_rank_planned(
     } else {
         mask[..pre].fill(false);
     }
-    timers.comm(|| exchange_full_recv(comm, lg, &mut colors));
+    timers.comm(|| exchange_full_recv(comm, lg, &mut colors))?;
+
+    // paranoid audits run after *every* exchange on their own tag
+    // stream; the epoch counter advances in lockstep on all ranks
+    // (every audit point is collective), keeping the tags aligned
+    let mut paranoid_checks = 0u64;
+    let mut paranoid_epoch = 0u64;
+    if cfg.paranoid {
+        paranoid_checks +=
+            timers.comm(|| paranoid_ghost_check(comm, lg, &colors, TAG_PARANOID + paranoid_epoch))?;
+        paranoid_epoch += 1;
+    }
 
     // ---- speculative fix loop -------------------------------------------
     // `mask` (all false again), the loser vectors and `xscratch` are
@@ -501,7 +581,7 @@ pub(crate) fn color_rank_planned(
     });
     conflicts_total += found;
     loop {
-        let global = timers.comm(|| comm.allreduce_sum(TAG_REDUCE + 2 * round as u64, found));
+        let global = timers.comm(|| comm.allreduce_sum(TAG_REDUCE + 2 * round as u64, found))?;
         if global == 0 {
             break;
         }
@@ -542,7 +622,7 @@ pub(crate) fn color_rank_planned(
         // communicate only the recolored owned vertices
         comm_rounds += 1;
         if cfg.double_buffer {
-            timers.comm(|| exchange_delta_start(comm, lg, &colors, &local_losers, round, xscratch));
+            timers.comm(|| exchange_delta_start(comm, lg, &colors, &local_losers, round, xscratch))?;
             // early scan while the exchange drains: owned colors are
             // final for this round, ghost colors are speculative — any
             // candidate the incoming deltas invalidate is re-scanned in
@@ -550,35 +630,63 @@ pub(crate) fn color_rank_planned(
             let t0 = std::time::Instant::now();
             let early = timers.comp(|| detect_early(lg, &colors, cfg, &exec));
             overlap_saved_ns += t0.elapsed().as_nanos() as u64;
-            timers.comm(|| exchange_delta_finish(comm, lg, &mut colors, round, xscratch));
+            timers.comm(|| exchange_delta_finish(comm, lg, &mut colors, round, xscratch))?;
             local_losers.clear();
             ghost_losers.clear();
             found = timers.comp(|| {
                 detect_fixup(lg, &colors, cfg, &exec, early, xscratch, &mut local_losers, &mut ghost_losers)
             });
         } else {
-            timers.comm(|| exchange_delta(comm, lg, &mut colors, &local_losers, round, xscratch));
+            timers.comm(|| exchange_delta(comm, lg, &mut colors, &local_losers, round, xscratch))?;
             local_losers.clear();
             ghost_losers.clear();
             found = timers.comp(|| {
                 detect_conflicts(lg, &colors, cfg, &exec, &mut local_losers, &mut ghost_losers)
             });
         }
+        if cfg.paranoid {
+            paranoid_checks += timers
+                .comm(|| paranoid_ghost_check(comm, lg, &colors, TAG_PARANOID + paranoid_epoch))?;
+            paranoid_epoch += 1;
+        }
         conflicts_total += found;
+    }
+
+    // terminal paranoia: the loop exits on a zero global conflict count,
+    // but that count was computed from each rank's view *before* the
+    // last allreduce — re-verify the final colors directly so a
+    // corrupted install can never masquerade as convergence
+    if cfg.paranoid {
+        local_losers.clear();
+        ghost_losers.clear();
+        let leftover = timers.comp(|| {
+            detect_conflicts(lg, &colors, cfg, &exec, &mut local_losers, &mut ghost_losers)
+        });
+        if leftover != 0 {
+            return Err(CommError::Paranoid {
+                detail: format!(
+                    "rank {}: {leftover} unresolved conflicts at termination \
+                     (first losers by local id: {:?})",
+                    lg.rank,
+                    &local_losers[..local_losers.len().min(8)]
+                ),
+            });
+        }
     }
 
     let owned_colors = (0..lg.n_local)
         .map(|v| (lg.gids[v], colors[v]))
         .collect();
-    RankOutcome {
+    Ok(RankOutcome {
         owned_colors,
         comm_rounds,
         conflicts: conflicts_total,
         recolored: recolored_total,
         overlap_saved_ns,
+        paranoid_checks,
         timers,
         comm: comm.stats(),
-    }
+    })
 }
 
 // -----------------------------------------------------------------------
@@ -985,9 +1093,13 @@ impl ExchangeScratch {
 /// Initial exchange of all subscribed boundary colors with the actual
 /// neighbor ranks (one message per cut neighbor, not per rank).
 #[doc(hidden)]
-pub fn exchange_full(comm: &mut Comm, lg: &LocalGraph, colors: &mut [Color]) {
-    exchange_full_send(comm, lg, colors);
-    exchange_full_recv(comm, lg, colors);
+pub fn exchange_full(
+    comm: &mut Comm,
+    lg: &LocalGraph,
+    colors: &mut [Color],
+) -> Result<(), CommError> {
+    exchange_full_send(comm, lg, colors)?;
+    exchange_full_recv(comm, lg, colors)
 }
 
 /// Send half of the initial exchange.  Sends never block on this
@@ -996,30 +1108,58 @@ pub fn exchange_full(comm: &mut Comm, lg: &LocalGraph, colors: &mut [Color]) {
 /// exchange with that computation (§3).  Only the ranks that actually
 /// subscribe to our boundary (`lg.send_ranks`) get a message.
 #[doc(hidden)]
-pub fn exchange_full_send(comm: &mut Comm, lg: &LocalGraph, colors: &[Color]) {
+pub fn exchange_full_send(
+    comm: &mut Comm,
+    lg: &LocalGraph,
+    colors: &[Color],
+) -> Result<(), CommError> {
     debug_assert!(lg.subs_out[lg.rank as usize].is_empty(), "self-subscription");
     for &r in &lg.send_ranks {
         let payload: Vec<u32> = lg.subs_out[r as usize]
             .iter()
             .map(|&l| colors[l as usize])
             .collect();
-        comm.send(r, TAG_COLORS, encode_u32s(&payload));
+        let buf = encode_u32s(&payload);
+        // the doom oracle covers the stream's whole retry budget, so a
+        // positive probe here coincides exactly with the fatal husk the
+        // receiver will see — pre-stage the reliable copy its resync
+        // fallback will ask for (no-op on clean wires)
+        if comm.is_doomed(r, TAG_COLORS) {
+            comm.send_reliable(r, TAG_RESYNC, buf.clone())?;
+        }
+        comm.send(r, TAG_COLORS, buf)?;
     }
+    Ok(())
 }
 
 /// Receive half of the initial exchange: blocks until every neighbor's
-/// boundary colors arrive, then installs them on our ghosts.
+/// boundary colors arrive, then installs them on our ghosts.  A stream
+/// that exhausted its retry budget degrades gracefully: the receive
+/// falls back to the owner's reliable [`TAG_RESYNC`] copy, so the
+/// installed colors are identical either way.
 #[doc(hidden)]
-pub fn exchange_full_recv(comm: &mut Comm, lg: &LocalGraph, colors: &mut [Color]) {
+pub fn exchange_full_recv(
+    comm: &mut Comm,
+    lg: &LocalGraph,
+    colors: &mut [Color],
+) -> Result<(), CommError> {
     debug_assert!(lg.ghost_from[lg.rank as usize].is_empty(), "self-ghost");
     for &r in &lg.recv_ranks {
-        let buf = comm.recv(r, TAG_COLORS);
-        let cs = decode_u32s(&buf);
+        let buf = match comm.recv(r, TAG_COLORS) {
+            Ok(buf) => buf,
+            Err(CommError::RetryExhausted { .. }) => {
+                comm.note_resync();
+                comm.recv(r, TAG_RESYNC)?
+            }
+            Err(e) => return Err(e),
+        };
+        let cs = decode_u32s(&buf)?;
         debug_assert_eq!(cs.len(), lg.ghost_from[r as usize].len());
         for (&gl, &c) in lg.ghost_from[r as usize].iter().zip(cs.iter()) {
             colors[gl as usize] = c;
         }
     }
+    Ok(())
 }
 
 /// Delta exchange: send (position, color) pairs for just-recolored owned
@@ -1041,9 +1181,9 @@ pub fn exchange_delta(
     recolored: &[u32],
     round: usize,
     scratch: &mut ExchangeScratch,
-) {
-    exchange_delta_start(comm, lg, colors, recolored, round, scratch);
-    exchange_delta_finish(comm, lg, colors, round, scratch);
+) -> Result<(), CommError> {
+    exchange_delta_start(comm, lg, colors, recolored, round, scratch)?;
+    exchange_delta_finish(comm, lg, colors, round, scratch)
 }
 
 /// Send half of [`exchange_delta`]: stage (position, color) pairs into
@@ -1059,7 +1199,7 @@ pub fn exchange_delta_start(
     recolored: &[u32],
     round: usize,
     scratch: &mut ExchangeScratch,
-) {
+) -> Result<(), CommError> {
     // stage into the current generation and flip: the other generation
     // (any still-notionally-in-flight round) is never touched here
     let gen = &mut scratch.gens[scratch.cur];
@@ -1088,7 +1228,21 @@ pub fn exchange_delta_start(
         bufs.push(encode_u32s(payload));
     }
     let tag = TAG_COLORS + 1 + round as u64;
-    comm.neighbor_alltoallv_start(tag, &lg.send_ranks, bufs);
+    // probe the doom oracle *before* the sends bump the streams'
+    // sequence numbers: every neighbor whose delta cannot survive the
+    // retry budget also gets a reliable full color list on the round's
+    // resync stream, which its receive half escalates to (no-op on
+    // clean wires — `is_doomed` is always false without a fault plan)
+    for &r in &lg.send_ranks {
+        if comm.is_doomed(r, tag) {
+            let full: Vec<u32> = lg.subs_out[r as usize]
+                .iter()
+                .map(|&l| colors[l as usize])
+                .collect();
+            comm.send_reliable(r, TAG_RESYNC + 1 + round as u64, encode_u32s(&full))?;
+        }
+    }
+    comm.neighbor_alltoallv_start(tag, &lg.send_ranks, bufs)
 }
 
 /// Receive half of [`exchange_delta`]: drain one delta from every
@@ -1096,6 +1250,13 @@ pub fn exchange_delta_start(
 /// ghosts whose color actually changed in `scratch.updated` (the 2GL
 /// predictions that were already right install as no-ops and stay out
 /// of the update set — fewer candidates for the fixup re-scan).
+///
+/// A neighbor stream that exhausted its retry budget escalates to the
+/// owner's reliable full color list on the round's resync stream,
+/// compare-installed so `scratch.updated` — and therefore the fixup
+/// re-scan set and the final coloring — comes out identical to the
+/// delta path (a delta only carries recolored vertices, so a full-list
+/// compare changes exactly the same ghosts).
 #[doc(hidden)]
 pub fn exchange_delta_finish(
     comm: &mut Comm,
@@ -1103,20 +1264,79 @@ pub fn exchange_delta_finish(
     colors: &mut [Color],
     round: usize,
     scratch: &mut ExchangeScratch,
-) {
+) -> Result<(), CommError> {
     let tag = TAG_COLORS + 1 + round as u64;
-    let got = comm.neighbor_alltoallv_finish(tag, &lg.recv_ranks);
     scratch.updated.clear();
-    for (&r, buf) in lg.recv_ranks.iter().zip(got) {
-        let xs = decode_u32s(&buf);
-        for pair in xs.chunks_exact(2) {
-            let gl = lg.ghost_from[r as usize][pair[0] as usize];
-            if colors[gl as usize] != pair[1] {
-                colors[gl as usize] = pair[1];
-                scratch.updated.push(gl);
+    for &r in &lg.recv_ranks {
+        match comm.recv(r, tag) {
+            Ok(buf) => {
+                let xs = decode_u32s(&buf)?;
+                for pair in xs.chunks_exact(2) {
+                    let gl = lg.ghost_from[r as usize][pair[0] as usize];
+                    if colors[gl as usize] != pair[1] {
+                        colors[gl as usize] = pair[1];
+                        scratch.updated.push(gl);
+                    }
+                }
             }
+            Err(CommError::RetryExhausted { .. }) => {
+                comm.note_resync();
+                let buf = comm.recv(r, TAG_RESYNC + 1 + round as u64)?;
+                let cs = decode_u32s(&buf)?;
+                debug_assert_eq!(cs.len(), lg.ghost_from[r as usize].len());
+                for (&gl, &c) in lg.ghost_from[r as usize].iter().zip(cs.iter()) {
+                    if colors[gl as usize] != c {
+                        colors[gl as usize] = c;
+                        scratch.updated.push(gl);
+                    }
+                }
+            }
+            Err(e) => return Err(e),
         }
     }
+    Ok(())
+}
+
+/// Paranoid ghost-table audit: every owner reliably re-sends the
+/// authoritative colors of its subscribed boundary vertices; every
+/// subscriber cross-checks them against its installed ghost colors.
+/// Runs as a neighbor collective on its own tag stream (`tag` must be
+/// unique per audit epoch).  Returns the number of ghost entries
+/// compared; any divergence fails the rank with the offending global
+/// id and both colors.
+fn paranoid_ghost_check(
+    comm: &mut Comm,
+    lg: &LocalGraph,
+    colors: &[Color],
+    tag: u64,
+) -> Result<u64, CommError> {
+    for &r in &lg.send_ranks {
+        let payload: Vec<u32> = lg.subs_out[r as usize]
+            .iter()
+            .map(|&l| colors[l as usize])
+            .collect();
+        comm.send_reliable(r, tag, encode_u32s(&payload))?;
+    }
+    let mut checked = 0u64;
+    for &r in &lg.recv_ranks {
+        let buf = comm.recv(r, tag)?;
+        let cs = decode_u32s(&buf)?;
+        debug_assert_eq!(cs.len(), lg.ghost_from[r as usize].len());
+        for (&gl, &want) in lg.ghost_from[r as usize].iter().zip(cs.iter()) {
+            let got = colors[gl as usize];
+            if got != want {
+                return Err(CommError::Paranoid {
+                    detail: format!(
+                        "rank {}: ghost table diverged from owner rank {r}: \
+                         gid {} has color {got} locally but {want} at its owner",
+                        lg.rank, lg.gids[gl as usize]
+                    ),
+                });
+            }
+            checked += 1;
+        }
+    }
+    Ok(checked)
 }
 
 #[cfg(test)]
@@ -1278,5 +1498,45 @@ mod tests {
             assert_eq!(a.stats.conflicts, b.stats.conflicts, "{problem} two={two}");
             assert_eq!(b.stats.overlap_saved_ns, 0, "serial rounds report no overlap");
         }
+    }
+
+    #[test]
+    fn faulted_run_matches_clean_run_bit_for_bit() {
+        // the PR-6 invariant at unit granularity (tests/fault_injection.rs
+        // pins the full matrix): aggressive drop+flip rates with a budget
+        // deep enough that no stream is doomed, plus paranoid audits
+        let g = gnm(300, 1500, 13);
+        let part = partition::hash(&g, 6, 2);
+        // zero-rate plan: pinned-clean wires even when `verify.sh
+        // --faults` exports DIST_FAULT_SEED (an explicit plan wins over
+        // the env knob, and a disabled plan means no framing at all)
+        let clean =
+            DistConfig { seed: 5, faults: Some(FaultPlan::new(0)), ..Default::default() };
+        let faulted = DistConfig {
+            faults: Some(
+                FaultPlan::new(0xF00D)
+                    .with_drop_ppm(100_000)
+                    .with_flip_ppm(100_000)
+                    .with_retry_budget(16),
+            ),
+            paranoid: true,
+            ..clean
+        };
+        let a =
+            color_distributed(&g, &part, clean, CostModel::zero(), &NativeBackend(clean.kernel));
+        let b = color_distributed(
+            &g,
+            &part,
+            faulted,
+            CostModel::zero(),
+            &NativeBackend(faulted.kernel),
+        );
+        assert_eq!(a.colors, b.colors);
+        assert_eq!(a.stats.comm_rounds, b.stats.comm_rounds);
+        assert_eq!(a.stats.conflicts, b.stats.conflicts);
+        assert!(b.stats.fault_retransmits > 0, "rates this high must retransmit");
+        assert!(b.stats.paranoid_checks > 0);
+        assert_eq!(a.stats.fault_retransmits, 0, "clean wires recover nothing");
+        assert_eq!(a.stats.paranoid_checks, 0);
     }
 }

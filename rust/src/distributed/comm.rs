@@ -34,19 +34,88 @@
 //!   collectives against (`BENCH_PR2=1`); the coloring hot path no
 //!   longer uses it.
 //!
+//! **Fault injection & recovery**: with a [`FaultPlan`] installed
+//! ([`run_ranks_cfg`]), every application payload travels as a framed
+//! packet — per-`(src, dst, tag)`-stream sequence number plus an FNV-1a
+//! payload checksum — and the plan may deterministically drop, corrupt,
+//! duplicate, or delay frames.  Receivers detect every anomaly without
+//! timeouts (an injected loss is delivered as a header-only *husk*, so
+//! the receiver learns of it deterministically), drop duplicates by
+//! sequence number, hold early frames until their stream predecessors
+//! arrive, and recover losses/corruption via NACK + bounded retransmit
+//! with exponential backoff, charged to `CommStats::fault_recovery_ns`
+//! on the hop's link class.  NACKs are serviced inside *every* blocking
+//! receive — including the raw collective hops — so a sender blocked in
+//! a barrier still retransmits and the protocol cannot deadlock.
+//! Logical accounting (`messages`, `bytes_sent`, `modeled_ns`) counts
+//! each application send exactly once: a recovered run reports the same
+//! wire totals as a fault-free one, and all recovery traffic shows up
+//! only in the `fault_*` counters.  Raw collective tree hops are never
+//! faulted (the modeled analogue of a reliable reduction network), and
+//! with no plan installed the wire format is byte-identical to the
+//! pre-fault substrate.  When a frame burns through its retry budget the
+//! sender emits a *fatal* husk and the receive surfaces
+//! [`CommError::RetryExhausted`], which the coloring layer escalates to
+//! a full-resync exchange.  A rank whose closure panics broadcasts a
+//! down notice, so peers fail fast with [`CommError::RankDown`] instead
+//! of hanging.
+//!
 //! Tag discipline: a collective may consume `tag..tag+3` (tree reduce,
 //! tree broadcast, payload), so callers space tags by at least 3 when
 //! issuing back-to-back collectives with distinct tags.  Reusing one tag
 //! for *sequential* collectives is safe — selective receive plus
-//! per-channel FIFO keeps rounds apart.
+//! per-channel FIFO keeps rounds apart.  The two topmost tag values are
+//! reserved for the control plane (NACK and rank-down notices).
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::time::Instant;
 
 use super::cost::{CommStats, CostModel, Topology};
+use super::fault::{self, FaultAction, FaultPlan};
 
 type Packet = (u32, u64, Vec<u8>); // (from, tag, payload)
+
+/// Control-plane tags, never valid application tags.
+const CTRL_NACK: u64 = u64::MAX;
+const CTRL_DOWN: u64 = u64::MAX - 1;
+
+/// Structured communicator failure: what used to be an
+/// `expect("rank channel closed")` panic now surfaces per rank, so one
+/// crashed rank produces an error report instead of a poisoned session.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum CommError {
+    /// The underlying channel is gone (the run is tearing down).
+    ChannelClosed,
+    /// A peer rank crashed (panicked) mid-run and broadcast a down
+    /// notice before unwinding.
+    RankDown { rank: u32 },
+    /// A faulted stream burned through its retransmit budget; the
+    /// receiver should fall back to a reliable resync.
+    RetryExhausted { from: u32, tag: u64 },
+    /// A payload failed typed decoding (truncated or misaligned).
+    Decode { len: usize, elem: usize },
+    /// A paranoid validation check found an inconsistency.
+    Paranoid { detail: String },
+}
+
+impl std::fmt::Display for CommError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CommError::ChannelClosed => write!(f, "rank channel closed mid-run"),
+            CommError::RankDown { rank } => write!(f, "peer rank {rank} went down"),
+            CommError::RetryExhausted { from, tag } => {
+                write!(f, "retry budget exhausted receiving from rank {from} on tag {tag}")
+            }
+            CommError::Decode { len, elem } => {
+                write!(f, "payload of {len} bytes is not a whole number of {elem}-byte elements")
+            }
+            CommError::Paranoid { detail } => write!(f, "paranoid validation failed: {detail}"),
+        }
+    }
+}
+
+impl std::error::Error for CommError {}
 
 /// Per-rank communicator handle (not Clone: one per rank thread).
 pub struct Comm {
@@ -58,6 +127,18 @@ pub struct Comm {
     pending: VecDeque<Packet>,
     topo: Topology,
     stats: CommStats,
+    /// fault schedule; `None` (or a zero-rate plan) = raw wire format
+    faults: Option<FaultPlan>,
+    /// next send seqno per (to, tag) stream
+    tx_seq: HashMap<(u32, u64), u32>,
+    /// next expected seqno per (from, tag) stream
+    rx_seq: HashMap<(u32, u64), u32>,
+    /// payloads that may be NACKed: (to, tag, seqno) → (payload, attempt)
+    unacked: HashMap<(u32, u64, u32), (Vec<u8>, u32)>,
+    /// validated frames that arrived ahead of a retransmitted predecessor
+    early: HashMap<(u32, u64, u32), Vec<u8>>,
+    /// peers that broadcast a down notice
+    down: Vec<bool>,
 }
 
 impl Comm {
@@ -75,6 +156,11 @@ impl Comm {
         self.stats
     }
 
+    /// The active fault schedule, if any.
+    pub fn faults(&self) -> Option<FaultPlan> {
+        self.faults
+    }
+
     /// The inter-node (reference) α–β pair; under a flat topology this
     /// is *the* cost model, as before the hierarchy existed.
     pub fn cost_model(&self) -> CostModel {
@@ -87,12 +173,29 @@ impl Comm {
     }
 
     /// Tagged send. Never blocks (unbounded channel).
-    pub fn send(&mut self, to: u32, tag: u64, payload: Vec<u8>) {
-        let bytes = payload.len() as u64;
+    pub fn send(&mut self, to: u32, tag: u64, payload: Vec<u8>) -> Result<(), CommError> {
+        self.account_send(to, payload.len());
+        self.transport(to, tag, payload, false)
+    }
+
+    /// Tagged send exempt from fault injection — the recovery plane's
+    /// resync and the paranoid validator ride on this.  Accounted
+    /// exactly like [`Comm::send`]: it is a real application message.
+    pub fn send_reliable(&mut self, to: u32, tag: u64, payload: Vec<u8>) -> Result<(), CommError> {
+        self.account_send(to, payload.len());
+        self.transport(to, tag, payload, true)
+    }
+
+    /// Logical send accounting: one message, payload bytes, α–β time by
+    /// hop class.  Deliberately fault-blind — retransmits, husks, dups
+    /// and NACKs never touch these counters, so wire totals under a
+    /// recovered run match the fault-free run bit for bit.
+    fn account_send(&mut self, to: u32, len: usize) {
+        let bytes = len as u64;
         // classify once: pricing and the stats split must always agree
         let intra = self.topo.same_node(self.rank, to);
         let model = if intra { &self.topo.intra } else { &self.topo.inter };
-        let ns = model.msg_ns(payload.len());
+        let ns = model.msg_ns(len);
         self.stats.messages += 1;
         self.stats.bytes_sent += bytes;
         self.stats.modeled_ns += ns;
@@ -105,37 +208,265 @@ impl Comm {
             self.stats.inter_bytes += bytes;
             self.stats.inter_modeled_ns += ns;
         }
+    }
+
+    /// Hand a payload to the wire: raw when no plan is active, framed
+    /// (and possibly faulted) otherwise.
+    fn transport(&mut self, to: u32, tag: u64, payload: Vec<u8>, reliable: bool) -> Result<(), CommError> {
+        if self.faults.is_none() {
+            return self.push_raw(to, tag, payload);
+        }
+        let next = self.tx_seq.entry((to, tag)).or_insert(0);
+        let seqno = *next;
+        *next += 1;
+        self.send_framed(to, tag, payload, seqno, 0, reliable)
+    }
+
+    fn push_raw(&mut self, to: u32, tag: u64, payload: Vec<u8>) -> Result<(), CommError> {
         self.senders[to as usize]
             .send((self.rank, tag, payload))
-            .expect("rank channel closed");
+            .map_err(|_| CommError::ChannelClosed)
+    }
+
+    /// Frame one attempt of a payload, apply the plan's verdict, and put
+    /// the result on the wire.  Attempts > 0 are NACK-driven retransmits
+    /// of the same seqno.
+    fn send_framed(
+        &mut self,
+        to: u32,
+        tag: u64,
+        payload: Vec<u8>,
+        seqno: u32,
+        attempt: u32,
+        reliable: bool,
+    ) -> Result<(), CommError> {
+        let plan = self.faults.expect("framed send without a fault plan");
+        let action =
+            if reliable { FaultAction::None } else { plan.action(self.rank, to, tag, seqno, attempt) };
+        if !reliable {
+            let key = (to, tag, seqno);
+            if matches!(action, FaultAction::Drop | FaultAction::Flip(_)) {
+                // a NACK is coming: retain the payload for retransmission
+                self.unacked.insert(key, (payload.clone(), attempt));
+            } else if attempt > 0 {
+                // this retransmit will be accepted; the entry is settled
+                self.unacked.remove(&key);
+            }
+        }
+        let pkt = match action {
+            FaultAction::None | FaultAction::Duplicate => {
+                fault::frame(fault::KIND_DATA, seqno, 0, &payload)
+            }
+            FaultAction::Delay(ns) => fault::frame(fault::KIND_DATA, seqno, ns, &payload),
+            FaultAction::Drop => fault::frame(fault::KIND_HUSK, seqno, 0, &[]),
+            FaultAction::Flip(entropy) => {
+                let mut b = fault::frame(fault::KIND_DATA, seqno, 0, &payload);
+                fault::flip_bit(&mut b, entropy);
+                b
+            }
+        };
+        if action == FaultAction::Duplicate {
+            self.push_raw(to, tag, pkt.clone())?;
+        }
+        self.push_raw(to, tag, pkt)
+    }
+
+    /// Would the next message to `to` on `tag` burn through its whole
+    /// retry budget?  Sender-side doom oracle (false without a plan):
+    /// the exchange layer uses it to stage a reliable full resync next
+    /// to a doomed stream before the receiver ever reports
+    /// [`CommError::RetryExhausted`].
+    pub fn is_doomed(&self, to: u32, tag: u64) -> bool {
+        match &self.faults {
+            None => false,
+            Some(p) => {
+                let next = self.tx_seq.get(&(to, tag)).copied().unwrap_or(0);
+                p.doomed(self.rank, to, tag, next)
+            }
+        }
+    }
+
+    /// Record one escalation to a full-resync exchange.
+    pub(crate) fn note_resync(&mut self) {
+        self.stats.fault_resyncs += 1;
+    }
+
+    /// Broadcast a down notice to every peer so their blocking receives
+    /// fail fast with [`CommError::RankDown`] instead of hanging.  Send
+    /// errors are ignored — a peer that already finished has dropped its
+    /// inbox, and that is fine.
+    pub fn abort(&mut self) {
+        for (r, s) in self.senders.iter().enumerate() {
+            if r as u32 != self.rank {
+                let _ = s.send((self.rank, CTRL_DOWN, Vec::new()));
+            }
+        }
+    }
+
+    /// Pull one packet off the inbox, servicing control traffic inline.
+    /// `Ok(None)` means a control packet was consumed — callers loop.
+    fn pull(&mut self) -> Result<Option<Packet>, CommError> {
+        let pkt = self.inbox.recv().map_err(|_| CommError::ChannelClosed)?;
+        match pkt.1 {
+            CTRL_DOWN => {
+                self.down[pkt.0 as usize] = true;
+                Ok(None)
+            }
+            CTRL_NACK => {
+                self.service_nack(pkt.0, &pkt.2)?;
+                Ok(None)
+            }
+            _ => Ok(Some(pkt)),
+        }
+    }
+
+    /// A receiver reported frame (tag, seqno) lost or corrupted: charge
+    /// exponential backoff plus the wire time of the retransmit on the
+    /// hop's link class, and either retransmit or — once the budget is
+    /// burned — send a fatal husk so the receiver stops waiting and
+    /// escalates.
+    fn service_nack(&mut self, from: u32, ctrl: &[u8]) -> Result<(), CommError> {
+        if ctrl.len() != 12 {
+            return Err(CommError::Decode { len: ctrl.len(), elem: 12 });
+        }
+        let tag = u64::from_le_bytes(ctrl[..8].try_into().unwrap());
+        let seqno = u32::from_le_bytes(ctrl[8..12].try_into().unwrap());
+        let key = (from, tag, seqno);
+        let Some((payload, prev_attempt)) = self.unacked.get(&key).cloned() else {
+            return Ok(()); // already settled; stale NACK
+        };
+        let plan = self.faults.expect("NACK without a fault plan");
+        let attempt = prev_attempt + 1;
+        if attempt > plan.retry_budget {
+            self.unacked.remove(&key);
+            return self.push_raw(from, tag, fault::frame(fault::KIND_FATAL, seqno, 0, &[]));
+        }
+        let link = *self.topo.link(self.rank, from);
+        self.stats.fault_retransmits += 1;
+        self.stats.fault_recovery_ns +=
+            (link.alpha_ns << attempt.min(16)) + link.msg_ns(payload.len());
+        self.send_framed(from, tag, payload, seqno, attempt, false)
+    }
+
+    /// Physical NACK for frame (tag, seqno) back to its sender.  Pure
+    /// control traffic: no accounting.
+    fn nack(&mut self, to: u32, tag: u64, seqno: u32) -> Result<(), CommError> {
+        let mut p = Vec::with_capacity(12);
+        p.extend_from_slice(&tag.to_le_bytes());
+        p.extend_from_slice(&seqno.to_le_bytes());
+        self.senders[to as usize]
+            .send((self.rank, CTRL_NACK, p))
+            .map_err(|_| CommError::ChannelClosed)
+    }
+
+    /// Run one candidate packet through the acceptance state machine.
+    /// `Ok(Some(payload))` delivers; `Ok(None)` consumed a husk,
+    /// duplicate, or early frame — keep waiting.
+    fn accept(&mut self, from: u32, tag: u64, mut body: Vec<u8>) -> Result<Option<Vec<u8>>, CommError> {
+        if self.faults.is_none() {
+            return Ok(Some(body));
+        }
+        let Some(h) = fault::parse_header(&body) else {
+            return Err(CommError::Decode { len: body.len(), elem: fault::FRAME_HDR });
+        };
+        match h.kind {
+            fault::KIND_FATAL => return Err(CommError::RetryExhausted { from, tag }),
+            fault::KIND_HUSK => {
+                self.stats.fault_drops += 1;
+                self.nack(from, tag, h.seqno)?;
+                return Ok(None);
+            }
+            _ => {}
+        }
+        let expected = self.rx_seq.get(&(from, tag)).copied().unwrap_or(0);
+        if h.seqno < expected {
+            self.stats.fault_dups_dropped += 1;
+            return Ok(None);
+        }
+        if fault::checksum(&body[fault::FRAME_HDR..]) != h.cksum {
+            self.stats.fault_corruptions += 1;
+            self.nack(from, tag, h.seqno)?;
+            return Ok(None);
+        }
+        if h.delay_ns > 0 {
+            // modeled straggler: the wait is charged as recovery latency
+            self.stats.fault_delays += 1;
+            self.stats.fault_recovery_ns += h.delay_ns;
+        }
+        let payload = body.split_off(fault::FRAME_HDR);
+        if h.seqno > expected {
+            // clean, but a predecessor is being retransmitted: hold it
+            // so stream order survives recovery
+            self.early.insert((from, tag, h.seqno), payload);
+            return Ok(None);
+        }
+        self.rx_seq.insert((from, tag), h.seqno + 1);
+        Ok(Some(payload))
+    }
+
+    /// Next in-order held frame for (from, tag), if its turn has come.
+    fn take_early(&mut self, from: u32, tag: u64) -> Option<Vec<u8>> {
+        if self.early.is_empty() {
+            return None;
+        }
+        let expected = self.rx_seq.get(&(from, tag)).copied().unwrap_or(0);
+        let payload = self.early.remove(&(from, tag, expected))?;
+        self.rx_seq.insert((from, tag), expected + 1);
+        Some(payload)
+    }
+
+    /// Like [`Comm::take_early`] but across all senders of `tag`.
+    fn take_early_any(&mut self, tag: u64) -> Option<(u32, Vec<u8>)> {
+        if self.early.is_empty() {
+            return None;
+        }
+        let key = self
+            .early
+            .keys()
+            .find(|&&(f, t, s)| t == tag && s == self.rx_seq.get(&(f, t)).copied().unwrap_or(0))
+            .copied()?;
+        let payload = self.early.remove(&key).unwrap();
+        self.rx_seq.insert((key.0, key.1), key.2 + 1);
+        Some((key.0, payload))
     }
 
     /// Blocking selective receive: next message from `from` with `tag`.
-    pub fn recv(&mut self, from: u32, tag: u64) -> Vec<u8> {
+    pub fn recv(&mut self, from: u32, tag: u64) -> Result<Vec<u8>, CommError> {
         let t0 = Instant::now();
-        // check pending first
-        if let Some(pos) = self
-            .pending
-            .iter()
-            .position(|&(f, t, _)| f == from && t == tag)
-        {
-            let (_, _, payload) = self.pending.remove(pos).unwrap();
-            self.stats.wall_ns += t0.elapsed().as_nanos() as u64;
-            return payload;
-        }
         loop {
-            let pkt = self.inbox.recv().expect("rank channel closed");
-            if pkt.0 == from && pkt.1 == tag {
+            if let Some(payload) = self.take_early(from, tag) {
                 self.stats.wall_ns += t0.elapsed().as_nanos() as u64;
-                return pkt.2;
+                return Ok(payload);
             }
-            self.pending.push_back(pkt);
+            // check pending first, then the wire
+            let pkt = match self.pending.iter().position(|&(f, t, _)| f == from && t == tag) {
+                Some(pos) => Some(self.pending.remove(pos).unwrap()),
+                None => {
+                    if self.down[from as usize] {
+                        return Err(CommError::RankDown { rank: from });
+                    }
+                    match self.pull()? {
+                        Some(pkt) if pkt.0 == from && pkt.1 == tag => Some(pkt),
+                        Some(pkt) => {
+                            self.pending.push_back(pkt);
+                            None
+                        }
+                        None => None,
+                    }
+                }
+            };
+            if let Some((_, _, body)) = pkt {
+                if let Some(payload) = self.accept(from, tag, body)? {
+                    self.stats.wall_ns += t0.elapsed().as_nanos() as u64;
+                    return Ok(payload);
+                }
+            }
         }
     }
 
     /// Personalized all-to-all: `bufs[r]` goes to rank r; returns what
     /// each rank sent to us (`out[r]` = payload from rank r).
-    pub fn alltoallv(&mut self, tag: u64, bufs: Vec<Vec<u8>>) -> Vec<Vec<u8>> {
+    pub fn alltoallv(&mut self, tag: u64, bufs: Vec<Vec<u8>>) -> Result<Vec<Vec<u8>>, CommError> {
         assert_eq!(bufs.len(), self.nranks as usize);
         self.stats.collectives += 1;
         let me = self.rank;
@@ -146,15 +477,15 @@ impl Comm {
             if r == me {
                 out[me as usize] = buf;
             } else {
-                self.send(r, tag, buf);
+                self.send(r, tag, buf)?;
             }
         }
         for r in 0..p {
             if r != me {
-                out[r as usize] = self.recv(r, tag);
+                out[r as usize] = self.recv(r, tag)?;
             }
         }
-        out
+        Ok(out)
     }
 
     /// Personalized exchange over a *known* sparse topology: `bufs[i]`
@@ -170,8 +501,8 @@ impl Comm {
         send_to: &[u32],
         bufs: Vec<Vec<u8>>,
         recv_from: &[u32],
-    ) -> Vec<Vec<u8>> {
-        self.neighbor_alltoallv_start(tag, send_to, bufs);
+    ) -> Result<Vec<Vec<u8>>, CommError> {
+        self.neighbor_alltoallv_start(tag, send_to, bufs)?;
         self.neighbor_alltoallv_finish(tag, recv_from)
     }
 
@@ -184,20 +515,30 @@ impl Comm {
     /// the in-flight exchange this way, exactly as `color_rank` overlaps
     /// the initial exchange with interior coloring.  Message count and
     /// stats accounting are identical to the fused call.
-    pub fn neighbor_alltoallv_start(&mut self, tag: u64, send_to: &[u32], bufs: Vec<Vec<u8>>) {
+    pub fn neighbor_alltoallv_start(
+        &mut self,
+        tag: u64,
+        send_to: &[u32],
+        bufs: Vec<Vec<u8>>,
+    ) -> Result<(), CommError> {
         assert_eq!(send_to.len(), bufs.len());
         self.stats.collectives += 1;
         for (&r, buf) in send_to.iter().zip(bufs) {
             debug_assert_ne!(r, self.rank, "self-send in neighbor collective");
-            self.send(r, tag, buf);
+            self.send(r, tag, buf)?;
         }
+        Ok(())
     }
 
     /// Finish half of [`Comm::neighbor_alltoallv`]: block until one
     /// payload has arrived from every rank in `recv_from` (returned in
     /// `recv_from` order).  Pairs with a prior
     /// [`Comm::neighbor_alltoallv_start`] on the same `tag`.
-    pub fn neighbor_alltoallv_finish(&mut self, tag: u64, recv_from: &[u32]) -> Vec<Vec<u8>> {
+    pub fn neighbor_alltoallv_finish(
+        &mut self,
+        tag: u64,
+        recv_from: &[u32],
+    ) -> Result<Vec<Vec<u8>>, CommError> {
         recv_from.iter().map(|&r| self.recv(r, tag)).collect()
     }
 
@@ -213,7 +554,7 @@ impl Comm {
         tag: u64,
         peers: &[u32],
         bufs: Vec<Vec<u8>>,
-    ) -> Vec<(u32, Vec<u8>)> {
+    ) -> Result<Vec<(u32, Vec<u8>)>, CommError> {
         assert_eq!(peers.len(), bufs.len());
         self.stats.collectives += 1;
         let p = self.nranks as usize;
@@ -226,10 +567,10 @@ impl Comm {
         // 4p-byte counts vector: two tree phases, same accounting as
         // `reduce_then_bcast`
         self.charge_collective(2, 4 * p);
-        self.allreduce_u32_sum_vec(tag, &mut counts);
+        self.allreduce_u32_sum_vec(tag, &mut counts)?;
         let expect = counts[self.rank as usize] as usize;
         for (&r, buf) in peers.iter().zip(bufs) {
-            self.send(r, tag + 2, buf);
+            self.send(r, tag + 2, buf)?;
         }
         let t0 = Instant::now();
         let out = (0..expect).map(|_| self.recv_any(tag + 2)).collect();
@@ -238,12 +579,12 @@ impl Comm {
     }
 
     /// Sum-allreduce of a u64 (the `Allreduce(conflicts, SUM)` of Alg. 2).
-    pub fn allreduce_sum(&mut self, tag: u64, x: u64) -> u64 {
+    pub fn allreduce_sum(&mut self, tag: u64, x: u64) -> Result<u64, CommError> {
         self.reduce_then_bcast(tag, x, |a, b| a + b)
     }
 
     /// Max-allreduce of a u64.
-    pub fn allreduce_max(&mut self, tag: u64, x: u64) -> u64 {
+    pub fn allreduce_max(&mut self, tag: u64, x: u64) -> Result<u64, CommError> {
         self.reduce_then_bcast(tag, x, |a, b| a.max(b))
     }
 
@@ -264,21 +605,26 @@ impl Comm {
     /// contributions through rank 0; the PR-2 flat binomial tree sent
     /// every hop over the same links).  Modeled time charges each
     /// sub-tree's α-steps on its own link class, twice (two phases).
-    fn reduce_then_bcast(&mut self, tag: u64, x: u64, op: impl Fn(u64, u64) -> u64) -> u64 {
+    fn reduce_then_bcast(
+        &mut self,
+        tag: u64,
+        x: u64,
+        op: impl Fn(u64, u64) -> u64,
+    ) -> Result<u64, CommError> {
         self.stats.collectives += 1;
         self.charge_collective(2, 8);
         let out = self.tree_allreduce_bytes(tag, x.to_le_bytes().to_vec(), |acc, other| {
             let a = u64::from_le_bytes(acc[..8].try_into().unwrap());
             let b = u64::from_le_bytes(other[..8].try_into().unwrap());
             acc.copy_from_slice(&op(a, b).to_le_bytes());
-        });
-        u64::from_le_bytes(out[..8].try_into().unwrap())
+        })?;
+        Ok(u64::from_le_bytes(out[..8].try_into().unwrap()))
     }
 
     /// Element-wise sum-allreduce of a u32 vector over the same binomial
     /// tree (feeds the sparse-exchange discovery).  All ranks must pass
     /// equal-length vectors.
-    fn allreduce_u32_sum_vec(&mut self, tag: u64, v: &mut [u32]) {
+    fn allreduce_u32_sum_vec(&mut self, tag: u64, v: &mut [u32]) -> Result<(), CommError> {
         let out = self.tree_allreduce_bytes(tag, encode_u32s(v), |acc, other| {
             debug_assert_eq!(acc.len(), other.len());
             for (a, b) in acc.chunks_exact_mut(4).zip(other.chunks_exact(4)) {
@@ -286,10 +632,11 @@ impl Comm {
                     .wrapping_add(u32::from_le_bytes(b.try_into().unwrap()));
                 a.copy_from_slice(&s.to_le_bytes());
             }
-        });
+        })?;
         for (x, c) in v.iter_mut().zip(out.chunks_exact(4)) {
             *x = u32::from_le_bytes(c.try_into().unwrap());
         }
+        Ok(())
     }
 
     /// Hierarchical tree allreduce of an opaque byte payload: reduce to
@@ -317,12 +664,12 @@ impl Comm {
         tag: u64,
         mine: Vec<u8>,
         combine: impl Fn(&mut Vec<u8>, &[u8]),
-    ) -> Vec<u8> {
+    ) -> Result<Vec<u8>, CommError> {
         let p = self.nranks;
         let rank = self.rank;
         let mut acc = mine;
         if p == 1 {
-            return acc;
+            return Ok(acc);
         }
         let gpn = self.topo.gpus_per_node.max(1);
         let node = rank / gpn;
@@ -337,12 +684,12 @@ impl Comm {
         let mut mask = 1u32;
         while mask < node_size {
             if local & mask != 0 {
-                self.send_raw(node_base + (local - mask), tag, std::mem::take(&mut acc));
+                self.send_raw(node_base + (local - mask), tag, std::mem::take(&mut acc))?;
                 break;
             }
             let child = local + mask;
             if child < node_size {
-                let b = self.recv_raw(node_base + child, tag);
+                let b = self.recv_raw(node_base + child, tag)?;
                 combine(&mut acc, &b);
             }
             mask <<= 1;
@@ -353,12 +700,12 @@ impl Comm {
             let mut mask = 1u32;
             while mask < nnodes {
                 if node & mask != 0 {
-                    self.send_raw((node - mask) * gpn, tag, std::mem::take(&mut acc));
+                    self.send_raw((node - mask) * gpn, tag, std::mem::take(&mut acc))?;
                     break;
                 }
                 let child = node + mask;
                 if child < nnodes {
-                    let b = self.recv_raw(child * gpn, tag);
+                    let b = self.recv_raw(child * gpn, tag)?;
                     combine(&mut acc, &b);
                 }
                 mask <<= 1;
@@ -367,12 +714,12 @@ impl Comm {
             let lowbit =
                 if node == 0 { nnodes.next_power_of_two() } else { node & node.wrapping_neg() };
             if node != 0 {
-                acc = self.recv_raw((node - lowbit) * gpn, tag + 1);
+                acc = self.recv_raw((node - lowbit) * gpn, tag + 1)?;
             }
             let mut m = lowbit >> 1;
             while m >= 1 {
                 if node + m < nnodes {
-                    self.send_raw((node + m) * gpn, tag + 1, acc.clone());
+                    self.send_raw((node + m) * gpn, tag + 1, acc.clone())?;
                 }
                 m >>= 1;
             }
@@ -382,65 +729,81 @@ impl Comm {
         let lowbit =
             if local == 0 { node_size.next_power_of_two() } else { local & local.wrapping_neg() };
         if local != 0 {
-            acc = self.recv_raw(node_base + (local - lowbit), tag + 1);
+            acc = self.recv_raw(node_base + (local - lowbit), tag + 1)?;
         }
         let mut m = lowbit >> 1;
         while m >= 1 {
             if local + m < node_size {
-                self.send_raw(node_base + local + m, tag + 1, acc.clone());
+                self.send_raw(node_base + local + m, tag + 1, acc.clone())?;
             }
             m >>= 1;
         }
-        acc
+        Ok(acc)
     }
 
     /// Barrier (allreduce of nothing).
-    pub fn barrier(&mut self, tag: u64) {
-        self.allreduce_max(tag, 0);
+    pub fn barrier(&mut self, tag: u64) -> Result<(), CommError> {
+        self.allreduce_max(tag, 0)?;
+        Ok(())
     }
 
     // raw send/recv for collective tree hops: not payload messages, but
-    // tallied by hop class so tests and benches can pin the schedule
-    fn send_raw(&mut self, to: u32, tag: u64, payload: Vec<u8>) {
+    // tallied by hop class so tests and benches can pin the schedule.
+    // Never framed or faulted — the modeled analogue of a reliable
+    // reduction network — but control-aware, so a rank blocked in a
+    // collective still services NACKs and notices downed peers.
+    fn send_raw(&mut self, to: u32, tag: u64, payload: Vec<u8>) -> Result<(), CommError> {
         if self.topo.same_node(self.rank, to) {
             self.stats.coll_intra_hops += 1;
         } else {
             self.stats.coll_inter_hops += 1;
         }
-        self.senders[to as usize]
-            .send((self.rank, tag, payload))
-            .expect("rank channel closed");
+        self.push_raw(to, tag, payload)
     }
 
-    fn recv_raw(&mut self, from: u32, tag: u64) -> Vec<u8> {
-        if let Some(pos) = self
-            .pending
-            .iter()
-            .position(|&(f, t, _)| f == from && t == tag)
-        {
-            return self.pending.remove(pos).unwrap().2;
-        }
+    fn recv_raw(&mut self, from: u32, tag: u64) -> Result<Vec<u8>, CommError> {
         loop {
-            let pkt = self.inbox.recv().expect("rank channel closed");
-            if pkt.0 == from && pkt.1 == tag {
-                return pkt.2;
+            if let Some(pos) = self.pending.iter().position(|&(f, t, _)| f == from && t == tag) {
+                return Ok(self.pending.remove(pos).unwrap().2);
             }
-            self.pending.push_back(pkt);
+            if self.down[from as usize] {
+                return Err(CommError::RankDown { rank: from });
+            }
+            match self.pull()? {
+                Some(pkt) if pkt.0 == from && pkt.1 == tag => return Ok(pkt.2),
+                Some(pkt) => self.pending.push_back(pkt),
+                None => {}
+            }
         }
     }
 
     /// Blocking receive of the next message with `tag` from *any* rank.
-    fn recv_any(&mut self, tag: u64) -> (u32, Vec<u8>) {
-        if let Some(pos) = self.pending.iter().position(|&(_, t, _)| t == tag) {
-            let (f, _, payload) = self.pending.remove(pos).unwrap();
-            return (f, payload);
-        }
+    fn recv_any(&mut self, tag: u64) -> Result<(u32, Vec<u8>), CommError> {
         loop {
-            let pkt = self.inbox.recv().expect("rank channel closed");
-            if pkt.1 == tag {
-                return (pkt.0, pkt.2);
+            if let Some(hit) = self.take_early_any(tag) {
+                return Ok(hit);
             }
-            self.pending.push_back(pkt);
+            let pkt = match self.pending.iter().position(|&(_, t, _)| t == tag) {
+                Some(pos) => Some(self.pending.remove(pos).unwrap()),
+                None => {
+                    if let Some(r) = self.down.iter().position(|&d| d) {
+                        return Err(CommError::RankDown { rank: r as u32 });
+                    }
+                    match self.pull()? {
+                        Some(pkt) if pkt.1 == tag => Some(pkt),
+                        Some(pkt) => {
+                            self.pending.push_back(pkt);
+                            None
+                        }
+                        None => None,
+                    }
+                }
+            };
+            if let Some((from, _, body)) = pkt {
+                if let Some(payload) = self.accept(from, tag, body)? {
+                    return Ok((from, payload));
+                }
+            }
         }
     }
 }
@@ -458,12 +821,15 @@ pub fn encode_u32s(xs: &[u32]) -> Vec<u8> {
     b
 }
 
-/// Decode a little-endian u32 payload.
-pub fn decode_u32s(b: &[u8]) -> Vec<u32> {
-    assert!(b.len() % 4 == 0);
-    b.chunks_exact(4)
-        .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
-        .collect()
+/// Decode a little-endian u32 payload.  A truncated or misaligned
+/// payload is a [`CommError::Decode`], not a panic: the comm layer's
+/// checksums make this unreachable for in-protocol traffic, so hitting
+/// it means a framing bug, and one rank reporting beats eight hanging.
+pub fn decode_u32s(b: &[u8]) -> Result<Vec<u32>, CommError> {
+    if b.len() % 4 != 0 {
+        return Err(CommError::Decode { len: b.len(), elem: 4 });
+    }
+    Ok(b.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect())
 }
 
 /// Encode a u64 slice little-endian.
@@ -475,12 +841,13 @@ pub fn encode_u64s(xs: &[u64]) -> Vec<u8> {
     b
 }
 
-/// Decode a little-endian u64 payload.
-pub fn decode_u64s(b: &[u8]) -> Vec<u64> {
-    assert!(b.len() % 8 == 0);
-    b.chunks_exact(8)
-        .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
-        .collect()
+/// Decode a little-endian u64 payload; misalignment errors like
+/// [`decode_u32s`].
+pub fn decode_u64s(b: &[u8]) -> Result<Vec<u64>, CommError> {
+    if b.len() % 8 != 0 {
+        return Err(CommError::Decode { len: b.len(), elem: 8 });
+    }
+    Ok(b.chunks_exact(8).map(|c| u64::from_le_bytes(c.try_into().unwrap())).collect())
 }
 
 /// Spawn `nranks` rank threads running `f` under the degenerate flat
@@ -504,6 +871,26 @@ pub fn run_ranks_topo<T: Send>(
     topo: Topology,
     f: impl Fn(&mut Comm) -> T + Sync,
 ) -> Vec<T> {
+    run_ranks_cfg(nranks, topo, None, f)
+        .into_iter()
+        .map(|r| r.unwrap_or_else(|p| std::panic::resume_unwind(p)))
+        .collect()
+}
+
+/// The fully-configured rank runtime: explicit [`Topology`], optional
+/// [`FaultPlan`], and per-rank panic isolation.  Each rank's closure
+/// result comes back as a [`std::thread::Result`], so one crashed rank
+/// is a report — not a poisoned process: the panicking rank broadcasts
+/// a down notice (see [`Comm::abort`]) before unwinding, peers fail
+/// their blocking receives with [`CommError::RankDown`], and the caller
+/// sees every rank's fate in rank order.  A zero-rate plan is treated
+/// exactly like `None` — no framing, byte-identical wire traffic.
+pub fn run_ranks_cfg<T: Send>(
+    nranks: usize,
+    topo: Topology,
+    faults: Option<FaultPlan>,
+    f: impl Fn(&mut Comm) -> T + Sync,
+) -> Vec<std::thread::Result<T>> {
     assert!(nranks >= 1);
     let mut senders: Vec<Sender<Packet>> = Vec::with_capacity(nranks);
     let mut inboxes: Vec<Receiver<Packet>> = Vec::with_capacity(nranks);
@@ -526,13 +913,23 @@ pub fn run_ranks_topo<T: Send>(
                     pending: VecDeque::new(),
                     topo,
                     stats: CommStats::default(),
+                    faults: faults.filter(|p| p.enabled()),
+                    tx_seq: HashMap::new(),
+                    rx_seq: HashMap::new(),
+                    unacked: HashMap::new(),
+                    early: HashMap::new(),
+                    down: vec![false; nranks],
                 };
-                f(&mut comm)
+                let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut comm)));
+                if out.is_err() {
+                    comm.abort();
+                }
+                out
             }));
         }
         handles
             .into_iter()
-            .map(|h| h.join().expect("rank thread panicked"))
+            .map(|h| h.join().expect("rank thread failed to join"))
             .collect()
     })
 }
@@ -547,7 +944,7 @@ mod tests {
         for p in [1usize, 2, 3, 8, 17] {
             let expect = (p * (p + 1) / 2) as u64;
             let out = run_ranks(p, CostModel::zero(), |c| {
-                c.allreduce_sum(100, c.rank() as u64 + 1)
+                c.allreduce_sum(100, c.rank() as u64 + 1).unwrap()
             });
             assert_eq!(out, vec![expect; p], "p={p}");
         }
@@ -556,7 +953,8 @@ mod tests {
     #[test]
     fn allreduce_max_over_ranks() {
         for p in [2usize, 3, 5, 17] {
-            let out = run_ranks(p, CostModel::zero(), |c| c.allreduce_max(10, c.rank() as u64));
+            let out =
+                run_ranks(p, CostModel::zero(), |c| c.allreduce_max(10, c.rank() as u64).unwrap());
             assert_eq!(out, vec![p as u64 - 1; p], "p={p}");
         }
     }
@@ -565,7 +963,7 @@ mod tests {
     fn allreduce_vec_sums_elementwise() {
         let out = run_ranks(7, CostModel::zero(), |c| {
             let mut v = vec![c.rank(), 1, 100 + c.rank()];
-            c.allreduce_u32_sum_vec(500, &mut v);
+            c.allreduce_u32_sum_vec(500, &mut v).unwrap();
             v
         });
         for v in out {
@@ -581,7 +979,7 @@ mod tests {
             let me = c.rank();
             let next = (me + 1) % p;
             let prev = (me + p - 1) % p;
-            let got = c.neighbor_alltoallv(900, &[next], vec![vec![me as u8]], &[prev]);
+            let got = c.neighbor_alltoallv(900, &[next], vec![vec![me as u8]], &[prev]).unwrap();
             (got, c.stats().messages)
         });
         for (r, (got, messages)) in out.into_iter().enumerate() {
@@ -600,11 +998,11 @@ mod tests {
             let me = c.rank();
             let next = (me + 1) % p;
             let prev = (me + p - 1) % p;
-            c.neighbor_alltoallv_start(910, &[next], vec![vec![me as u8]]);
+            c.neighbor_alltoallv_start(910, &[next], vec![vec![me as u8]]).unwrap();
             // overlap window: arbitrary local compute while the wire drains
             let overlap: u32 = (0..1000u32).map(|x| x.wrapping_mul(31)).sum();
             std::hint::black_box(overlap);
-            let got = c.neighbor_alltoallv_finish(910, &[prev]);
+            let got = c.neighbor_alltoallv_finish(910, &[prev]).unwrap();
             (got, c.stats().messages, c.stats().collectives)
         });
         for (r, (got, messages, collectives)) in out.into_iter().enumerate() {
@@ -622,7 +1020,7 @@ mod tests {
             let me = c.rank();
             let peers: Vec<u32> = (0..me).collect();
             let bufs: Vec<Vec<u8>> = peers.iter().map(|&r| vec![me as u8, r as u8]).collect();
-            c.sparse_alltoallv(700, &peers, bufs)
+            c.sparse_alltoallv(700, &peers, bufs).unwrap()
         });
         for (r, got) in out.into_iter().enumerate() {
             // rank r hears from every rank above it, each payload [from, r]
@@ -642,7 +1040,7 @@ mod tests {
             for round in 0..3u8 {
                 let me = c.rank();
                 let peer = me ^ 1; // pairs (0,1) and (2,3)
-                let got = c.sparse_alltoallv(600, &[peer], vec![vec![round, me as u8]]);
+                let got = c.sparse_alltoallv(600, &[peer], vec![vec![round, me as u8]]).unwrap();
                 assert_eq!(got.len(), 1);
                 assert_eq!(got[0], (peer, vec![round, peer as u8]), "round {round}");
             }
@@ -653,14 +1051,14 @@ mod tests {
     fn sparse_alltoallv_empty_everywhere_completes() {
         // nobody sends: the discovery round alone must not wedge
         run_ranks(4, CostModel::zero(), |c| {
-            let got = c.sparse_alltoallv(800, &[], vec![]);
+            let got = c.sparse_alltoallv(800, &[], vec![]).unwrap();
             assert!(got.is_empty());
         });
     }
 
     #[test]
     fn single_rank_allreduce_is_identity() {
-        let out = run_ranks(1, CostModel::zero(), |c| c.allreduce_sum(0, 42));
+        let out = run_ranks(1, CostModel::zero(), |c| c.allreduce_sum(0, 42).unwrap());
         assert_eq!(out, vec![42]);
     }
 
@@ -669,7 +1067,7 @@ mod tests {
         let out = run_ranks(4, CostModel::zero(), |c| {
             let me = c.rank();
             let bufs: Vec<Vec<u8>> = (0..4).map(|r| vec![me as u8, r as u8]).collect();
-            let got = c.alltoallv(7, bufs);
+            let got = c.alltoallv(7, bufs).unwrap();
             // got[r] must be [r, me]
             for (r, b) in got.iter().enumerate() {
                 assert_eq!(b, &vec![r as u8, me as u8]);
@@ -683,12 +1081,12 @@ mod tests {
     fn selective_recv_handles_out_of_order_tags() {
         run_ranks(2, CostModel::zero(), |c| {
             if c.rank() == 0 {
-                c.send(1, 5, vec![5]);
-                c.send(1, 6, vec![6]);
+                c.send(1, 5, vec![5]).unwrap();
+                c.send(1, 6, vec![6]).unwrap();
             } else {
                 // receive in reverse tag order
-                assert_eq!(c.recv(0, 6), vec![6]);
-                assert_eq!(c.recv(0, 5), vec![5]);
+                assert_eq!(c.recv(0, 6).unwrap(), vec![6]);
+                assert_eq!(c.recv(0, 5).unwrap(), vec![5]);
             }
         });
     }
@@ -697,9 +1095,9 @@ mod tests {
     fn stats_account_messages_and_bytes() {
         let out = run_ranks(2, CostModel::default(), |c| {
             if c.rank() == 0 {
-                c.send(1, 1, vec![0u8; 100]);
+                c.send(1, 1, vec![0u8; 100]).unwrap();
             } else {
-                c.recv(0, 1);
+                c.recv(0, 1).unwrap();
             }
             c.stats()
         });
@@ -712,9 +1110,22 @@ mod tests {
     #[test]
     fn u32_u64_codecs_roundtrip() {
         let xs = vec![0u32, 1, u32::MAX, 42];
-        assert_eq!(decode_u32s(&encode_u32s(&xs)), xs);
+        assert_eq!(decode_u32s(&encode_u32s(&xs)).unwrap(), xs);
         let ys = vec![0u64, u64::MAX, 7];
-        assert_eq!(decode_u64s(&encode_u64s(&ys)), ys);
+        assert_eq!(decode_u64s(&encode_u64s(&ys)).unwrap(), ys);
+    }
+
+    #[test]
+    fn decode_rejects_truncated_and_misaligned_payloads() {
+        // the pre-PR-6 decoders asserted (panicking a whole rank thread);
+        // a short or torn frame must now be a typed, reportable error
+        assert_eq!(decode_u32s(&[1, 2, 3]), Err(CommError::Decode { len: 3, elem: 4 }));
+        assert_eq!(decode_u32s(&[0; 5]), Err(CommError::Decode { len: 5, elem: 4 }));
+        assert_eq!(decode_u64s(&[0; 12]), Err(CommError::Decode { len: 12, elem: 8 }));
+        assert_eq!(decode_u64s(&[7]), Err(CommError::Decode { len: 1, elem: 8 }));
+        // empty payloads stay valid (empty delta rounds send them)
+        assert_eq!(decode_u32s(&[]).unwrap(), Vec::<u32>::new());
+        assert_eq!(decode_u64s(&[]).unwrap(), Vec::<u64>::new());
     }
 
     #[test]
@@ -722,7 +1133,7 @@ mod tests {
         // would deadlock if broken
         run_ranks(6, CostModel::zero(), |c| {
             for i in 0..3 {
-                c.barrier(1000 + i * 2);
+                c.barrier(1000 + i * 2).unwrap();
             }
         });
     }
@@ -735,10 +1146,13 @@ mod tests {
             for gpn in [1u32, 2, 3, 4, 32] {
                 let topo = Topology::hierarchical(gpn, CostModel::zero(), CostModel::zero());
                 let expect: u64 = (1..=p as u64).sum();
-                let sums = run_ranks_topo(p, topo, |c| c.allreduce_sum(100, c.rank() as u64 + 1));
+                let sums = run_ranks_topo(p, topo, |c| {
+                    c.allreduce_sum(100, c.rank() as u64 + 1).unwrap()
+                });
                 assert_eq!(sums, vec![expect; p], "sum p={p} gpn={gpn}");
-                let maxes =
-                    run_ranks_topo(p, topo, |c| c.allreduce_max(200, 1000 - c.rank() as u64));
+                let maxes = run_ranks_topo(p, topo, |c| {
+                    c.allreduce_max(200, 1000 - c.rank() as u64).unwrap()
+                });
                 assert_eq!(maxes, vec![1000; p], "max p={p} gpn={gpn}");
             }
         }
@@ -751,7 +1165,7 @@ mod tests {
         let topo = Topology::nvlink_ib(3);
         let out = run_ranks_topo(7, topo, |c| {
             let mut v = vec![c.rank(), 1, 100 + c.rank()];
-            c.allreduce_u32_sum_vec(500, &mut v);
+            c.allreduce_u32_sum_vec(500, &mut v).unwrap();
             v
         });
         for v in out {
@@ -761,7 +1175,7 @@ mod tests {
             let me = c.rank();
             let peers: Vec<u32> = (0..me).collect();
             let bufs: Vec<Vec<u8>> = peers.iter().map(|&r| vec![me as u8, r as u8]).collect();
-            c.sparse_alltoallv(700, &peers, bufs)
+            c.sparse_alltoallv(700, &peers, bufs).unwrap()
         });
         for (r, got) in got.into_iter().enumerate() {
             assert_eq!(got.len(), 5 - 1 - r);
@@ -778,7 +1192,7 @@ mod tests {
         // times and keeps the other 24 hops on-node
         let hop_sums = |topo: Topology| {
             let stats = run_ranks_topo(16, topo, |c| {
-                c.allreduce_sum(300, c.rank() as u64);
+                c.allreduce_sum(300, c.rank() as u64).unwrap();
                 c.stats()
             });
             (
@@ -801,12 +1215,12 @@ mod tests {
         let topo = Topology::hierarchical(2, CostModel::nvlink(), CostModel::default());
         let out = run_ranks_topo(4, topo, |c| {
             if c.rank() == 0 {
-                c.send(1, 1, vec![0u8; 100]); // same node (0,1)
-                c.send(2, 2, vec![0u8; 50]); // other node (2,3)
+                c.send(1, 1, vec![0u8; 100]).unwrap(); // same node (0,1)
+                c.send(2, 2, vec![0u8; 50]).unwrap(); // other node (2,3)
             } else if c.rank() == 1 {
-                c.recv(0, 1);
+                c.recv(0, 1).unwrap();
             } else if c.rank() == 2 {
-                c.recv(0, 2);
+                c.recv(0, 2).unwrap();
             }
             c.stats()
         });
@@ -822,11 +1236,11 @@ mod tests {
     fn flat_runs_class_every_hop_inter_node() {
         let out = run_ranks(2, CostModel::default(), |c| {
             if c.rank() == 0 {
-                c.send(1, 1, vec![0u8; 64]);
+                c.send(1, 1, vec![0u8; 64]).unwrap();
             } else {
-                c.recv(0, 1);
+                c.recv(0, 1).unwrap();
             }
-            c.barrier(10);
+            c.barrier(10).unwrap();
             c.stats()
         });
         assert_eq!(out[0].intra_messages, 0);
@@ -834,5 +1248,153 @@ mod tests {
         assert_eq!(out[0].intra_bytes, 0);
         assert_eq!(out[0].coll_intra_hops, 0);
         assert!(out[0].coll_inter_hops > 0, "barrier hops must be classed inter under flat");
+    }
+
+    // ----------------------------------------------------------------
+    // fault injection & recovery
+    // ----------------------------------------------------------------
+
+    #[test]
+    fn injected_faults_recover_transparently_in_stream_order() {
+        // aggressive mixed schedule over a 400-message stream: drops,
+        // flips, dups and delays all fire, yet every payload arrives
+        // intact, in order, and the logical accounting never notices.
+        // budget 16 makes a doomed stream impossible in practice
+        // (p_doom = 0.3^17 per seqno), keeping the test deterministic-safe.
+        let plan = FaultPlan::new(42)
+            .with_drop_ppm(150_000)
+            .with_flip_ppm(150_000)
+            .with_dup_ppm(100_000)
+            .with_delay(100_000, 10_000)
+            .with_retry_budget(16);
+        let out = run_ranks_cfg(2, Topology::flat(CostModel::default()), Some(plan), |c| {
+            let n = 400u32;
+            if c.rank() == 0 {
+                for i in 0..n {
+                    c.send(1, 77, encode_u32s(&[i, i.wrapping_mul(i)])).unwrap();
+                }
+            } else {
+                for i in 0..n {
+                    let got = decode_u32s(&c.recv(0, 77).unwrap()).unwrap();
+                    assert_eq!(got, vec![i, i.wrapping_mul(i)], "stream order broke at {i}");
+                }
+            }
+            c.barrier(900).unwrap();
+            c.stats()
+        });
+        let s0 = out[0].as_ref().unwrap();
+        let s1 = out[1].as_ref().unwrap();
+        // logical accounting is fault-blind
+        assert_eq!(s0.messages, 400);
+        assert_eq!(s0.bytes_sent, 400 * 8);
+        // at these rates every injection class fires with certainty
+        assert!(s1.fault_drops > 0, "no drops injected");
+        assert!(s1.fault_corruptions > 0, "no flips detected");
+        assert!(s1.fault_dups_dropped > 0, "no dups dropped");
+        assert!(s1.fault_delays > 0, "no delays charged");
+        assert!(s0.fault_retransmits > 0, "sender never retransmitted");
+        assert!(s0.fault_recovery_ns > 0, "backoff charged no modeled time");
+        assert!(s1.fault_recovery_ns > 0, "delays charged no modeled time");
+        assert_eq!(s0.fault_resyncs + s1.fault_resyncs, 0, "no stream should exhaust budget");
+    }
+
+    #[test]
+    fn exhausted_retry_budget_surfaces_and_reliable_send_bypasses() {
+        // 100% drop with budget 0: the very first NACK burns the budget,
+        // the receiver gets a fatal husk and a typed error — while the
+        // reliable channel (the resync path) is immune to the injector
+        let plan = FaultPlan::new(1).with_drop_ppm(1_000_000).with_retry_budget(0);
+        let out = run_ranks_cfg(2, Topology::flat(CostModel::zero()), Some(plan), |c| {
+            if c.rank() == 0 {
+                assert!(c.is_doomed(1, 9), "sender-side oracle must agree");
+                c.send(1, 9, vec![1, 2, 3]).unwrap();
+                c.send_reliable(1, 11, vec![9, 9]).unwrap();
+                c.barrier(500).unwrap();
+                None
+            } else {
+                let err = c.recv(0, 9).unwrap_err();
+                assert_eq!(err, CommError::RetryExhausted { from: 0, tag: 9 });
+                let fallback = c.recv(0, 11).unwrap();
+                c.barrier(500).unwrap();
+                Some((fallback, c.stats()))
+            }
+        });
+        let (fallback, s) = out[1].as_ref().unwrap().as_ref().unwrap();
+        assert_eq!(fallback, &vec![9, 9]);
+        assert!(s.fault_drops > 0);
+        // both application sends were accounted by the sender
+        assert!(out[0].is_ok());
+    }
+
+    #[test]
+    fn crashed_rank_cascades_as_rank_down_not_a_hang() {
+        let out = run_ranks_cfg(3, Topology::flat(CostModel::zero()), None, |c| {
+            if c.rank() == 1 {
+                panic!("rank 1 died");
+            }
+            c.recv(1, 5)
+        });
+        assert!(matches!(out[0], Ok(Err(CommError::RankDown { rank: 1 }))));
+        assert!(matches!(out[2], Ok(Err(CommError::RankDown { rank: 1 }))));
+        let payload = out[1].as_ref().unwrap_err();
+        let msg = payload.downcast_ref::<&str>().expect("panic payload");
+        assert!(msg.contains("rank 1 died"));
+    }
+
+    #[test]
+    fn disabled_plan_leaves_wire_and_stats_untouched() {
+        // a zero-rate plan must be indistinguishable from no plan: same
+        // payloads, same stats (the faults-off byte-parity invariant)
+        let traffic = |faults: Option<FaultPlan>| {
+            run_ranks_cfg(3, Topology::flat(CostModel::default()), faults, |c| {
+                let me = c.rank();
+                c.send((me + 1) % 3, 4, vec![me as u8; 32]).unwrap();
+                let got = c.recv((me + 2) % 3, 4).unwrap();
+                c.barrier(30).unwrap();
+                (got, c.stats())
+            })
+            .into_iter()
+            .map(|r| r.unwrap())
+            .collect::<Vec<_>>()
+        };
+        let a = traffic(None);
+        let b = traffic(Some(FaultPlan::new(7)));
+        let norm = |mut s: CommStats| {
+            s.wall_ns = 0; // wall time is the one nondeterministic field
+            s
+        };
+        for ((pa, sa), (pb, sb)) in a.iter().zip(&b) {
+            assert_eq!(pa, pb);
+            assert_eq!(norm(*sa), norm(*sb));
+        }
+    }
+
+    #[test]
+    fn delays_and_dups_change_no_payload_and_cost_only_recovery_ns() {
+        let plan = FaultPlan::new(5).with_dup_ppm(300_000).with_delay(300_000, 7_000);
+        let out = run_ranks_cfg(2, Topology::flat(CostModel::default()), Some(plan), |c| {
+            if c.rank() == 0 {
+                for i in 0..50u32 {
+                    c.send(1, 3, encode_u32s(&[i])).unwrap();
+                }
+            } else {
+                for i in 0..50u32 {
+                    assert_eq!(decode_u32s(&c.recv(0, 3).unwrap()).unwrap(), vec![i]);
+                }
+            }
+            c.barrier(40).unwrap();
+            c.stats()
+        });
+        let s0 = out[0].as_ref().unwrap();
+        let s1 = out[1].as_ref().unwrap();
+        // dup/delay never need retransmits or resyncs
+        assert_eq!(s0.fault_retransmits, 0);
+        assert_eq!(s0.fault_resyncs + s1.fault_resyncs, 0);
+        assert!(s1.fault_dups_dropped > 0);
+        assert!(s1.fault_delays > 0);
+        assert_eq!(s1.fault_recovery_ns, 7_000 * s1.fault_delays);
+        // logical totals unchanged by the duplicates on the wire
+        assert_eq!(s0.messages, 50);
+        assert_eq!(s0.bytes_sent, 200);
     }
 }

@@ -225,6 +225,24 @@ pub struct CommStats {
     pub coll_intra_hops: u64,
     /// Raw collective tree hops between nodes.
     pub coll_inter_hops: u64,
+    /// Checksum-mismatch frames detected (and NACKed) by receives.
+    pub fault_corruptions: u64,
+    /// Injected losses detected via husk frames.
+    pub fault_drops: u64,
+    /// Duplicate deliveries discarded by stream seqno.
+    pub fault_dups_dropped: u64,
+    /// NACK-driven retransmits performed by the send side.
+    pub fault_retransmits: u64,
+    /// Streams that burned their retry budget and escalated to a full
+    /// resync exchange.
+    pub fault_resyncs: u64,
+    /// Injected straggler delays absorbed by receives.
+    pub fault_delays: u64,
+    /// Modeled recovery time: retransmit backoff + wire time on the
+    /// faulted hop's link class, plus absorbed straggler delays.  Kept
+    /// out of `modeled_ns` so fault-free and recovered runs report
+    /// identical baseline wire totals.
+    pub fault_recovery_ns: u64,
 }
 
 impl CommStats {
@@ -242,6 +260,15 @@ impl CommStats {
         self.inter_modeled_ns = self.inter_modeled_ns.max(other.inter_modeled_ns);
         self.coll_intra_hops += other.coll_intra_hops;
         self.coll_inter_hops += other.coll_inter_hops;
+        self.fault_corruptions += other.fault_corruptions;
+        self.fault_drops += other.fault_drops;
+        self.fault_dups_dropped += other.fault_dups_dropped;
+        self.fault_retransmits += other.fault_retransmits;
+        self.fault_resyncs += other.fault_resyncs;
+        self.fault_delays += other.fault_delays;
+        // recovery time is a latency, like modeled_ns: ranks recover in
+        // parallel, so the slowest rank bounds the run
+        self.fault_recovery_ns = self.fault_recovery_ns.max(other.fault_recovery_ns);
     }
 }
 
@@ -341,6 +368,37 @@ mod tests {
             (6, 8, 60, 80)
         );
         assert_eq!((a.coll_intra_hops, a.coll_inter_hops), (10, 12));
+    }
+
+    #[test]
+    fn stats_merge_sums_fault_counters_and_maxes_recovery_time() {
+        let mut a = CommStats {
+            fault_corruptions: 1,
+            fault_drops: 2,
+            fault_dups_dropped: 3,
+            fault_retransmits: 4,
+            fault_resyncs: 5,
+            fault_delays: 6,
+            fault_recovery_ns: 100,
+            ..Default::default()
+        };
+        let b = CommStats {
+            fault_corruptions: 10,
+            fault_drops: 20,
+            fault_dups_dropped: 30,
+            fault_retransmits: 40,
+            fault_resyncs: 50,
+            fault_delays: 60,
+            fault_recovery_ns: 70,
+            ..Default::default()
+        };
+        a.merge(&b);
+        assert_eq!(
+            (a.fault_corruptions, a.fault_drops, a.fault_dups_dropped),
+            (11, 22, 33)
+        );
+        assert_eq!((a.fault_retransmits, a.fault_resyncs, a.fault_delays), (44, 55, 66));
+        assert_eq!(a.fault_recovery_ns, 100, "recovery time merges as a rank max");
     }
 
     #[test]

@@ -1,0 +1,370 @@
+//! Deterministic fault injection for the modeled comm substrate.
+//!
+//! A [`FaultPlan`] is a pure function from a hop's identity —
+//! `(seed, src, dst, tag, seqno, attempt)` — to a [`FaultAction`], built
+//! on the same splitmix64 mixing the conflict tie-breaker uses.
+//! Determinism buys three things a 128-GPU-scale run needs:
+//!
+//! * **Reproducibility** — a fault schedule *is* a seed, so a failing
+//!   run replays exactly, on any host and at any thread count.
+//! * **Symmetric knowledge** — sender and receiver evaluate the same
+//!   verdicts without a side channel.  The recovery protocol in
+//!   `comm.rs` leans on this twice: an injected *drop* is delivered as a
+//!   header-only husk (the receiver learns of the loss deterministically
+//!   instead of needing a timeout), and [`FaultPlan::doomed`] lets the
+//!   sender pre-compute that a stream will exhaust its retry budget so
+//!   it can stage the full resync the receiver is about to need.
+//! * **Parity testing** — `tests/fault_injection.rs` asserts colorings
+//!   under injected faults are bit-identical to fault-free runs; that
+//!   gate only means something when the schedule is a function, not a
+//!   dice roll.
+//!
+//! When a plan is active every application payload travels framed as
+//! `[kind u8][seqno u32][delay_ns u64][checksum u64][payload]`.  The
+//! first 13 header bytes model the part of a transport the NIC protects
+//! (addressing, sequencing, scheduling); injected bit-flips land only in
+//! the checksum-covered region (checksum + payload), so corruption is
+//! always detectable — the modeled analogue of link-layer CRC plus an
+//! end-to-end checksum.  FNV-1a's byte steps are bijective in the
+//! running state, so any single-bit flip provably changes the digest:
+//! detection is certain, which is what makes the bit-parity invariant a
+//! guarantee rather than a probability.  With no plan, packets are raw
+//! payloads, byte-identical to the pre-fault substrate.
+
+use crate::util::splitmix64;
+
+/// What the fault plan does to one physical frame attempt.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultAction {
+    /// Deliver untouched.
+    None,
+    /// Lose the frame.  On the wire it becomes a header-only husk so the
+    /// receiver can NACK deterministically instead of timing out.
+    Drop,
+    /// Flip one bit in the checksum-covered region; the payload carries
+    /// the entropy that picks the position.
+    Flip(u64),
+    /// Deliver the frame twice; the receiver's sequence numbers drop the
+    /// second copy.
+    Duplicate,
+    /// Deliver with a modeled straggler delay (nanoseconds), charged to
+    /// `CommStats::fault_recovery_ns` at the receiver.
+    Delay(u64),
+}
+
+/// A seeded, rate-configured fault schedule.  Rates are parts-per-million
+/// per physical frame; the verdict for a hop depends only on the plan and
+/// the hop's identity, never on wall time or host.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FaultPlan {
+    pub seed: u64,
+    /// Message-loss rate (ppm).
+    pub drop_ppm: u32,
+    /// Payload bit-flip rate (ppm).
+    pub flip_ppm: u32,
+    /// Duplicate-delivery rate (ppm).
+    pub dup_ppm: u32,
+    /// Straggler-delay rate (ppm).
+    pub delay_ppm: u32,
+    /// Modeled delay per straggler frame (ns).
+    pub delay_ns: u64,
+    /// Retransmits allowed per frame before the sender gives up and the
+    /// exchange escalates to a full resync (attempts `0..=retry_budget`).
+    pub retry_budget: u32,
+}
+
+impl FaultPlan {
+    /// A plan with the given seed and every rate zero (disabled until
+    /// rates are set; a zero-rate plan leaves the wire byte-identical to
+    /// no plan at all).
+    pub fn new(seed: u64) -> Self {
+        FaultPlan {
+            seed,
+            drop_ppm: 0,
+            flip_ppm: 0,
+            dup_ppm: 0,
+            delay_ppm: 0,
+            delay_ns: 25_000,
+            retry_budget: 4,
+        }
+    }
+
+    /// Mild background fault load (~1.4% of frames affected), safe to run
+    /// the whole tier-1 suite under: the combined drop+flip rate of 1%
+    /// with a budget of 6 retries makes retry exhaustion (and with it any
+    /// extra logical traffic) vanishingly unlikely, so even exact
+    /// message-count assertions keep passing.  `scripts/verify.sh
+    /// --faults` uses this via the `DIST_FAULT_SEED` env knob.
+    pub fn mild(seed: u64) -> Self {
+        FaultPlan {
+            drop_ppm: 5_000,
+            flip_ppm: 5_000,
+            dup_ppm: 2_000,
+            delay_ppm: 2_000,
+            retry_budget: 6,
+            ..FaultPlan::new(seed)
+        }
+    }
+
+    pub fn with_drop_ppm(mut self, ppm: u32) -> Self {
+        self.drop_ppm = ppm;
+        self
+    }
+
+    pub fn with_flip_ppm(mut self, ppm: u32) -> Self {
+        self.flip_ppm = ppm;
+        self
+    }
+
+    pub fn with_dup_ppm(mut self, ppm: u32) -> Self {
+        self.dup_ppm = ppm;
+        self
+    }
+
+    pub fn with_delay(mut self, ppm: u32, ns: u64) -> Self {
+        self.delay_ppm = ppm;
+        self.delay_ns = ns;
+        self
+    }
+
+    pub fn with_retry_budget(mut self, budget: u32) -> Self {
+        self.retry_budget = budget;
+        self
+    }
+
+    /// Does this plan inject anything at all?  A disabled plan is
+    /// treated exactly like no plan (no framing, no overhead).
+    pub fn enabled(&self) -> bool {
+        self.drop_ppm > 0 || self.flip_ppm > 0 || self.dup_ppm > 0 || self.delay_ppm > 0
+    }
+
+    /// The per-hop hash every verdict derives from.
+    fn hop_rand(&self, src: u32, dst: u32, tag: u64, seqno: u32, attempt: u32) -> u64 {
+        let mut x = splitmix64(self.seed ^ 0xA076_1D64_78BD_642F);
+        x = splitmix64(x ^ src as u64);
+        x = splitmix64(x ^ dst as u64);
+        x = splitmix64(x ^ tag);
+        x = splitmix64(x ^ seqno as u64);
+        splitmix64(x ^ attempt as u64)
+    }
+
+    /// The verdict for one physical frame attempt.  Rates partition the
+    /// ppm space in drop → flip → dup → delay order, so at most one
+    /// fault applies per attempt.
+    pub fn action(&self, src: u32, dst: u32, tag: u64, seqno: u32, attempt: u32) -> FaultAction {
+        if !self.enabled() {
+            return FaultAction::None;
+        }
+        let h = self.hop_rand(src, dst, tag, seqno, attempt);
+        let r = (h % 1_000_000) as u32;
+        let mut edge = self.drop_ppm;
+        if r < edge {
+            return FaultAction::Drop;
+        }
+        edge = edge.saturating_add(self.flip_ppm);
+        if r < edge {
+            return FaultAction::Flip(splitmix64(h));
+        }
+        edge = edge.saturating_add(self.dup_ppm);
+        if r < edge {
+            return FaultAction::Duplicate;
+        }
+        edge = edge.saturating_add(self.delay_ppm);
+        if r < edge {
+            return FaultAction::Delay(self.delay_ns);
+        }
+        FaultAction::None
+    }
+
+    /// Will every attempt within the retry budget be lost or corrupted?
+    /// Sender and receiver agree on this verdict by construction: the
+    /// retransmit protocol's fatal husk (sent when attempts run out)
+    /// fires exactly when this returns true, and the sender uses the
+    /// same predicate *before* the first attempt to stage the reliable
+    /// full resync the receiver will fall back to.
+    pub fn doomed(&self, src: u32, dst: u32, tag: u64, seqno: u32) -> bool {
+        (0..=self.retry_budget).all(|a| {
+            matches!(
+                self.action(src, dst, tag, seqno, a),
+                FaultAction::Drop | FaultAction::Flip(_)
+            )
+        })
+    }
+}
+
+// ---------------------------------------------------------------------
+// frame codec (crate-internal: only `Comm` speaks frames)
+// ---------------------------------------------------------------------
+
+/// Frame header length: kind(1) + seqno(4) + delay_ns(8) + checksum(8).
+pub(crate) const FRAME_HDR: usize = 21;
+/// A data frame carrying a payload.
+pub(crate) const KIND_DATA: u8 = 0;
+/// A husk standing in for a dropped frame (header only).
+pub(crate) const KIND_HUSK: u8 = 1;
+/// A fatal husk: the sender's retry budget for this frame is exhausted.
+pub(crate) const KIND_FATAL: u8 = 2;
+
+/// Parsed frame header (the payload follows at `FRAME_HDR`).
+pub(crate) struct FrameHeader {
+    pub kind: u8,
+    pub seqno: u32,
+    pub delay_ns: u64,
+    pub cksum: u64,
+}
+
+/// FNV-1a 64 over the payload.  Each byte step is bijective in the
+/// running state, so any single-bit payload flip changes the digest.
+pub(crate) fn checksum(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+/// Build one wire frame.
+pub(crate) fn frame(kind: u8, seqno: u32, delay_ns: u64, payload: &[u8]) -> Vec<u8> {
+    let mut b = Vec::with_capacity(FRAME_HDR + payload.len());
+    b.push(kind);
+    b.extend_from_slice(&seqno.to_le_bytes());
+    b.extend_from_slice(&delay_ns.to_le_bytes());
+    b.extend_from_slice(&checksum(payload).to_le_bytes());
+    b.extend_from_slice(payload);
+    b
+}
+
+/// Parse a frame header; `None` if the buffer is too short to be one.
+pub(crate) fn parse_header(b: &[u8]) -> Option<FrameHeader> {
+    if b.len() < FRAME_HDR {
+        return None;
+    }
+    Some(FrameHeader {
+        kind: b[0],
+        seqno: u32::from_le_bytes(b[1..5].try_into().unwrap()),
+        delay_ns: u64::from_le_bytes(b[5..13].try_into().unwrap()),
+        cksum: u64::from_le_bytes(b[13..21].try_into().unwrap()),
+    })
+}
+
+/// Flip one bit inside the checksum-covered region (checksum + payload);
+/// the protected header bytes (kind, seqno, delay) are never touched.
+pub(crate) fn flip_bit(frame: &mut [u8], entropy: u64) {
+    let lo = FRAME_HDR - 8; // first checksum byte
+    let span = frame.len() - lo; // >= 8: the checksum is always present
+    let idx = lo + (entropy as usize % span);
+    frame[idx] ^= 1 << ((entropy >> 32) % 8);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn actions_are_deterministic() {
+        let p = FaultPlan::mild(7);
+        for seqno in 0..50 {
+            assert_eq!(p.action(0, 1, 99, seqno, 0), p.action(0, 1, 99, seqno, 0));
+        }
+        // and sensitive to every key component
+        let q = FaultPlan::mild(8);
+        let differs = (0..200u32)
+            .any(|s| p.action(0, 1, 99, s, 0) != q.action(0, 1, 99, s, 0));
+        assert!(differs, "seed must steer the schedule");
+    }
+
+    #[test]
+    fn zero_rate_plan_is_disabled_and_injects_nothing() {
+        let p = FaultPlan::new(42);
+        assert!(!p.enabled());
+        for s in 0..100 {
+            assert_eq!(p.action(0, 1, 5, s, 0), FaultAction::None);
+            assert!(!p.doomed(0, 1, 5, s));
+        }
+        assert!(FaultPlan::mild(42).enabled());
+    }
+
+    #[test]
+    fn rates_hit_roughly_proportionally() {
+        let p = FaultPlan::new(3).with_drop_ppm(250_000).with_flip_ppm(250_000);
+        let n = 4_000u32;
+        let mut drops = 0;
+        let mut flips = 0;
+        for s in 0..n {
+            match p.action(2, 5, 77, s, 0) {
+                FaultAction::Drop => drops += 1,
+                FaultAction::Flip(_) => flips += 1,
+                _ => {}
+            }
+        }
+        // 25% each with generous slack
+        for hits in [drops, flips] {
+            assert!(hits > n / 8 && hits < n / 2, "drops={drops} flips={flips}");
+        }
+    }
+
+    #[test]
+    fn doom_matches_the_attempt_sequence() {
+        let p = FaultPlan::new(11).with_drop_ppm(600_000).with_retry_budget(2);
+        let mut doomed_seen = false;
+        let mut clean_seen = false;
+        for s in 0..500u32 {
+            let all_fail = (0..=2).all(|a| {
+                matches!(p.action(0, 1, 9, s, a), FaultAction::Drop | FaultAction::Flip(_))
+            });
+            assert_eq!(p.doomed(0, 1, 9, s), all_fail, "seqno {s}");
+            doomed_seen |= all_fail;
+            clean_seen |= !all_fail;
+        }
+        // at 60% loss and budget 2 both outcomes must occur
+        assert!(doomed_seen && clean_seen);
+    }
+
+    #[test]
+    fn always_drop_plan_dooms_everything() {
+        let p = FaultPlan::new(0).with_drop_ppm(1_000_000).with_retry_budget(0);
+        for s in 0..20 {
+            assert_eq!(p.action(0, 1, 1, s, 0), FaultAction::Drop);
+            assert!(p.doomed(0, 1, 1, s));
+        }
+    }
+
+    #[test]
+    fn frame_roundtrip() {
+        let payload = [1u8, 2, 3, 250];
+        let f = frame(KIND_DATA, 7, 123, &payload);
+        assert_eq!(f.len(), FRAME_HDR + payload.len());
+        let h = parse_header(&f).unwrap();
+        assert_eq!(h.kind, KIND_DATA);
+        assert_eq!(h.seqno, 7);
+        assert_eq!(h.delay_ns, 123);
+        assert_eq!(h.cksum, checksum(&payload));
+        assert_eq!(&f[FRAME_HDR..], &payload);
+        // husks are header-only
+        let husk = frame(KIND_HUSK, 9, 0, &[]);
+        assert_eq!(husk.len(), FRAME_HDR);
+        assert!(parse_header(&[0u8; FRAME_HDR - 1]).is_none());
+    }
+
+    #[test]
+    fn every_flip_is_detectable_and_header_safe() {
+        let payload: Vec<u8> = (0..33).collect();
+        for entropy in 0..2_000u64 {
+            let clean = frame(KIND_DATA, 3, 0, &payload);
+            let mut bad = clean.clone();
+            flip_bit(&mut bad, splitmix64(entropy));
+            assert_ne!(bad, clean, "flip must change the frame");
+            // protected header untouched
+            assert_eq!(&bad[..FRAME_HDR - 8], &clean[..FRAME_HDR - 8]);
+            // and the corruption is always caught by the checksum
+            let h = parse_header(&bad).unwrap();
+            assert_ne!(h.cksum, checksum(&bad[FRAME_HDR..]), "entropy {entropy}");
+        }
+        // empty payload: the flip lands in the checksum itself
+        let mut empty = frame(KIND_DATA, 0, 0, &[]);
+        flip_bit(&mut empty, 5);
+        let h = parse_header(&empty).unwrap();
+        assert_ne!(h.cksum, checksum(&empty[FRAME_HDR..]));
+    }
+}

@@ -15,6 +15,8 @@
 
 pub mod comm;
 pub mod cost;
+pub mod fault;
 
-pub use comm::{run_ranks, run_ranks_topo, Comm};
+pub use comm::{run_ranks, run_ranks_cfg, run_ranks_topo, Comm, CommError};
 pub use cost::{CommStats, CostModel, Topology};
+pub use fault::{FaultAction, FaultPlan};

@@ -51,6 +51,38 @@
 //! wrapper over this lifecycle for legacy call sites; its colorings are
 //! bit-identical to the Session path.
 //!
+//! ## Fault model & recovery
+//!
+//! The simulated wires can be made hostile on purpose.  A seeded
+//! [`distributed::FaultPlan`] (installed via `Session::builder().faults(..)`,
+//! `DistConfig::faults`, or the `DIST_FAULT_SEED` env knob) injects
+//! message drops, payload bit flips, duplicate deliveries and modeled
+//! straggler delays, each decided by a counter-mode RNG keyed on
+//! `(seed, src, dst, tag, seqno, attempt)` — every fault is a pure
+//! function of the message's identity, so failing runs replay exactly.
+//!
+//! With a plan installed, point-to-point sends are framed with a
+//! checksum and per-stream sequence number.  Receivers NACK corrupt or
+//! dropped frames; senders retransmit with exponential backoff charged
+//! to `RunStats::fault_recovery_ns` (never to the clean-path modeled
+//! time).  A stream that exhausts its retry budget degrades gracefully:
+//! both endpoints agree on the doomed stream deterministically and the
+//! affected exchange escalates to a reliable full-color resync for that
+//! neighbor pair.  Two invariants pin the design:
+//!
+//! * **faults off ⇒ byte-identical** — no framing, no counters, the
+//!   exact pre-fault wire traffic and stats;
+//! * **faults on (within budget) ⇒ bit-identical colorings** — recovery
+//!   is invisible except in the `RunStats::fault_*` counters.
+//!
+//! `ProblemSpec::with_paranoid(true)` adds distrust of the recovery
+//! itself: owner-vs-ghost color audits after every exchange and a
+//! conflict-freedom re-scan at termination, failing with per-rank
+//! diagnostics (surfaced through `Plan::try_run`) rather than returning
+//! a silently wrong coloring.  Rank panics are likewise contained:
+//! `Plan::try_run` reports every failed rank's message instead of
+//! hanging the survivors.
+//!
 //! ## Layers
 //!
 //! * **L3 (this crate)** — the distributed coordinator: simulated-MPI rank

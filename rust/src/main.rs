@@ -14,7 +14,7 @@ use std::process::ExitCode;
 use dist_color::bench::{run_algo, run_algo_with_backend, Algo};
 use dist_color::coloring::distributed::zoltan::{color_zoltan, ZoltanConfig};
 use dist_color::coloring::{validate, Problem};
-use dist_color::distributed::{CostModel, Topology};
+use dist_color::distributed::{CostModel, FaultPlan, Topology};
 use dist_color::graph::{generators, io, stats::GraphStats, Graph};
 use dist_color::partition::{self, PartitionKind};
 use dist_color::runtime::PjrtBackend;
@@ -78,11 +78,21 @@ COLOR FLAGS:
                       > 1                                      [1500]
   --inter-beta-ps B   inter-node per-byte cost (ps), with
                       --gpus-per-node > 1                       [100]
+  --fault-seed S      inject deterministic wire faults seeded by S
+                      (drops, bit flips, dups, straggler delays);
+                      recovery is automatic and the coloring is
+                      bit-identical to the clean run
+  --fault-drop-pct F  message drop probability in percent, with
+                      --fault-seed                              [0.5]
+  --fault-flip-pct F  payload bit-flip probability in percent, with
+                      --fault-seed                              [0.5]
+  --paranoid          audit ghost tables against owner colors after
+                      every exchange and re-verify the final coloring
   --artifacts DIR     artifact dir for --backend pjrt          [artifacts]
 ";
 
 /// Flags that take no value (presence = true).
-const BOOL_FLAGS: [&str; 1] = ["no-double-buffer"];
+const BOOL_FLAGS: [&str; 2] = ["no-double-buffer", "paranoid"];
 
 struct Flags(std::collections::HashMap<String, String>);
 
@@ -100,6 +110,12 @@ impl Flags {
         }
     }
     fn u64_or(&self, k: &str, d: u64) -> Result<u64, String> {
+        match self.get(k) {
+            None => Ok(d),
+            Some(v) => v.parse().map_err(|_| format!("bad --{k}: `{v}`")),
+        }
+    }
+    fn f64_or(&self, k: &str, d: f64) -> Result<f64, String> {
         match self.get(k) {
             None => Ok(d),
             Some(v) => v.parse().map_err(|_| format!("bad --{k}: `{v}`")),
@@ -175,6 +191,32 @@ fn cmd_color(f: Flags) -> Result<(), String> {
     } else {
         Topology::flat(cost)
     };
+    let faults = match f.get("fault-seed") {
+        Some(v) => {
+            let fseed: u64 = v.parse().map_err(|_| format!("bad --fault-seed: `{v}`"))?;
+            let drop_pct = f.f64_or("fault-drop-pct", 0.5)?;
+            let flip_pct = f.f64_or("fault-flip-pct", 0.5)?;
+            if !(0.0..=100.0).contains(&drop_pct) || !(0.0..=100.0).contains(&flip_pct) {
+                return Err("--fault-drop-pct/--fault-flip-pct must be within 0..=100".into());
+            }
+            Some(
+                FaultPlan::mild(fseed)
+                    .with_drop_ppm((drop_pct * 10_000.0) as u64)
+                    .with_flip_ppm((flip_pct * 10_000.0) as u64),
+            )
+        }
+        None => {
+            if f.get("fault-drop-pct").is_some() || f.get("fault-flip-pct").is_some() {
+                return Err(
+                    "--fault-drop-pct/--fault-flip-pct only apply with fault injection: \
+                     pass --fault-seed S as well"
+                        .into(),
+                );
+            }
+            None
+        }
+    };
+    let paranoid = f.get("paranoid").is_some();
 
     let t0 = std::time::Instant::now();
     let (result, problem) = match algo.as_str() {
@@ -191,6 +233,12 @@ fn cmd_color(f: Flags) -> Result<(), String> {
                      (its supersteps are strictly phased, §4)"
                 );
             }
+            if faults.is_some() || paranoid {
+                println!(
+                    "note: --fault-seed/--paranoid do not apply to the Zoltan baseline \
+                     (it runs on the clean legacy substrate)"
+                );
+            }
             (color_zoltan(&g, &part, cfg, cost), problem)
         }
         name => {
@@ -204,18 +252,22 @@ fn cmd_color(f: Flags) -> Result<(), String> {
                 "pd2" => (Problem::PD2, true, GhostLayers::Two),
                 other => return Err(format!("unknown --algo `{other}`")),
             };
-            let session = Session::builder()
+            let mut builder = Session::builder()
                 .ranks(ranks)
                 .cost(cost)
                 .topology(topo)
                 .threads(threads)
-                .seed(seed)
-                .build();
+                .seed(seed);
+            if let Some(fp) = faults {
+                builder = builder.faults(fp);
+            }
+            let session = builder.build();
             let plan = session.plan(&g, &part, layers);
             let pspec = ProblemSpec {
                 problem,
                 recolor_degrees: rd,
                 double_buffer: f.get("no-double-buffer").is_none(),
+                paranoid,
                 ..Default::default()
             };
             let mut result = match backend_name.as_str() {
@@ -259,6 +311,20 @@ fn cmd_color(f: Flags) -> Result<(), String> {
         result.stats.bytes,
         result.stats.overlap_saved_ns as f64 / 1e6
     );
+    if faults.is_some() || paranoid {
+        println!(
+            "faults: corruptions={} drops={} dups_dropped={} retransmits={} resyncs={} \
+             delays={} recovery(max)={:.3}ms paranoid_checks={}",
+            result.stats.fault_corruptions,
+            result.stats.fault_drops,
+            result.stats.fault_dups_dropped,
+            result.stats.fault_retransmits,
+            result.stats.fault_resyncs,
+            result.stats.fault_delays,
+            result.stats.fault_recovery_ns as f64 / 1e6,
+            result.stats.paranoid_checks
+        );
+    }
     if gpus_per_node > 1 {
         if algo.starts_with("zoltan") {
             println!("note: the Zoltan baseline runs on the flat topology (CPU-only, §4)");

@@ -54,7 +54,7 @@ use crate::coloring::distributed::{
 };
 use crate::coloring::local::{KernelScratch, LocalKernel};
 use crate::coloring::Problem;
-use crate::distributed::{run_ranks_topo, CostModel, Topology};
+use crate::distributed::{run_ranks_cfg, run_ranks_topo, CostModel, FaultPlan, Topology};
 use crate::partition::Partition;
 
 /// How many ghost layers a plan builds (§2.4, §3.4).
@@ -78,6 +78,7 @@ pub struct SessionBuilder {
     topology: Option<Topology>,
     threads: usize,
     seed: u64,
+    faults: Option<FaultPlan>,
 }
 
 impl SessionBuilder {
@@ -123,18 +124,37 @@ impl SessionBuilder {
         self
     }
 
+    /// Deterministic fault injection for every run of the session (see
+    /// [`DistConfig::faults`](crate::coloring::distributed::DistConfig)).
+    /// When no plan is set here, `build` also consults the
+    /// `DIST_FAULT_SEED` environment variable: a parseable `u64` value
+    /// installs [`FaultPlan::mild`] with that seed, which is how
+    /// `scripts/verify.sh --faults` re-runs the whole test suite over
+    /// lossy wires without touching call sites.
+    pub fn faults(mut self, plan: FaultPlan) -> Self {
+        self.faults = Some(plan);
+        self
+    }
+
     /// Materialize the session: spawns each rank's persistent worker
     /// pool (when `threads != 1`) up front, so plan and run calls never
     /// pay pool construction.
     pub fn build(self) -> Session {
         let scratch =
             (0..self.ranks).map(|_| Mutex::new(KernelScratch::new(self.threads))).collect();
+        let faults = self.faults.or_else(|| {
+            std::env::var("DIST_FAULT_SEED")
+                .ok()
+                .and_then(|s| s.trim().parse::<u64>().ok())
+                .map(FaultPlan::mild)
+        });
         Session {
             nranks: self.ranks,
             cost: self.cost,
             topo: self.topology.unwrap_or(Topology::flat(self.cost)),
             threads: self.threads,
             seed: self.seed,
+            faults,
             scratch,
             run_gate: Mutex::new(()),
         }
@@ -149,6 +169,7 @@ impl Default for SessionBuilder {
             topology: None,
             threads: 0,
             seed: 42,
+            faults: None,
         }
     }
 }
@@ -162,6 +183,7 @@ pub struct Session {
     topo: Topology,
     threads: usize,
     seed: u64,
+    faults: Option<FaultPlan>,
     /// Per-rank persistent scratch; locked by that rank's thread for the
     /// duration of each run.
     scratch: Vec<Mutex<KernelScratch>>,
@@ -203,6 +225,12 @@ impl Session {
         self.topo
     }
 
+    /// The fault plan every run of this session injects (`None` = clean
+    /// wires; from [`SessionBuilder::faults`] or `DIST_FAULT_SEED`).
+    pub fn faults(&self) -> Option<FaultPlan> {
+        self.faults
+    }
+
     /// Build a [`Plan`]: every rank ingests its slab from `source` and
     /// constructs its `LocalGraph` (ghosts, subscriptions, neighbor
     /// topology) — the one-time cost all of the plan's runs amortize.
@@ -224,12 +252,17 @@ impl Session {
             "source vertex count does not match the partition"
         );
         let two = layers == GhostLayers::Two;
+        // plan construction runs on clean wires regardless of the
+        // session's fault plan: the ghost topology is the ground truth
+        // every faulted run recovers *to*, so it is built once,
+        // deterministically, outside the fault domain
         let per_rank = run_ranks_topo(self.nranks, self.topo, |comm| {
             let rank = comm.rank();
             let t0 = Instant::now();
             let owned = part.owned(rank);
             let slab = source.load_rank(rank, &owned);
-            let lg = LocalGraph::build_from_slab(comm, &slab, owned, part, two);
+            let lg = LocalGraph::build_from_slab(comm, &slab, owned, part, two)
+                .unwrap_or_else(|e| panic!("rank {rank}: local graph construction failed: {e}"));
             (lg, comm.stats(), t0.elapsed().as_nanos() as u64)
         });
         let mut build = PlanBuildStats::default();
@@ -291,6 +324,12 @@ pub struct ProblemSpec {
     /// [`DistConfig::double_buffer`]; `false` is the benches' serial-
     /// round ablation (CLI `--no-double-buffer`).
     pub double_buffer: bool,
+    /// Paranoid validation (default off): audit the ghost table against
+    /// owner colors after every exchange and re-verify conflict-freedom
+    /// at termination; any divergence fails the run with per-rank
+    /// diagnostics (see
+    /// [`DistConfig::paranoid`](crate::coloring::distributed::DistConfig)).
+    pub paranoid: bool,
 }
 
 impl Default for ProblemSpec {
@@ -302,6 +341,7 @@ impl Default for ProblemSpec {
             seed: None,
             max_rounds: 500,
             double_buffer: true,
+            paranoid: false,
         }
     }
 }
@@ -348,6 +388,46 @@ impl ProblemSpec {
     pub fn with_double_buffer(mut self, on: bool) -> Self {
         self.double_buffer = on;
         self
+    }
+
+    /// Toggle paranoid validation (off by default; the CLI front-end is
+    /// `--paranoid`).
+    pub fn with_paranoid(mut self, on: bool) -> Self {
+        self.paranoid = on;
+        self
+    }
+}
+
+/// Per-rank failure report from [`Plan::try_run`]: which ranks failed
+/// and why.  Comm errors (a crashed peer, an exhausted retry budget on
+/// an unrecoverable stream, a paranoid-audit divergence) arrive as
+/// their structured [`CommError`](crate::distributed::CommError)
+/// rendering; rank panics arrive as their raw payload strings.
+#[derive(Debug)]
+pub struct RunError {
+    /// `(rank, reason)` for every failed rank, in rank order.
+    pub failures: Vec<(u32, String)>,
+}
+
+impl std::fmt::Display for RunError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{} rank(s) failed:", self.failures.len())?;
+        for (rank, reason) in &self.failures {
+            write!(f, "\n  rank {rank}: {reason}")?;
+        }
+        Ok(())
+    }
+}
+
+impl std::error::Error for RunError {}
+
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else {
+        "rank panicked with a non-string payload".to_string()
     }
 }
 
@@ -396,12 +476,33 @@ impl Plan<'_> {
 
     /// Execute one coloring with the native kernels.  Runs with equal
     /// specs are bit-identical; no construction work is repeated.
+    /// Panics with the [`RunError`] report if any rank fails; use
+    /// [`Plan::try_run`] to handle failures structurally.
     pub fn run(&self, spec: ProblemSpec) -> RunResult {
         self.run_with_backend(spec, &NativeBackend(spec.kernel))
     }
 
     /// [`Plan::run`] with an explicit local backend (the PJRT path).
     pub fn run_with_backend(&self, spec: ProblemSpec, backend: &dyn LocalBackend) -> RunResult {
+        self.try_run_with_backend(spec, backend).unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    /// [`Plan::run`] that reports per-rank failures instead of
+    /// panicking: a crashed rank, an unrecoverable comm stream or a
+    /// paranoid-audit divergence surfaces as [`RunError`] naming every
+    /// failed rank and why, while the surviving ranks unwind cleanly
+    /// (the failing rank broadcasts a down notice, so peers blocked on
+    /// it error out instead of hanging).
+    pub fn try_run(&self, spec: ProblemSpec) -> Result<RunResult, RunError> {
+        self.try_run_with_backend(spec, &NativeBackend(spec.kernel))
+    }
+
+    /// [`Plan::try_run`] with an explicit local backend.
+    pub fn try_run_with_backend(
+        &self,
+        spec: ProblemSpec,
+        backend: &dyn LocalBackend,
+    ) -> Result<RunResult, RunError> {
         assert!(
             self.two_layers || spec.problem == Problem::D1,
             "{} needs the two-hop ghost view: build the plan with GhostLayers::Two",
@@ -417,22 +518,49 @@ impl Plan<'_> {
             max_rounds: spec.max_rounds,
             double_buffer: spec.double_buffer,
             // the session's topology already reached the Comm via
-            // run_ranks_topo; DistConfig::topology only steers the
+            // run_ranks_cfg; DistConfig::topology only steers the
             // one-shot wrapper's Session construction
             topology: None,
+            faults: self.session.faults,
+            paranoid: spec.paranoid,
         };
         // one run at a time per session: rank threads hold their scratch
         // locks across blocking collectives (see `Session::run_gate`)
         let _gate = self.session.run_gate.lock().expect("session run gate poisoned");
-        let outcomes = run_ranks_topo(self.session.nranks, self.session.topo, |comm| {
-            let rank = comm.rank() as usize;
-            let mut scratch =
-                self.session.scratch[rank].lock().expect("rank scratch poisoned");
-            let mut xscratch =
-                self.xscratch[rank].lock().expect("rank exchange scratch poisoned");
-            color_rank_planned(comm, &self.locals[rank], cfg, backend, &mut scratch, &mut xscratch)
-        });
-        assemble(self.n_global, outcomes, self.session.nranks)
+        let per_rank =
+            run_ranks_cfg(self.session.nranks, self.session.topo, self.session.faults, |comm| {
+                let rank = comm.rank() as usize;
+                let mut scratch =
+                    self.session.scratch[rank].lock().expect("rank scratch poisoned");
+                let mut xscratch =
+                    self.xscratch[rank].lock().expect("rank exchange scratch poisoned");
+                let out = color_rank_planned(
+                    comm,
+                    &self.locals[rank],
+                    cfg,
+                    backend,
+                    &mut scratch,
+                    &mut xscratch,
+                );
+                if out.is_err() {
+                    // tell peers blocked on us to stop waiting
+                    comm.abort();
+                }
+                out
+            });
+        let mut outcomes = Vec::with_capacity(per_rank.len());
+        let mut failures: Vec<(u32, String)> = Vec::new();
+        for (rank, res) in per_rank.into_iter().enumerate() {
+            match res {
+                Ok(Ok(outcome)) => outcomes.push(outcome),
+                Ok(Err(e)) => failures.push((rank as u32, e.to_string())),
+                Err(payload) => failures.push((rank as u32, panic_message(payload.as_ref()))),
+            }
+        }
+        if !failures.is_empty() {
+            return Err(RunError { failures });
+        }
+        Ok(assemble(self.n_global, outcomes, self.session.nranks))
     }
 }
 
@@ -561,5 +689,51 @@ mod tests {
         let part = partition::block(&g, 3);
         let session = Session::builder().ranks(4).cost(CostModel::zero()).threads(1).build();
         let _ = session.plan(&g, &part, GhostLayers::One);
+    }
+
+    #[test]
+    fn faulted_session_matches_clean_session_bit_for_bit() {
+        let g = gnm(250, 1200, 3);
+        let part = partition::hash(&g, 4, 1);
+        // zero-rate plan: pinned-clean wires even when `verify.sh
+        // --faults` exports DIST_FAULT_SEED (an explicit plan wins over
+        // the env knob, and a disabled plan means no framing at all)
+        let clean = Session::builder()
+            .ranks(4)
+            .cost(CostModel::zero())
+            .threads(1)
+            .faults(FaultPlan::new(0))
+            .build();
+        let faulted = Session::builder()
+            .ranks(4)
+            .cost(CostModel::zero())
+            .threads(1)
+            .faults(FaultPlan::mild(0xBEEF))
+            .build();
+        assert!(clean.faults().is_some_and(|p| !p.enabled()));
+        assert!(faulted.faults().is_some_and(|p| p.enabled()));
+        let a = clean.plan(&g, &part, GhostLayers::One).run(ProblemSpec::d1());
+        let b = faulted
+            .plan(&g, &part, GhostLayers::One)
+            .run(ProblemSpec::d1().with_paranoid(true));
+        assert_eq!(a.colors, b.colors);
+        assert_eq!(a.stats.comm_rounds, b.stats.comm_rounds);
+        assert!(b.stats.paranoid_checks > 0, "paranoid runs must audit something");
+        assert_eq!(a.stats.paranoid_checks, 0);
+    }
+
+    #[test]
+    fn try_run_surfaces_rank_failures_as_an_error_report() {
+        // hash partition guarantees conflicts; max_rounds = 0 makes the
+        // convergence assertion fire on every rank, and try_run must
+        // collect those panics into a structured report
+        let g = gnm(300, 1500, 5);
+        let part = partition::hash(&g, 4, 3);
+        let session = Session::builder().ranks(4).cost(CostModel::zero()).threads(1).build();
+        let plan = session.plan(&g, &part, GhostLayers::One);
+        let spec = ProblemSpec { max_rounds: 0, ..ProblemSpec::d1() };
+        let err = plan.try_run(spec).expect_err("0 fix rounds cannot converge here");
+        assert!(!err.failures.is_empty());
+        assert!(err.to_string().contains("did not converge"), "report: {err}");
     }
 }

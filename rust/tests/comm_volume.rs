@@ -47,11 +47,11 @@ fn delta_round_sends_at_most_two_messages_per_neighbor() {
         for v in 0..lg.n_local {
             colors[v] = (v % 5 + 1) as Color;
         }
-        exchange_full(c, &lg, &mut colors);
+        exchange_full(c, &lg, &mut colors).unwrap();
         let recolored: Vec<u32> = (0..lg.n_boundary1 as u32).collect();
         let mut xscratch = ExchangeScratch::new();
         let before = c.stats().messages;
-        exchange_delta(c, &lg, &mut colors, &recolored, 1, &mut xscratch);
+        exchange_delta(c, &lg, &mut colors, &recolored, 1, &mut xscratch).unwrap();
         let sent = c.stats().messages - before;
         (sent, lg.send_ranks.len() as u64)
     });
@@ -113,19 +113,19 @@ fn split_delta_round_sends_same_messages_as_fused() {
         for v in 0..lg.n_local {
             colors[v] = (v % 5 + 1) as Color;
         }
-        exchange_full(c, &lg, &mut colors);
+        exchange_full(c, &lg, &mut colors).unwrap();
         let recolored: Vec<u32> = (0..lg.n_boundary1 as u32).collect();
         let mut xscratch = ExchangeScratch::new();
         // fused round
         let s0 = c.stats();
-        exchange_delta(c, &lg, &mut colors, &recolored, 1, &mut xscratch);
+        exchange_delta(c, &lg, &mut colors, &recolored, 1, &mut xscratch).unwrap();
         let fused_msgs = c.stats().messages - s0.messages;
         let fused_bytes = c.stats().bytes_sent - s0.bytes_sent;
         // split round, with the overlap window between the halves
         let s1 = c.stats();
-        exchange_delta_start(c, &lg, &colors, &recolored, 2, &mut xscratch);
+        exchange_delta_start(c, &lg, &colors, &recolored, 2, &mut xscratch).unwrap();
         let after_start = c.stats().messages - s1.messages;
-        exchange_delta_finish(c, &lg, &mut colors, 2, &mut xscratch);
+        exchange_delta_finish(c, &lg, &mut colors, 2, &mut xscratch).unwrap();
         let split_msgs = c.stats().messages - s1.messages;
         let split_bytes = c.stats().bytes_sent - s1.bytes_sent;
         (fused_msgs, fused_bytes, after_start, split_msgs, split_bytes, lg.send_ranks.len() as u64)
@@ -180,7 +180,7 @@ fn node_leader_collective_pins_inter_node_message_count() {
     // times and keeps 2·(p-#nodes) = 24 hops on-node.
     let hops = |topo: Topology| {
         let stats = run_ranks_topo(CHAIN_RANKS, topo, |c| {
-            let s = c.allreduce_sum(5_000, c.rank() as u64 + 1);
+            let s = c.allreduce_sum(5_000, c.rank() as u64 + 1).unwrap();
             assert_eq!(s, (CHAIN_RANKS * (CHAIN_RANKS + 1) / 2) as u64);
             c.stats()
         });
@@ -212,11 +212,11 @@ fn chain_delta_round_splits_intra_vs_inter_exactly() {
         for v in 0..lg.n_local {
             colors[v] = (v % 5 + 1) as Color;
         }
-        exchange_full(c, &lg, &mut colors);
+        exchange_full(c, &lg, &mut colors).unwrap();
         let recolored: Vec<u32> = (0..lg.n_boundary1 as u32).collect();
         let mut xscratch = ExchangeScratch::new();
         let before = c.stats();
-        exchange_delta(c, &lg, &mut colors, &recolored, 1, &mut xscratch);
+        exchange_delta(c, &lg, &mut colors, &recolored, 1, &mut xscratch).unwrap();
         let after = c.stats();
         (
             after.intra_messages - before.intra_messages,
@@ -276,13 +276,13 @@ fn tree_allreduce_matches_linear_reference() {
     // power-of-two, odd, and deep non-power-of-two rank counts
     for p in [1usize, 2, 3, 8, 17] {
         let sums = run_ranks(p, CostModel::zero(), |c| {
-            c.allreduce_sum(2_000, (c.rank() as u64 + 1) * 3)
+            c.allreduce_sum(2_000, (c.rank() as u64 + 1) * 3).unwrap()
         });
         let linear_sum: u64 = (1..=p as u64).map(|r| r * 3).sum();
         assert_eq!(sums, vec![linear_sum; p], "sum p={p}");
 
         let maxes = run_ranks(p, CostModel::zero(), |c| {
-            c.allreduce_max(2_100, 1000 - c.rank() as u64)
+            c.allreduce_max(2_100, 1000 - c.rank() as u64).unwrap()
         });
         assert_eq!(maxes, vec![1000; p], "max p={p}");
     }

@@ -1,0 +1,162 @@
+//! Fault-injection parity matrix (PR 6).
+//!
+//! The substrate's contract: with deterministic drops, bit flips,
+//! duplicate deliveries and straggler delays injected on every data
+//! message, recovery must be *invisible* — colorings, round counts,
+//! conflict counts and logical wire totals bit-identical to the clean
+//! run at every problem flavor and rank count — while the recovery
+//! counters prove the faults actually fired.  When a stream exhausts
+//! its retry budget the affected exchange escalates to a reliable full
+//! resync, and the same parity must still hold.
+
+use dist_color::coloring::distributed::RunResult;
+use dist_color::coloring::{validate, Problem};
+use dist_color::distributed::{CostModel, FaultPlan};
+use dist_color::graph::generators::erdos_renyi::gnm;
+use dist_color::graph::Graph;
+use dist_color::partition::{self, Partition};
+use dist_color::session::{GhostLayers, ProblemSpec, Session};
+
+/// Hash partition: maximally scattered, so cross-rank conflicts (and
+/// therefore delta rounds, the interesting recovery surface) abound.
+fn fixture(ranks: usize) -> (Graph, Partition) {
+    let g = gnm(400, 2400, 17);
+    let part = partition::hash(&g, ranks, 2);
+    (g, part)
+}
+
+fn spec_for(problem: Problem) -> ProblemSpec {
+    match problem {
+        Problem::D1 => ProblemSpec::d1(), // two-layer plan below: D1-2GL
+        Problem::D2 => ProblemSpec::d2(),
+        Problem::PD2 => ProblemSpec::pd2(),
+    }
+}
+
+fn run_one(
+    g: &Graph,
+    part: &Partition,
+    ranks: usize,
+    problem: Problem,
+    faults: Option<FaultPlan>,
+    paranoid: bool,
+) -> RunResult {
+    let mut builder =
+        Session::builder().ranks(ranks).cost(CostModel::zero()).threads(1).seed(5);
+    if let Some(fp) = faults {
+        builder = builder.faults(fp);
+    }
+    let session = builder.build();
+    let plan = session.plan(g, part, GhostLayers::Two);
+    plan.run(spec_for(problem).with_paranoid(paranoid))
+}
+
+#[test]
+fn fault_recovery_is_bit_invisible_across_the_matrix() {
+    // {D1-2GL, D2, PD2} x ranks {2, 8, 17} x {drop-only, flip-only,
+    // mixed}: budget 24 at these rates makes stream doom essentially
+    // impossible (p^25 per stream), so recovery must stay on the
+    // retransmit path and never resync.
+    let mut retransmits_by_flavor = [0u64; 3];
+    for &ranks in &[2usize, 8, 17] {
+        let (g, part) = fixture(ranks);
+        for problem in [Problem::D1, Problem::D2, Problem::PD2] {
+            let clean = run_one(&g, &part, ranks, problem, None, false);
+            assert!(
+                validate::is_proper(problem, &g, &clean.colors),
+                "{problem} ranks={ranks}: clean run must be proper"
+            );
+            let salt = ranks as u64;
+            let flavors = [
+                ("drop-only", FaultPlan::new(0xD00D ^ salt).with_drop_ppm(200_000)),
+                ("flip-only", FaultPlan::new(0xF11F ^ salt).with_flip_ppm(200_000)),
+                (
+                    "mixed",
+                    FaultPlan::new(0x3A5E ^ salt)
+                        .with_drop_ppm(100_000)
+                        .with_flip_ppm(100_000)
+                        .with_dup_ppm(50_000)
+                        .with_delay(50_000, 5_000),
+                ),
+            ];
+            for (fi, (name, plan)) in flavors.into_iter().enumerate() {
+                let plan = plan.with_retry_budget(24);
+                let faulted = run_one(&g, &part, ranks, problem, Some(plan), false);
+                let ctx = format!("{problem} ranks={ranks} {name}");
+                assert_eq!(clean.colors, faulted.colors, "{ctx}: coloring diverged");
+                assert_eq!(clean.stats.comm_rounds, faulted.stats.comm_rounds, "{ctx}");
+                assert_eq!(clean.stats.conflicts, faulted.stats.conflicts, "{ctx}");
+                assert_eq!(
+                    clean.stats.bytes, faulted.stats.bytes,
+                    "{ctx}: logical wire accounting must be fault-blind"
+                );
+                assert_eq!(faulted.stats.fault_resyncs, 0, "{ctx}: budget 24 exhausted");
+                if ranks >= 8 {
+                    // enough messages that a 20% hazard rate cannot
+                    // plausibly miss every one of them
+                    assert!(faulted.stats.fault_retransmits > 0, "{ctx}: nothing recovered");
+                }
+                retransmits_by_flavor[fi] += faulted.stats.fault_retransmits;
+                if name == "mixed" && ranks >= 8 {
+                    assert!(faulted.stats.fault_dups_dropped > 0, "{ctx}: no dup seen");
+                    assert!(faulted.stats.fault_delays > 0, "{ctx}: no delay seen");
+                    assert!(faulted.stats.fault_recovery_ns > 0, "{ctx}");
+                }
+            }
+        }
+    }
+    for (fi, total) in retransmits_by_flavor.iter().enumerate() {
+        assert!(*total > 0, "fault flavor #{fi} never caused a retransmit anywhere");
+    }
+}
+
+#[test]
+fn exhausted_streams_escalate_to_resync_with_identical_colors() {
+    // 100% drop with a zero retry budget: every data stream is doomed,
+    // so every exchange must ride the reliable resync path — and the
+    // coloring must *still* match the clean run bit for bit.  Paranoid
+    // audits run on both sides to certify the recovered ghost tables.
+    for &ranks in &[2usize, 8] {
+        let (g, part) = fixture(ranks);
+        for problem in [Problem::D1, Problem::D2] {
+            let clean = run_one(&g, &part, ranks, problem, None, true);
+            let plan = FaultPlan::new(1).with_drop_ppm(1_000_000).with_retry_budget(0);
+            let faulted = run_one(&g, &part, ranks, problem, Some(plan), true);
+            let ctx = format!("{problem} ranks={ranks}");
+            assert_eq!(clean.colors, faulted.colors, "{ctx}: coloring diverged");
+            assert_eq!(clean.stats.comm_rounds, faulted.stats.comm_rounds, "{ctx}");
+            assert_eq!(clean.stats.conflicts, faulted.stats.conflicts, "{ctx}");
+            assert!(faulted.stats.fault_resyncs > 0, "{ctx}: nothing escalated");
+            assert!(faulted.stats.fault_drops > 0, "{ctx}: nothing dropped");
+            assert_eq!(
+                clean.stats.paranoid_checks, faulted.stats.paranoid_checks,
+                "{ctx}: both runs must audit the same ghost entries"
+            );
+            assert!(faulted.stats.paranoid_checks > 0, "{ctx}");
+        }
+    }
+}
+
+#[test]
+fn disabled_fault_plan_changes_nothing_at_all() {
+    // a zero-rate plan is treated as no plan: no framing, no counters,
+    // identical logical traffic — the faults-off byte-parity invariant
+    let (g, part) = fixture(4);
+    let clean = run_one(&g, &part, 4, Problem::D1, None, false);
+    let zero = run_one(&g, &part, 4, Problem::D1, Some(FaultPlan::new(99)), false);
+    assert_eq!(clean.colors, zero.colors);
+    assert_eq!(clean.stats.comm_rounds, zero.stats.comm_rounds);
+    assert_eq!(clean.stats.conflicts, zero.stats.conflicts);
+    assert_eq!(clean.stats.bytes, zero.stats.bytes);
+    assert_eq!(
+        clean.stats.intra_messages + clean.stats.inter_messages,
+        zero.stats.intra_messages + zero.stats.inter_messages
+    );
+    assert_eq!(zero.stats.fault_corruptions, 0);
+    assert_eq!(zero.stats.fault_drops, 0);
+    assert_eq!(zero.stats.fault_dups_dropped, 0);
+    assert_eq!(zero.stats.fault_retransmits, 0);
+    assert_eq!(zero.stats.fault_resyncs, 0);
+    assert_eq!(zero.stats.fault_delays, 0);
+    assert_eq!(zero.stats.fault_recovery_ns, 0);
+}

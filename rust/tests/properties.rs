@@ -230,9 +230,9 @@ fn property_comm_codecs_roundtrip_random_payloads() {
         let mut rng = Rng::new(case);
         let n = rng.below(200) as usize;
         let xs: Vec<u32> = (0..n).map(|_| rng.next_u64() as u32).collect();
-        assert_eq!(decode_u32s(&encode_u32s(&xs)), xs);
+        assert_eq!(decode_u32s(&encode_u32s(&xs)).unwrap(), xs);
         let ys: Vec<u64> = (0..n).map(|_| rng.next_u64()).collect();
-        assert_eq!(decode_u64s(&encode_u64s(&ys)), ys);
+        assert_eq!(decode_u64s(&encode_u64s(&ys)).unwrap(), ys);
     }
 }
 
@@ -253,7 +253,7 @@ fn property_alltoallv_random_matrix() {
                     (0..len).map(|i| (me * 31 + r * 7 + i) as u8).collect()
                 })
                 .collect();
-            let got = c.alltoallv(99, bufs);
+            let got = c.alltoallv(99, bufs).unwrap();
             for (r, buf) in got.iter().enumerate() {
                 let len = sizes2[r][me];
                 assert_eq!(buf.len(), len);

@@ -133,19 +133,19 @@ fn hierarchical_modeled_time_splits_by_link_class() {
     let stats = run_ranks_topo(8, free_intra, |c| {
         if c.rank() % 4 != 0 {
             // intra-node hop (same node as rank - 1)
-            c.send(c.rank() - 1, 1, vec![0u8; 64]);
+            c.send(c.rank() - 1, 1, vec![0u8; 64]).unwrap();
         }
         if c.rank() == 0 {
-            c.send(4, 2, vec![0u8; 64]); // inter-node hop
+            c.send(4, 2, vec![0u8; 64]).unwrap(); // inter-node hop
         }
         // drain so the run terminates cleanly
         if c.rank() % 4 != 3 && c.rank() + 1 < 8 {
-            c.recv(c.rank() + 1, 1);
+            c.recv(c.rank() + 1, 1).unwrap();
         }
         if c.rank() == 4 {
-            c.recv(0, 2);
+            c.recv(0, 2).unwrap();
         }
-        c.barrier(10);
+        c.barrier(10).unwrap();
         c.stats()
     });
     for (rank, s) in stats.iter().enumerate() {

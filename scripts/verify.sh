@@ -8,6 +8,12 @@
 #                               # 1 and then 8, so the round-overlap
 #                               # bit-parity matrix is exercised at both
 #                               # thread counts (then lints + smokes)
+#   scripts/verify.sh --faults  # build + test, then re-run the test
+#                               # suite with DIST_FAULT_SEED pinned so
+#                               # every Session-driven test runs on
+#                               # fault-injected wires (FaultPlan::mild;
+#                               # the colorings must not change), then
+#                               # lints + smokes
 #
 # The clippy step is a hard gate (`-D warnings`; PR 5) — install the
 # component with `rustup component add clippy`.  rustfmt is skipped with
@@ -17,9 +23,11 @@ cd "$(dirname "$0")/.."
 
 quick=0
 matrix=0
+faults=0
 case "${1:-}" in
   --quick) quick=1 ;;
   --matrix) matrix=1 ;;
+  --faults) faults=1 ;;
 esac
 
 echo "== cargo build --release =="
@@ -40,6 +48,15 @@ if [ "$matrix" = "1" ]; then
     echo "== cargo test -q (DIST_TEST_THREADS=$t) =="
     DIST_TEST_THREADS=$t cargo test -q
   done
+fi
+
+if [ "$faults" = "1" ]; then
+  # PR 6: the whole suite again on fault-injected wires.  Every Session
+  # built without an explicit plan picks up FaultPlan::mild(seed) from
+  # the environment; self-healing recovery must keep all results
+  # bit-identical, so the suite passing unchanged IS the assertion.
+  echo "== cargo test -q (DIST_FAULT_SEED=20210607) =="
+  DIST_FAULT_SEED=20210607 cargo test -q
 fi
 
 if [ "$quick" = "1" ]; then
@@ -74,5 +91,8 @@ BENCH_PR4=1 BENCH_REPS="${BENCH_REPS:-3}" cargo bench --bench micro_kernels
 
 echo "== micro_kernels PR-5 smoke (writes BENCH_pr5.json) =="
 BENCH_PR5=1 cargo bench --bench micro_kernels
+
+echo "== micro_kernels PR-6 smoke (writes BENCH_pr6.json) =="
+BENCH_PR6=1 BENCH_REPS="${BENCH_REPS:-3}" cargo bench --bench micro_kernels
 
 echo "verify: OK"
