@@ -20,7 +20,11 @@
 //! collective-depth change) and write `BENCH_pr5.json`; set
 //! `BENCH_PR6=1` to run the clean vs fault-injected comparison (the
 //! self-healing bit-parity gate, recovery counters, modeled recovery
-//! overhead, paranoid-audit cost) and write `BENCH_pr6.json`.  All JSON
+//! overhead, paranoid-audit cost) and write `BENCH_pr6.json`; set
+//! `BENCH_PR7=1` to run the cooperative-runtime smoke (batch-vs-gated
+//! throughput at batch sizes 1/4/16, the flat peak-worker witness
+//! across p = 64/256/1024 on an 8-worker budget, the plan cache's
+//! cold-vs-warm speedup) and write `BENCH_pr7.json`.  All JSON
 //! schemas are documented in `rust/benches/README.md`.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -39,6 +43,7 @@ use dist_color::graph::generators::{ba, erdos_renyi::gnm, mesh};
 use dist_color::graph::{Graph, VId};
 use dist_color::partition;
 use dist_color::session::{GhostLayers, GraphSource, ProblemSpec, RankSlab, Session};
+use dist_color::util::par;
 
 fn median_ms(reps: usize, mut f: impl FnMut()) -> f64 {
     f(); // warmup
@@ -714,6 +719,149 @@ fn pr6_smoke() {
     assert!(paranoid.stats.paranoid_checks > 0, "paranoid run audited nothing");
 }
 
+/// Cooperative rank runtime smoke: gated-serial vs concurrent-batch
+/// throughput at batch sizes {1, 4, 16}, the peak-OS-thread witness
+/// across p = {64, 256, 1024} on a fixed 8-worker budget (flat — the
+/// scheduler multiplexes ranks, it does not spawn them), and the plan
+/// cache's cold-build vs warm-hit cost.  Written to `BENCH_pr7.json`.
+fn pr7_smoke() {
+    let reps: usize =
+        std::env::var("BENCH_REPS").ok().and_then(|s| s.parse().ok()).unwrap_or(5);
+    let ranks = 8usize;
+    let (n, m, seed) = (20_000usize, 100_000usize, 7u64);
+    eprintln!("pr7 smoke: gnm({n}, {m}) hash-partitioned over {ranks} ranks ...");
+    let g = gnm(n, m, seed);
+    let part = partition::hash(&g, ranks, 1);
+    let session =
+        Session::builder().ranks(ranks).cost(CostModel::default()).threads(1).seed(42).build();
+    let plan = session.plan(&g, &part, GhostLayers::One);
+    // 16 distinct submissions (per-run seeds) — the acceptance batch
+    let specs: Vec<ProblemSpec> =
+        (0..16).map(|i| ProblemSpec::d1().with_seed(1000 + i as u64)).collect();
+
+    // parity gate material first, so a divergence is recorded in JSON:
+    // the concurrent batch must equal the gated-serial execution
+    let serial_runs: Vec<_> = specs.iter().map(|&s| plan.run(s)).collect();
+    let batch_runs = plan.run_many(&specs);
+    let identical = serial_runs.iter().zip(&batch_runs).all(|(a, b)| {
+        b.as_ref()
+            .map(|b| a.colors == b.colors && a.stats.comm_rounds == b.stats.comm_rounds)
+            .unwrap_or(false)
+    });
+
+    // batch-size sweep: same work submitted one-at-a-time (the old
+    // run_gate path) vs as one concurrent batch
+    let mut batch_json = String::new();
+    for &bsz in &[1usize, 4, 16] {
+        let subset = &specs[..bsz];
+        let gated_ms = median_ms(reps, || {
+            for &s in subset {
+                std::hint::black_box(plan.run(s).stats.colors_used);
+            }
+        });
+        let batch_ms = median_ms(reps, || {
+            let out = plan.run_many(subset);
+            std::hint::black_box(out.len());
+        });
+        let gated_rps = bsz as f64 / (gated_ms / 1e3);
+        let batch_rps = bsz as f64 / (batch_ms / 1e3);
+        println!(
+            "batch={bsz:>2}   gated: {gated_ms:>8.2} ms ({gated_rps:>6.1} runs/s)   \
+             concurrent: {batch_ms:>8.2} ms ({batch_rps:>6.1} runs/s)"
+        );
+        if !batch_json.is_empty() {
+            batch_json.push_str(",\n    ");
+        }
+        batch_json.push_str(&format!(
+            "{{\"size\": {bsz}, \"gated_ms\": {gated_ms:.3}, \"concurrent_ms\": {batch_ms:.3}, \
+             \"gated_runs_per_sec\": {gated_rps:.2}, \"concurrent_runs_per_sec\": {batch_rps:.2}}}"
+        ));
+    }
+
+    // peak-worker witness: modeled rank count must not move the OS
+    // thread peak on a fixed budget (this process is quiet, so the
+    // global gauge is trustworthy here)
+    let workers_budget = 8usize;
+    let gscale = gnm(4096, 14_000, 31);
+    let mut peaks: Vec<(usize, usize)> = Vec::new();
+    for &p in &[64usize, 256, 1024] {
+        let sp = partition::hash(&gscale, p, 1);
+        let s = Session::builder()
+            .ranks(p)
+            .cost(CostModel::zero())
+            .threads(1)
+            .workers(workers_budget)
+            .seed(42)
+            .build();
+        par::reset_sched_worker_peak();
+        let pl = s.plan(&gscale, &sp, GhostLayers::One);
+        std::hint::black_box(pl.run(ProblemSpec::d1()).stats.colors_used);
+        let peak = par::sched_worker_peak();
+        println!("ranks={p:>5}   peak scheduler workers: {peak} (budget {workers_budget})");
+        peaks.push((p, peak));
+    }
+    let peaks_json = peaks
+        .iter()
+        .map(|(p, pk)| format!("{{\"ranks\": {p}, \"peak_workers\": {pk}}}"))
+        .collect::<Vec<_>>()
+        .join(",\n    ");
+
+    // plan cache: full cooperative ghost build (fresh session per rep)
+    // vs fingerprint lookup on a warm session
+    let cold_ms = median_ms(reps, || {
+        let s = Session::builder()
+            .ranks(ranks)
+            .cost(CostModel::default())
+            .threads(1)
+            .seed(42)
+            .build();
+        std::hint::black_box(s.plan(&g, &part, GhostLayers::One).total_ghosts());
+    });
+    let warm_session =
+        Session::builder().ranks(ranks).cost(CostModel::default()).threads(1).seed(42).build();
+    let _prime = warm_session.plan(&g, &part, GhostLayers::One);
+    let warm_ms = median_ms(reps, || {
+        std::hint::black_box(warm_session.plan(&g, &part, GhostLayers::One).total_ghosts());
+    });
+    let cache_speedup = cold_ms / warm_ms;
+    let (hits, misses) = warm_session.plan_cache_stats();
+    println!(
+        "plan cache   cold build: {cold_ms:>8.2} ms   warm hit: {warm_ms:>8.3} ms \
+         ({cache_speedup:.1}x; {hits} hits / {misses} misses)"
+    );
+
+    let json = format!(
+        "{{\n  \"bench\": \"micro_kernels_pr7\",\n  \"schema\": 1,\n  \"reps\": {reps},\n  \
+         \"host_cores\": {},\n  \
+         \"graph\": {{\"kind\": \"gnm\", \"n\": {n}, \"m\": {m}, \"seed\": {seed}}},\n  \
+         \"ranks\": {ranks},\n  \"partition\": \"hash\",\n  \
+         \"batch\": [\n    {batch_json}\n  ],\n  \
+         \"workers_budget\": {workers_budget},\n  \
+         \"scaling_graph\": {{\"kind\": \"gnm\", \"n\": 4096, \"m\": 14000, \"seed\": 31}},\n  \
+         \"peak_workers\": [\n    {peaks_json}\n  ],\n  \
+         \"plan_cache\": {{\"cold_ms\": {cold_ms:.3}, \"warm_ms\": {warm_ms:.4}, \
+         \"speedup\": {cache_speedup:.2}, \"hits\": {hits}, \"misses\": {misses}}},\n  \
+         \"identical_to_gated\": {identical}\n}}\n",
+        std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1),
+    );
+    std::fs::write("BENCH_pr7.json", &json).expect("writing BENCH_pr7.json");
+    println!("-> BENCH_pr7.json");
+    // asserted after the JSON is on disk, so a regression is recorded
+    assert!(identical, "concurrent batch diverged from the gated-serial runs");
+    for &(p, pk) in &peaks {
+        assert!(
+            pk <= workers_budget,
+            "p={p} leaked past the worker budget: peak {pk} > {workers_budget}"
+        );
+    }
+    assert!(hits >= reps as u64, "warm plan() calls missed the cache");
+    assert!(misses >= 1, "the cold build never registered as a miss");
+    assert!(
+        cache_speedup > 1.0,
+        "a cache hit ({warm_ms:.3} ms) must beat a full build ({cold_ms:.3} ms)"
+    );
+}
+
 fn main() {
     if std::env::var("BENCH_PR1").is_ok_and(|v| v == "1") {
         pr1_smoke();
@@ -737,6 +885,10 @@ fn main() {
     }
     if std::env::var("BENCH_PR6").is_ok_and(|v| v == "1") {
         pr6_smoke();
+        return;
+    }
+    if std::env::var("BENCH_PR7").is_ok_and(|v| v == "1") {
+        pr7_smoke();
         return;
     }
     let reps: usize =

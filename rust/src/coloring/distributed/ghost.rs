@@ -105,8 +105,14 @@ impl LocalGraph {
     pub fn build(comm: &mut Comm, g: &Graph, part: &Partition, two_layers: bool) -> LocalGraph {
         let owned_sorted: Vec<VId> = part.owned(comm.rank());
         let slab = GraphSource::load_rank(g, comm.rank(), &owned_sorted);
-        Self::build_from_slab(comm, &slab, owned_sorted, part, two_layers)
-            .expect("local graph construction failed")
+        crate::util::par::block_on(Self::build_from_slab(
+            comm,
+            &slab,
+            owned_sorted,
+            part,
+            two_layers,
+        ))
+        .expect("local graph construction failed")
     }
 
     /// Build the local graph from this rank's adjacency slab alone: the
@@ -116,8 +122,11 @@ impl LocalGraph {
     /// `comm` — which is what lets `Session::plan` ingest graphs no
     /// single rank could hold.  Collective: all ranks must call.
     /// Comm failures (a crashed peer, a torn payload) surface as
-    /// [`CommError`] instead of panicking the rank thread.
-    pub(crate) fn build_from_slab(
+    /// [`CommError`] instead of panicking the rank thread.  Async: the
+    /// construction collectives suspend at mailbox arrival, so many
+    /// rank builds share a fixed worker budget under the session
+    /// scheduler; thread-per-rank callers go through [`LocalGraph::build`].
+    pub(crate) async fn build_from_slab(
         comm: &mut Comm,
         slab: &RankSlab,
         owned_sorted: Vec<VId>,
@@ -197,7 +206,8 @@ impl LocalGraph {
                 out.push(row.len() as u32);
                 out.extend_from_slice(row);
                 out
-            })?;
+            })
+            .await?;
             ghost_adj = replies;
             // discover second-layer ghosts (adj[0] is the degree header,
             // not a vertex — skipping it avoids phantom ghosts)
@@ -227,7 +237,8 @@ impl LocalGraph {
         let deg_replies = fetch(comm, part, &all_ghosts, |v| {
             let i = owned_sorted.binary_search(&v).expect("fetch of a non-owned vertex");
             vec![slab.degree(i) as u32]
-        })?;
+        })
+        .await?;
         let mut degrees: Vec<u32> = Vec::with_capacity(n_local + n_ghost);
         for &i in &order {
             degrees.push(slab.degree(i) as u32);
@@ -255,7 +266,7 @@ impl LocalGraph {
             .iter()
             .map(|&r| encode_u32s(&req_by_rank[r as usize]))
             .collect();
-        let got = comm.sparse_alltoallv(TAG_REG, &recv_ranks, bufs)?;
+        let got = comm.sparse_alltoallv_async(TAG_REG, &recv_ranks, bufs).await?;
         let mut subs_out: Vec<Vec<u32>> = vec![Vec::new(); p];
         // Every subscribed vertex must sit in the boundary prefix; the
         // comm/compute overlap in `color_rank` is only sound because the
@@ -375,7 +386,7 @@ impl LocalGraph {
 /// owners of `wants` are contacted); owners learn the requester set
 /// from the arrivals, so the reply round runs over the now-known
 /// topology.  Length-prefixed records.
-fn fetch(
+async fn fetch(
     comm: &mut Comm,
     part: &Partition,
     wants: &[VId],
@@ -393,7 +404,7 @@ fn fetch(
     }
     let owners: Vec<u32> = (0..p as u32).filter(|&r| !req[r as usize].is_empty()).collect();
     let bufs: Vec<Vec<u8>> = owners.iter().map(|&r| encode_u32s(&req[r as usize])).collect();
-    let got = comm.sparse_alltoallv(TAG_FETCH_REQ, &owners, bufs)?;
+    let got = comm.sparse_alltoallv_async(TAG_FETCH_REQ, &owners, bufs).await?;
     // build replies: for each requested gid, [len, data...]
     let requesters: Vec<u32> = got.iter().map(|&(from, _)| from).collect();
     let mut rep_bufs: Vec<Vec<u8>> = Vec::with_capacity(got.len());
@@ -407,7 +418,7 @@ fn fetch(
         }
         rep_bufs.push(encode_u32s(&out));
     }
-    let reps = comm.neighbor_alltoallv(TAG_FETCH_REP, &requesters, rep_bufs, &owners)?;
+    let reps = comm.neighbor_alltoallv_async(TAG_FETCH_REP, &requesters, rep_bufs, &owners).await?;
     // split records per owner rank (reps[i] came from owners[i])
     let mut records: Vec<Vec<Vec<u32>>> = vec![Vec::new(); p];
     for (&o, buf) in owners.iter().zip(&reps) {

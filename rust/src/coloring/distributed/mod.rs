@@ -35,10 +35,11 @@
 //!
 //! The on-node kernels *and* the conflict-detection scans run
 //! data-parallel over [`DistConfig::threads`] workers (bit-identical to
-//! serial — see `util::par`) on the rank's persistent worker pool, and
-//! each rank reuses one [`KernelScratch`] (which owns that pool) plus
-//! the recolor mask/loser/exchange buffers across all speculative
-//! rounds.  Every boundary-color exchange is a *neighbor* collective
+//! serial — see `util::par`) on a [`KernelScratch`] (which owns the
+//! worker pool) checked out of the session's [`ScratchPool`] for each
+//! compute segment — never held across a comm suspension — plus
+//! per-rank recolor mask/loser/exchange buffers reused across all
+//! speculative rounds.  Every boundary-color exchange is a *neighbor* collective
 //! over [`ghost::LocalGraph::send_ranks`] /
 //! [`ghost::LocalGraph::recv_ranks`]: per-round message count scales
 //! with the partition's cut degree, not with the rank count.
@@ -64,7 +65,9 @@ pub mod conflict;
 pub mod ghost;
 pub mod zoltan;
 
-use crate::coloring::local::{color_local_with, nb_bit, KernelScratch, LocalKernel, LocalView};
+use crate::coloring::local::{
+    color_local_with, nb_bit, KernelScratch, LocalKernel, LocalView, ScratchPool,
+};
 use crate::coloring::{colors_used, Color, Problem};
 use crate::distributed::comm::{decode_u32s, encode_u32s, Comm, CommError};
 use crate::distributed::{CostModel, FaultPlan, Topology};
@@ -467,10 +470,10 @@ pub fn color_rank(
     };
     let mut build_timer = SplitTimer::new();
     let lg = build_timer.comm(|| LocalGraph::build(comm, g, part, two_layers));
-    let mut scratch = KernelScratch::new(cfg.threads);
+    let pool = ScratchPool::new(cfg.threads);
     let mut xscratch = ExchangeScratch::new();
     let rank = comm.rank();
-    let mut out = color_rank_planned(comm, &lg, cfg, backend, &mut scratch, &mut xscratch)
+    let mut out = par::block_on(color_rank_planned(comm, &lg, cfg, backend, &pool, &mut xscratch))
         .unwrap_or_else(|e| panic!("rank {rank}: {e}"));
     out.timers.comm += build_timer.comm;
     out
@@ -485,12 +488,20 @@ pub fn color_rank(
 /// undecodable payload, a paranoid-audit divergence — surface as
 /// `Err(CommError)` instead of panicking the rank thread, so
 /// `Plan::try_run` can report them per rank.
-pub(crate) fn color_rank_planned(
+///
+/// Async: every blocking comm operation here is a yield point (mailbox
+/// arrival inside the `_async` comm cores), so the rank is a state
+/// machine the session scheduler can multiplex M-on-N.  Kernel scratch
+/// is checked out of `pool` per compute segment and returned before the
+/// next suspension — a suspended rank pins only its colors/mask/loser
+/// buffers, and the number of live worker pools is bounded by the
+/// scheduler's worker budget rather than the modeled rank count.
+pub(crate) async fn color_rank_planned(
     comm: &mut Comm,
     lg: &LocalGraph,
     cfg: DistConfig,
     backend: &dyn LocalBackend,
-    scratch: &mut KernelScratch,
+    pool: &ScratchPool,
     xscratch: &mut ExchangeScratch,
 ) -> Result<RankOutcome, CommError> {
     let two_layers = match cfg.problem {
@@ -500,10 +511,6 @@ pub(crate) fn color_rank_planned(
     let mut timers = SplitTimer::new();
     let n_all = lg.n_local + lg.n_ghost;
     let mut colors: Vec<Color> = vec![0; n_all];
-    // `scratch` is the rank's persistent kernel state (priority caches +
-    // worker pool), reused by every kernel call; `exec` is a cheap
-    // handle on the same pool for the detection scans
-    let exec = scratch.executor();
 
     // ---- initial local coloring (ghosts unknown/uncolored), overlapped
     // with the boundary-color exchange (§3): color the boundary prefix,
@@ -516,13 +523,15 @@ pub(crate) fn color_rank_planned(
     if pre > 0 {
         mask[..pre].fill(true);
         timers.comp(|| {
-            backend.color_with_scratch(
-                cfg.problem,
-                &LocalView { graph: &lg.graph, mask: &mask },
-                &mut colors,
-                seed0,
-                scratch,
-            )
+            pool.with(|scratch| {
+                backend.color_with_scratch(
+                    cfg.problem,
+                    &LocalView { graph: &lg.graph, mask: &mask },
+                    &mut colors,
+                    seed0,
+                    scratch,
+                )
+            })
         });
     }
     let mut comm_rounds = 1usize;
@@ -531,19 +540,24 @@ pub(crate) fn color_rank_planned(
         mask[..pre].fill(false);
         mask[pre..lg.n_local].fill(true);
         timers.comp(|| {
-            backend.color_with_scratch(
-                cfg.problem,
-                &LocalView { graph: &lg.graph, mask: &mask },
-                &mut colors,
-                seed0,
-                scratch,
-            )
+            pool.with(|scratch| {
+                backend.color_with_scratch(
+                    cfg.problem,
+                    &LocalView { graph: &lg.graph, mask: &mask },
+                    &mut colors,
+                    seed0,
+                    scratch,
+                )
+            })
         });
         mask[pre..lg.n_local].fill(false);
     } else {
         mask[..pre].fill(false);
     }
-    timers.comm(|| exchange_full_recv(comm, lg, &mut colors))?;
+    let t0 = std::time::Instant::now();
+    let recv = exchange_full_recv_async(comm, lg, &mut colors).await;
+    timers.comm_add(t0);
+    recv?;
 
     // paranoid audits run after *every* exchange on their own tag
     // stream; the epoch counter advances in lockstep on all ranks
@@ -551,8 +565,10 @@ pub(crate) fn color_rank_planned(
     let mut paranoid_checks = 0u64;
     let mut paranoid_epoch = 0u64;
     if cfg.paranoid {
-        paranoid_checks +=
-            timers.comm(|| paranoid_ghost_check(comm, lg, &colors, TAG_PARANOID + paranoid_epoch))?;
+        let t0 = std::time::Instant::now();
+        let audited = paranoid_ghost_check(comm, lg, &colors, TAG_PARANOID + paranoid_epoch).await;
+        timers.comm_add(t0);
+        paranoid_checks += audited?;
         paranoid_epoch += 1;
     }
 
@@ -577,11 +593,17 @@ pub(crate) fn color_rank_planned(
     let mut local_losers: Vec<u32> = Vec::new();
     let mut ghost_losers: Vec<u32> = Vec::new();
     let mut found = timers.comp(|| {
-        detect_conflicts(lg, &colors, cfg, &exec, &mut local_losers, &mut ghost_losers)
+        pool.with(|scratch| {
+            let exec = scratch.executor();
+            detect_conflicts(lg, &colors, cfg, &exec, &mut local_losers, &mut ghost_losers)
+        })
     });
     conflicts_total += found;
     loop {
-        let global = timers.comm(|| comm.allreduce_sum(TAG_REDUCE + 2 * round as u64, found))?;
+        let t0 = std::time::Instant::now();
+        let global = comm.allreduce_sum_async(TAG_REDUCE + 2 * round as u64, found).await;
+        timers.comm_add(t0);
+        let global = global?;
         if global == 0 {
             break;
         }
@@ -606,13 +628,15 @@ pub(crate) fn color_rank_planned(
                 for &v in &local_losers {
                     mask[v as usize] = true;
                 }
-                backend.color_with_scratch(
-                    cfg.problem,
-                    &LocalView { graph: &lg.graph, mask: &mask },
-                    &mut colors,
-                    cfg.seed ^ ((round as u64) << 8) ^ lg.rank as u64,
-                    scratch,
-                );
+                pool.with(|scratch| {
+                    backend.color_with_scratch(
+                        cfg.problem,
+                        &LocalView { graph: &lg.graph, mask: &mask },
+                        &mut colors,
+                        cfg.seed ^ ((round as u64) << 8) ^ lg.rank as u64,
+                        scratch,
+                    )
+                });
                 for &v in &local_losers {
                     mask[v as usize] = false;
                 }
@@ -628,25 +652,46 @@ pub(crate) fn color_rank_planned(
             // candidate the incoming deltas invalidate is re-scanned in
             // detect_fixup below
             let t0 = std::time::Instant::now();
-            let early = timers.comp(|| detect_early(lg, &colors, cfg, &exec));
+            let early = timers.comp(|| {
+                pool.with(|scratch| {
+                    let exec = scratch.executor();
+                    detect_early(lg, &colors, cfg, &exec)
+                })
+            });
             overlap_saved_ns += t0.elapsed().as_nanos() as u64;
-            timers.comm(|| exchange_delta_finish(comm, lg, &mut colors, round, xscratch))?;
+            let t0 = std::time::Instant::now();
+            let fin = exchange_delta_finish_async(comm, lg, &mut colors, round, xscratch).await;
+            timers.comm_add(t0);
+            fin?;
             local_losers.clear();
             ghost_losers.clear();
             found = timers.comp(|| {
-                detect_fixup(lg, &colors, cfg, &exec, early, xscratch, &mut local_losers, &mut ghost_losers)
+                pool.with(|scratch| {
+                    let exec = scratch.executor();
+                    detect_fixup(lg, &colors, cfg, &exec, early, xscratch, &mut local_losers, &mut ghost_losers)
+                })
             });
         } else {
-            timers.comm(|| exchange_delta(comm, lg, &mut colors, &local_losers, round, xscratch))?;
+            timers.comm(|| exchange_delta_start(comm, lg, &colors, &local_losers, round, xscratch))?;
+            let t0 = std::time::Instant::now();
+            let fin = exchange_delta_finish_async(comm, lg, &mut colors, round, xscratch).await;
+            timers.comm_add(t0);
+            fin?;
             local_losers.clear();
             ghost_losers.clear();
             found = timers.comp(|| {
-                detect_conflicts(lg, &colors, cfg, &exec, &mut local_losers, &mut ghost_losers)
+                pool.with(|scratch| {
+                    let exec = scratch.executor();
+                    detect_conflicts(lg, &colors, cfg, &exec, &mut local_losers, &mut ghost_losers)
+                })
             });
         }
         if cfg.paranoid {
-            paranoid_checks += timers
-                .comm(|| paranoid_ghost_check(comm, lg, &colors, TAG_PARANOID + paranoid_epoch))?;
+            let t0 = std::time::Instant::now();
+            let audited =
+                paranoid_ghost_check(comm, lg, &colors, TAG_PARANOID + paranoid_epoch).await;
+            timers.comm_add(t0);
+            paranoid_checks += audited?;
             paranoid_epoch += 1;
         }
         conflicts_total += found;
@@ -660,7 +705,10 @@ pub(crate) fn color_rank_planned(
         local_losers.clear();
         ghost_losers.clear();
         let leftover = timers.comp(|| {
-            detect_conflicts(lg, &colors, cfg, &exec, &mut local_losers, &mut ghost_losers)
+            pool.with(|scratch| {
+                let exec = scratch.executor();
+                detect_conflicts(lg, &colors, cfg, &exec, &mut local_losers, &mut ghost_losers)
+            })
         });
         if leftover != 0 {
             return Err(CommError::Paranoid {
@@ -1102,6 +1150,17 @@ pub fn exchange_full(
     exchange_full_recv(comm, lg, colors)
 }
 
+/// Async [`exchange_full`] (send sync + suspend on the receive half).
+#[doc(hidden)]
+pub async fn exchange_full_async(
+    comm: &mut Comm,
+    lg: &LocalGraph,
+    colors: &mut [Color],
+) -> Result<(), CommError> {
+    exchange_full_send(comm, lg, colors)?;
+    exchange_full_recv_async(comm, lg, colors).await
+}
+
 /// Send half of the initial exchange.  Sends never block on this
 /// substrate (unbounded channels — the analogue of `MPI_Isend`), so the
 /// driver launches this before coloring the interior and overlaps the
@@ -1143,13 +1202,25 @@ pub fn exchange_full_recv(
     lg: &LocalGraph,
     colors: &mut [Color],
 ) -> Result<(), CommError> {
+    par::block_on(exchange_full_recv_async(comm, lg, colors))
+}
+
+/// Async core of [`exchange_full_recv`]: suspends at each neighbor
+/// receive (and inside the NACK/retransmit recovery those receives
+/// service) instead of blocking an OS thread.
+#[doc(hidden)]
+pub async fn exchange_full_recv_async(
+    comm: &mut Comm,
+    lg: &LocalGraph,
+    colors: &mut [Color],
+) -> Result<(), CommError> {
     debug_assert!(lg.ghost_from[lg.rank as usize].is_empty(), "self-ghost");
     for &r in &lg.recv_ranks {
-        let buf = match comm.recv(r, TAG_COLORS) {
+        let buf = match comm.recv_async(r, TAG_COLORS).await {
             Ok(buf) => buf,
             Err(CommError::RetryExhausted { .. }) => {
                 comm.note_resync();
-                comm.recv(r, TAG_RESYNC)?
+                comm.recv_async(r, TAG_RESYNC).await?
             }
             Err(e) => return Err(e),
         };
@@ -1184,6 +1255,20 @@ pub fn exchange_delta(
 ) -> Result<(), CommError> {
     exchange_delta_start(comm, lg, colors, recolored, round, scratch)?;
     exchange_delta_finish(comm, lg, colors, round, scratch)
+}
+
+/// Async [`exchange_delta`] (start is send-only and stays sync).
+#[doc(hidden)]
+pub async fn exchange_delta_async(
+    comm: &mut Comm,
+    lg: &LocalGraph,
+    colors: &mut [Color],
+    recolored: &[u32],
+    round: usize,
+    scratch: &mut ExchangeScratch,
+) -> Result<(), CommError> {
+    exchange_delta_start(comm, lg, colors, recolored, round, scratch)?;
+    exchange_delta_finish_async(comm, lg, colors, round, scratch).await
 }
 
 /// Send half of [`exchange_delta`]: stage (position, color) pairs into
@@ -1265,10 +1350,24 @@ pub fn exchange_delta_finish(
     round: usize,
     scratch: &mut ExchangeScratch,
 ) -> Result<(), CommError> {
+    par::block_on(exchange_delta_finish_async(comm, lg, colors, round, scratch))
+}
+
+/// Async core of [`exchange_delta_finish`]: each neighbor drain is a
+/// suspension point, so a rank waiting on a slow (or retransmitting)
+/// peer yields its worker instead of parking an OS thread.
+#[doc(hidden)]
+pub async fn exchange_delta_finish_async(
+    comm: &mut Comm,
+    lg: &LocalGraph,
+    colors: &mut [Color],
+    round: usize,
+    scratch: &mut ExchangeScratch,
+) -> Result<(), CommError> {
     let tag = TAG_COLORS + 1 + round as u64;
     scratch.updated.clear();
     for &r in &lg.recv_ranks {
-        match comm.recv(r, tag) {
+        match comm.recv_async(r, tag).await {
             Ok(buf) => {
                 let xs = decode_u32s(&buf)?;
                 for pair in xs.chunks_exact(2) {
@@ -1281,7 +1380,7 @@ pub fn exchange_delta_finish(
             }
             Err(CommError::RetryExhausted { .. }) => {
                 comm.note_resync();
-                let buf = comm.recv(r, TAG_RESYNC + 1 + round as u64)?;
+                let buf = comm.recv_async(r, TAG_RESYNC + 1 + round as u64).await?;
                 let cs = decode_u32s(&buf)?;
                 debug_assert_eq!(cs.len(), lg.ghost_from[r as usize].len());
                 for (&gl, &c) in lg.ghost_from[r as usize].iter().zip(cs.iter()) {
@@ -1304,7 +1403,7 @@ pub fn exchange_delta_finish(
 /// unique per audit epoch).  Returns the number of ghost entries
 /// compared; any divergence fails the rank with the offending global
 /// id and both colors.
-fn paranoid_ghost_check(
+async fn paranoid_ghost_check(
     comm: &mut Comm,
     lg: &LocalGraph,
     colors: &[Color],
@@ -1319,7 +1418,7 @@ fn paranoid_ghost_check(
     }
     let mut checked = 0u64;
     for &r in &lg.recv_ranks {
-        let buf = comm.recv(r, tag)?;
+        let buf = comm.recv_async(r, tag).await?;
         let cs = decode_u32s(&buf)?;
         debug_assert_eq!(cs.len(), lg.ghost_from[r as usize].len());
         for (&gl, &want) in lg.ghost_from[r as usize].iter().zip(cs.iter()) {

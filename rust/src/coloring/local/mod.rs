@@ -133,6 +133,67 @@ impl std::fmt::Debug for KernelScratch {
     }
 }
 
+/// A checkout pool of [`KernelScratch`] shared by every rank task of a
+/// session.  Async rank bodies check a scratch out only for the span of
+/// one compute segment — never across an `.await` — so the number of
+/// live scratches (and their worker pools) is bounded by the scheduler's
+/// worker budget, not by the modeled rank count: a p=1024 run on 8
+/// workers touches at most 8 scratches.
+///
+/// Two properties make sharing bit-safe: `prio32` is id-hashed and
+/// seed-independent, and `prio64` is keyed by its seed and recomputed on
+/// mismatch, so whichever rank last filled a scratch leaves caches any
+/// other rank can extend or overwrite without changing results.
+///
+/// Panic safety is by construction — [`ScratchPool::with`] checks out
+/// with a plain `Vec::pop` and only pushes the scratch back after `f`
+/// returns.  A panicking kernel just drops its checkout; the pool holds
+/// no lock across `f`, so nothing is poisoned and the next `with`
+/// allocates a replacement on demand.  This is the fix for the PR 6
+/// caveat where a panicked rank poisoned session scratch for good.
+pub struct ScratchPool {
+    threads: usize,
+    free: std::sync::Mutex<Vec<KernelScratch>>,
+}
+
+impl ScratchPool {
+    /// Empty pool whose scratches run `threads` worker threads each
+    /// (0 = one per core); scratches are created lazily on first use.
+    pub fn new(threads: usize) -> Self {
+        ScratchPool { threads, free: std::sync::Mutex::new(Vec::new()) }
+    }
+
+    /// The per-scratch worker-thread knob this pool was built with.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run `f` with a checked-out scratch, returning it afterwards.  If
+    /// `f` panics the scratch is dropped with the unwind (never
+    /// poisoned, never returned half-updated) and the panic propagates.
+    pub fn with<T>(&self, f: impl FnOnce(&mut KernelScratch) -> T) -> T {
+        let mut scratch = self
+            .free
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .pop()
+            .unwrap_or_else(|| KernelScratch::new(self.threads));
+        let out = f(&mut scratch);
+        self.free.lock().unwrap_or_else(|e| e.into_inner()).push(scratch);
+        out
+    }
+}
+
+impl std::fmt::Debug for ScratchPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let pooled = self.free.lock().map(|v| v.len()).unwrap_or(0);
+        f.debug_struct("ScratchPool")
+            .field("threads", &self.threads)
+            .field("pooled", &pooled)
+            .finish()
+    }
+}
+
 /// Color the masked vertices of `view` in place with the chosen kernel.
 /// Unmasked colors are respected as constraints and never modified.
 /// Returns the number of speculative rounds the kernel ran (1 for the

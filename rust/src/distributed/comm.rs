@@ -2,8 +2,13 @@
 //!
 //! `run_ranks(p, cost, f)` spawns `p` scoped threads, each receiving a
 //! [`Comm`] handle.  Point-to-point messages are `Vec<u8>` over per-rank
-//! mpsc channels with selective receive.  On top of that, three kinds of
-//! collective:
+//! waker-based [`Mailbox`] endpoints with selective receive: every
+//! blocking `Comm` operation has an `_async` core whose single yield
+//! point is mailbox arrival, and the classic blocking names are
+//! [`par::block_on`] wrappers over those cores — so the same protocol
+//! code runs thread-per-rank here and M-ranks-on-N-workers under the
+//! session scheduler ([`par::drive_tasks`]) bit-for-bit.  On top of
+//! that, three kinds of collective:
 //!
 //! * **Neighbor collectives** — [`Comm::neighbor_alltoallv`] exchanges
 //!   personalized payloads over a *known sparse topology* (both sides
@@ -68,11 +73,13 @@
 //! reserved for the control plane (NACK and rank-down notices).
 
 use std::collections::{HashMap, VecDeque};
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::task::{Context, Poll, Waker};
 use std::time::Instant;
 
 use super::cost::{CommStats, CostModel, Topology};
 use super::fault::{self, FaultAction, FaultPlan};
+use crate::util::par;
 
 type Packet = (u32, u64, Vec<u8>); // (from, tag, payload)
 
@@ -80,12 +87,113 @@ type Packet = (u32, u64, Vec<u8>); // (from, tag, payload)
 const CTRL_NACK: u64 = u64::MAX;
 const CTRL_DOWN: u64 = u64::MAX - 1;
 
+/// One rank's inbound queue: a completion-based endpoint instead of the
+/// old blocking mpsc channel.  A consumer that finds the queue empty
+/// registers a [`Waker`] and suspends; every producer push wakes it.
+/// This is what lets a rank be a suspendable state machine — under the
+/// cooperative scheduler the waker requeues the rank task, while the
+/// legacy thread-per-rank drivers park the OS thread via
+/// [`par::block_on`]'s unpark waker.  Single consumer (the owning
+/// rank), many producers; per-producer push order is preserved, which
+/// is the FIFO the per-stream seqno/bit-parity contract rides on.
+pub(crate) struct Mailbox {
+    inner: Mutex<MailboxInner>,
+}
+
+#[derive(Default)]
+struct MailboxInner {
+    queue: VecDeque<Packet>,
+    waiter: Option<Waker>,
+}
+
+impl Mailbox {
+    fn new() -> Arc<Mailbox> {
+        Arc::new(Mailbox { inner: Mutex::new(MailboxInner::default()) })
+    }
+
+    /// Enqueue a packet and wake the consumer, if one is suspended.
+    /// The waker is taken under the queue lock, so a consumer that
+    /// registered before this push cannot miss it (no lost wakeups).
+    fn push(&self, pkt: Packet) {
+        let waker = {
+            let mut inner = self.inner.lock().unwrap();
+            inner.queue.push_back(pkt);
+            inner.waiter.take()
+        };
+        if let Some(w) = waker {
+            w.wake();
+        }
+    }
+
+    /// Pop the next packet, or register `cx`'s waker and suspend.
+    fn poll_pop(&self, cx: &mut Context<'_>) -> Poll<Packet> {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(pkt) = inner.queue.pop_front() {
+            return Poll::Ready(pkt);
+        }
+        inner.waiter = Some(cx.waker().clone());
+        Poll::Pending
+    }
+}
+
+/// The mailboxes of one simulated-MPI world (one per rank).  A run —
+/// a `plan.run()`, a plan construction, or a legacy `run_ranks*` call —
+/// owns exactly one domain, so concurrent runs on one session never
+/// share wires.
+pub(crate) struct CommDomain {
+    boxes: Vec<Arc<Mailbox>>,
+}
+
+impl CommDomain {
+    pub(crate) fn new(nranks: usize) -> CommDomain {
+        assert!(nranks >= 1);
+        CommDomain { boxes: (0..nranks).map(|_| Mailbox::new()).collect() }
+    }
+
+    /// The communicator handle for `rank`.  A zero-rate fault plan is
+    /// treated exactly like `None` — no framing, byte-identical wire
+    /// traffic.
+    pub(crate) fn comm(&self, rank: u32, topo: Topology, faults: Option<FaultPlan>) -> Comm {
+        let nranks = self.boxes.len();
+        Comm {
+            rank,
+            nranks: nranks as u32,
+            peers: self.boxes.clone(),
+            pending: VecDeque::new(),
+            topo,
+            stats: CommStats::default(),
+            faults: faults.filter(|p| p.enabled()),
+            tx_seq: HashMap::new(),
+            rx_seq: HashMap::new(),
+            unacked: HashMap::new(),
+            early: HashMap::new(),
+            down: vec![false; nranks],
+        }
+    }
+
+    /// Broadcast `from`'s down notice without a [`Comm`] handle — the
+    /// scheduler's panic hook, where the panicked rank's communicator
+    /// has already been dropped mid-unwind (the moral twin of
+    /// [`Comm::abort`]).
+    pub(crate) fn post_down(&self, from: u32) {
+        for (r, mb) in self.boxes.iter().enumerate() {
+            if r as u32 != from {
+                mb.push((from, CTRL_DOWN, Vec::new()));
+            }
+        }
+    }
+}
+
 /// Structured communicator failure: what used to be an
 /// `expect("rank channel closed")` panic now surfaces per rank, so one
 /// crashed rank produces an error report instead of a poisoned session.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum CommError {
-    /// The underlying channel is gone (the run is tearing down).
+    /// The underlying endpoint is gone (the run is tearing down).
+    /// Retained for match compatibility: the mailbox transport keeps
+    /// every rank's queue alive for the whole run, so current drivers
+    /// never construct it — [`CommError::RankDown`] is what a dead
+    /// peer looks like now.
     ChannelClosed,
     /// A peer rank crashed (panicked) mid-run and broadcast a down
     /// notice before unwinding.
@@ -117,12 +225,18 @@ impl std::fmt::Display for CommError {
 
 impl std::error::Error for CommError {}
 
-/// Per-rank communicator handle (not Clone: one per rank thread).
+/// Per-rank communicator handle (not Clone: one per rank).
+///
+/// Every blocking operation has an async core (`*_async`) whose only
+/// suspension point is the mailbox wait in [`Comm::pull`]; the classic
+/// blocking methods are thin [`par::block_on`] wrappers over those
+/// cores, so the thread-per-rank drivers and the cooperative session
+/// runtime execute the *same* protocol code path bit for bit.
 pub struct Comm {
     rank: u32,
     nranks: u32,
-    senders: Vec<Sender<Packet>>,
-    inbox: Receiver<Packet>,
+    /// all ranks' mailboxes; `peers[rank]` is our own inbox
+    peers: Vec<Arc<Mailbox>>,
     /// out-of-order packets waiting for a matching recv
     pending: VecDeque<Packet>,
     topo: Topology,
@@ -172,7 +286,7 @@ impl Comm {
         self.topo
     }
 
-    /// Tagged send. Never blocks (unbounded channel).
+    /// Tagged send. Never blocks (unbounded mailbox).
     pub fn send(&mut self, to: u32, tag: u64, payload: Vec<u8>) -> Result<(), CommError> {
         self.account_send(to, payload.len());
         self.transport(to, tag, payload, false)
@@ -223,9 +337,8 @@ impl Comm {
     }
 
     fn push_raw(&mut self, to: u32, tag: u64, payload: Vec<u8>) -> Result<(), CommError> {
-        self.senders[to as usize]
-            .send((self.rank, tag, payload))
-            .map_err(|_| CommError::ChannelClosed)
+        self.peers[to as usize].push((self.rank, tag, payload));
+        Ok(())
     }
 
     /// Frame one attempt of a payload, apply the plan's verdict, and put
@@ -292,21 +405,28 @@ impl Comm {
     }
 
     /// Broadcast a down notice to every peer so their blocking receives
-    /// fail fast with [`CommError::RankDown`] instead of hanging.  Send
-    /// errors are ignored — a peer that already finished has dropped its
-    /// inbox, and that is fine.
+    /// fail fast with [`CommError::RankDown`] instead of hanging.  A
+    /// peer that already finished simply never drains it — that is
+    /// fine.
     pub fn abort(&mut self) {
-        for (r, s) in self.senders.iter().enumerate() {
+        for (r, mb) in self.peers.iter().enumerate() {
             if r as u32 != self.rank {
-                let _ = s.send((self.rank, CTRL_DOWN, Vec::new()));
+                mb.push((self.rank, CTRL_DOWN, Vec::new()));
             }
         }
     }
 
-    /// Pull one packet off the inbox, servicing control traffic inline.
-    /// `Ok(None)` means a control packet was consumed — callers loop.
-    fn pull(&mut self) -> Result<Option<Packet>, CommError> {
-        let pkt = self.inbox.recv().map_err(|_| CommError::ChannelClosed)?;
+    /// Pull one packet off our mailbox, servicing control traffic
+    /// inline.  `Ok(None)` means a control packet was consumed —
+    /// callers loop.  This await is *the* yield point of the entire
+    /// communicator: every blocking operation suspends here and
+    /// nowhere else, which is what makes a rank schedulable as a
+    /// state machine.  NACK service happens on the way out, so a
+    /// sender suspended in any receive — including collective tree
+    /// hops — still retransmits and recovery cannot deadlock.
+    async fn pull(&mut self) -> Result<Option<Packet>, CommError> {
+        let mailbox = Arc::clone(&self.peers[self.rank as usize]);
+        let pkt = std::future::poll_fn(|cx| mailbox.poll_pop(cx)).await;
         match pkt.1 {
             CTRL_DOWN => {
                 self.down[pkt.0 as usize] = true;
@@ -354,9 +474,8 @@ impl Comm {
         let mut p = Vec::with_capacity(12);
         p.extend_from_slice(&tag.to_le_bytes());
         p.extend_from_slice(&seqno.to_le_bytes());
-        self.senders[to as usize]
-            .send((self.rank, CTRL_NACK, p))
-            .map_err(|_| CommError::ChannelClosed)
+        self.peers[to as usize].push((self.rank, CTRL_NACK, p));
+        Ok(())
     }
 
     /// Run one candidate packet through the acceptance state machine.
@@ -432,6 +551,12 @@ impl Comm {
 
     /// Blocking selective receive: next message from `from` with `tag`.
     pub fn recv(&mut self, from: u32, tag: u64) -> Result<Vec<u8>, CommError> {
+        par::block_on(self.recv_async(from, tag))
+    }
+
+    /// Async core of [`Comm::recv`]: suspends (rather than blocking an
+    /// OS thread) whenever the mailbox runs dry.
+    pub async fn recv_async(&mut self, from: u32, tag: u64) -> Result<Vec<u8>, CommError> {
         let t0 = Instant::now();
         loop {
             if let Some(payload) = self.take_early(from, tag) {
@@ -445,7 +570,7 @@ impl Comm {
                     if self.down[from as usize] {
                         return Err(CommError::RankDown { rank: from });
                     }
-                    match self.pull()? {
+                    match self.pull().await? {
                         Some(pkt) if pkt.0 == from && pkt.1 == tag => Some(pkt),
                         Some(pkt) => {
                             self.pending.push_back(pkt);
@@ -506,6 +631,18 @@ impl Comm {
         self.neighbor_alltoallv_finish(tag, recv_from)
     }
 
+    /// Async core of [`Comm::neighbor_alltoallv`].
+    pub async fn neighbor_alltoallv_async(
+        &mut self,
+        tag: u64,
+        send_to: &[u32],
+        bufs: Vec<Vec<u8>>,
+        recv_from: &[u32],
+    ) -> Result<Vec<Vec<u8>>, CommError> {
+        self.neighbor_alltoallv_start(tag, send_to, bufs)?;
+        self.neighbor_alltoallv_finish_async(tag, recv_from).await
+    }
+
     /// Start half of [`Comm::neighbor_alltoallv`]: post every send and
     /// return immediately (sends never block on this substrate — the
     /// analogue of `MPI_Ineighbor_alltoallv`).  The caller owes a
@@ -539,7 +676,22 @@ impl Comm {
         tag: u64,
         recv_from: &[u32],
     ) -> Result<Vec<Vec<u8>>, CommError> {
-        recv_from.iter().map(|&r| self.recv(r, tag)).collect()
+        par::block_on(self.neighbor_alltoallv_finish_async(tag, recv_from))
+    }
+
+    /// Async core of [`Comm::neighbor_alltoallv_finish`]: each pending
+    /// peer receive is a yield point, so a rank waiting on a slow
+    /// neighbor surrenders its worker instead of pinning it.
+    pub async fn neighbor_alltoallv_finish_async(
+        &mut self,
+        tag: u64,
+        recv_from: &[u32],
+    ) -> Result<Vec<Vec<u8>>, CommError> {
+        let mut out = Vec::with_capacity(recv_from.len());
+        for &r in recv_from {
+            out.push(self.recv_async(r, tag).await?);
+        }
+        Ok(out)
     }
 
     /// Personalized exchange where only the *send* side knows the
@@ -550,6 +702,16 @@ impl Comm {
     /// incoming `(from, payload)` in arrival order — callers index by
     /// `from` for determinism.  Consumes tags `tag..tag+3`.
     pub fn sparse_alltoallv(
+        &mut self,
+        tag: u64,
+        peers: &[u32],
+        bufs: Vec<Vec<u8>>,
+    ) -> Result<Vec<(u32, Vec<u8>)>, CommError> {
+        par::block_on(self.sparse_alltoallv_async(tag, peers, bufs))
+    }
+
+    /// Async core of [`Comm::sparse_alltoallv`].
+    pub async fn sparse_alltoallv_async(
         &mut self,
         tag: u64,
         peers: &[u32],
@@ -567,25 +729,39 @@ impl Comm {
         // 4p-byte counts vector: two tree phases, same accounting as
         // `reduce_then_bcast`
         self.charge_collective(2, 4 * p);
-        self.allreduce_u32_sum_vec(tag, &mut counts)?;
+        self.allreduce_u32_sum_vec(tag, &mut counts).await?;
         let expect = counts[self.rank as usize] as usize;
         for (&r, buf) in peers.iter().zip(bufs) {
             self.send(r, tag + 2, buf)?;
         }
         let t0 = Instant::now();
-        let out = (0..expect).map(|_| self.recv_any(tag + 2)).collect();
+        let mut out = Vec::with_capacity(expect);
+        for _ in 0..expect {
+            out.push(self.recv_any(tag + 2).await?);
+        }
         self.stats.wall_ns += t0.elapsed().as_nanos() as u64;
-        out
+        Ok(out)
     }
 
     /// Sum-allreduce of a u64 (the `Allreduce(conflicts, SUM)` of Alg. 2).
     pub fn allreduce_sum(&mut self, tag: u64, x: u64) -> Result<u64, CommError> {
-        self.reduce_then_bcast(tag, x, |a, b| a + b)
+        par::block_on(self.allreduce_sum_async(tag, x))
+    }
+
+    /// Async core of [`Comm::allreduce_sum`]: every tree-collective
+    /// phase hop is a yield point.
+    pub async fn allreduce_sum_async(&mut self, tag: u64, x: u64) -> Result<u64, CommError> {
+        self.reduce_then_bcast(tag, x, |a, b| a + b).await
     }
 
     /// Max-allreduce of a u64.
     pub fn allreduce_max(&mut self, tag: u64, x: u64) -> Result<u64, CommError> {
-        self.reduce_then_bcast(tag, x, |a, b| a.max(b))
+        par::block_on(self.allreduce_max_async(tag, x))
+    }
+
+    /// Async core of [`Comm::allreduce_max`].
+    pub async fn allreduce_max_async(&mut self, tag: u64, x: u64) -> Result<u64, CommError> {
+        self.reduce_then_bcast(tag, x, |a, b| a.max(b)).await
     }
 
     /// Account `phases` collective tree phases moving `bytes` per rank
@@ -605,7 +781,7 @@ impl Comm {
     /// contributions through rank 0; the PR-2 flat binomial tree sent
     /// every hop over the same links).  Modeled time charges each
     /// sub-tree's α-steps on its own link class, twice (two phases).
-    fn reduce_then_bcast(
+    async fn reduce_then_bcast(
         &mut self,
         tag: u64,
         x: u64,
@@ -613,26 +789,30 @@ impl Comm {
     ) -> Result<u64, CommError> {
         self.stats.collectives += 1;
         self.charge_collective(2, 8);
-        let out = self.tree_allreduce_bytes(tag, x.to_le_bytes().to_vec(), |acc, other| {
-            let a = u64::from_le_bytes(acc[..8].try_into().unwrap());
-            let b = u64::from_le_bytes(other[..8].try_into().unwrap());
-            acc.copy_from_slice(&op(a, b).to_le_bytes());
-        })?;
+        let out = self
+            .tree_allreduce_bytes(tag, x.to_le_bytes().to_vec(), |acc, other| {
+                let a = u64::from_le_bytes(acc[..8].try_into().unwrap());
+                let b = u64::from_le_bytes(other[..8].try_into().unwrap());
+                acc.copy_from_slice(&op(a, b).to_le_bytes());
+            })
+            .await?;
         Ok(u64::from_le_bytes(out[..8].try_into().unwrap()))
     }
 
     /// Element-wise sum-allreduce of a u32 vector over the same binomial
     /// tree (feeds the sparse-exchange discovery).  All ranks must pass
     /// equal-length vectors.
-    fn allreduce_u32_sum_vec(&mut self, tag: u64, v: &mut [u32]) -> Result<(), CommError> {
-        let out = self.tree_allreduce_bytes(tag, encode_u32s(v), |acc, other| {
-            debug_assert_eq!(acc.len(), other.len());
-            for (a, b) in acc.chunks_exact_mut(4).zip(other.chunks_exact(4)) {
-                let s = u32::from_le_bytes(a.try_into().unwrap())
-                    .wrapping_add(u32::from_le_bytes(b.try_into().unwrap()));
-                a.copy_from_slice(&s.to_le_bytes());
-            }
-        })?;
+    async fn allreduce_u32_sum_vec(&mut self, tag: u64, v: &mut [u32]) -> Result<(), CommError> {
+        let out = self
+            .tree_allreduce_bytes(tag, encode_u32s(v), |acc, other| {
+                debug_assert_eq!(acc.len(), other.len());
+                for (a, b) in acc.chunks_exact_mut(4).zip(other.chunks_exact(4)) {
+                    let s = u32::from_le_bytes(a.try_into().unwrap())
+                        .wrapping_add(u32::from_le_bytes(b.try_into().unwrap()));
+                    a.copy_from_slice(&s.to_le_bytes());
+                }
+            })
+            .await?;
         for (x, c) in v.iter_mut().zip(out.chunks_exact(4)) {
             *x = u32::from_le_bytes(c.try_into().unwrap());
         }
@@ -659,7 +839,7 @@ impl Comm {
     /// combine order differs between topologies, which is invisible to
     /// callers: every op reduced here (`+`, `max`, element-wise
     /// `wrapping_add`) is associative and commutative.
-    fn tree_allreduce_bytes(
+    async fn tree_allreduce_bytes(
         &mut self,
         tag: u64,
         mine: Vec<u8>,
@@ -689,7 +869,7 @@ impl Comm {
             }
             let child = local + mask;
             if child < node_size {
-                let b = self.recv_raw(node_base + child, tag)?;
+                let b = self.recv_raw(node_base + child, tag).await?;
                 combine(&mut acc, &b);
             }
             mask <<= 1;
@@ -705,7 +885,7 @@ impl Comm {
                 }
                 let child = node + mask;
                 if child < nnodes {
-                    let b = self.recv_raw(child * gpn, tag)?;
+                    let b = self.recv_raw(child * gpn, tag).await?;
                     combine(&mut acc, &b);
                 }
                 mask <<= 1;
@@ -714,7 +894,7 @@ impl Comm {
             let lowbit =
                 if node == 0 { nnodes.next_power_of_two() } else { node & node.wrapping_neg() };
             if node != 0 {
-                acc = self.recv_raw((node - lowbit) * gpn, tag + 1)?;
+                acc = self.recv_raw((node - lowbit) * gpn, tag + 1).await?;
             }
             let mut m = lowbit >> 1;
             while m >= 1 {
@@ -729,7 +909,7 @@ impl Comm {
         let lowbit =
             if local == 0 { node_size.next_power_of_two() } else { local & local.wrapping_neg() };
         if local != 0 {
-            acc = self.recv_raw(node_base + (local - lowbit), tag + 1)?;
+            acc = self.recv_raw(node_base + (local - lowbit), tag + 1).await?;
         }
         let mut m = lowbit >> 1;
         while m >= 1 {
@@ -743,7 +923,12 @@ impl Comm {
 
     /// Barrier (allreduce of nothing).
     pub fn barrier(&mut self, tag: u64) -> Result<(), CommError> {
-        self.allreduce_max(tag, 0)?;
+        par::block_on(self.barrier_async(tag))
+    }
+
+    /// Async core of [`Comm::barrier`].
+    pub async fn barrier_async(&mut self, tag: u64) -> Result<(), CommError> {
+        self.allreduce_max_async(tag, 0).await?;
         Ok(())
     }
 
@@ -761,7 +946,7 @@ impl Comm {
         self.push_raw(to, tag, payload)
     }
 
-    fn recv_raw(&mut self, from: u32, tag: u64) -> Result<Vec<u8>, CommError> {
+    async fn recv_raw(&mut self, from: u32, tag: u64) -> Result<Vec<u8>, CommError> {
         loop {
             if let Some(pos) = self.pending.iter().position(|&(f, t, _)| f == from && t == tag) {
                 return Ok(self.pending.remove(pos).unwrap().2);
@@ -769,7 +954,7 @@ impl Comm {
             if self.down[from as usize] {
                 return Err(CommError::RankDown { rank: from });
             }
-            match self.pull()? {
+            match self.pull().await? {
                 Some(pkt) if pkt.0 == from && pkt.1 == tag => return Ok(pkt.2),
                 Some(pkt) => self.pending.push_back(pkt),
                 None => {}
@@ -777,8 +962,9 @@ impl Comm {
         }
     }
 
-    /// Blocking receive of the next message with `tag` from *any* rank.
-    fn recv_any(&mut self, tag: u64) -> Result<(u32, Vec<u8>), CommError> {
+    /// Receive the next message with `tag` from *any* rank, suspending
+    /// (not spinning) while the mailbox is empty.
+    async fn recv_any(&mut self, tag: u64) -> Result<(u32, Vec<u8>), CommError> {
         loop {
             if let Some(hit) = self.take_early_any(tag) {
                 return Ok(hit);
@@ -789,7 +975,7 @@ impl Comm {
                     if let Some(r) = self.down.iter().position(|&d| d) {
                         return Err(CommError::RankDown { rank: r as u32 });
                     }
-                    match self.pull()? {
+                    match self.pull().await? {
                         Some(pkt) if pkt.1 == tag => Some(pkt),
                         Some(pkt) => {
                             self.pending.push_back(pkt);
@@ -892,34 +1078,21 @@ pub fn run_ranks_cfg<T: Send>(
     f: impl Fn(&mut Comm) -> T + Sync,
 ) -> Vec<std::thread::Result<T>> {
     assert!(nranks >= 1);
-    let mut senders: Vec<Sender<Packet>> = Vec::with_capacity(nranks);
-    let mut inboxes: Vec<Receiver<Packet>> = Vec::with_capacity(nranks);
-    for _ in 0..nranks {
-        let (tx, rx) = channel();
-        senders.push(tx);
-        inboxes.push(rx);
-    }
+    // Deliberately thread-per-rank: `f` is a *sync* closure that blocks
+    // (via `par::block_on`) inside Comm calls, so cooperative M-on-N
+    // scheduling would deadlock the moment ranks > workers.  The async
+    // session runtime (`session::Session::run_many`) drives the same
+    // protocol through `drive_tasks` instead; this entry point stays as
+    // the simple harness for tests, benches, and one-shot CLI runs.
+    let domain = CommDomain::new(nranks);
+    let domain = &domain;
+    let faults = &faults;
     let f = &f;
     std::thread::scope(|scope| {
         let mut handles = Vec::with_capacity(nranks);
-        for (rank, inbox) in inboxes.into_iter().enumerate() {
-            let senders = senders.clone();
+        for rank in 0..nranks {
             handles.push(scope.spawn(move || {
-                let mut comm = Comm {
-                    rank: rank as u32,
-                    nranks: nranks as u32,
-                    senders,
-                    inbox,
-                    pending: VecDeque::new(),
-                    topo,
-                    stats: CommStats::default(),
-                    faults: faults.filter(|p| p.enabled()),
-                    tx_seq: HashMap::new(),
-                    rx_seq: HashMap::new(),
-                    unacked: HashMap::new(),
-                    early: HashMap::new(),
-                    down: vec![false; nranks],
-                };
+                let mut comm = domain.comm(rank as u32, topo, faults.clone());
                 let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut comm)));
                 if out.is_err() {
                     comm.abort();
@@ -963,7 +1136,7 @@ mod tests {
     fn allreduce_vec_sums_elementwise() {
         let out = run_ranks(7, CostModel::zero(), |c| {
             let mut v = vec![c.rank(), 1, 100 + c.rank()];
-            c.allreduce_u32_sum_vec(500, &mut v).unwrap();
+            par::block_on(c.allreduce_u32_sum_vec(500, &mut v)).unwrap();
             v
         });
         for v in out {
@@ -1165,7 +1338,7 @@ mod tests {
         let topo = Topology::nvlink_ib(3);
         let out = run_ranks_topo(7, topo, |c| {
             let mut v = vec![c.rank(), 1, 100 + c.rank()];
-            c.allreduce_u32_sum_vec(500, &mut v).unwrap();
+            par::block_on(c.allreduce_u32_sum_vec(500, &mut v)).unwrap();
             v
         });
         for v in out {

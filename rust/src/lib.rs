@@ -18,12 +18,16 @@
 //! let g = generators::from_spec("mesh:16x16x16").unwrap();
 //! let part = partition::edge_balanced(&g, 8);
 //!
-//! // 1. Session: the rank runtime — persistent per-rank worker pools
-//! //    and kernel scratch, an interconnect model, a seed.  The
-//! //    topology packs ranks ("GPUs") onto nodes: NVLink-class links
-//! //    inside a node, InfiniBand-class between, and collectives that
-//! //    reduce within each node before crossing between node leaders.
-//! //    Omit `.topology(..)` for a flat interconnect.
+//! // 1. Session: the cooperative rank runtime.  Every simulated rank
+//! //    ("GPU") is an async state machine whose suspension points are
+//! //    its blocking comm operations, multiplexed onto a fixed worker
+//! //    budget — `.workers(8)` colors with p = 1024 ranks on 8 OS
+//! //    threads (`.workers(0)`, the default, resolves from
+//! //    DIST_TEST_THREADS or the core count).  The topology packs
+//! //    ranks onto nodes: NVLink-class links inside a node,
+//! //    InfiniBand-class between, and collectives that reduce within
+//! //    each node before crossing between node leaders.  Omit
+//! //    `.topology(..)` for a flat interconnect.
 //! let session = Session::builder()
 //!     .ranks(8)
 //!     .topology(Topology::nvlink_ib(4)) // 8 GPUs on 2 nodes
@@ -34,15 +38,24 @@
 //! // 2. Plan: each rank ingests only its own rows (any `GraphSource`;
 //! //    streaming sources never materialize the global edge set on a
 //! //    rank) and builds ghost layers + cut topology exactly once.
+//! //    Plans are cached per session under (graph fingerprint,
+//! //    partition fingerprint, ghost layers): re-planning the same
+//! //    input is a hash lookup, not a rebuild.
 //! let plan = session.plan(&g, &part, GhostLayers::Two);
 //!
 //! // 3. Run, repeatedly and cheaply: D1(2GL), D2, PD2, kernel and
 //! //    heuristic ablations — all reuse the plan's construction.
-//! //    Topology affects modeled accounting and collective schedule
-//! //    only: colorings are bit-identical to the flat path, and
-//! //    `RunStats` reports the intra/inter hop-class split.
+//! //    Runs need no gate: submit a batch (or call `plan.run` from
+//! //    many threads) and the runs interleave on the session's
+//! //    workers, each on private wires, bit-identical to running
+//! //    them serially.  Topology affects modeled accounting and
+//! //    collective schedule only: colorings are bit-identical to the
+//! //    flat path, and `RunStats` reports the intra/inter hop-class
+//! //    split.
 //! let d1 = plan.run(ProblemSpec::d1());
-//! let d2 = plan.run(ProblemSpec::d2());
+//! let batch = session.run_many(&[(&plan, ProblemSpec::d1()), (&plan, ProblemSpec::d2())]);
+//! let d2 = batch[1].as_ref().unwrap();
+//! assert_eq!(batch[0].as_ref().unwrap().colors, d1.colors);
 //! assert!(d1.stats.colors_used <= d2.stats.colors_used);
 //! assert_eq!(d1.stats.intra_bytes + d1.stats.inter_bytes, d1.stats.bytes);
 //! ```

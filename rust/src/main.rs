@@ -66,6 +66,10 @@ COLOR FLAGS:
   --backend B         native | pjrt                            [native]
   --partitioner P     block | edge | bfs | hash                [edge]
   --threads T         on-node kernel threads per rank; 0=auto  [0]
+  --workers W         cooperative scheduler workers that multiplex
+                      all simulated ranks (no per-rank OS threads);
+                      0 = auto: DIST_TEST_THREADS env, else one
+                      per core.  Colorings are identical for any W [0]
   --seed S            RNG seed                                 [42]
   --no-double-buffer  serial-round ablation: do not overlap the
                       delta exchanges with early conflict detection
@@ -165,6 +169,7 @@ fn cmd_color(f: Flags) -> Result<(), String> {
     let ranks = f.usize_or("ranks", 4)?;
     let seed = f.u64_or("seed", 42)?;
     let threads = f.usize_or("threads", 0)?;
+    let workers = f.usize_or("workers", 0)?;
     let algo = f.get_or("algo", "d1");
     let backend_name = f.get_or("backend", "native");
     let pk: PartitionKind = f.get_or("partitioner", "edge").parse()?;
@@ -257,6 +262,7 @@ fn cmd_color(f: Flags) -> Result<(), String> {
                 .cost(cost)
                 .topology(topo)
                 .threads(threads)
+                .workers(workers)
                 .seed(seed);
             if let Some(fp) = faults {
                 builder = builder.faults(fp);

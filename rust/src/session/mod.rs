@@ -7,21 +7,35 @@
 //!
 //! 1. **[`Session`]** — built once per process
 //!    (`Session::builder().ranks(p).cost(model).threads(t).seed(s).build()`).
-//!    Owns the rank runtime: one persistent
-//!    [`KernelScratch`](crate::coloring::local::KernelScratch) per rank,
-//!    which in turn owns that rank's persistent worker pool.  Pools park
-//!    between runs instead of respawning per call.
+//!    Owns the cooperative rank runtime: every simulated rank is an
+//!    `async` state machine whose suspension points are exactly the
+//!    blocking `Comm` operations, multiplexed M-ranks-on-N-workers by
+//!    [`crate::util::par::drive_tasks`].  The worker budget — not the
+//!    modeled rank count — bounds OS threads, so `p` scales to
+//!    thousands of ranks on a handful of workers (see
+//!    [`SessionBuilder::workers`]).  Kernel scratch lives in one shared
+//!    [`ScratchPool`]: checked out per compute segment, never held
+//!    across a suspension, so live worker pools are bounded by the
+//!    worker budget too.
 //! 2. **[`Plan`]** — `session.plan(&source, &part, GhostLayers::Two)`
 //!    builds every rank's `LocalGraph` (ghost layers, subscription
 //!    lists, neighbor topology) exactly once, pulling rows through a
 //!    [`GraphSource`] so no rank ever materializes the global edge set.
-//!    A two-layer plan serves D1-2GL, D2 and PD2 runs — they share the
-//!    layer-1 ghost structure — while a one-layer plan serves plain D1.
+//!    Plans are **cached** per session, keyed by (graph fingerprint,
+//!    partition fingerprint, ghost layers): re-planning the same
+//!    partitioned graph is a hash lookup that returns a handle to the
+//!    same shared plan body ([`Session::plan_cache_stats`] counts
+//!    hits/misses; sources without a fingerprint are built fresh every
+//!    time).  A two-layer plan serves D1-2GL, D2 and PD2 runs — they
+//!    share the layer-1 ghost structure — while a one-layer plan serves
+//!    plain D1.
 //! 3. **[`Plan::run`]** — executes one coloring described by a
-//!    [`ProblemSpec`], reusing all plan state.  Repeated runs
-//!    (recoloring loops, kernel/heuristic ablations, D1-then-D2 on one
-//!    topology) perform **zero** ghost-layer construction and spawn no
-//!    new worker pools; given equal specs they are bit-identical.
+//!    [`ProblemSpec`], reusing all plan state.  Runs no longer
+//!    serialize behind a gate: each run gets its own private mailbox
+//!    domain, so any number of `plan.run()`s — from one thread via
+//!    [`Session::run_many`], or racing from many threads — interleave
+//!    freely on one session and stay bit-identical to running them one
+//!    at a time.  Given equal specs, repeated runs are bit-identical.
 //!
 //! `color_distributed` survives as a thin one-shot wrapper over this
 //! lifecycle, so legacy call sites keep their exact colorings.
@@ -36,6 +50,9 @@
 //! let plan = session.plan(&g, &part, GhostLayers::Two);
 //! let d1 = plan.run(ProblemSpec::d1());          // D1 (2GL on this plan)
 //! let d2 = plan.run(ProblemSpec::d2());          // same ghosts, no rebuild
+//! // batch submission: both runs interleave on the session's workers
+//! let batch = session.run_many(&[(&plan, ProblemSpec::d1()), (&plan, ProblemSpec::d2())]);
+//! assert_eq!(batch[0].as_ref().unwrap().colors, d1.colors);
 //! assert_eq!(d1.colors.len(), g.n());
 //! assert!(d2.stats.comm_rounds >= 1);
 //! ```
@@ -44,21 +61,26 @@ pub mod source;
 
 pub use source::{EdgeStreamSource, GraphSliceSource, GraphSource, RankSlab};
 
-use std::sync::Mutex;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use crate::coloring::distributed::ghost::LocalGraph;
 use crate::coloring::distributed::{
     assemble, color_rank_planned, DistConfig, ExchangeScratch, LocalBackend, NativeBackend,
-    RunResult,
+    RankOutcome, RunResult,
 };
-use crate::coloring::local::{KernelScratch, LocalKernel};
+use crate::coloring::local::{LocalKernel, ScratchPool};
 use crate::coloring::Problem;
-use crate::distributed::{run_ranks_cfg, run_ranks_topo, CostModel, FaultPlan, Topology};
+use crate::distributed::comm::CommDomain;
+use crate::distributed::{CommError, CommStats, CostModel, FaultPlan, Topology};
 use crate::partition::Partition;
+use crate::util::par;
+use source::{fnv1a, FNV_OFFSET};
 
 /// How many ghost layers a plan builds (§2.4, §3.4).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum GhostLayers {
     /// First-layer ghosts only: plain D1.
     One,
@@ -70,13 +92,15 @@ pub enum GhostLayers {
 /// Builder for [`Session`].  Defaults: 1 rank, default α–β cost model
 /// arranged as a flat topology, `threads = 0` (one kernel worker per
 /// available core; the CLI's `--threads` flag is just a front-end that
-/// calls `.threads(..)`), seed 42.
+/// calls `.threads(..)`), `workers = 0` (auto — see
+/// [`SessionBuilder::workers`]), seed 42.
 #[derive(Clone, Copy, Debug)]
 pub struct SessionBuilder {
     ranks: usize,
     cost: CostModel,
     topology: Option<Topology>,
     threads: usize,
+    workers: usize,
     seed: u64,
     faults: Option<FaultPlan>,
 }
@@ -117,6 +141,20 @@ impl SessionBuilder {
         self
     }
 
+    /// Cooperative scheduler workers — the OS threads that multiplex
+    /// all simulated rank state machines (plan construction and runs
+    /// alike).  Precedence: an explicit nonzero value here wins; `0`
+    /// (the default) consults the `DIST_TEST_THREADS` environment
+    /// variable (how `scripts/verify.sh --concurrent` starves the whole
+    /// suite onto 2 workers), falling back to one worker per available
+    /// core.  Colorings are bit-identical for every budget; a p=1024
+    /// session on `.workers(8)` never runs more than 8 rank bodies at
+    /// once and spawns no per-rank OS threads.
+    pub fn workers(mut self, workers: usize) -> Self {
+        self.workers = workers;
+        self
+    }
+
     /// Base RNG seed; individual runs may override via
     /// [`ProblemSpec::seed`].
     pub fn seed(mut self, seed: u64) -> Self {
@@ -136,12 +174,11 @@ impl SessionBuilder {
         self
     }
 
-    /// Materialize the session: spawns each rank's persistent worker
-    /// pool (when `threads != 1`) up front, so plan and run calls never
-    /// pay pool construction.
+    /// Materialize the session.  Cheap: kernel scratches (and their
+    /// worker pools) are pooled and created lazily on first checkout,
+    /// bounded by the scheduler's worker budget rather than the rank
+    /// count.
     pub fn build(self) -> Session {
-        let scratch =
-            (0..self.ranks).map(|_| Mutex::new(KernelScratch::new(self.threads))).collect();
         let faults = self.faults.or_else(|| {
             std::env::var("DIST_FAULT_SEED")
                 .ok()
@@ -153,10 +190,13 @@ impl SessionBuilder {
             cost: self.cost,
             topo: self.topology.unwrap_or(Topology::flat(self.cost)),
             threads: self.threads,
+            workers: self.workers,
             seed: self.seed,
             faults,
-            scratch,
-            run_gate: Mutex::new(()),
+            scratch: ScratchPool::new(self.threads),
+            plans: Mutex::new(HashMap::new()),
+            cache_hits: AtomicU64::new(0),
+            cache_misses: AtomicU64::new(0),
         }
     }
 }
@@ -168,32 +208,37 @@ impl Default for SessionBuilder {
             cost: CostModel::default(),
             topology: None,
             threads: 0,
+            workers: 0,
             seed: 42,
             faults: None,
         }
     }
 }
 
-/// A long-lived coloring service instance: the rank runtime plus every
-/// rank's persistent kernel scratch (priority caches + worker pool).
+/// Plan-cache key: (graph fingerprint, partition fingerprint, layers).
+type PlanKey = (u64, u64, GhostLayers);
+
+/// A long-lived coloring service instance: the cooperative rank
+/// runtime, the shared kernel-scratch pool, and the keyed plan cache.
 /// Construct with [`Session::builder`], then derive [`Plan`]s.
 pub struct Session {
     nranks: usize,
     cost: CostModel,
     topo: Topology,
     threads: usize,
+    workers: usize,
     seed: u64,
     faults: Option<FaultPlan>,
-    /// Per-rank persistent scratch; locked by that rank's thread for the
-    /// duration of each run.
-    scratch: Vec<Mutex<KernelScratch>>,
-    /// Serializes runs: rank threads hold their scratch lock across
-    /// blocking collectives, so two interleaved runs could otherwise
-    /// deadlock (A's rank 0 holds scratch[0] awaiting A's rank 1, which
-    /// waits on scratch[1] held by B's rank 1, which awaits B's rank 0,
-    /// which waits on scratch[0]).  One gate, held for the whole run,
-    /// makes the per-rank locks uncontended.
-    run_gate: Mutex<()>,
+    /// Kernel scratch checkout pool shared by every rank task of every
+    /// concurrent run (see [`ScratchPool`] for why sharing is bit-safe
+    /// and panic-safe).
+    scratch: ScratchPool,
+    /// Plans already built this session, by content key.  Two racing
+    /// misses on one key may both build; the insert is last-writer-wins
+    /// and both cores are bit-identical, so either handle is valid.
+    plans: Mutex<HashMap<PlanKey, Arc<PlanCore>>>,
+    cache_hits: AtomicU64,
+    cache_misses: AtomicU64,
 }
 
 impl Session {
@@ -231,10 +276,40 @@ impl Session {
         self.faults
     }
 
-    /// Build a [`Plan`]: every rank ingests its slab from `source` and
-    /// constructs its `LocalGraph` (ghosts, subscriptions, neighbor
-    /// topology) — the one-time cost all of the plan's runs amortize.
-    /// Collective over all `nranks` simulated ranks.
+    /// The resolved cooperative worker budget this session schedules
+    /// on: explicit [`SessionBuilder::workers`] if nonzero, else the
+    /// `DIST_TEST_THREADS` environment variable, else one worker per
+    /// available core.
+    pub fn worker_budget(&self) -> usize {
+        if self.workers != 0 {
+            return self.workers;
+        }
+        if let Some(n) = std::env::var("DIST_TEST_THREADS")
+            .ok()
+            .and_then(|s| s.trim().parse::<usize>().ok())
+            .filter(|&n| n >= 1)
+        {
+            return n;
+        }
+        par::resolve_threads(0)
+    }
+
+    /// `(hits, misses)` of the plan cache since the session was built.
+    /// Only fingerprintable sources participate — a `plan()` call whose
+    /// source returns `fingerprint() == None` builds fresh and counts
+    /// as neither.
+    pub fn plan_cache_stats(&self) -> (u64, u64) {
+        (self.cache_hits.load(Ordering::Relaxed), self.cache_misses.load(Ordering::Relaxed))
+    }
+
+    /// Build (or fetch from the plan cache) a [`Plan`]: every rank
+    /// ingests its slab from `source` and constructs its `LocalGraph`
+    /// (ghosts, subscriptions, neighbor topology) — the one-time cost
+    /// all of the plan's runs amortize.  Collective over all `nranks`
+    /// simulated ranks, executed cooperatively on the session's worker
+    /// budget.  When `source` carries a fingerprint, the result is
+    /// cached under (graph, partition, layers) and identical requests
+    /// return a handle to the same shared plan body.
     pub fn plan<S: GraphSource + ?Sized>(
         &self,
         source: &S,
@@ -251,31 +326,197 @@ impl Session {
             part.owner.len(),
             "source vertex count does not match the partition"
         );
+        let key = source.fingerprint().map(|gfp| (gfp, partition_fingerprint(part), layers));
+        if let Some(key) = key {
+            if let Some(core) = self.plans.lock().unwrap_or_else(|e| e.into_inner()).get(&key) {
+                self.cache_hits.fetch_add(1, Ordering::Relaxed);
+                return Plan { session: self, core: Arc::clone(core) };
+            }
+            self.cache_misses.fetch_add(1, Ordering::Relaxed);
+        }
+        let core = Arc::new(self.build_core(source, part, layers));
+        if let Some(key) = key {
+            self.plans.lock().unwrap_or_else(|e| e.into_inner()).insert(key, Arc::clone(&core));
+        }
+        Plan { session: self, core }
+    }
+
+    fn build_core<S: GraphSource + ?Sized>(
+        &self,
+        source: &S,
+        part: &Partition,
+        layers: GhostLayers,
+    ) -> PlanCore {
         let two = layers == GhostLayers::Two;
         // plan construction runs on clean wires regardless of the
         // session's fault plan: the ghost topology is the ground truth
         // every faulted run recovers *to*, so it is built once,
         // deterministically, outside the fault domain
-        let per_rank = run_ranks_topo(self.nranks, self.topo, |comm| {
-            let rank = comm.rank();
-            let t0 = Instant::now();
-            let owned = part.owned(rank);
-            let slab = source.load_rank(rank, &owned);
-            let lg = LocalGraph::build_from_slab(comm, &slab, owned, part, two)
-                .unwrap_or_else(|e| panic!("rank {rank}: local graph construction failed: {e}"));
-            (lg, comm.stats(), t0.elapsed().as_nanos() as u64)
-        });
+        let domain = CommDomain::new(self.nranks);
+        let domain = &domain;
+        let mut tasks: Vec<par::BoxFuture<'_, (LocalGraph, CommStats, u64)>> =
+            Vec::with_capacity(self.nranks);
+        for rank in 0..self.nranks {
+            tasks.push(Box::pin(async move {
+                let mut comm = domain.comm(rank as u32, self.topo, None);
+                let t0 = Instant::now();
+                let owned = part.owned(rank as u32);
+                let slab = source.load_rank(rank as u32, &owned);
+                let lg = LocalGraph::build_from_slab(&mut comm, &slab, owned, part, two)
+                    .await
+                    .unwrap_or_else(|e| {
+                        panic!("rank {rank}: local graph construction failed: {e}")
+                    });
+                (lg, comm.stats(), t0.elapsed().as_nanos() as u64)
+            }));
+        }
+        let per_rank =
+            par::drive_tasks(self.worker_budget(), tasks, &|idx| domain.post_down(idx as u32));
         let mut build = PlanBuildStats::default();
         let mut locals = Vec::with_capacity(per_rank.len());
-        for (lg, stats, wall_ns) in per_rank {
+        for res in per_rank {
+            // construction failures keep their panic semantics: the
+            // first panicking rank's payload resumes on the caller
+            let (lg, stats, wall_ns) = match res {
+                Ok(v) => v,
+                Err(payload) => std::panic::resume_unwind(payload),
+            };
             build.wall_ns = build.wall_ns.max(wall_ns);
             build.modeled_ns = build.modeled_ns.max(stats.modeled_ns);
             build.bytes += stats.bytes_sent;
             build.messages += stats.messages;
             locals.push(lg);
         }
-        let xscratch = (0..self.nranks).map(|_| Mutex::new(ExchangeScratch::new())).collect();
-        Plan { session: self, n_global: source.n_vertices(), two_layers: two, locals, build, xscratch }
+        PlanCore {
+            n_global: source.n_vertices(),
+            two_layers: two,
+            locals,
+            build,
+            xscratch: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Submit a batch of runs that execute **concurrently** on the
+    /// session's worker budget: all ranks of all submissions become one
+    /// task set for the cooperative scheduler, so run `i+1` makes
+    /// progress while run `i` waits on its own collectives.  Every
+    /// submission gets a private mailbox domain — wires never cross —
+    /// and each result is bit-identical to calling [`Plan::run`] alone.
+    /// Results come back in submission order; a failed submission
+    /// reports its [`RunError`] without disturbing its batch-mates.
+    ///
+    /// Panics if a plan belongs to a different session or a spec needs
+    /// ghost layers its plan lacks.
+    pub fn run_many(&self, batch: &[(&Plan<'_>, ProblemSpec)]) -> Vec<Result<RunResult, RunError>> {
+        let backends: Vec<NativeBackend> =
+            batch.iter().map(|&(_, spec)| NativeBackend(spec.kernel)).collect();
+        let items: Vec<(&Plan<'_>, ProblemSpec, &dyn LocalBackend)> = batch
+            .iter()
+            .zip(&backends)
+            .map(|(&(plan, spec), backend)| (plan, spec, backend as &dyn LocalBackend))
+            .collect();
+        self.run_batch(&items)
+    }
+
+    /// The execution core behind [`Plan::try_run_with_backend`] and
+    /// [`Session::run_many`]: flatten every submission's ranks into one
+    /// cooperative task set, drive it on the worker budget, then fold
+    /// each submission's per-rank outcomes back into a
+    /// [`RunResult`]/[`RunError`].
+    fn run_batch(
+        &self,
+        items: &[(&Plan<'_>, ProblemSpec, &dyn LocalBackend)],
+    ) -> Vec<Result<RunResult, RunError>> {
+        if items.is_empty() {
+            return Vec::new();
+        }
+        let nranks = self.nranks;
+        let mut cfgs = Vec::with_capacity(items.len());
+        for &(plan, spec, _) in items {
+            assert!(
+                std::ptr::eq(plan.session, self),
+                "batch submissions must use this session's own plans"
+            );
+            assert!(
+                plan.core.two_layers || spec.problem == Problem::D1,
+                "{} needs the two-hop ghost view: build the plan with GhostLayers::Two",
+                spec.problem
+            );
+            cfgs.push(DistConfig {
+                problem: spec.problem,
+                recolor_degrees: spec.recolor_degrees,
+                two_ghost_layers: plan.core.two_layers,
+                kernel: spec.kernel,
+                threads: self.threads,
+                seed: spec.seed.unwrap_or(self.seed),
+                max_rounds: spec.max_rounds,
+                double_buffer: spec.double_buffer,
+                // the session's topology already reached the Comm via
+                // the mailbox domain; DistConfig::topology only steers
+                // the one-shot wrapper's Session construction
+                topology: None,
+                faults: self.faults,
+                paranoid: spec.paranoid,
+            });
+        }
+        // one private mailbox domain per submission: concurrent runs
+        // never share wires, so interleaving cannot perturb traffic
+        let domains: Vec<CommDomain> = (0..items.len()).map(|_| CommDomain::new(nranks)).collect();
+        let domains = &domains;
+        let scratch = &self.scratch;
+        let mut tasks: Vec<par::BoxFuture<'_, Result<RankOutcome, CommError>>> =
+            Vec::with_capacity(items.len() * nranks);
+        for (ri, &(plan, _, backend)) in items.iter().enumerate() {
+            let core = &*plan.core;
+            let cfg = cfgs[ri];
+            let domain = &domains[ri];
+            for rank in 0..nranks {
+                tasks.push(Box::pin(async move {
+                    let mut comm = domain.comm(rank as u32, self.topo, self.faults);
+                    let mut xscratch = core.checkout_xscratch();
+                    let out = color_rank_planned(
+                        &mut comm,
+                        &core.locals[rank],
+                        cfg,
+                        backend,
+                        scratch,
+                        &mut xscratch,
+                    )
+                    .await;
+                    core.return_xscratch(xscratch);
+                    if out.is_err() {
+                        // tell peers blocked on us to stop waiting
+                        comm.abort();
+                    }
+                    out
+                }));
+            }
+        }
+        // a panicked rank task dropped its Comm mid-unwind; broadcast
+        // its down notice straight into the right domain so batch-mates
+        // and sibling ranks error out instead of hanging
+        let per_task = par::drive_tasks(self.worker_budget(), tasks, &|idx| {
+            domains[idx / nranks].post_down((idx % nranks) as u32)
+        });
+        let mut per_task = per_task.into_iter();
+        let mut results = Vec::with_capacity(items.len());
+        for &(plan, _, _) in items {
+            let mut outcomes = Vec::with_capacity(nranks);
+            let mut failures: Vec<(u32, String)> = Vec::new();
+            for rank in 0..nranks {
+                match per_task.next().expect("scheduler yields one result per task") {
+                    Ok(Ok(outcome)) => outcomes.push(outcome),
+                    Ok(Err(e)) => failures.push((rank as u32, e.to_string())),
+                    Err(payload) => failures.push((rank as u32, panic_message(payload.as_ref()))),
+                }
+            }
+            results.push(if failures.is_empty() {
+                Ok(assemble(plan.core.n_global, outcomes, nranks))
+            } else {
+                Err(RunError { failures })
+            });
+        }
+        results
     }
 }
 
@@ -284,9 +525,20 @@ impl std::fmt::Debug for Session {
         f.debug_struct("Session")
             .field("nranks", &self.nranks)
             .field("threads", &self.threads)
+            .field("workers", &self.worker_budget())
             .field("seed", &self.seed)
             .finish()
     }
+}
+
+/// FNV-1a over the owner array + part count: the partition half of a
+/// plan-cache key.
+fn partition_fingerprint(part: &Partition) -> u64 {
+    let mut h = fnv1a(FNV_OFFSET, part.nparts as u64);
+    for &o in &part.owner {
+        h = fnv1a(h, o as u64);
+    }
+    h
 }
 
 /// Construction-phase accounting of a plan (rank maxima for times, sums
@@ -431,21 +683,40 @@ fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
     }
 }
 
-/// A reusable coloring plan: per-rank `LocalGraph`s (ghost layers,
-/// subscription lists, cut topology) built once by [`Session::plan`].
-/// Every [`Plan::run`] reuses this state wholesale.
-pub struct Plan<'s> {
-    session: &'s Session,
+/// The session-owned body of a plan: per-rank `LocalGraph`s plus the
+/// plan's exchange-scratch pool.  Shared (via `Arc`) by every [`Plan`]
+/// handle the plan cache gives out for one content key.
+struct PlanCore {
     n_global: usize,
     two_layers: bool,
     locals: Vec<LocalGraph>,
     build: PlanBuildStats,
-    /// Per-rank delta-exchange staging (the double-buffered generations
-    /// plus the fixup scan's dirty flags) — the plan-owned second
-    /// scratch generation next to the session's `KernelScratch`.
-    /// Owning it here keeps the capacity warm across every run of the
-    /// plan and sizes the dirty flags once per topology.
-    xscratch: Vec<Mutex<ExchangeScratch>>,
+    /// Checkout pool of delta-exchange staging (the double-buffered
+    /// generations plus the fixup scan's dirty flags).  A rank task
+    /// checks one out for the span of a run and returns it after, so
+    /// capacity stays warm across runs while concurrent runs on the
+    /// same plan each get private staging.  Like [`ScratchPool`], a
+    /// panicking rank simply drops its checkout — nothing is poisoned.
+    xscratch: Mutex<Vec<ExchangeScratch>>,
+}
+
+impl PlanCore {
+    fn checkout_xscratch(&self) -> ExchangeScratch {
+        self.xscratch.lock().unwrap_or_else(|e| e.into_inner()).pop().unwrap_or_default()
+    }
+
+    fn return_xscratch(&self, x: ExchangeScratch) {
+        self.xscratch.lock().unwrap_or_else(|e| e.into_inner()).push(x);
+    }
+}
+
+/// A reusable coloring plan: per-rank `LocalGraph`s (ghost layers,
+/// subscription lists, cut topology) built once by [`Session::plan`]
+/// and possibly shared with other handles via the session's plan cache.
+/// Every [`Plan::run`] reuses this state wholesale.
+pub struct Plan<'s> {
+    session: &'s Session,
+    core: Arc<PlanCore>,
 }
 
 impl Plan<'_> {
@@ -455,27 +726,29 @@ impl Plan<'_> {
 
     /// True for [`GhostLayers::Two`] plans.
     pub fn two_layers(&self) -> bool {
-        self.two_layers
+        self.core.two_layers
     }
 
     /// Global vertex count this plan colors.
     pub fn n_global(&self) -> usize {
-        self.n_global
+        self.core.n_global
     }
 
-    /// Construction-phase accounting (see [`PlanBuildStats`]).
+    /// Construction-phase accounting (see [`PlanBuildStats`]).  A
+    /// cache-hit plan reports the stats of the build it shares.
     pub fn build_stats(&self) -> PlanBuildStats {
-        self.build
+        self.core.build
     }
 
     /// Total ghost vertices across ranks (both layers) — a cheap proxy
     /// for the plan's memory footprint beyond the owned slabs.
     pub fn total_ghosts(&self) -> usize {
-        self.locals.iter().map(|lg| lg.n_ghost).sum()
+        self.core.locals.iter().map(|lg| lg.n_ghost).sum()
     }
 
     /// Execute one coloring with the native kernels.  Runs with equal
-    /// specs are bit-identical; no construction work is repeated.
+    /// specs are bit-identical; no construction work is repeated, and
+    /// concurrent `run` calls on one session interleave safely.
     /// Panics with the [`RunError`] report if any rank fails; use
     /// [`Plan::try_run`] to handle failures structurally.
     pub fn run(&self, spec: ProblemSpec) -> RunResult {
@@ -492,7 +765,9 @@ impl Plan<'_> {
     /// paranoid-audit divergence surfaces as [`RunError`] naming every
     /// failed rank and why, while the surviving ranks unwind cleanly
     /// (the failing rank broadcasts a down notice, so peers blocked on
-    /// it error out instead of hanging).
+    /// it error out instead of hanging).  A failed run leaves the
+    /// session fully serviceable — scratch is checkout-pooled, never
+    /// poisoned — so later runs on this plan succeed bit-identically.
     pub fn try_run(&self, spec: ProblemSpec) -> Result<RunResult, RunError> {
         self.try_run_with_backend(spec, &NativeBackend(spec.kernel))
     }
@@ -503,64 +778,17 @@ impl Plan<'_> {
         spec: ProblemSpec,
         backend: &dyn LocalBackend,
     ) -> Result<RunResult, RunError> {
-        assert!(
-            self.two_layers || spec.problem == Problem::D1,
-            "{} needs the two-hop ghost view: build the plan with GhostLayers::Two",
-            spec.problem
-        );
-        let cfg = DistConfig {
-            problem: spec.problem,
-            recolor_degrees: spec.recolor_degrees,
-            two_ghost_layers: self.two_layers,
-            kernel: spec.kernel,
-            threads: self.session.threads,
-            seed: spec.seed.unwrap_or(self.session.seed),
-            max_rounds: spec.max_rounds,
-            double_buffer: spec.double_buffer,
-            // the session's topology already reached the Comm via
-            // run_ranks_cfg; DistConfig::topology only steers the
-            // one-shot wrapper's Session construction
-            topology: None,
-            faults: self.session.faults,
-            paranoid: spec.paranoid,
-        };
-        // one run at a time per session: rank threads hold their scratch
-        // locks across blocking collectives (see `Session::run_gate`)
-        let _gate = self.session.run_gate.lock().expect("session run gate poisoned");
-        let per_rank =
-            run_ranks_cfg(self.session.nranks, self.session.topo, self.session.faults, |comm| {
-                let rank = comm.rank() as usize;
-                let mut scratch =
-                    self.session.scratch[rank].lock().expect("rank scratch poisoned");
-                let mut xscratch =
-                    self.xscratch[rank].lock().expect("rank exchange scratch poisoned");
-                let out = color_rank_planned(
-                    comm,
-                    &self.locals[rank],
-                    cfg,
-                    backend,
-                    &mut scratch,
-                    &mut xscratch,
-                );
-                if out.is_err() {
-                    // tell peers blocked on us to stop waiting
-                    comm.abort();
-                }
-                out
-            });
-        let mut outcomes = Vec::with_capacity(per_rank.len());
-        let mut failures: Vec<(u32, String)> = Vec::new();
-        for (rank, res) in per_rank.into_iter().enumerate() {
-            match res {
-                Ok(Ok(outcome)) => outcomes.push(outcome),
-                Ok(Err(e)) => failures.push((rank as u32, e.to_string())),
-                Err(payload) => failures.push((rank as u32, panic_message(payload.as_ref()))),
-            }
-        }
-        if !failures.is_empty() {
-            return Err(RunError { failures });
-        }
-        Ok(assemble(self.n_global, outcomes, self.session.nranks))
+        self.session
+            .run_batch(&[(self, spec, backend)])
+            .pop()
+            .expect("one submission yields one result")
+    }
+
+    /// Batch-run several specs on this plan concurrently — shorthand
+    /// for [`Session::run_many`] with every submission on one plan.
+    pub fn run_many(&self, specs: &[ProblemSpec]) -> Vec<Result<RunResult, RunError>> {
+        let batch: Vec<(&Plan<'_>, ProblemSpec)> = specs.iter().map(|&s| (self, s)).collect();
+        self.session.run_many(&batch)
     }
 }
 
@@ -568,8 +796,8 @@ impl std::fmt::Debug for Plan<'_> {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         f.debug_struct("Plan")
             .field("nranks", &self.session.nranks)
-            .field("n_global", &self.n_global)
-            .field("two_layers", &self.two_layers)
+            .field("n_global", &self.core.n_global)
+            .field("two_layers", &self.core.two_layers)
             .field("total_ghosts", &self.total_ghosts())
             .finish()
     }
@@ -607,6 +835,58 @@ mod tests {
         assert!(validate::is_proper_d2(&g, &d2.colors));
         let pd2 = plan.run(ProblemSpec::pd2());
         assert!(validate::is_proper_pd2(&g, &pd2.colors));
+    }
+
+    #[test]
+    fn run_many_matches_serial_runs() {
+        let g = gnm(250, 900, 5);
+        let part = partition::hash(&g, 5, 1);
+        let session = Session::builder().ranks(5).cost(CostModel::zero()).threads(1).build();
+        let plan = session.plan(&g, &part, GhostLayers::Two);
+        let serial =
+            [plan.run(ProblemSpec::d1()), plan.run(ProblemSpec::d2()), plan.run(ProblemSpec::pd2())];
+        let batch = session.run_many(&[
+            (&plan, ProblemSpec::d1()),
+            (&plan, ProblemSpec::d2()),
+            (&plan, ProblemSpec::pd2()),
+        ]);
+        assert_eq!(batch.len(), 3);
+        for (s, b) in serial.iter().zip(&batch) {
+            let b = b.as_ref().expect("batch run failed");
+            assert_eq!(s.colors, b.colors, "interleaved run must be bit-identical");
+            assert_eq!(s.stats.comm_rounds, b.stats.comm_rounds);
+        }
+    }
+
+    #[test]
+    fn plan_cache_hits_share_one_core() {
+        let g = hex_mesh(5, 5, 5);
+        let part = partition::block(&g, 2);
+        let session = Session::builder().ranks(2).cost(CostModel::zero()).threads(1).build();
+        assert_eq!(session.plan_cache_stats(), (0, 0));
+        let a = session.plan(&g, &part, GhostLayers::Two);
+        assert_eq!(session.plan_cache_stats(), (0, 1));
+        let b = session.plan(&g, &part, GhostLayers::Two);
+        assert_eq!(session.plan_cache_stats(), (1, 1));
+        assert!(Arc::ptr_eq(&a.core, &b.core), "a cache hit must share the plan body");
+        // different layers → different key
+        let c = session.plan(&g, &part, GhostLayers::One);
+        assert_eq!(session.plan_cache_stats(), (1, 2));
+        assert!(!Arc::ptr_eq(&a.core, &c.core));
+        assert_eq!(a.run(ProblemSpec::d1()).colors, b.run(ProblemSpec::d1()).colors);
+        // a fingerprint-less source skips the cache and counts nothing
+        let stream = EdgeStreamSource::new(g.n(), 64, |emit| {
+            for v in 0..g.n() as crate::graph::VId {
+                for &u in g.neighbors(v) {
+                    if u > v {
+                        emit(v, u);
+                    }
+                }
+            }
+        });
+        let d = session.plan(&stream, &part, GhostLayers::One);
+        assert_eq!(session.plan_cache_stats(), (1, 2));
+        assert_eq!(d.run(ProblemSpec::d1()).colors, c.run(ProblemSpec::d1()).colors);
     }
 
     #[test]
@@ -735,5 +1015,40 @@ mod tests {
         let err = plan.try_run(spec).expect_err("0 fix rounds cannot converge here");
         assert!(!err.failures.is_empty());
         assert!(err.to_string().contains("did not converge"), "report: {err}");
+    }
+
+    #[test]
+    fn session_stays_serviceable_after_a_failed_run() {
+        // the PR 6 caveat fix: panicked ranks used to poison the
+        // session's per-rank scratch mutexes, wedging every later run.
+        // With checkout pools a panicking rank just drops its scratch,
+        // so the same plan and session must serve later runs
+        // bit-identically.
+        let g = gnm(300, 1500, 5);
+        let part = partition::hash(&g, 4, 3);
+        let session = Session::builder().ranks(4).cost(CostModel::zero()).threads(1).build();
+        let plan = session.plan(&g, &part, GhostLayers::One);
+        let reference = plan.run(ProblemSpec::d1());
+        let spec = ProblemSpec { max_rounds: 0, ..ProblemSpec::d1() };
+        let err = plan.try_run(spec).expect_err("0 fix rounds cannot converge here");
+        assert!(!err.failures.is_empty());
+        let after = plan.run(ProblemSpec::d1());
+        assert_eq!(after.colors, reference.colors, "post-failure runs must be unperturbed");
+    }
+
+    #[test]
+    fn many_ranks_on_a_tiny_worker_budget() {
+        // p far above the worker budget: every rank is a cooperative
+        // task, so 64 modeled ranks complete on 2 workers (a
+        // thread-per-rank runtime would need all 64 live at once to
+        // pass the collectives)
+        let g = gnm(400, 1600, 11);
+        let part = partition::hash(&g, 64, 1);
+        let session =
+            Session::builder().ranks(64).cost(CostModel::zero()).threads(1).workers(2).build();
+        assert_eq!(session.worker_budget(), 2);
+        let plan = session.plan(&g, &part, GhostLayers::One);
+        let run = plan.run(ProblemSpec::d1());
+        assert!(validate::is_proper_d1(&g, &run.colors));
     }
 }

@@ -26,6 +26,36 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 
 use crate::graph::{Graph, VId};
 
+/// FNV-1a 64-bit offset basis — the crate's content-fingerprint hash
+/// (plan-cache keys; see [`GraphSource::fingerprint`]).
+pub(crate) const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// Fold one little-endian word into an FNV-1a state.
+#[inline]
+pub(crate) fn fnv1a(mut h: u64, word: u64) -> u64 {
+    for b in word.to_le_bytes() {
+        h = (h ^ b as u64).wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// FNV-1a over the full CSR structure (vertex count, then each row's
+/// degree and ascending neighbor list).  Degrees delimit the rows, so
+/// concatenation ambiguities cannot collide two different graphs onto
+/// one stream of neighbor words.
+fn graph_fingerprint(g: &Graph) -> u64 {
+    let mut h = fnv1a(FNV_OFFSET, g.n() as u64);
+    for v in 0..g.n() as VId {
+        let row = g.neighbors(v);
+        h = fnv1a(h, row.len() as u64);
+        for &u in row {
+            h = fnv1a(h, u as u64);
+        }
+    }
+    h
+}
+
 /// A rank-local adjacency slab: one complete neighbor row per owned
 /// vertex, indexed by the vertex's position in the rank's ascending
 /// owned-gid list.  Rows are ascending and deduplicated, exactly like
@@ -95,6 +125,18 @@ pub trait GraphSource: Sync {
     /// The complete adjacency rows of `owned` (ascending gids), for
     /// `rank`.  Called exactly once per rank per plan.
     fn load_rank(&self, rank: u32, owned: &[VId]) -> RankSlab;
+
+    /// Stable content fingerprint of the global graph this source
+    /// serves, or `None` (the default) to opt out of the session plan
+    /// cache.  Two sources returning the same fingerprint **must**
+    /// produce identical slabs for every `(rank, owned)` query — the
+    /// cache will hand one plan to both.  The in-memory sources hash
+    /// their CSR (O(n + m), far cheaper than the collective ghost
+    /// build a hit skips); [`EdgeStreamSource`] stays `None` because
+    /// fingerprinting would force an extra full stream replay.
+    fn fingerprint(&self) -> Option<u64> {
+        None
+    }
 }
 
 /// In-memory adapter: wraps an existing global [`Graph`] and slices out
@@ -135,6 +177,10 @@ impl GraphSource for GraphSliceSource<'_> {
     fn load_rank(&self, _rank: u32, owned: &[VId]) -> RankSlab {
         slice_slab(self.g, owned)
     }
+
+    fn fingerprint(&self) -> Option<u64> {
+        Some(graph_fingerprint(self.g))
+    }
 }
 
 /// A global [`Graph`] is itself a graph source (`session.plan(&g, ...)`),
@@ -146,6 +192,10 @@ impl GraphSource for Graph {
 
     fn load_rank(&self, _rank: u32, owned: &[VId]) -> RankSlab {
         slice_slab(self, owned)
+    }
+
+    fn fingerprint(&self) -> Option<u64> {
+        Some(graph_fingerprint(self))
     }
 }
 
@@ -304,6 +354,18 @@ mod tests {
         let slab = src.load_rank(0, &owned);
         assert_eq!(slab.row(0), &[1, 2]);
         assert_eq!(slab.row(1), &[0]);
+    }
+
+    #[test]
+    fn fingerprints_identify_graph_content() {
+        let g = gnm(200, 800, 3);
+        let h = gnm(200, 800, 4); // same shape, different edges
+        let fp_g = GraphSource::fingerprint(&g).unwrap();
+        assert_eq!(Some(fp_g), GraphSliceSource::new(&g).fingerprint(), "wrapper must agree");
+        assert_eq!(Some(fp_g), GraphSource::fingerprint(&g), "fingerprint must be stable");
+        assert_ne!(Some(fp_g), GraphSource::fingerprint(&h), "different edges, different key");
+        let stream = EdgeStreamSource::new(g.n(), 64, |_emit| {});
+        assert_eq!(stream.fingerprint(), None, "streams opt out of the plan cache");
     }
 
     #[test]

@@ -420,6 +420,268 @@ fn concat_parts<R>(parts: Vec<Vec<R>>) -> Vec<R> {
     }
 }
 
+// ---------------------------------------------------------------------
+// cooperative task driver (the rank runtime's scheduler)
+// ---------------------------------------------------------------------
+//
+// The distributed layer models each rank as a future whose yield points
+// are exactly the blocking `Comm` operations.  [`drive_tasks`] runs M
+// such rank state machines on N condvar-parked workers — the same
+// parked-worker idiom as [`WorkerPool`], but scheduling *suspendable*
+// tasks instead of run-to-completion chunks, so thousands of modeled
+// ranks share a fixed thread budget instead of one OS thread each.
+
+use std::collections::VecDeque;
+use std::future::Future;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::pin::Pin;
+use std::sync::atomic::{AtomicU8, AtomicUsize, Ordering};
+use std::task::{Context, Poll, Wake, Waker};
+
+/// A boxed, pinned task future; `'a` lets rank bodies borrow the plan
+/// and session they run against (the driver joins every worker before
+/// returning, so no task outlives the borrow).
+pub type BoxFuture<'a, T> = Pin<Box<dyn Future<Output = T> + Send + 'a>>;
+
+/// Live scheduler workers across all concurrent [`drive_tasks`] calls,
+/// and the high-water mark since the last [`reset_sched_worker_peak`].
+/// This is the "no per-rank OS threads" witness: the peak tracks the
+/// worker *budget*, not the modeled rank count (`BENCH_PR7` pins it
+/// flat from p=64 to p=1024).
+static SCHED_WORKERS_LIVE: AtomicUsize = AtomicUsize::new(0);
+static SCHED_WORKERS_PEAK: AtomicUsize = AtomicUsize::new(0);
+
+/// Peak concurrent scheduler workers since the last reset.
+pub fn sched_worker_peak() -> usize {
+    SCHED_WORKERS_PEAK.load(Ordering::Relaxed)
+}
+
+/// Reset the peak-worker gauge (bench instrumentation; racy across
+/// concurrent drivers, so only meaningful on a quiet process).
+pub fn reset_sched_worker_peak() {
+    SCHED_WORKERS_PEAK.store(SCHED_WORKERS_LIVE.load(Ordering::Relaxed), Ordering::Relaxed);
+}
+
+fn sched_worker_enter() {
+    let live = SCHED_WORKERS_LIVE.fetch_add(1, Ordering::Relaxed) + 1;
+    SCHED_WORKERS_PEAK.fetch_max(live, Ordering::Relaxed);
+}
+
+fn sched_worker_exit() {
+    SCHED_WORKERS_LIVE.fetch_sub(1, Ordering::Relaxed);
+}
+
+// Task lifecycle: WAITING (suspended, waker registered somewhere) →
+// QUEUED (on the ready deque) → POLLING (a worker is inside `poll`) →
+// back to WAITING, or REPOLL (a wake landed mid-poll: requeue instead
+// of suspending), or DONE.
+const T_WAITING: u8 = 0;
+const T_QUEUED: u8 = 1;
+const T_POLLING: u8 = 2;
+const T_REPOLL: u8 = 3;
+const T_DONE: u8 = 4;
+
+/// The `'static` half of a driver run: ready queue, per-task states and
+/// completion count.  Wakers hold an `Arc` of this (a `Waker` must be
+/// `'static`); the non-`'static` futures stay on the driver's stack.
+struct SchedCore {
+    ready: Mutex<VecDeque<usize>>,
+    work: Condvar,
+    states: Vec<AtomicU8>,
+    done: AtomicUsize,
+    total: usize,
+}
+
+impl SchedCore {
+    fn enqueue(&self, idx: usize) {
+        self.ready.lock().unwrap().push_back(idx);
+        self.work.notify_one();
+    }
+
+    /// Mark one task finished; the last one wakes every parked worker
+    /// so they can observe completion and exit.
+    fn finish_one(&self) {
+        if self.done.fetch_add(1, Ordering::AcqRel) + 1 == self.total {
+            let _guard = self.ready.lock().unwrap();
+            self.work.notify_all();
+        }
+    }
+
+    /// Next runnable task, or `None` once every task is done.  Parks on
+    /// the condvar while the deque is empty (tasks are suspended in
+    /// modeled collectives) — a cooperative run burns no CPU waiting.
+    fn next_ready(&self) -> Option<usize> {
+        let mut q = self.ready.lock().unwrap();
+        loop {
+            if let Some(i) = q.pop_front() {
+                return Some(i);
+            }
+            if self.done.load(Ordering::Acquire) == self.total {
+                return None;
+            }
+            q = self.work.wait(q).unwrap();
+        }
+    }
+}
+
+struct TaskWaker {
+    core: Arc<SchedCore>,
+    idx: usize,
+}
+
+impl Wake for TaskWaker {
+    fn wake(self: Arc<Self>) {
+        self.wake_by_ref();
+    }
+
+    fn wake_by_ref(self: &Arc<Self>) {
+        let st = &self.core.states[self.idx];
+        loop {
+            match st.load(Ordering::Acquire) {
+                T_WAITING => {
+                    if st
+                        .compare_exchange(T_WAITING, T_QUEUED, Ordering::AcqRel, Ordering::Acquire)
+                        .is_ok()
+                    {
+                        self.core.enqueue(self.idx);
+                        return;
+                    }
+                }
+                T_POLLING => {
+                    if st
+                        .compare_exchange(T_POLLING, T_REPOLL, Ordering::AcqRel, Ordering::Acquire)
+                        .is_ok()
+                    {
+                        return;
+                    }
+                }
+                // QUEUED / REPOLL / DONE: the wake is already recorded
+                _ => return,
+            }
+        }
+    }
+}
+
+/// Run `tasks` to completion on at most `workers` threads (the calling
+/// thread is one of them; `workers` is clamped to the task count).
+/// Results come back in task order.  A panicking task is contained: its
+/// payload is returned as that slot's `Err`, `on_panic(idx)` runs at
+/// panic time so the caller can unblock the panicked task's peers (the
+/// rank runtime broadcasts a down notice), and every other task still
+/// runs to completion — the exact semantics thread-per-rank execution
+/// got from `catch_unwind` + `Comm::abort`.
+pub fn drive_tasks<'a, T: Send>(
+    workers: usize,
+    tasks: Vec<BoxFuture<'a, T>>,
+    on_panic: &(dyn Fn(usize) + Sync),
+) -> Vec<std::thread::Result<T>> {
+    let total = tasks.len();
+    if total == 0 {
+        return Vec::new();
+    }
+    let core = Arc::new(SchedCore {
+        ready: Mutex::new((0..total).collect()),
+        work: Condvar::new(),
+        states: (0..total).map(|_| AtomicU8::new(T_QUEUED)).collect(),
+        done: AtomicUsize::new(0),
+        total,
+    });
+    let slots: Vec<Mutex<Option<BoxFuture<'a, T>>>> =
+        tasks.into_iter().map(|t| Mutex::new(Some(t))).collect();
+    let results: Vec<Mutex<Option<std::thread::Result<T>>>> =
+        (0..total).map(|_| Mutex::new(None)).collect();
+
+    let worker = |exclude_caller: bool| {
+        if exclude_caller {
+            sched_worker_enter();
+        }
+        while let Some(idx) = core.next_ready() {
+            core.states[idx].store(T_POLLING, Ordering::Release);
+            let mut fut = slots[idx].lock().unwrap().take().expect("queued task has no future");
+            let waker = Waker::from(Arc::new(TaskWaker { core: Arc::clone(&core), idx }));
+            let mut cx = Context::from_waker(&waker);
+            match catch_unwind(AssertUnwindSafe(|| fut.as_mut().poll(&mut cx))) {
+                Ok(Poll::Ready(v)) => {
+                    *results[idx].lock().unwrap() = Some(Ok(v));
+                    core.states[idx].store(T_DONE, Ordering::Release);
+                    core.finish_one();
+                }
+                Ok(Poll::Pending) => {
+                    // restore the future *before* leaving POLLING: while
+                    // POLLING, a waker can only set REPOLL, so no other
+                    // worker can claim the slot until we requeue it
+                    *slots[idx].lock().unwrap() = Some(fut);
+                    if core.states[idx]
+                        .compare_exchange(T_POLLING, T_WAITING, Ordering::AcqRel, Ordering::Acquire)
+                        .is_err()
+                    {
+                        // a wake landed mid-poll (REPOLL): run it again
+                        core.states[idx].store(T_QUEUED, Ordering::Release);
+                        core.enqueue(idx);
+                    }
+                }
+                Err(payload) => {
+                    drop(fut); // the task's Comm and scratch leases unwind here
+                    on_panic(idx);
+                    *results[idx].lock().unwrap() = Some(Err(payload));
+                    core.states[idx].store(T_DONE, Ordering::Release);
+                    core.finish_one();
+                }
+            }
+        }
+        if exclude_caller {
+            sched_worker_exit();
+        }
+    };
+
+    let n_workers = workers.max(1).min(total);
+    sched_worker_enter();
+    std::thread::scope(|scope| {
+        for _ in 1..n_workers {
+            scope.spawn(|| worker(true));
+        }
+        worker(false);
+    });
+    sched_worker_exit();
+
+    results
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("scheduler exited with an unfinished task"))
+        .collect()
+}
+
+/// Unpark-based waker: drives a single future to completion on the
+/// calling OS thread.  This is the compatibility bridge for the legacy
+/// thread-per-rank drivers (`run_ranks*`) and the synchronous `Comm`
+/// method surface — each blocking call is `block_on(async core)`.
+struct ThreadUnparker(std::thread::Thread);
+
+impl Wake for ThreadUnparker {
+    fn wake(self: Arc<Self>) {
+        self.0.unpark();
+    }
+
+    fn wake_by_ref(self: &Arc<Self>) {
+        self.0.unpark();
+    }
+}
+
+/// Poll `fut` to completion, parking the calling thread between polls.
+/// Must not be called from inside a cooperative task (it would pin a
+/// scheduler worker); the async rank bodies await their comm cores
+/// directly instead.
+pub fn block_on<F: Future>(fut: F) -> F::Output {
+    let waker = Waker::from(Arc::new(ThreadUnparker(std::thread::current())));
+    let mut cx = Context::from_waker(&waker);
+    let mut fut = std::pin::pin!(fut);
+    loop {
+        match fut.as_mut().poll(&mut cx) {
+            Poll::Ready(v) => return v,
+            Poll::Pending => std::thread::park(),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -565,5 +827,104 @@ mod tests {
         let exec = pool.executor();
         let out = exec.map_chunks(&[1u32, 2, 3], |c| c.to_vec());
         assert_eq!(out, vec![vec![1, 2, 3]]);
+    }
+
+    #[test]
+    fn block_on_completes_ready_and_pending_futures() {
+        assert_eq!(block_on(async { 6 * 7 }), 42);
+        // a future that is Pending once and woken from another thread
+        let flag = Arc::new(Mutex::new(false));
+        let registered: Arc<Mutex<Option<Waker>>> = Arc::new(Mutex::new(None));
+        let (f2, r2) = (Arc::clone(&flag), Arc::clone(&registered));
+        let h = std::thread::spawn(move || loop {
+            let w = r2.lock().unwrap().take();
+            if let Some(w) = w {
+                *f2.lock().unwrap() = true;
+                w.wake();
+                return;
+            }
+            std::thread::yield_now();
+        });
+        let out = block_on(std::future::poll_fn(|cx| {
+            if *flag.lock().unwrap() {
+                Poll::Ready(7u32)
+            } else {
+                *registered.lock().unwrap() = Some(cx.waker().clone());
+                Poll::Pending
+            }
+        }));
+        assert_eq!(out, 7);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn drive_tasks_runs_many_more_tasks_than_workers() {
+        // a cooperative all-to-one: each task yields once, then returns
+        let n = 257usize;
+        let woken: Vec<AtomicU8> = (0..n).map(|_| AtomicU8::new(0)).collect();
+        let tasks: Vec<BoxFuture<'_, usize>> = (0..n)
+            .map(|i| {
+                let woken = &woken;
+                Box::pin(async move {
+                    std::future::poll_fn(|cx| {
+                        if woken[i].swap(1, Ordering::AcqRel) == 0 {
+                            // first poll: self-wake and yield, exercising
+                            // the REPOLL/requeue path
+                            cx.waker().wake_by_ref();
+                            Poll::Pending
+                        } else {
+                            Poll::Ready(())
+                        }
+                    })
+                    .await;
+                    i * 2
+                }) as BoxFuture<'_, usize>
+            })
+            .collect();
+        let out = drive_tasks(3, tasks, &|_| {});
+        let vals: Vec<usize> = out.into_iter().map(|r| r.unwrap()).collect();
+        assert_eq!(vals, (0..n).map(|i| i * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn drive_tasks_contains_panics_and_finishes_survivors() {
+        let hits = AtomicUsize::new(0);
+        let tasks: Vec<BoxFuture<'_, u32>> = (0..8u32)
+            .map(|i| {
+                Box::pin(async move {
+                    if i == 3 {
+                        panic!("task {i} exploded");
+                    }
+                    i + 100
+                }) as BoxFuture<'_, u32>
+            })
+            .collect();
+        let out = drive_tasks(2, tasks, &|idx| {
+            assert_eq!(idx, 3);
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 1);
+        for (i, r) in out.into_iter().enumerate() {
+            if i == 3 {
+                assert!(r.is_err());
+            } else {
+                assert_eq!(r.unwrap(), i as u32 + 100);
+            }
+        }
+    }
+
+    #[test]
+    fn drive_tasks_worker_peak_tracks_budget_not_task_count() {
+        reset_sched_worker_peak();
+        let before = sched_worker_peak();
+        let tasks: Vec<BoxFuture<'_, ()>> =
+            (0..512).map(|_| Box::pin(async {}) as BoxFuture<'_, ()>).collect();
+        let out = drive_tasks(4, tasks, &|_| {});
+        assert_eq!(out.len(), 512);
+        // racy upper bound when other tests drive schedulers in
+        // parallel, so only assert the budget-shaped lower/upper frame
+        // relative to this driver: it added at most 4 workers
+        assert!(sched_worker_peak() >= 1);
+        assert!(sched_worker_peak() <= before + 4 + 64, "peak unexpectedly exploded");
     }
 }

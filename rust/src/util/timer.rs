@@ -84,6 +84,19 @@ impl SplitTimer {
         out
     }
 
+    /// Attribute the wall time since `since` to communication.  The
+    /// `async` comm call sites cannot wrap an `.await` in the [`comm`]
+    /// closure (closures can't await), so they bracket the await with
+    /// `let t0 = Instant::now(); ... .await?; timers.comm_add(t0);`.
+    /// Under the cooperative scheduler this measures submit-to-complete
+    /// wall time — the same quantity the blocking wrapper observed —
+    /// regardless of which worker thread resumes the rank.
+    ///
+    /// [`comm`]: SplitTimer::comm
+    pub fn comm_add(&mut self, since: std::time::Instant) {
+        self.comm += since.elapsed();
+    }
+
     pub fn total(&self) -> Duration {
         self.comp + self.comm
     }

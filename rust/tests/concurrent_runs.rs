@@ -1,0 +1,167 @@
+//! PR 7: the cooperative rank runtime's concurrency matrix.
+//!
+//! One `Session` now executes any number of `plan.run()`s concurrently
+//! — batch-submitted via `run_many` or racing from plain OS threads —
+//! with every submission on its own private mailbox domain.  The bar is
+//! bit-parity: an interleaved run must equal the run executed alone
+//! (the old `run_gate` semantics), across problems {D1-2GL, D2, PD2}
+//! and rank counts {2, 8, 17, 256}.  A p=1024 coloring must complete on
+//! an 8-worker budget, since ranks are cooperative state machines, not
+//! OS threads.  `scripts/verify.sh --concurrent` re-runs this suite
+//! starved onto 2 scheduler workers (`DIST_TEST_THREADS=2`), which is
+//! where lost-wakeup and starvation bugs would deadlock or diverge.
+//!
+//! The plan cache rides along: `Session::plan` keyed by (graph
+//! fingerprint, partition fingerprint, ghost layers) must count hits
+//! and misses exactly and hand out plans that color identically.
+
+use dist_color::coloring::validate;
+use dist_color::distributed::CostModel;
+use dist_color::graph::generators::erdos_renyi::gnm;
+use dist_color::partition;
+use dist_color::session::{GhostLayers, ProblemSpec, Session};
+use dist_color::util::par;
+
+const RANK_COUNTS: [usize; 4] = [2, 8, 17, 256];
+
+#[test]
+fn interleaved_batches_match_serial_runs_across_the_matrix() {
+    for &ranks in &RANK_COUNTS {
+        let scale = ranks.max(64);
+        let g = gnm(8 * scale, 32 * scale, ranks as u64);
+        let part = partition::hash(&g, ranks, 3);
+        let session =
+            Session::builder().ranks(ranks).cost(CostModel::zero()).threads(1).seed(11).build();
+        let plan = session.plan(&g, &part, GhostLayers::Two);
+        let specs = [ProblemSpec::d1(), ProblemSpec::d2(), ProblemSpec::pd2()];
+        let serial: Vec<_> = specs.iter().map(|&s| plan.run(s)).collect();
+        let batch = plan.run_many(&specs);
+        assert_eq!(batch.len(), specs.len());
+        for (i, (s, b)) in serial.iter().zip(&batch).enumerate() {
+            let b = b.as_ref().expect("batch submission failed");
+            assert_eq!(
+                s.colors, b.colors,
+                "interleaved spec {i} diverged from its solo run at ranks={ranks}"
+            );
+            assert_eq!(s.stats.comm_rounds, b.stats.comm_rounds, "spec {i} ranks={ranks}");
+            assert_eq!(s.stats.conflicts, b.stats.conflicts, "spec {i} ranks={ranks}");
+        }
+        assert!(validate::is_proper_d1(&g, &serial[0].colors));
+        assert!(validate::is_proper_d2(&g, &serial[1].colors));
+        assert!(validate::is_proper_pd2(&g, &serial[2].colors));
+    }
+}
+
+#[test]
+fn sixteen_plus_interleaved_runs_on_one_session_match_gated_serial() {
+    // the acceptance bar: one session, >= 16 interleaved submissions,
+    // each bit-identical to the gated-serial execution order
+    let g = gnm(600, 2600, 21);
+    let part = partition::hash(&g, 8, 2);
+    let session = Session::builder().ranks(8).cost(CostModel::zero()).threads(1).seed(5).build();
+    let plan = session.plan(&g, &part, GhostLayers::Two);
+    let mut specs = Vec::new();
+    for seed in [5u64, 77, 901] {
+        specs.push(ProblemSpec::d1().with_seed(seed));
+        specs.push(ProblemSpec::d1_baseline().with_seed(seed));
+        specs.push(ProblemSpec::d2().with_seed(seed));
+        specs.push(ProblemSpec::pd2().with_seed(seed));
+        specs.push(ProblemSpec::d1().with_seed(seed).with_double_buffer(false));
+        specs.push(ProblemSpec::d1().with_seed(seed).with_paranoid(true));
+    }
+    assert!(specs.len() >= 16, "need at least 16 interleaved submissions");
+    let serial: Vec<_> = specs.iter().map(|&s| plan.run(s)).collect();
+    let batch = plan.run_many(&specs);
+    for (i, (s, b)) in serial.iter().zip(&batch).enumerate() {
+        let b = b.as_ref().expect("batch submission failed");
+        assert_eq!(s.colors, b.colors, "submission {i} diverged from its gated-serial twin");
+        assert_eq!(s.stats.comm_rounds, b.stats.comm_rounds, "submission {i}");
+    }
+}
+
+#[test]
+fn racing_run_calls_from_plain_threads_are_bit_identical() {
+    // no run_gate: concurrent `plan.run()` calls from ordinary OS
+    // threads interleave on the session's scheduler and must still
+    // equal the solo runs
+    let g = gnm(500, 2000, 9);
+    let part = partition::hash(&g, 8, 1);
+    let session = Session::builder().ranks(8).cost(CostModel::zero()).threads(1).build();
+    let plan = session.plan(&g, &part, GhostLayers::Two);
+    let d1 = plan.run(ProblemSpec::d1());
+    let d2 = plan.run(ProblemSpec::d2());
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..8)
+            .map(|i| {
+                let plan = &plan;
+                let (spec, want) =
+                    if i % 2 == 0 { (ProblemSpec::d1(), &d1) } else { (ProblemSpec::d2(), &d2) };
+                scope.spawn(move || {
+                    let r = plan.run(spec);
+                    assert_eq!(r.colors, want.colors, "racing run {i} diverged");
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().expect("racing thread panicked");
+        }
+    });
+}
+
+#[test]
+fn p1024_completes_on_an_eight_worker_budget() {
+    // 1024 modeled ranks, 8 scheduler workers, no per-rank OS threads:
+    // a thread-per-rank runtime would need all 1024 live at once to
+    // clear the collectives; the cooperative runtime suspends them
+    let g = gnm(4096, 14_000, 31);
+    let part = partition::hash(&g, 1024, 1);
+    let session = Session::builder()
+        .ranks(1024)
+        .cost(CostModel::zero())
+        .threads(1)
+        .workers(8)
+        .build();
+    assert_eq!(session.worker_budget(), 8);
+    par::reset_sched_worker_peak();
+    let plan = session.plan(&g, &part, GhostLayers::One);
+    let run = plan.run(ProblemSpec::d1());
+    assert!(validate::is_proper_d1(&g, &run.colors));
+    // the peak-worker gauge is process-global, so other tests running
+    // in parallel inflate it; pin it only when this binary is serial
+    // (verify.sh --concurrent exports RUST_TEST_THREADS=1).  BENCH_PR7
+    // pins the flat peak across p on a quiet process unconditionally.
+    let serial_tests =
+        std::env::var("RUST_TEST_THREADS").map(|v| v.trim() == "1").unwrap_or(false);
+    if serial_tests {
+        assert!(
+            par::sched_worker_peak() <= 8,
+            "per-rank OS threads leaked: peak {} workers",
+            par::sched_worker_peak()
+        );
+    }
+}
+
+#[test]
+fn plan_cache_counts_hits_and_misses() {
+    let g = gnm(300, 1200, 17);
+    let h = gnm(300, 1200, 18); // same shape, different edges
+    let part = partition::hash(&g, 4, 1);
+    let session = Session::builder().ranks(4).cost(CostModel::zero()).threads(1).build();
+    assert_eq!(session.plan_cache_stats(), (0, 0));
+    let a = session.plan(&g, &part, GhostLayers::Two); // cold: miss
+    assert_eq!(session.plan_cache_stats(), (0, 1));
+    let b = session.plan(&g, &part, GhostLayers::Two); // identical: hit
+    assert_eq!(session.plan_cache_stats(), (1, 1));
+    let c = session.plan(&g, &part, GhostLayers::One); // layers differ: miss
+    let _d = session.plan(&h, &part, GhostLayers::Two); // graph differs: miss
+    let other_part = partition::hash(&g, 4, 9);
+    let _e = session.plan(&g, &other_part, GhostLayers::Two); // partition differs: miss
+    assert_eq!(session.plan_cache_stats(), (1, 4));
+    let _f = session.plan(&g, &part, GhostLayers::One); // back to a known key: hit
+    assert_eq!(session.plan_cache_stats(), (2, 4));
+    // a cache-hit plan is the same plan: shared build stats, identical runs
+    assert_eq!(a.build_stats().bytes, b.build_stats().bytes);
+    assert_eq!(a.build_stats().messages, b.build_stats().messages);
+    assert_eq!(a.run(ProblemSpec::d1()).colors, b.run(ProblemSpec::d1()).colors);
+    assert!(validate::is_proper_d1(&g, &c.run(ProblemSpec::d1()).colors));
+}
