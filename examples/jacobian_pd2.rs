@@ -16,6 +16,10 @@
 //! cargo run --release --example jacobian_pd2
 //! ```
 
+// clippy.toml bans HashMap repo-wide; the (row, color) probe table is
+// membership-only, never iterated.
+#![allow(clippy::disallowed_types)]
+
 use dist_color::coloring::distributed::zoltan::{color_zoltan, ZoltanConfig};
 use dist_color::coloring::{validate, Problem};
 use dist_color::distributed::CostModel;

@@ -1,0 +1,21 @@
+// Linted under virtual path rust/src/coloring/local/fixture.rs.  Three
+// malformed annotations: no justification, unknown rule id, and not an
+// allow() form at all.  Each is an L00 finding AND suppresses nothing,
+// so the L08 violations still fire.
+fn stamp() -> u64 {
+    // repolint: allow(L08)
+    let _t0 = std::time::Instant::now();
+    0
+}
+
+fn stamp2() -> u64 {
+    // repolint: allow(L99) -- no such rule
+    let _t1 = std::time::Instant::now();
+    1
+}
+
+fn stamp3() -> u64 {
+    // repolint: ignore L08 -- wrong verb
+    let _t2 = std::time::Instant::now();
+    2
+}

@@ -1,0 +1,8 @@
+// Linted under virtual path rust/src/coloring/local/fixture.rs.  A
+// well-formed annotation — rule id + `--` justification — suppresses
+// the finding on the next code line.
+fn stamp() -> u64 {
+    // repolint: allow(L08) -- fixture: demonstrates a justified suppression
+    let _t0 = std::time::Instant::now();
+    0
+}

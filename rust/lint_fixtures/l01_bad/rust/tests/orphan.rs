@@ -1,0 +1,6 @@
+// No [[test]] stanza names this file, so with autotests=false it is
+// silently absent from every `cargo test` run — the PR 5 bug class.
+#[test]
+fn orphan_never_runs() {
+    assert!(1 + 1 == 2);
+}

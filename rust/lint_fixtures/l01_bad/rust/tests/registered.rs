@@ -1,0 +1,4 @@
+#[test]
+fn registered_target_builds() {
+    assert!(1 + 1 == 2);
+}

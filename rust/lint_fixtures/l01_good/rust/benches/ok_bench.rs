@@ -1,0 +1,4 @@
+fn main() {
+    let n: u64 = (0..1000).sum();
+    assert!(n == 499_500);
+}

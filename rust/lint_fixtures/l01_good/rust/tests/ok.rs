@@ -1,0 +1,4 @@
+#[test]
+fn ok() {
+    assert!(2 + 2 == 4);
+}

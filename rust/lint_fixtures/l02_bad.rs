@@ -1,0 +1,20 @@
+// Linted under virtual path rust/src/coloring/fixture.rs (hot dir).
+use std::collections::{HashMap, HashSet};
+
+pub fn first_fit_order(weights: &HashMap<u64, u32>) -> Vec<u64> {
+    let mut out = Vec::new();
+    // BAD: bucket order decides the coloring order -> nondeterministic
+    for (&gid, _w) in weights.iter() {
+        out.push(gid);
+    }
+    out
+}
+
+pub fn drain_frontier(frontier: HashSet<u64>) -> Vec<u64> {
+    let mut out = Vec::new();
+    // BAD: direct `for .. in set` is bucket order too
+    for v in frontier {
+        out.push(v);
+    }
+    out
+}

@@ -1,0 +1,19 @@
+// Linted under virtual path rust/src/coloring/fixture.rs (hot dir).
+use std::collections::{HashMap, HashSet};
+
+pub fn palette_size(palette: &HashSet<u32>) -> usize {
+    // order-insensitive sink in the same statement: fine
+    palette.len()
+}
+
+pub fn total_weight(weights: &HashMap<u64, u32>) -> u64 {
+    // sum is order-insensitive: fine
+    weights.values().map(|&w| w as u64).sum()
+}
+
+pub fn ordered_gids(weights: &HashMap<u64, u32>) -> Vec<u64> {
+    // repolint: allow(L02) -- keys are sorted on the next line before use
+    let mut gids: Vec<u64> = weights.keys().copied().collect();
+    gids.sort_unstable();
+    gids
+}

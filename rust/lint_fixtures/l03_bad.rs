@@ -1,0 +1,13 @@
+// Linted under any rust/src path.  `flush_all` is a sync shim (it calls
+// par::block_on), so calling it — or block_on directly — from an async
+// body parks a scheduler worker on a nested scheduler: deadlock.
+fn flush_all(comm: &Comm) -> u64 {
+    block_on(comm.flush_async())
+}
+
+async fn exchange(comm: &Comm) -> u64 {
+    // BAD: nested scheduler entry inside an async body
+    let pending = block_on(comm.flush_async());
+    // BAD: same hazard laundered through the sync shim
+    pending + flush_all(comm)
+}

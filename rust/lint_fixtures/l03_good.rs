@@ -1,0 +1,9 @@
+// Linted under any rust/src path.  The async core awaits; only the
+// outermost sync wrapper may enter the scheduler via block_on.
+async fn exchange(comm: &Comm) -> u64 {
+    comm.flush_async().await
+}
+
+fn exchange_blocking(comm: &Comm) -> u64 {
+    block_on(exchange(comm))
+}

@@ -1,0 +1,14 @@
+// Linted under any rust/src path.  A ScratchPool checkout pins a
+// per-worker scratch slot; suspending while holding it starves the
+// other tasks multiplexed onto that worker.
+async fn color_round(pool: &ScratchPool, comm: &Comm) -> u64 {
+    // BAD: .await inside the `with` closure — the checkout spans it
+    pool.with(|s| async move {
+        comm.barrier(9).await;
+        s.len() as u64
+    });
+    // BAD: let-bound checkout still live across the later await
+    let scratch = pool.checkout();
+    comm.flush_async().await;
+    scratch.len() as u64
+}

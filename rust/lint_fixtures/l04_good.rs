@@ -1,0 +1,9 @@
+// Linted under any rust/src path.  Checkouts are scoped strictly
+// between awaits: finish the synchronous work, drop the checkout, then
+// suspend.
+async fn color_round(pool: &ScratchPool, comm: &Comm) -> u64 {
+    let workers = pool.threads();
+    let colored = pool.with(|s| s.len() as u64);
+    comm.flush_async().await;
+    colored + workers as u64
+}

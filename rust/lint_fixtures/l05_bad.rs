@@ -1,0 +1,13 @@
+// Linted under virtual path rust/src/coloring/fixture.rs (not the comm
+// substrate).  comm.rs's contract: a collective may consume tag..tag+3,
+// and u64::MAX / u64::MAX-1 are reserved for the control plane.
+fn exchange(comm: &Comm, pending: u64) -> u64 {
+    let a = comm.allreduce_sum(40, pending);
+    // BAD: 41 is within 3 of 40 — the barrier's internal sub-tags collide
+    let b = comm.allreduce_max(41, pending);
+    // BAD: tag in the reserved control-plane range
+    comm.barrier(u64::MAX);
+    // BAD: application code referencing a reserved control-plane tag
+    let down = CTRL_DOWN;
+    a + b + down
+}

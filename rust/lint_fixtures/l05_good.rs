@@ -1,0 +1,10 @@
+// Linted under virtual path rust/src/coloring/fixture.rs.  Literal
+// collective tags spaced by >= 3; symbolic tag bases are out of scope
+// (their spacing is the defining module's contract).
+fn exchange(comm: &Comm, pending: u64) -> u64 {
+    let a = comm.allreduce_sum(40, pending);
+    let b = comm.allreduce_max(44, pending);
+    comm.barrier(48);
+    let c = comm.allreduce_sum(TAG_BASE + 2 * 3, pending);
+    a + b + c
+}

@@ -1,0 +1,11 @@
+// Linted under any path that is not the defining module of ProblemSpec.
+// A literal that names every field compiles today and silently misses
+// tomorrow's widened field — outside the defining module it must close
+// with `..Default::default()` (or `..base`).
+fn spec() -> ProblemSpec {
+    ProblemSpec {
+        problem: Problem::D1,
+        kernel: Kernel::Jp,
+        seed: None,
+    }
+}

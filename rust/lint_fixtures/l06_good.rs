@@ -1,0 +1,16 @@
+// Linted under any path that is not the defining module.  Both escape
+// forms: `..Default::default()` and functional update from a base.
+fn spec() -> ProblemSpec {
+    ProblemSpec {
+        problem: Problem::D1,
+        kernel: Kernel::Jp,
+        ..Default::default()
+    }
+}
+
+fn widen(base: RunStats) -> RunStats {
+    RunStats {
+        rounds: 3,
+        ..base
+    }
+}

@@ -1,0 +1,9 @@
+// Linted under virtual path rust/src/distributed/fixture.rs.  The
+// logical ledger (messages/bytes/modeled_ns) must be blind to the fault
+// plane: retries and NACK traffic live only in the fault_* counters.
+fn absorb(stats: &mut CommStats) {
+    // BAD: retry traffic leaks into the logical message count
+    stats.messages += stats.fault_retries;
+    // BAD: same leak via plain assignment
+    stats.bytes = stats.bytes + stats.fault_bytes;
+}

@@ -1,0 +1,11 @@
+// Linted under virtual path rust/src/distributed/fixture.rs.  Fault
+// counters accumulate on their own plane; *reading* both planes to
+// report a physical total is fine — only assignment into the logical
+// fields is fenced.
+fn absorb(stats: &mut CommStats, frames: u64, wire_bytes: u64) -> u64 {
+    stats.messages += frames;
+    stats.bytes += wire_bytes;
+    stats.fault_retries += 1;
+    stats.fault_bytes += wire_bytes;
+    stats.bytes + stats.fault_bytes
+}

@@ -1,0 +1,14 @@
+// Linted under virtual path rust/src/coloring/local/fixture.rs — not an
+// approved wall-timer module.  Modeled time must come from CostModel;
+// ad-hoc Instant::now() readings contaminate the α–β accounting, and
+// SystemTime is banned everywhere (non-monotonic).
+fn stamp() -> std::time::Instant {
+    // BAD: wall clock outside util::timer and the approved roots
+    std::time::Instant::now()
+}
+
+fn epoch_guess() -> u64 {
+    // BAD: SystemTime is banned in rust/src regardless of module
+    let _t = std::time::SystemTime::now();
+    0
+}

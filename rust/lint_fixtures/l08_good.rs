@@ -1,0 +1,6 @@
+// Linted under virtual path rust/src/coloring/local/fixture.rs.  Time
+// flows in through parameters: wall time from util::timer brackets at
+// the approved call roots, modeled time from the CostModel.
+fn bill(cost: &CostModel, bytes: u64, wall_ns: u64) -> u64 {
+    wall_ns + cost.alltoallv_ns(bytes)
+}

@@ -1,0 +1,9 @@
+// Deliberately unbalanced: the `(` on the let line is never closed, so
+// the first `}` mismatches it.  Brace-looking content in strings, chars
+// and comments must NOT mask the drift.
+fn broken() {
+    let s = "a } in a string is fine";
+    let c = '{';
+    /* a } in a block comment is fine */
+    let x = (1 + 2;
+}

@@ -1,0 +1,14 @@
+// Balanced, with every construct that legally embeds unbalanced
+// delimiter characters: plain strings, escaped quotes, char literals,
+// raw strings, byte strings, lifetimes, and nested block comments.
+fn tricky<'a>(name: &'a str) -> String {
+    let a = "closing } and ) and ] inside";
+    let b = "escaped quote \" then } brace";
+    let c = '}';
+    let d = '\'';
+    let e = r#"raw { "json": [1, 2 } unbalanced"#;
+    let f = b"byte { string )";
+    /* outer ( [ { /* nested */ still comment } */
+    let v: Vec<&'a str> = vec![name];
+    format!("{a}{b}{c}{d}{e}{}{}", f.len(), v.len())
+}

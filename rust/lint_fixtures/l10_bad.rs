@@ -1,0 +1,8 @@
+// Placeholder/argument arity drift: the classic desk-edit bug where a
+// format string gains or loses a `{}` without the argument list moving.
+fn report(rounds: usize, conflicts: usize) {
+    // BAD: two placeholders, one argument
+    println!("rounds {} conflicts {}", rounds);
+    // BAD: one placeholder, two arguments (none named)
+    let _s = format!("rounds={}", rounds, conflicts);
+}

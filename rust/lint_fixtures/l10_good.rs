@@ -1,0 +1,12 @@
+// Arity-correct uses of every shape the checker must tolerate: matched
+// auto placeholders, trailing string-literal arguments, inline named
+// captures mixed with named arguments, later-position format strings
+// (assert_eq), and escaped braces.
+fn report(rounds: usize, name: &str) {
+    println!("rounds {} name {}", rounds, name);
+    println!("phase {} state {}", rounds, "done");
+    let _s = format!("{name} round {} of {total}", rounds, total = 8);
+    assert_eq!(rounds, rounds, "diverged after {} rounds", rounds);
+    println!("escaped {{literal}} braces only");
+    eprintln!("indexed {0} twice {0}", rounds);
+}

@@ -1,0 +1,76 @@
+//! repolint — run the in-tree invariant linter over the repository.
+//!
+//! Usage:
+//!   repolint [--json] [--root <dir>]
+//!
+//! Exits 0 when the tree is clean, 1 when there are findings, 2 on
+//! usage or I/O errors.  `scripts/verify.sh` runs this as a hard gate
+//! ahead of the test suite; see `docs/LINTS.md` for the rule catalog
+//! and the allow-annotation escape hatch.
+
+use dist_color::lint;
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let mut json = false;
+    let mut root: Option<PathBuf> = None;
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--json" => json = true,
+            "--root" => match args.next() {
+                Some(p) => root = Some(PathBuf::from(p)),
+                None => {
+                    eprintln!("repolint: --root needs a directory argument");
+                    return ExitCode::from(2);
+                }
+            },
+            "-h" | "--help" => {
+                println!("usage: repolint [--json] [--root <dir>]");
+                println!("lints the repo against the invariant catalog in docs/LINTS.md;");
+                println!("exit 0 = clean, 1 = findings, 2 = error");
+                return ExitCode::SUCCESS;
+            }
+            other => {
+                eprintln!("repolint: unknown argument `{other}`");
+                return ExitCode::from(2);
+            }
+        }
+    }
+    // default root: the cwd when it looks like the package root (the
+    // verify.sh path), else the compile-time manifest dir
+    let root = root.unwrap_or_else(|| {
+        if PathBuf::from("Cargo.toml").is_file() {
+            PathBuf::from(".")
+        } else {
+            PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        }
+    });
+    match lint::run_repo(&root) {
+        Err(e) => {
+            eprintln!("repolint: {e}");
+            ExitCode::from(2)
+        }
+        Ok(findings) => {
+            if json {
+                println!("{}", lint::render_json(&findings));
+            } else {
+                for f in &findings {
+                    println!("{f}");
+                }
+            }
+            if findings.is_empty() {
+                if !json {
+                    eprintln!("repolint: clean");
+                }
+                ExitCode::SUCCESS
+            } else {
+                if !json {
+                    eprintln!("repolint: {} finding(s)", findings.len());
+                }
+                ExitCode::FAILURE
+            }
+        }
+    }
+}

@@ -107,6 +107,9 @@ fn assign_first_fit(g: &Graph, v: VId, colors: &mut [Color], forbidden: &mut Bit
 
 /// DSatur (Brélaz): repeatedly color the vertex with the most distinctly
 /// colored neighbors, breaking ties by degree.
+// saturation sets are membership+len only (argmax reads len()), never
+// iterated, so bucket order cannot change the vertex order
+#[allow(clippy::disallowed_types)]
 pub fn dsatur(g: &Graph) -> Vec<Color> {
     let n = g.n();
     let mut colors = vec![0 as Color; n];

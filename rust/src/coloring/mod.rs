@@ -34,6 +34,8 @@ impl std::fmt::Display for Problem {
 }
 
 /// Number of distinct colors used (ignoring uncolored).
+// membership-only set: only its len() is observed, never its order
+#[allow(clippy::disallowed_types)]
 pub fn colors_used(colors: &[Color]) -> usize {
     let mut seen = std::collections::HashSet::new();
     for &c in colors {

@@ -60,6 +60,9 @@ pub fn is_proper_pd2_source_side(bg: &BipartiteGraph, colors: &[Color]) -> bool 
 /// Check that no two distinct vertices (below `limit` if given) at
 /// distance two share a color, via the net formulation: all pairs of
 /// neighbors of any vertex are two-hop pairs.
+// lookup-only map: queried per neighbor, never iterated, so bucket
+// order cannot reach the boolean verdict
+#[allow(clippy::disallowed_types)]
 fn no_two_hop_conflicts(g: &Graph, colors: &[Color], limit: Option<usize>) -> bool {
     let lim = limit.unwrap_or(g.n());
     let mut seen: std::collections::HashMap<Color, VId> = std::collections::HashMap::new();

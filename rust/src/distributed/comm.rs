@@ -72,6 +72,13 @@
 //! per-channel FIFO keeps rounds apart.  The two topmost tag values are
 //! reserved for the control plane (NACK and rank-down notices).
 
+// clippy.toml bans HashMap (nondeterministic iteration) and raw thread
+// spawns repo-wide.  The mailbox tables here are keyed lookups whose
+// iteration sites pick ordered minima (see take_early_any), and
+// run_ranks' scoped thread-per-rank driver is the sanctioned legacy
+// substrate the cooperative Session runtime replaces.
+#![allow(clippy::disallowed_types, clippy::disallowed_methods)]
+
 use std::collections::{HashMap, VecDeque};
 use std::sync::{Arc, Mutex};
 use std::task::{Context, Poll, Waker};
@@ -539,10 +546,14 @@ impl Comm {
         if self.early.is_empty() {
             return None;
         }
+        // smallest eligible key, not HashMap bucket order: when several
+        // senders' stashed frames are ready at once, recv_any's pick must
+        // not depend on hash iteration order (L02)
         let key = self
             .early
             .keys()
-            .find(|&&(f, t, s)| t == tag && s == self.rx_seq.get(&(f, t)).copied().unwrap_or(0))
+            .filter(|&&(f, t, s)| t == tag && s == self.rx_seq.get(&(f, t)).copied().unwrap_or(0))
+            .min()
             .copied()?;
         let payload = self.early.remove(&key).unwrap();
         self.rx_seq.insert((key.0, key.1), key.2 + 1);

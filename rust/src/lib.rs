@@ -107,6 +107,18 @@
 //! * **runtime** — PJRT CPU client that loads `artifacts/*.hlo.txt` and
 //!   serves local coloring from the Rust hot path.
 //!
+//! ## Static invariants
+//!
+//! The determinism and accounting contracts above are machine-checked:
+//! [`lint`] implements `repolint`, a zero-dependency static analyzer
+//! whose rule catalog (L01–L10: target registration, iteration-order
+//! determinism, sync-in-async, checkout-across-await, tag spacing,
+//! struct-literal completeness, fault-blind accounting, timer
+//! discipline, delimiter balance, format arity) encodes the invariants
+//! each PR used to audit by hand.  `cargo run -q --bin repolint` gates
+//! `scripts/verify.sh`; the full catalog and the allow-annotation
+//! escape hatch are documented in `docs/LINTS.md`.
+//!
 //! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
 //! paper-versus-measured record.
 
@@ -114,6 +126,7 @@ pub mod bench;
 pub mod coloring;
 pub mod distributed;
 pub mod graph;
+pub mod lint;
 pub mod partition;
 pub mod runtime;
 pub mod session;

@@ -1,0 +1,430 @@
+//! String/comment-aware lexer for `repolint`.
+//!
+//! Splits every source line into three parallel views:
+//!
+//! * **code** — program text with string/char-literal contents and all
+//!   comments blanked out.  Rules that look for identifiers, operators
+//!   and delimiters run on this view, so a `}` inside a string or a
+//!   `HashMap` named in a doc comment can never confuse them.
+//! * **comment** — only the comment text (line and block).  The
+//!   allow-annotation parser runs here.
+//! * **semi** — comments blanked but string literals kept verbatim; the
+//!   `format!` placeholder-arity rule recovers format strings from it.
+//!
+//! Lexer state (inside a string, inside a raw string and its `#` count,
+//! block-comment nesting depth) carries across lines, so multi-line
+//! strings and nested block comments are handled.  This is a lexer, not
+//! a parser: it never needs the file to be valid Rust, which is what
+//! lets the deliberately-broken lint fixtures be lexed at all.
+
+/// One token of blanked code: text, 0-based line, 0-based column.
+#[derive(Debug, Clone)]
+pub struct Tok {
+    pub t: String,
+    pub ln: usize,
+    pub col: usize,
+}
+
+/// The three per-line views produced by [`lex_file`].
+pub struct LexedLines {
+    pub code: Vec<Vec<char>>,
+    pub comment: Vec<String>,
+    pub semi: Vec<Vec<char>>,
+}
+
+/// A `fn` item with a body: name, asyncness, and the token indices of
+/// the `fn` keyword, body `{` and matching `}`.
+#[derive(Debug, Clone)]
+pub struct FnExtent {
+    pub name: String,
+    pub is_async: bool,
+    pub sig_i: usize,
+    pub open_i: usize,
+    pub close_i: usize,
+}
+
+#[derive(Clone, Copy)]
+enum State {
+    Normal,
+    Str,
+    Raw(usize),   // raw string, payload = number of `#`s
+    Block(usize), // block comment, payload = nesting depth
+}
+
+pub fn lex_file(text: &str) -> LexedLines {
+    let mut code_lines = Vec::new();
+    let mut comment_lines = Vec::new();
+    let mut semi_lines = Vec::new();
+    let mut state = State::Normal;
+    for line in text.split('\n') {
+        let ch: Vec<char> = line.chars().collect();
+        let n = ch.len();
+        let mut code = vec![' '; n];
+        let mut com = vec![' '; n];
+        let mut semi = vec![' '; n];
+        let mut i = 0usize;
+        while i < n {
+            let c = ch[i];
+            match state {
+                State::Block(depth) => {
+                    if c == '*' && i + 1 < n && ch[i + 1] == '/' {
+                        com[i] = '*';
+                        com[i + 1] = '/';
+                        i += 2;
+                        state = if depth == 1 {
+                            State::Normal
+                        } else {
+                            State::Block(depth - 1)
+                        };
+                        continue;
+                    }
+                    if c == '/' && i + 1 < n && ch[i + 1] == '*' {
+                        com[i] = '/';
+                        com[i + 1] = '*';
+                        i += 2;
+                        state = State::Block(depth + 1);
+                        continue;
+                    }
+                    com[i] = c;
+                    i += 1;
+                    continue;
+                }
+                State::Str => {
+                    semi[i] = c;
+                    if c == '\\' && i + 1 < n {
+                        semi[i + 1] = ch[i + 1];
+                        i += 2;
+                        continue;
+                    }
+                    if c == '"' {
+                        state = State::Normal;
+                    }
+                    i += 1;
+                    continue;
+                }
+                State::Raw(h) => {
+                    semi[i] = c;
+                    if c == '"' && i + 1 + h <= n && ch[i + 1..i + 1 + h].iter().all(|&x| x == '#')
+                    {
+                        for k in 0..h {
+                            semi[i + 1 + k] = '#';
+                        }
+                        i += 1 + h;
+                        state = State::Normal;
+                        continue;
+                    }
+                    i += 1;
+                    continue;
+                }
+                State::Normal => {}
+            }
+            // ---- NORMAL state ------------------------------------------
+            if c == '/' && i + 1 < n && ch[i + 1] == '/' {
+                for j in i..n {
+                    com[j] = ch[j];
+                }
+                break;
+            }
+            if c == '/' && i + 1 < n && ch[i + 1] == '*' {
+                state = State::Block(1);
+                com[i] = '/';
+                com[i + 1] = '*';
+                i += 2;
+                continue;
+            }
+            if c == '"' {
+                state = State::Str;
+                semi[i] = c;
+                i += 1;
+                continue;
+            }
+            // raw / byte string openers: r" r#" br" b"
+            if c == 'r' || c == 'b' {
+                let prev_ident = i > 0 && (ch[i - 1].is_alphanumeric() || ch[i - 1] == '_');
+                if !prev_ident {
+                    let mut j = i;
+                    if c == 'b' && j + 1 < n && ch[j + 1] == 'r' {
+                        j += 1;
+                    }
+                    let mut k = j + 1;
+                    let mut h = 0usize;
+                    while k < n && ch[k] == '#' {
+                        h += 1;
+                        k += 1;
+                    }
+                    if k < n && ch[k] == '"' && (ch[j] == 'r' || (ch[j] == 'b' && h == 0)) {
+                        if ch[j] == 'b' && j == i && h == 0 {
+                            // b"...": ordinary string with escapes
+                            for (q, s) in semi.iter_mut().enumerate().take(k + 1).skip(i) {
+                                *s = ch[q];
+                            }
+                            state = State::Str;
+                            i = k + 1;
+                            continue;
+                        }
+                        if ch[j] == 'r' {
+                            for (q, s) in semi.iter_mut().enumerate().take(k + 1).skip(i) {
+                                *s = ch[q];
+                            }
+                            state = State::Raw(h);
+                            i = k + 1;
+                            continue;
+                        }
+                    }
+                }
+            }
+            if c == '\'' {
+                // char literal vs lifetime
+                if i + 1 < n && ch[i + 1] == '\\' {
+                    let mut j = i + 3; // skip the escaped char
+                    while j < n && ch[j] != '\'' {
+                        j += 1;
+                    }
+                    i = j + 1;
+                    continue;
+                }
+                if i + 2 < n && ch[i + 2] == '\'' && ch[i + 1] != '\'' {
+                    i += 3;
+                    continue;
+                }
+                // lifetime: drop the quote, let the ident pass through
+                i += 1;
+                continue;
+            }
+            code[i] = c;
+            semi[i] = c;
+            i += 1;
+        }
+        code_lines.push(code);
+        comment_lines.push(com.into_iter().collect::<String>());
+        semi_lines.push(semi);
+    }
+    LexedLines {
+        code: code_lines,
+        comment: comment_lines,
+        semi: semi_lines,
+    }
+}
+
+/// Words `[A-Za-z0-9_]+`; `::`, `.`, `..`, `...` merged; every other
+/// non-space character is a single-char token.
+pub fn tokenize(code: &[Vec<char>]) -> Vec<Tok> {
+    let mut toks = Vec::new();
+    for (ln, line) in code.iter().enumerate() {
+        let n = line.len();
+        let mut i = 0usize;
+        while i < n {
+            let c = line[i];
+            if c.is_whitespace() {
+                i += 1;
+                continue;
+            }
+            if c.is_alphanumeric() || c == '_' {
+                let mut j = i;
+                while j < n && (line[j].is_alphanumeric() || line[j] == '_') {
+                    j += 1;
+                }
+                toks.push(Tok {
+                    t: line[i..j].iter().collect(),
+                    ln,
+                    col: i,
+                });
+                i = j;
+                continue;
+            }
+            if c == ':' && i + 1 < n && line[i + 1] == ':' {
+                toks.push(Tok {
+                    t: "::".to_string(),
+                    ln,
+                    col: i,
+                });
+                i += 2;
+                continue;
+            }
+            if c == '.' {
+                let mut j = i;
+                while j < n && line[j] == '.' && j - i < 3 {
+                    j += 1;
+                }
+                toks.push(Tok {
+                    t: line[i..j].iter().collect(),
+                    ln,
+                    col: i,
+                });
+                i = j;
+                continue;
+            }
+            toks.push(Tok {
+                t: c.to_string(),
+                ln,
+                col: i,
+            });
+            i += 1;
+        }
+    }
+    toks
+}
+
+/// `depth[i]` = brace depth *before* token `i`.
+pub fn brace_depths(toks: &[Tok]) -> Vec<usize> {
+    let mut d = 0usize;
+    let mut out = Vec::with_capacity(toks.len());
+    for tok in toks {
+        out.push(d);
+        if tok.t == "{" {
+            d += 1;
+        } else if tok.t == "}" {
+            d = d.saturating_sub(1);
+        }
+    }
+    out
+}
+
+/// Tokens that may sit between a fn's visibility/qualifier prefix and
+/// the `fn` keyword when scanning backwards for `async`.
+const MODIFIERS: &[&str] = &[
+    "pub", "(", "crate", "super", "self", ")", "unsafe", "const", "extern", "async", "default",
+];
+
+/// Every `fn` item that has a body.
+pub fn fn_extents(toks: &[Tok], depth: &[usize]) -> Vec<FnExtent> {
+    let mut out = Vec::new();
+    let n = toks.len();
+    for i in 0..n {
+        if toks[i].t != "fn" || i + 1 >= n {
+            continue;
+        }
+        let name = toks[i + 1].t.clone();
+        let first = name.chars().next().unwrap_or('0');
+        if !(first.is_alphabetic() || first == '_') {
+            continue;
+        }
+        let mut is_async = false;
+        let mut j = i as isize - 1;
+        while j >= 0 && MODIFIERS.contains(&toks[j as usize].t.as_str()) {
+            if toks[j as usize].t == "async" {
+                is_async = true;
+                break;
+            }
+            j -= 1;
+        }
+        // find the body `{` (or a `;` at the fn's depth: no body)
+        let d0 = depth[i];
+        let mut k = i + 2;
+        let mut open_i = None;
+        while k < n {
+            if toks[k].t == ";" && depth[k] == d0 {
+                break;
+            }
+            if toks[k].t == "{" {
+                open_i = Some(k);
+                break;
+            }
+            k += 1;
+        }
+        let Some(open_i) = open_i else { continue };
+        let mut bal = 0i64;
+        let mut close_i = None;
+        for (m, tok) in toks.iter().enumerate().skip(open_i) {
+            if tok.t == "{" {
+                bal += 1;
+            } else if tok.t == "}" {
+                bal -= 1;
+                if bal == 0 {
+                    close_i = Some(m);
+                    break;
+                }
+            }
+        }
+        let Some(close_i) = close_i else { continue };
+        out.push(FnExtent {
+            name,
+            is_async,
+            sig_i: i,
+            open_i,
+            close_i,
+        });
+    }
+    out
+}
+
+/// `async {` / `async move {` block extents: (async_i, open_i, close_i).
+pub fn async_block_extents(toks: &[Tok]) -> Vec<(usize, usize, usize)> {
+    let mut out = Vec::new();
+    let n = toks.len();
+    for i in 0..n {
+        if toks[i].t != "async" {
+            continue;
+        }
+        let mut j = i + 1;
+        if j < n && toks[j].t == "move" {
+            j += 1;
+        }
+        if j >= n || toks[j].t != "{" {
+            continue;
+        }
+        let mut bal = 0i64;
+        for (m, tok) in toks.iter().enumerate().skip(j) {
+            if tok.t == "{" {
+                bal += 1;
+            } else if tok.t == "}" {
+                bal -= 1;
+                if bal == 0 {
+                    out.push((i, j, m));
+                    break;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Matching close index for the `(` / `[` / `{` at `open_i`.
+pub fn match_close(toks: &[Tok], open_i: usize) -> usize {
+    let o = toks[open_i].t.as_str();
+    let c = match o {
+        "(" => ")",
+        "[" => "]",
+        _ => "}",
+    };
+    let mut bal = 0i64;
+    for (m, tok) in toks.iter().enumerate().skip(open_i) {
+        if tok.t == o {
+            bal += 1;
+        } else if tok.t == c {
+            bal -= 1;
+            if bal == 0 {
+                return m;
+            }
+        }
+    }
+    toks.len() - 1
+}
+
+/// Token bounds of the statement containing token `i`: start = after the
+/// previous `;`/`{`/`}` at depth <= depth[i]; end = the next `;` at the
+/// start's depth, the `{` opening a block at that depth (for/if
+/// headers), or the `}` closing the enclosing block.
+pub fn stmt_bounds(toks: &[Tok], depth: &[usize], i: usize) -> (usize, usize) {
+    let d = depth[i];
+    let mut s = i;
+    while s > 0 {
+        let t = toks[s - 1].t.as_str();
+        if (t == ";" || t == "{" || t == "}") && depth[s - 1] <= d {
+            break;
+        }
+        s -= 1;
+    }
+    let ds = depth[s];
+    let mut e = i;
+    let n = toks.len();
+    while e < n {
+        let t = toks[e].t.as_str();
+        if (t == ";" && depth[e] == ds) || (t == "{" && depth[e] == ds) || (t == "}" && depth[e] < ds)
+        {
+            break;
+        }
+        e += 1;
+    }
+    (s, e.min(n - 1))
+}

@@ -1,0 +1,520 @@
+//! `repolint` — the repo's zero-dependency invariant linter.
+//!
+//! Turns the structural invariants this codebase keeps re-auditing by
+//! hand into machine checks with `file:line` diagnostics.  The catalog
+//! (see `docs/LINTS.md` for the full write-up):
+//!
+//! | rule | invariant |
+//! |------|-----------|
+//! | L01  | every `rust/tests`/`rust/benches` file is a registered Cargo target, and every registration resolves (`autotests = false` makes an orphan silently vanish from the build) |
+//! | L02  | no direct iteration over `HashMap`/`HashSet` in the hot-path modules (`coloring/`, `distributed/`, `session/`) unless an order-insensitive sink or sort sits in the same statement |
+//! | L03  | `par::block_on` — or a sync shim that wraps it — is never called from an async body (nested scheduler entry deadlocks the M-on-N runtime) |
+//! | L04  | a `ScratchPool` checkout is never live across an `.await` |
+//! | L05  | literal collective tags are spaced ≥ 3 apart per fn and never touch the reserved control-plane range (`u64::MAX-1..`) |
+//! | L06  | literals of the frequently-widened config/stats structs outside their defining module end with `..Default::default()` (or `..base`) |
+//! | L07  | `fault_*` counters are never assigned into the logical ledger fields (`messages`/`bytes`/`modeled_ns`/…) |
+//! | L08  | `Instant::now` only in the approved wall-timer modules; `SystemTime` banned outright |
+//! | L09  | delimiters balance outside strings/chars/comments (the desk-edit drop-a-brace class) |
+//! | L10  | `format!`-family placeholder count matches the argument list |
+//!
+//! A finding is suppressed by a justified annotation on its line (or on
+//! a comment line directly above it), e.g.
+//! `repolint: allow(L02) -- keys are sorted on the next line`.
+//! A malformed annotation — missing justification, unknown rule id — is
+//! itself a finding (L00) and suppresses nothing.  L01 findings carry a
+//! `Cargo.toml`/file-level location where no annotation can sit, and L09
+//! stops lexing cold, so neither is allow-able by construction.
+//!
+//! Everything is hand-rolled on `std` (same no-external-executor spirit
+//! as `util::par`): a string/comment-aware lexer ([`lex`]), a token-level
+//! rule engine ([`rules`]), and this driver, which walks the tree and
+//! renders text or JSON.  `cargo run -q --bin repolint` is wired into
+//! `scripts/verify.sh` as a hard gate ahead of the test suite.
+
+pub mod lex;
+pub mod rules;
+
+use rules::Lexed;
+use std::collections::BTreeMap;
+use std::collections::BTreeSet;
+use std::fmt;
+use std::path::Path;
+
+/// One diagnostic: rule id, repo-relative path, 1-based line, message.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub rule: &'static str,
+    pub path: String,
+    pub line: usize,
+    pub msg: String,
+}
+
+impl Finding {
+    /// `ln` is the lexer's 0-based line; rendered 1-based.
+    pub fn new(rule: &'static str, path: &str, ln: usize, msg: String) -> Finding {
+        Finding {
+            rule,
+            path: path.to_string(),
+            line: ln + 1,
+            msg,
+        }
+    }
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: {} {}", self.path, self.line, self.rule, self.msg)
+    }
+}
+
+/// Run every per-file rule (all but L01) over one source text under a
+/// virtual repo path.  Shims and struct-defining modules are derived
+/// from this file alone; allow-annotations are applied.  This is the
+/// entry point the fixture tests use.
+pub fn lint_source(virtual_path: &str, text: &str) -> Vec<Finding> {
+    let lx = Lexed::parse(virtual_path, text);
+    let shims = rules::collect_shims(&[&lx]);
+    let defining = defining_modules(std::slice::from_ref(&lx));
+    lint_lexed(&lx, &shims, &defining)
+}
+
+fn defining_modules(files: &[Lexed]) -> BTreeMap<String, BTreeSet<String>> {
+    let mut defining: BTreeMap<String, BTreeSet<String>> = BTreeMap::new();
+    for lx in files {
+        for i in 0..lx.toks.len() {
+            if lx.toks[i].t == "struct"
+                && i + 1 < lx.toks.len()
+                && rules::STRUCT_L06.contains(&lx.toks[i + 1].t.as_str())
+            {
+                defining
+                    .entry(lx.toks[i + 1].t.clone())
+                    .or_default()
+                    .insert(lx.path.clone());
+            }
+        }
+    }
+    defining
+}
+
+fn lint_lexed(
+    lx: &Lexed,
+    shims: &BTreeSet<String>,
+    defining: &BTreeMap<String, BTreeSet<String>>,
+) -> Vec<Finding> {
+    let mut per = Vec::new();
+    rules::rule_l02(lx, &mut per);
+    rules::rule_l03(lx, shims, &mut per);
+    rules::rule_l04(lx, &mut per);
+    rules::rule_l05(lx, &mut per);
+    rules::rule_l06(lx, defining, &mut per);
+    rules::rule_l07(lx, &mut per);
+    rules::rule_l08(lx, &mut per);
+    rules::rule_l09(lx, &mut per);
+    rules::rule_l10(lx, &mut per);
+    let allows = rules::parse_allows(lx, &mut per);
+    per.retain(|f| f.rule == "L00" || !allows.contains(&(f.rule.to_string(), f.line - 1)));
+    per
+}
+
+// ---------------------------------------------------------------- L01
+
+struct CargoTarget {
+    kind: String,
+    path: String,
+    line: usize, // 0-based line of the `path = ...` entry
+}
+
+fn parse_cargo_targets(text: &str) -> Vec<CargoTarget> {
+    let mut out = Vec::new();
+    let mut kind = String::new();
+    let mut path: Option<(String, usize)> = None;
+    let mut flush = |kind: &str, path: &mut Option<(String, usize)>| {
+        if matches!(kind, "test" | "bench" | "bin" | "lib" | "example") {
+            if let Some((p, pl)) = path.take() {
+                out.push(CargoTarget {
+                    kind: kind.to_string(),
+                    path: p,
+                    line: pl,
+                });
+            }
+        }
+        *path = None;
+    };
+    for (ln, raw) in text.split('\n').enumerate() {
+        let s = raw.split('#').next().unwrap_or("").trim();
+        if s.starts_with('[') {
+            flush(&kind, &mut path);
+            kind = s.trim_matches(|c| c == '[' || c == ']').to_string();
+            continue;
+        }
+        if s.starts_with("path") && s.contains('=') {
+            if let Some(v) = s.split_once('=') {
+                path = Some((v.1.trim().trim_matches('"').to_string(), ln));
+            }
+        }
+    }
+    flush(&kind, &mut path);
+    out
+}
+
+fn rule_l01(root: &Path, out: &mut Vec<Finding>) -> Result<(), String> {
+    let cargo_path = root.join("Cargo.toml");
+    let text = std::fs::read_to_string(&cargo_path)
+        .map_err(|e| format!("{}: {e}", cargo_path.display()))?;
+    let targets = parse_cargo_targets(&text);
+    let reg: BTreeSet<(&str, &str)> = targets
+        .iter()
+        .map(|t| (t.kind.as_str(), t.path.as_str()))
+        .collect();
+    for (kind, dir) in [("test", "rust/tests"), ("bench", "rust/benches")] {
+        let full = root.join(dir);
+        if !full.is_dir() {
+            continue;
+        }
+        for name in sorted_entries(&full) {
+            if !name.ends_with(".rs") {
+                continue;
+            }
+            let rel = format!("{dir}/{name}");
+            if !reg.contains(&(kind, rel.as_str())) {
+                out.push(Finding::new(
+                    "L01",
+                    &rel,
+                    0,
+                    format!(
+                        "not registered as a [[{kind}]] target in Cargo.toml \
+                         (autotests/autobenches are off: this file is silently NOT built)"
+                    ),
+                ));
+            }
+        }
+    }
+    for t in &targets {
+        if !root.join(&t.path).is_file() {
+            out.push(Finding::new(
+                "L01",
+                "Cargo.toml",
+                t.line,
+                format!("[[{}]] path `{}` does not exist", t.kind, t.path),
+            ));
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------- walk
+
+fn sorted_entries(dir: &Path) -> Vec<String> {
+    let mut names: Vec<String> = match std::fs::read_dir(dir) {
+        Ok(rd) => rd
+            .filter_map(|e| e.ok())
+            .map(|e| e.file_name().to_string_lossy().into_owned())
+            .collect(),
+        Err(_) => Vec::new(),
+    };
+    names.sort();
+    names
+}
+
+/// Every tracked `.rs` file under the source roots, repo-relative with
+/// forward slashes, in a deterministic order.  Fixture directories are
+/// excluded: their files are deliberately broken.
+fn tracked_rs_files(root: &Path) -> Vec<String> {
+    let mut out = Vec::new();
+    for base in ["rust/src", "rust/tests", "rust/benches", "examples"] {
+        walk_dir(root, Path::new(base), &mut out);
+    }
+    out
+}
+
+fn walk_dir(root: &Path, rel: &Path, out: &mut Vec<String>) {
+    let full = root.join(rel);
+    if !full.is_dir() {
+        return;
+    }
+    let mut subdirs = Vec::new();
+    for name in sorted_entries(&full) {
+        let rel_child = rel.join(&name);
+        let full_child = root.join(&rel_child);
+        if full_child.is_dir() {
+            if name == "lint_fixtures" || name == "fixtures" {
+                continue;
+            }
+            subdirs.push(rel_child);
+        } else if name.ends_with(".rs") {
+            out.push(rel_child.to_string_lossy().replace('\\', "/"));
+        }
+    }
+    for d in subdirs {
+        walk_dir(root, &d, out);
+    }
+}
+
+/// Lint the whole repo at `root`: L01 against `Cargo.toml`, then every
+/// per-file rule over each tracked `.rs` file, with sync-shim names
+/// collected across `rust/src` and struct-defining modules across the
+/// full file set.
+pub fn run_repo(root: &Path) -> Result<Vec<Finding>, String> {
+    let mut findings = Vec::new();
+    rule_l01(root, &mut findings)?;
+    let files = tracked_rs_files(root);
+    let mut lexed = Vec::with_capacity(files.len());
+    for p in &files {
+        let text =
+            std::fs::read_to_string(root.join(p)).map_err(|e| format!("{p}: {e}"))?;
+        lexed.push(Lexed::parse(p, &text));
+    }
+    let src_files: Vec<&Lexed> = lexed
+        .iter()
+        .filter(|l| l.path.starts_with("rust/src/"))
+        .collect();
+    let shims = rules::collect_shims(&src_files);
+    let defining = defining_modules(&lexed);
+    for lx in &lexed {
+        findings.extend(lint_lexed(lx, &shims, &defining));
+    }
+    Ok(findings)
+}
+
+// ---------------------------------------------------------------- render
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Render findings as a JSON array (stable field order, no trailing
+/// newline) for `repolint --json`.
+pub fn render_json(findings: &[Finding]) -> String {
+    let mut out = String::from("[");
+    for (i, f) in findings.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!(
+            "\n  {{\"rule\": \"{}\", \"path\": \"{}\", \"line\": {}, \"msg\": \"{}\"}}",
+            f.rule,
+            json_escape(&f.path),
+            f.line,
+            json_escape(&f.msg)
+        ));
+    }
+    if !findings.is_empty() {
+        out.push('\n');
+    }
+    out.push(']');
+    out
+}
+
+// ---------------------------------------------------------------- tests
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fixture(name: &str) -> String {
+        let p = Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("rust/lint_fixtures")
+            .join(name);
+        std::fs::read_to_string(&p).unwrap_or_else(|e| panic!("{}: {e}", p.display()))
+    }
+
+    fn fixture_root(name: &str) -> std::path::PathBuf {
+        Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("rust/lint_fixtures")
+            .join(name)
+    }
+
+    /// bad twin must yield >= `min` findings of `rule` (and nothing
+    /// else unless `extra_ok`); good twin must be clean.
+    fn check_pair(vpath: &str, bad: &str, rule: &str, min: usize, good: &str) {
+        let bad_fs = lint_source(vpath, &fixture(bad));
+        let hits = bad_fs.iter().filter(|f| f.rule == rule).count();
+        assert!(
+            hits >= min,
+            "{bad}: wanted >= {min} x {rule}, got {hits}: {bad_fs:?}"
+        );
+        let others = bad_fs.iter().filter(|f| f.rule != rule).count();
+        assert_eq!(others, 0, "{bad}: unexpected extra findings: {bad_fs:?}");
+        let good_fs = lint_source(vpath, &fixture(good));
+        assert!(good_fs.is_empty(), "{good}: expected clean: {good_fs:?}");
+    }
+
+    #[test]
+    fn l02_iteration_order() {
+        check_pair(
+            "rust/src/coloring/fixture.rs",
+            "l02_bad.rs",
+            "L02",
+            2,
+            "l02_good.rs",
+        );
+    }
+
+    #[test]
+    fn l03_sync_in_async() {
+        check_pair(
+            "rust/src/session/fixture.rs",
+            "l03_bad.rs",
+            "L03",
+            2,
+            "l03_good.rs",
+        );
+    }
+
+    #[test]
+    fn l04_checkout_across_await() {
+        check_pair(
+            "rust/src/coloring/fixture.rs",
+            "l04_bad.rs",
+            "L04",
+            2,
+            "l04_good.rs",
+        );
+    }
+
+    #[test]
+    fn l05_tag_discipline() {
+        check_pair(
+            "rust/src/coloring/fixture.rs",
+            "l05_bad.rs",
+            "L05",
+            3,
+            "l05_good.rs",
+        );
+    }
+
+    #[test]
+    fn l06_struct_literal_completeness() {
+        check_pair(
+            "rust/src/coloring/fixture.rs",
+            "l06_bad.rs",
+            "L06",
+            1,
+            "l06_good.rs",
+        );
+    }
+
+    #[test]
+    fn l07_fault_blind_accounting() {
+        check_pair(
+            "rust/src/distributed/fixture.rs",
+            "l07_bad.rs",
+            "L07",
+            2,
+            "l07_good.rs",
+        );
+    }
+
+    #[test]
+    fn l08_timer_discipline() {
+        check_pair(
+            "rust/src/coloring/local/fixture.rs",
+            "l08_bad.rs",
+            "L08",
+            2,
+            "l08_good.rs",
+        );
+    }
+
+    #[test]
+    fn l08_approved_path_still_bans_systemtime() {
+        // same bad content, but lexed as the approved timer module:
+        // Instant::now is fine there, SystemTime never is
+        let fs = lint_source("rust/src/util/timer.rs", &fixture("l08_bad.rs"));
+        assert_eq!(fs.len(), 1, "{fs:?}");
+        assert_eq!(fs[0].rule, "L08");
+        assert!(fs[0].msg.contains("SystemTime"), "{}", fs[0].msg);
+    }
+
+    #[test]
+    fn l09_delimiter_balance() {
+        check_pair(
+            "rust/src/coloring/fixture.rs",
+            "l09_bad.rs",
+            "L09",
+            1,
+            "l09_good.rs",
+        );
+    }
+
+    #[test]
+    fn l10_format_arity() {
+        check_pair(
+            "rust/src/coloring/fixture.rs",
+            "l10_bad.rs",
+            "L10",
+            2,
+            "l10_good.rs",
+        );
+    }
+
+    #[test]
+    fn allow_annotation_suppresses() {
+        let fs = lint_source("rust/src/coloring/local/fixture.rs", &fixture("allow_ok.rs"));
+        assert!(fs.is_empty(), "{fs:?}");
+    }
+
+    #[test]
+    fn malformed_allow_is_a_finding_and_suppresses_nothing() {
+        let fs = lint_source(
+            "rust/src/coloring/local/fixture.rs",
+            &fixture("allow_bad.rs"),
+        );
+        let l00 = fs.iter().filter(|f| f.rule == "L00").count();
+        let l08 = fs.iter().filter(|f| f.rule == "L08").count();
+        assert_eq!(l00, 3, "{fs:?}");
+        assert_eq!(l08, 3, "malformed allows must not suppress: {fs:?}");
+    }
+
+    #[test]
+    fn l01_registration_mini_trees() {
+        let bad = run_repo(&fixture_root("l01_bad")).unwrap();
+        let l01 = bad.iter().filter(|f| f.rule == "L01").count();
+        assert_eq!(l01, 2, "{bad:?}");
+        assert_eq!(bad.len(), 2, "{bad:?}");
+        assert!(
+            bad.iter().any(|f| f.path == "rust/tests/orphan.rs"),
+            "{bad:?}"
+        );
+        assert!(
+            bad.iter()
+                .any(|f| f.path == "Cargo.toml" && f.msg.contains("ghost")),
+            "{bad:?}"
+        );
+        let good = run_repo(&fixture_root("l01_good")).unwrap();
+        assert!(good.is_empty(), "{good:?}");
+    }
+
+    #[test]
+    fn json_rendering_is_wellformed() {
+        let fs = vec![
+            Finding::new("L02", "a/b.rs", 11, "quote \" and \\ back".to_string()),
+            Finding::new("L09", "c.rs", 0, "unclosed `{`".to_string()),
+        ];
+        let j = render_json(&fs);
+        assert!(j.starts_with('[') && j.ends_with(']'), "{j}");
+        assert!(j.contains("\"line\": 12"), "{j}");
+        assert!(j.contains("quote \\\" and \\\\ back"), "{j}");
+        assert_eq!(render_json(&[]), "[]");
+    }
+
+    #[test]
+    fn lexer_handles_tricky_delimiters() {
+        // l09_good is the lexer torture file: raw strings, byte
+        // strings, char literals, nested block comments
+        let fs = lint_source("rust/src/coloring/fixture.rs", &fixture("l09_good.rs"));
+        assert!(fs.is_empty(), "{fs:?}");
+    }
+}

@@ -1,0 +1,1041 @@
+//! The repolint rule catalog (L02–L10) plus the allow-annotation parser.
+//!
+//! Every rule works on the token stream / line views produced by
+//! [`super::lex`]; none of them parse Rust.  That makes them fast,
+//! total (they cannot fail on weird input), and honest about being
+//! heuristics — the escape hatch for a false positive is a justified
+//! `repolint: allow(L02) -- keys are sorted two lines down` annotation,
+//! which `parse_allows` consumes from comment text.
+//!
+//! Rule scopes that depend on *where* a file lives (hot-path dirs for
+//! L02, the approved wall-timer modules for L08, the comm substrate for
+//! L05) key off the repo-relative path, which is why `lint_source`
+//! takes a virtual path alongside the text.
+
+use super::lex::{
+    async_block_extents, brace_depths, fn_extents, lex_file, match_close, stmt_bounds, tokenize,
+    FnExtent, LexedLines, Tok,
+};
+use super::Finding;
+use std::collections::BTreeSet;
+
+/// A lexed file plus its derived token structures.
+pub struct Lexed {
+    pub path: String,
+    pub code: Vec<Vec<char>>,
+    pub comment: Vec<String>,
+    pub semi: Vec<Vec<char>>,
+    pub toks: Vec<Tok>,
+    pub depth: Vec<usize>,
+    pub fns: Vec<FnExtent>,
+}
+
+impl Lexed {
+    pub fn parse(path: &str, text: &str) -> Lexed {
+        let LexedLines {
+            code,
+            comment,
+            semi,
+        } = lex_file(text);
+        let toks = tokenize(&code);
+        let depth = brace_depths(&toks);
+        let fns = fn_extents(&toks, &depth);
+        Lexed {
+            path: path.to_string(),
+            code,
+            comment,
+            semi,
+            toks,
+            depth,
+            fns,
+        }
+    }
+}
+
+// ---------------------------------------------------------------- scopes
+
+/// Modules where iteration order decides observable results (L02).
+pub const HOT_DIRS: &[&str] = &[
+    "rust/src/coloring/",
+    "rust/src/distributed/",
+    "rust/src/session/",
+];
+
+/// Config/stats types that keep growing a field at a time (L06).
+pub const STRUCT_L06: &[&str] = &[
+    "DistConfig",
+    "ProblemSpec",
+    "RunStats",
+    "CommStats",
+    "RankOutcome",
+];
+
+/// Logical-ledger fields the fault plane must never feed (L07).
+const LOGICAL_FIELDS: &[&str] = &[
+    "messages",
+    "bytes",
+    "bytes_sent",
+    "modeled_ns",
+    "collectives",
+    "intra_messages",
+    "inter_messages",
+    "intra_bytes",
+    "inter_bytes",
+    "intra_modeled_ns",
+    "inter_modeled_ns",
+    "coll_intra_hops",
+    "coll_inter_hops",
+];
+
+/// Collective entry points whose first argument is a tag (L05), sync
+/// and async flavors.
+const COLLECTIVES: &[&str] = &[
+    "allreduce_sum",
+    "allreduce_max",
+    "allreduce_u32_sum_vec",
+    "barrier",
+    "alltoallv",
+    "sparse_alltoallv",
+    "neighbor_alltoallv",
+    "neighbor_alltoallv_start",
+    "neighbor_alltoallv_finish",
+    "allreduce_sum_async",
+    "allreduce_max_async",
+    "allreduce_u32_sum_vec_async",
+    "barrier_async",
+    "alltoallv_async",
+    "sparse_alltoallv_async",
+    "neighbor_alltoallv_async",
+    "neighbor_alltoallv_start_async",
+    "neighbor_alltoallv_finish_async",
+];
+
+/// Modules allowed to read the wall clock (L08): the timer facade and
+/// the call roots that bill wall time into RunStats through it.
+const TIMER_OK: &[&str] = &[
+    "rust/src/util/timer.rs",
+    "rust/src/main.rs",
+    "rust/src/session/mod.rs",
+    "rust/src/coloring/distributed/mod.rs",
+    "rust/src/distributed/comm.rs",
+];
+
+/// Methods that begin an iteration over their receiver (L02).
+const ITER_TRIGGERS: &[&str] = &[
+    "iter",
+    "iter_mut",
+    "keys",
+    "values",
+    "values_mut",
+    "drain",
+    "into_iter",
+    "into_keys",
+    "into_values",
+];
+
+/// Order-insensitive sinks: if one appears in the same statement the
+/// iteration result cannot leak bucket order.
+const ORDER_SINKS: &[&str] = &[
+    "sort",
+    "sort_by",
+    "sort_by_key",
+    "sort_unstable",
+    "sort_unstable_by",
+    "sort_unstable_by_key",
+    "min",
+    "min_by",
+    "min_by_key",
+    "max",
+    "max_by",
+    "max_by_key",
+    "sum",
+    "count",
+    "len",
+    "is_empty",
+    "all",
+    "any",
+];
+
+/// Collecting back into one of these is order-free too.
+const UNORDERED_TYPES: &[&str] = &["HashMap", "HashSet", "BTreeMap", "BTreeSet"];
+
+/// Format-family macros and the argument position of the format string.
+const FMT_MACROS: &[(&str, usize)] = &[
+    ("format", 0),
+    ("print", 0),
+    ("println", 0),
+    ("eprint", 0),
+    ("eprintln", 0),
+    ("panic", 0),
+    ("unreachable", 0),
+    ("todo", 0),
+    ("unimplemented", 0),
+    ("write", 1),
+    ("writeln", 1),
+    ("assert", 1),
+    ("debug_assert", 1),
+    ("assert_eq", 2),
+    ("assert_ne", 2),
+    ("debug_assert_eq", 2),
+    ("debug_assert_ne", 2),
+];
+
+fn fmt_macro_pos(name: &str) -> Option<usize> {
+    FMT_MACROS.iter().find(|(m, _)| *m == name).map(|(_, p)| *p)
+}
+
+fn word_start(t: &str) -> bool {
+    matches!(t.chars().next(), Some(c) if c.is_alphabetic() || c == '_')
+}
+
+/// `"40"`, `"40u64"`, `"1_000"` → value; anything else → None.
+fn int_literal_value(t: &str) -> Option<u64> {
+    let s: String = t.chars().filter(|&c| c != '_').collect();
+    let body = ["u64", "u32", "usize", "i64", "i32"]
+        .iter()
+        .find_map(|suf| s.strip_suffix(suf))
+        .unwrap_or(&s);
+    if body.is_empty() || !body.chars().all(|c| c.is_ascii_digit()) {
+        return None;
+    }
+    body.parse::<u64>().ok()
+}
+
+// ---------------------------------------------------------------- L02
+
+pub fn rule_l02(lx: &Lexed, out: &mut Vec<Finding>) {
+    if !HOT_DIRS.iter().any(|d| lx.path.starts_with(d)) {
+        return;
+    }
+    let toks = &lx.toks;
+    let n = toks.len();
+    // identifiers bound (or annotated) as HashMap/HashSet in this file
+    let mut hash_idents: BTreeSet<String> = BTreeSet::new();
+    for i in 0..n {
+        if toks[i].t == "let" {
+            let mut j = i + 1;
+            if j < n && toks[j].t == "mut" {
+                j += 1;
+            }
+            if j < n && word_start(&toks[j].t) {
+                let (s, e) = stmt_bounds(toks, &lx.depth, i);
+                if (s..=e).any(|k| toks[k].t == "HashMap" || toks[k].t == "HashSet") {
+                    hash_idents.insert(toks[j].t.clone());
+                }
+            }
+        } else if toks[i].t == ":" && i > 0 && word_start(&toks[i - 1].t) {
+            for k in i + 1..(i + 8).min(n) {
+                let tk = toks[k].t.as_str();
+                if tk == "HashMap" || tk == "HashSet" {
+                    hash_idents.insert(toks[i - 1].t.clone());
+                    break;
+                }
+                if matches!(tk, "," | ";" | ")" | "{" | "=" | "fn") {
+                    break;
+                }
+            }
+        }
+    }
+    if hash_idents.is_empty() {
+        return;
+    }
+    for i in 0..n {
+        let t = toks[i].t.as_str();
+        let mut hit: Option<&str> = None;
+        if ITER_TRIGGERS.contains(&t)
+            && i >= 2
+            && toks[i - 1].t == "."
+            && i + 1 < n
+            && toks[i + 1].t == "("
+        {
+            // receiver: ident or ident[..] just before the '.'
+            let mut r = i as isize - 2;
+            if toks[r as usize].t == "]" {
+                let mut bal = 0i64;
+                while r >= 0 {
+                    if toks[r as usize].t == "]" {
+                        bal += 1;
+                    } else if toks[r as usize].t == "[" {
+                        bal -= 1;
+                        if bal == 0 {
+                            break;
+                        }
+                    }
+                    r -= 1;
+                }
+                r -= 1;
+            }
+            if r >= 0 && hash_idents.contains(&toks[r as usize].t) {
+                hit = Some(toks[r as usize].t.as_str());
+            }
+        } else if t == "in" {
+            let mut j = i + 1;
+            while j < n && (toks[j].t == "&" || toks[j].t == "mut") {
+                j += 1;
+            }
+            if j < n
+                && hash_idents.contains(&toks[j].t)
+                && (j + 1 >= n || toks[j + 1].t != ".")
+            {
+                hit = Some(toks[j].t.as_str());
+            }
+        }
+        let Some(hit) = hit else { continue };
+        let (s, e) = stmt_bounds(toks, &lx.depth, i);
+        let window: Vec<&str> = (s..=e).map(|k| toks[k].t.as_str()).collect();
+        if window.iter().any(|w| ORDER_SINKS.contains(w)) {
+            continue;
+        }
+        if window.contains(&"collect") && window.iter().any(|w| UNORDERED_TYPES.contains(w)) {
+            continue;
+        }
+        out.push(Finding::new(
+            "L02",
+            &lx.path,
+            toks[i].ln,
+            format!(
+                "iteration over unordered container `{hit}` (sort first, use an \
+                 order-insensitive sink, or allow-annotate)"
+            ),
+        ));
+    }
+}
+
+// ---------------------------------------------------------------- L03
+
+/// Non-async fns whose body calls `block_on(` directly: the sync shims.
+pub fn collect_shims(files: &[&Lexed]) -> BTreeSet<String> {
+    let mut shims = BTreeSet::new();
+    for lx in files {
+        for f in &lx.fns {
+            if f.is_async || f.name == "block_on" {
+                continue;
+            }
+            for k in f.open_i..f.close_i {
+                if lx.toks[k].t == "block_on" && k + 1 <= f.close_i && lx.toks[k + 1].t == "(" {
+                    shims.insert(f.name.clone());
+                    break;
+                }
+            }
+        }
+    }
+    shims
+}
+
+/// Async regions (fn bodies + async blocks) and all sync fn bodies.
+fn async_spans(lx: &Lexed) -> (Vec<(usize, usize)>, Vec<(usize, usize)>) {
+    let mut spans: Vec<(usize, usize)> = lx
+        .fns
+        .iter()
+        .filter(|f| f.is_async)
+        .map(|f| (f.open_i, f.close_i))
+        .collect();
+    spans.extend(async_block_extents(&lx.toks).into_iter().map(|(_, j, m)| (j, m)));
+    let sync_bodies: Vec<(usize, usize)> = lx
+        .fns
+        .iter()
+        .filter(|f| !f.is_async)
+        .map(|f| (f.open_i, f.close_i))
+        .collect();
+    (spans, sync_bodies)
+}
+
+fn in_any(i: usize, spans: &[(usize, usize)]) -> bool {
+    spans.iter().any(|&(o, c)| o <= i && i <= c)
+}
+
+pub fn rule_l03(lx: &Lexed, shims: &BTreeSet<String>, out: &mut Vec<Finding>) {
+    let (spans, sync_bodies) = async_spans(lx);
+    if spans.is_empty() {
+        return;
+    }
+    let toks = &lx.toks;
+    let n = toks.len();
+    // sync fn bodies nested *inside* an async span shadow it
+    let nested: Vec<(usize, usize)> = sync_bodies
+        .iter()
+        .copied()
+        .filter(|b| in_any(b.0, &spans))
+        .collect();
+    for i in 0..n {
+        if !in_any(i, &spans) || in_any(i, &nested) {
+            continue;
+        }
+        if i + 1 < n && toks[i + 1].t == "(" && i > 0 && toks[i - 1].t != "fn" {
+            let t = toks[i].t.as_str();
+            if t == "block_on" {
+                out.push(Finding::new(
+                    "L03",
+                    &lx.path,
+                    toks[i].ln,
+                    "`par::block_on` inside an async body deadlocks the cooperative scheduler"
+                        .to_string(),
+                ));
+            } else if shims.contains(t) {
+                out.push(Finding::new(
+                    "L03",
+                    &lx.path,
+                    toks[i].ln,
+                    format!("`{t}` is a blocking sync shim (wraps block_on); use its async core here"),
+                ));
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------- L04
+
+/// Identifiers bound to a ScratchPool in this fn (params + lets).
+fn pool_idents(lx: &Lexed, f: &FnExtent) -> BTreeSet<String> {
+    let toks = &lx.toks;
+    let mut names = BTreeSet::new();
+    for k in f.sig_i..f.open_i {
+        if toks[k].t == "ScratchPool" {
+            let mut j = k as isize - 1;
+            while j > f.sig_i as isize
+                && matches!(
+                    toks[j as usize].t.as_str(),
+                    "&" | "mut" | "::" | "crate" | "local" | "coloring"
+                )
+            {
+                j -= 1;
+            }
+            if j >= 1 && toks[j as usize].t == ":" && j - 1 > f.sig_i as isize {
+                names.insert(toks[j as usize - 1].t.clone());
+            }
+        }
+    }
+    for k in f.open_i..f.close_i {
+        if toks[k].t == "let" {
+            let (s, e) = stmt_bounds(toks, &lx.depth, k);
+            if (s..=e).any(|q| toks[q].t == "ScratchPool") {
+                let mut j = k + 1;
+                if j < toks.len() && toks[j].t == "mut" {
+                    j += 1;
+                }
+                if j < toks.len() {
+                    names.insert(toks[j].t.clone());
+                }
+            }
+        }
+    }
+    names
+}
+
+pub fn rule_l04(lx: &Lexed, out: &mut Vec<Finding>) {
+    let toks = &lx.toks;
+    let n = toks.len();
+    for f in &lx.fns {
+        if !f.is_async {
+            continue;
+        }
+        let pools = pool_idents(lx, f);
+        if pools.is_empty() {
+            continue;
+        }
+        for i in f.open_i..f.close_i {
+            if !pools.contains(&toks[i].t) || i + 2 >= n || toks[i + 1].t != "." {
+                continue;
+            }
+            let meth = toks[i + 2].t.as_str();
+            let call_open = i + 3;
+            if call_open >= n || toks[call_open].t != "(" {
+                continue;
+            }
+            if meth == "with" {
+                let close = match_close(toks, call_open);
+                for k in call_open..close {
+                    if toks[k].t == "await" && toks[k - 1].t == "." {
+                        out.push(Finding::new(
+                            "L04",
+                            &lx.path,
+                            toks[k].ln,
+                            "`.await` inside a ScratchPool::with checkout starves scheduler workers"
+                                .to_string(),
+                        ));
+                    }
+                }
+            } else if meth != "threads" {
+                // a let-bound checkout held across a later await?
+                let (s, e) = stmt_bounds(toks, &lx.depth, i);
+                if toks[s].t != "let" {
+                    continue;
+                }
+                let d_let = lx.depth[s];
+                let mut k = e + 1;
+                while k < n && lx.depth[k] >= d_let {
+                    if toks[k].t == "await" && toks[k - 1].t == "." {
+                        out.push(Finding::new(
+                            "L04",
+                            &lx.path,
+                            toks[k].ln,
+                            format!(
+                                "ScratchPool checkout `{meth}` bound at line {} is live across this `.await`",
+                                toks[i].ln + 1
+                            ),
+                        ));
+                        break;
+                    }
+                    k += 1;
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------- L05
+
+pub fn rule_l05(lx: &Lexed, out: &mut Vec<Finding>) {
+    let toks = &lx.toks;
+    let n = toks.len();
+    if lx.path != "rust/src/distributed/comm.rs" {
+        for tok in toks {
+            if tok.t == "CTRL_NACK" || tok.t == "CTRL_DOWN" {
+                out.push(Finding::new(
+                    "L05",
+                    &lx.path,
+                    tok.ln,
+                    format!(
+                        "reserved control-plane tag `{}` used outside the comm substrate",
+                        tok.t
+                    ),
+                ));
+            }
+        }
+    }
+    // literal tags at collective call sites, grouped by enclosing fn
+    let mut per_fn: Vec<(Option<(String, usize)>, Vec<(u64, usize)>)> = Vec::new();
+    for i in 0..n {
+        if !COLLECTIVES.contains(&toks[i].t.as_str()) || i + 1 >= n || toks[i + 1].t != "(" {
+            continue;
+        }
+        if i > 0 && toks[i - 1].t == "fn" {
+            continue;
+        }
+        let close = match_close(toks, i + 1);
+        let mut arg: Vec<&str> = Vec::new();
+        let mut bal = 0i64;
+        for k in i + 2..close {
+            let tk = toks[k].t.as_str();
+            if matches!(tk, "(" | "[" | "{") {
+                bal += 1;
+            } else if matches!(tk, ")" | "]" | "}") {
+                bal -= 1;
+            } else if tk == "," && bal == 0 {
+                break;
+            }
+            arg.push(tk);
+        }
+        if arg.contains(&"MAX") {
+            out.push(Finding::new(
+                "L05",
+                &lx.path,
+                toks[i].ln,
+                "collective tag in the reserved control-plane range (u64::MAX-1..)".to_string(),
+            ));
+            continue;
+        }
+        if arg.len() == 1 {
+            if let Some(v) = int_literal_value(arg[0]) {
+                // last (innermost) enclosing fn wins, as in fn_extents order
+                let fnkey = lx
+                    .fns
+                    .iter()
+                    .rev()
+                    .find(|f| f.open_i <= i && i <= f.close_i)
+                    .map(|f| (f.name.clone(), f.sig_i));
+                match per_fn.iter_mut().find(|(k, _)| *k == fnkey) {
+                    Some((_, tags)) => tags.push((v, toks[i].ln)),
+                    None => per_fn.push((fnkey, vec![(v, toks[i].ln)])),
+                }
+            }
+        }
+    }
+    for (_, tags) in &per_fn {
+        let mut seen: Vec<(u64, usize)> = Vec::new();
+        for &(v, ln) in tags {
+            for &(w, wl) in &seen {
+                let d = v.abs_diff(w);
+                if (1..3).contains(&d) {
+                    out.push(Finding::new(
+                        "L05",
+                        &lx.path,
+                        ln,
+                        format!(
+                            "collective tag {v} is within 3 of tag {w} (line {}); collectives may consume tag..tag+3",
+                            wl + 1
+                        ),
+                    ));
+                    break;
+                }
+            }
+            seen.push((v, ln));
+        }
+    }
+}
+
+// ---------------------------------------------------------------- L06
+
+pub fn rule_l06(
+    lx: &Lexed,
+    defining: &std::collections::BTreeMap<String, BTreeSet<String>>,
+    out: &mut Vec<Finding>,
+) {
+    let toks = &lx.toks;
+    let n = toks.len();
+    for i in 0..n {
+        let t = toks[i].t.as_str();
+        if !STRUCT_L06.contains(&t)
+            || defining.get(t).is_some_and(|s| s.contains(&lx.path))
+            || i + 1 >= n
+            || toks[i + 1].t != "{"
+        {
+            continue;
+        }
+        if i > 0
+            && matches!(
+                toks[i - 1].t.as_str(),
+                "struct" | "enum" | "impl" | "for" | "mod" | "trait"
+            )
+        {
+            continue;
+        }
+        // `-> RankOutcome {` is a return type followed by the fn body
+        if i > 1 && toks[i - 1].t == ">" && toks[i - 2].t == "-" {
+            continue;
+        }
+        let open_i = i + 1;
+        let close_i = match_close(toks, open_i);
+        let mut ok = false;
+        for k in open_i + 1..close_i {
+            if toks[k].t == ".."
+                && lx.depth[k] == lx.depth[open_i] + 1
+                && (toks[k - 1].t == "{" || toks[k - 1].t == ",")
+            {
+                ok = true;
+                break;
+            }
+        }
+        if !ok {
+            out.push(Finding::new(
+                "L06",
+                &lx.path,
+                toks[i].ln,
+                format!(
+                    "`{t}` literal outside its defining module must use `..Default::default()` \
+                     (or `..base`) so widening the type cannot silently skip this site"
+                ),
+            ));
+        }
+    }
+}
+
+// ---------------------------------------------------------------- L07
+
+pub fn rule_l07(lx: &Lexed, out: &mut Vec<Finding>) {
+    if !lx.path.starts_with("rust/src/") {
+        return;
+    }
+    let toks = &lx.toks;
+    let n = toks.len();
+    for i in 0..n {
+        let t = toks[i].t.as_str();
+        if !LOGICAL_FIELDS.contains(&t) || i == 0 || toks[i - 1].t != "." {
+            continue;
+        }
+        let mut j = i + 1;
+        if j >= n {
+            continue;
+        }
+        let assign = if toks[j].t == "=" && (j + 1 >= n || toks[j + 1].t != "=") {
+            true
+        } else if matches!(toks[j].t.as_str(), "+" | "-" | "|" | "^")
+            && j + 1 < n
+            && toks[j + 1].t == "="
+        {
+            j += 1;
+            true
+        } else {
+            false
+        };
+        if !assign {
+            continue;
+        }
+        let (_, e) = stmt_bounds(toks, &lx.depth, i);
+        for k in j + 1..=e {
+            if toks[k].t.starts_with("fault_") {
+                out.push(Finding::new(
+                    "L07",
+                    &lx.path,
+                    toks[i].ln,
+                    format!(
+                        "fault-plane counter `{}` leaks into logical field `{t}` (fault \
+                         accounting must stay blind)",
+                        toks[k].t
+                    ),
+                ));
+                break;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------- L08
+
+pub fn rule_l08(lx: &Lexed, out: &mut Vec<Finding>) {
+    if !lx.path.starts_with("rust/src/") {
+        return;
+    }
+    let toks = &lx.toks;
+    let n = toks.len();
+    for i in 0..n {
+        let t = toks[i].t.as_str();
+        if t == "SystemTime" {
+            out.push(Finding::new(
+                "L08",
+                &lx.path,
+                toks[i].ln,
+                "`SystemTime` is banned (wall time via util::timer, modeled time via CostModel)"
+                    .to_string(),
+            ));
+        }
+        if t == "Instant"
+            && i + 2 < n
+            && toks[i + 1].t == "::"
+            && toks[i + 2].t == "now"
+            && !TIMER_OK.contains(&lx.path.as_str())
+        {
+            out.push(Finding::new(
+                "L08",
+                &lx.path,
+                toks[i].ln,
+                "`Instant::now` outside the approved wall-timer modules (modeled time must \
+                 come from CostModel)"
+                    .to_string(),
+            ));
+        }
+    }
+}
+
+// ---------------------------------------------------------------- L09
+
+pub fn rule_l09(lx: &Lexed, out: &mut Vec<Finding>) {
+    let mut stack: Vec<(&str, usize)> = Vec::new();
+    for tok in &lx.toks {
+        match tok.t.as_str() {
+            t @ ("(" | "[" | "{") => stack.push((t, tok.ln)),
+            t @ (")" | "]" | "}") => {
+                let Some((o, oln)) = stack.pop() else {
+                    out.push(Finding::new(
+                        "L09",
+                        &lx.path,
+                        tok.ln,
+                        format!("unmatched `{t}`"),
+                    ));
+                    return;
+                };
+                let want = match t {
+                    ")" => "(",
+                    "]" => "[",
+                    _ => "{",
+                };
+                if o != want {
+                    out.push(Finding::new(
+                        "L09",
+                        &lx.path,
+                        tok.ln,
+                        format!("mismatched `{t}` closes `{o}` opened at line {}", oln + 1),
+                    ));
+                    return;
+                }
+            }
+            _ => {}
+        }
+    }
+    if let Some(&(o, oln)) = stack.last() {
+        out.push(Finding::new(
+            "L09",
+            &lx.path,
+            oln,
+            format!("unclosed `{o}`"),
+        ));
+    }
+}
+
+// ---------------------------------------------------------------- L10
+
+/// `(auto_count, max_explicit_index, has_named)` for a format string.
+fn parse_fmt_placeholders(s: &str) -> (usize, i64, bool) {
+    let v: Vec<char> = s.chars().collect();
+    let n = v.len();
+    let (mut auto, mut max_idx, mut named) = (0usize, -1i64, false);
+    let mut i = 0usize;
+    while i < n {
+        let c = v[i];
+        if c == '{' {
+            if i + 1 < n && v[i + 1] == '{' {
+                i += 2;
+                continue;
+            }
+            let mut j = i + 1;
+            while j < n && v[j] != '}' {
+                j += 1;
+            }
+            if j >= n {
+                break;
+            }
+            let inner: String = v[i + 1..j].iter().collect();
+            let (argpart, spec) = match inner.split_once(':') {
+                Some((a, sp)) => (a.to_string(), sp.to_string()),
+                None => (inner, String::new()),
+            };
+            if argpart.is_empty() {
+                auto += 1;
+            } else if argpart.chars().all(|c| c.is_ascii_digit()) {
+                max_idx = max_idx.max(argpart.parse::<i64>().unwrap_or(-1));
+            } else {
+                named = true;
+            }
+            // `.*` precision eats one positional; `N$`/`name$` do not
+            if spec.contains(".*") {
+                auto += 1;
+            }
+            i = j + 1;
+            continue;
+        }
+        if c == '}' && i + 1 < n && v[i + 1] == '}' {
+            i += 2;
+            continue;
+        }
+        i += 1;
+    }
+    (auto, max_idx, named)
+}
+
+/// Recover the string literal at argument `arg_pos` of the macro whose
+/// parens span `open_i..close_i`, from the semi-masked view (comments
+/// blanked, strings verbatim).  None if that argument is not a plain
+/// (or raw) string literal.
+fn extract_string_arg(lx: &Lexed, open_i: usize, close_i: usize, arg_pos: usize) -> Option<String> {
+    let toks = &lx.toks;
+    let mut bal = 0i64;
+    let mut commas: Vec<usize> = Vec::new();
+    for (k, tok) in toks.iter().enumerate().take(close_i).skip(open_i + 1) {
+        match tok.t.as_str() {
+            "(" | "[" | "{" => bal += 1,
+            ")" | "]" | "}" => bal -= 1,
+            "," if bal == 0 => commas.push(k),
+            _ => {}
+        }
+    }
+    let pos_after = |tok_i: usize| -> (usize, usize) {
+        let tok = &toks[tok_i];
+        (tok.ln, tok.col + tok.t.chars().count())
+    };
+    let (sl, sc) = if arg_pos == 0 {
+        pos_after(open_i)
+    } else {
+        if arg_pos - 1 >= commas.len() {
+            return None;
+        }
+        pos_after(commas[arg_pos - 1])
+    };
+    let endt = if arg_pos < commas.len() {
+        &toks[commas[arg_pos]]
+    } else {
+        &toks[close_i]
+    };
+    let (el, ec) = (endt.ln, endt.col);
+    let mut buf: Vec<String> = Vec::new();
+    for l in sl..=el {
+        let seg = &lx.semi[l];
+        let a = if l == sl { sc } else { 0 };
+        let b = if l == el { ec } else { seg.len() };
+        let hi = b.min(seg.len());
+        let lo = a.min(hi);
+        buf.push(seg[lo..hi].iter().collect());
+    }
+    let joined = buf.join("\n");
+    let textseg = joined.trim();
+    if textseg.len() >= 2 && textseg.starts_with('"') && textseg.ends_with('"') {
+        return Some(textseg[1..textseg.len() - 1].to_string());
+    }
+    if let Some(rest) = textseg.strip_prefix('r') {
+        let h = rest.chars().take_while(|&c| c == '#').count();
+        let after = &rest[h..];
+        let tail = format!("\"{}", "#".repeat(h));
+        if after.starts_with('"') && after.len() > tail.len() && after.ends_with(tail.as_str()) {
+            return Some(after[1..after.len() - tail.len()].to_string());
+        }
+    }
+    None
+}
+
+pub fn rule_l10(lx: &Lexed, out: &mut Vec<Finding>) {
+    let toks = &lx.toks;
+    let n = toks.len();
+    for i in 0..n {
+        let Some(fmt_pos) = fmt_macro_pos(toks[i].t.as_str()) else {
+            continue;
+        };
+        if i + 2 >= n || toks[i + 1].t != "!" || !matches!(toks[i + 2].t.as_str(), "(" | "[") {
+            continue;
+        }
+        let open_i = i + 2;
+        let close_i = match_close(toks, open_i);
+        // split top-level args by comma in token space; a pure string
+        // literal contributes no code tokens, so empty slots still count
+        let mut args: Vec<Vec<usize>> = vec![Vec::new()];
+        let mut bal = 0i64;
+        for k in open_i + 1..close_i {
+            let tk = toks[k].t.as_str();
+            if matches!(tk, "(" | "[" | "{") {
+                bal += 1;
+            } else if matches!(tk, ")" | "]" | "}") {
+                bal -= 1;
+            }
+            if tk == "," && bal == 0 {
+                args.push(Vec::new());
+            } else {
+                args.last_mut().expect("args starts non-empty").push(k);
+            }
+        }
+        if fmt_pos >= args.len() || !args[fmt_pos].is_empty() {
+            // either no format-string slot, or the slot holds code
+            // tokens (not a plain literal): out of scope
+            continue;
+        }
+        let Some(lit) = extract_string_arg(lx, open_i, close_i, fmt_pos) else {
+            continue;
+        };
+        let (auto, max_idx, named) = parse_fmt_placeholders(&lit);
+        let required = auto.max((max_idx + 1).max(0) as usize);
+        let mut positional = 0usize;
+        let mut any_named_arg = false;
+        for (ai, arg) in args.iter().enumerate().skip(fmt_pos + 1) {
+            if arg.is_empty() {
+                // string-literal arg, or a trailing comma's empty slot
+                if extract_string_arg(lx, open_i, close_i, ai).is_some() {
+                    positional += 1;
+                }
+                continue;
+            }
+            let texts: Vec<&str> = arg.iter().map(|&k| toks[k].t.as_str()).collect();
+            if let Some(p) = texts.iter().position(|&t| t == "=") {
+                // named arg `name = expr` (top-level single =)
+                if p == 1
+                    && word_start(texts[0])
+                    && (p + 1 >= texts.len() || texts[p + 1] != "=")
+                {
+                    any_named_arg = true;
+                    continue;
+                }
+            }
+            positional += 1;
+        }
+        let name = toks[i].t.as_str();
+        if positional < required {
+            out.push(Finding::new(
+                "L10",
+                &lx.path,
+                toks[i].ln,
+                format!(
+                    "{name}! needs {required} positional arg(s) for its format string but got {positional}"
+                ),
+            ));
+        } else if positional > required && !named && !any_named_arg {
+            out.push(Finding::new(
+                "L10",
+                &lx.path,
+                toks[i].ln,
+                format!(
+                    "{name}! supplies {positional} positional arg(s) but the format string uses {required}"
+                ),
+            ));
+        }
+    }
+}
+
+// ----------------------------------------------------------- allows
+
+pub const KNOWN_RULES: &[&str] = &[
+    "L01", "L02", "L03", "L04", "L05", "L06", "L07", "L08", "L09", "L10",
+];
+
+/// Parse allow annotations — `repolint: allow(L02) -- <why>` — out of
+/// comment text.  Returns the suppression set `(rule, 0-based target
+/// line)`; malformed annotations are L00 findings (and suppress
+/// nothing).
+pub fn parse_allows(lx: &Lexed, findings: &mut Vec<Finding>) -> BTreeSet<(String, usize)> {
+    let mut allows = BTreeSet::new();
+    for (ln, com) in lx.comment.iter().enumerate() {
+        let Some(pos) = com.find("repolint:") else {
+            continue;
+        };
+        let rest = com[pos + "repolint:".len()..].trim();
+        let Some(inner_on) = rest.strip_prefix("allow(") else {
+            findings.push(Finding::new(
+                "L00",
+                &lx.path,
+                ln,
+                "malformed repolint annotation (expected `repolint: allow(<rules>) -- <why>`)"
+                    .to_string(),
+            ));
+            continue;
+        };
+        let Some(close) = inner_on.find(')') else {
+            findings.push(Finding::new(
+                "L00",
+                &lx.path,
+                ln,
+                "unclosed allow( list".to_string(),
+            ));
+            continue;
+        };
+        let ids: Vec<&str> = inner_on[..close]
+            .split(',')
+            .map(|r| r.trim())
+            .filter(|r| !r.is_empty())
+            .collect();
+        let tail = inner_on[close + 1..].trim();
+        let justified = tail
+            .strip_prefix("--")
+            .is_some_and(|why| !why.trim().is_empty());
+        if !justified {
+            findings.push(Finding::new(
+                "L00",
+                &lx.path,
+                ln,
+                "allow annotation needs a `-- <justification>`".to_string(),
+            ));
+            continue;
+        }
+        let bad: Vec<&str> = ids
+            .iter()
+            .copied()
+            .filter(|r| !KNOWN_RULES.contains(r))
+            .collect();
+        if !bad.is_empty() || ids.is_empty() {
+            findings.push(Finding::new(
+                "L00",
+                &lx.path,
+                ln,
+                format!("unknown rule id(s) in allow: {bad:?}"),
+            ));
+            continue;
+        }
+        // target: same line if it has code, else the next line with code
+        let mut target = ln;
+        if lx.code[ln].iter().all(|c| c.is_whitespace()) {
+            let mut t = ln + 1;
+            while t < lx.code.len() && lx.code[t].iter().all(|c| c.is_whitespace()) {
+                t += 1;
+            }
+            target = t;
+        }
+        for r in ids {
+            allows.insert((r.to_string(), target));
+        }
+    }
+    allows
+}

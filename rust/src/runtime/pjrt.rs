@@ -10,6 +10,10 @@
 //! (the Rust side owns the fixpoint loop; the `d1_full` artifact moves
 //! that loop into a single XLA while-loop — ablated in EXPERIMENTS.md).
 
+// clippy.toml bans HashMap repo-wide; the executable/shape-bucket
+// caches here are keyed lookups only, never iterated.
+#![allow(clippy::disallowed_types)]
+
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 

@@ -21,6 +21,10 @@
 //! produces output that is bit-identical for every thread count —
 //! asserted by `rust/tests/parallel_kernels.rs`.
 
+// clippy.toml bans thread spawns repo-wide; this module IS the
+// sanctioned executor every other spawn must route through.
+#![allow(clippy::disallowed_methods)]
+
 use std::cell::Cell;
 use std::fmt;
 use std::ops::Range;

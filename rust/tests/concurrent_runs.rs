@@ -15,6 +15,10 @@
 //! fingerprint, partition fingerprint, ghost layers) must count hits
 //! and misses exactly and hand out plans that color identically.
 
+// clippy.toml bans raw thread spawns; racing plan.run() from plain OS
+// threads is exactly what this suite exists to exercise.
+#![allow(clippy::disallowed_methods)]
+
 use dist_color::coloring::validate;
 use dist_color::distributed::CostModel;
 use dist_color::graph::generators::erdos_renyi::gnm;

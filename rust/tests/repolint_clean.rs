@@ -1,0 +1,48 @@
+//! The repository must lint clean against its own invariant catalog.
+//!
+//! This is the test-suite twin of the `cargo run -q --bin repolint`
+//! hard gate in scripts/verify.sh: a violation of any rule (or a
+//! malformed allow-annotation) fails `cargo test` too, so the gate
+//! holds even for workflows that never run verify.sh directly.
+
+use dist_color::lint;
+use std::path::Path;
+
+#[test]
+fn repo_lints_clean() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let findings = lint::run_repo(root).expect("repolint walk failed");
+    assert!(
+        findings.is_empty(),
+        "repolint findings (fix or allow-annotate with a justification):\n{}",
+        findings
+            .iter()
+            .map(|f| f.to_string())
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+}
+
+#[test]
+fn fixture_corpus_is_present() {
+    // the unit tests in rust/src/lint/mod.rs consume these; losing the
+    // corpus would silently hollow out the rule coverage
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("rust/lint_fixtures");
+    for f in [
+        "l02_bad.rs",
+        "l03_bad.rs",
+        "l04_bad.rs",
+        "l05_bad.rs",
+        "l06_bad.rs",
+        "l07_bad.rs",
+        "l08_bad.rs",
+        "l09_bad.rs",
+        "l10_bad.rs",
+        "allow_ok.rs",
+        "allow_bad.rs",
+        "l01_bad/Cargo.toml",
+        "l01_good/Cargo.toml",
+    ] {
+        assert!(dir.join(f).is_file(), "missing lint fixture {f}");
+    }
+}
