@@ -24,7 +24,11 @@
 //! `BENCH_PR7=1` to run the cooperative-runtime smoke (batch-vs-gated
 //! throughput at batch sizes 1/4/16, the flat peak-worker witness
 //! across p = 64/256/1024 on an 8-worker budget, the plan cache's
-//! cold-vs-warm speedup) and write `BENCH_pr7.json`.  All JSON
+//! cold-vs-warm speedup) and write `BENCH_pr7.json`; set `BENCH_PR9=1`
+//! to run the checkpoint/restart smoke (checkpoint-on vs -off overhead,
+//! per-round snapshot footprint, the crash-recovery bit-parity gate and
+//! the wall cost of one recovery, plus the unrecovered-crash
+//! structured-error gate) and write `BENCH_pr9.json`.  All JSON
 //! schemas are documented in `rust/benches/README.md`.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -862,6 +866,119 @@ fn pr7_smoke() {
     );
 }
 
+/// Checkpoint/restart smoke (PR 9): round-boundary snapshot overhead
+/// (checkpoint-on vs -off wall time and per-round snapshot bytes), the
+/// crash-recovery parity gate (a rank killed mid-run and respawned from
+/// its snapshot must land bit-identical to the uninterrupted baseline),
+/// the wall cost of that one recovery, and the unrecovered-crash
+/// contract (checkpointing off: structured error, serviceable session).
+/// Written to `BENCH_pr9.json`.
+fn pr9_smoke() {
+    let reps: usize =
+        std::env::var("BENCH_REPS").ok().and_then(|s| s.parse().ok()).unwrap_or(5);
+    let ranks = 8usize;
+    let (n, m, seed) = (60_000usize, 360_000usize, 13u64);
+    eprintln!("pr9 smoke: gnm({n}, {m}) hash-partitioned over {ranks} ranks ...");
+    let g = gnm(n, m, seed);
+    // hash partition: maximally cut-heavy, so the fix loop has real
+    // rounds to checkpoint and the crash lands mid-recovery-surface
+    let part = partition::hash(&g, ranks, 1);
+    let victim = (ranks / 2) as u32;
+    let crash_round = 1u32;
+    let spec = ProblemSpec::d1();
+
+    let baseline_session =
+        Session::builder().ranks(ranks).cost(CostModel::default()).threads(1).seed(42).build();
+    let baseline_plan = baseline_session.plan(&g, &part, GhostLayers::One);
+    let crash_session = Session::builder()
+        .ranks(ranks)
+        .cost(CostModel::default())
+        .threads(1)
+        .seed(42)
+        .faults(FaultPlan::new(0).with_crash(victim, crash_round))
+        .build();
+    let crash_plan = crash_session.plan(&g, &part, GhostLayers::One);
+
+    // parity gate material first, so a divergence is recorded in JSON
+    let baseline = baseline_plan.run(spec);
+    assert!(
+        baseline.stats.comm_rounds as u32 > crash_round,
+        "fixture converged before the crash round — nothing would be recovered"
+    );
+    let observed = baseline_plan.run(spec.with_checkpoint(true));
+    let recovered = crash_plan.run(spec.with_checkpoint(true));
+    let observer_identical = observed.colors == baseline.colors
+        && observed.stats.comm_rounds == baseline.stats.comm_rounds
+        && observed.stats.crash_recoveries == 0;
+    let identical = recovered.colors == baseline.colors
+        && recovered.stats.comm_rounds == baseline.stats.comm_rounds
+        && recovered.stats.conflicts == baseline.stats.conflicts;
+    let snapshots = observed.stats.snapshots;
+    let snapshot_bytes = observed.stats.snapshot_bytes;
+    let bytes_per_round =
+        if snapshots == 0 { 0.0 } else { snapshot_bytes as f64 / snapshots as f64 };
+
+    // checkpointing off, same crash: a structured error, not a hang —
+    // and the session must stay serviceable for the next run
+    let unrecovered = crash_plan.try_run(spec);
+    let structured_error =
+        unrecovered.as_ref().err().is_some_and(|e| e.to_string().contains("crashed (injected)"));
+    let after = crash_plan.run(spec.with_checkpoint(true));
+    let serviceable_after_error = after.colors == baseline.colors;
+
+    let baseline_ms = median_ms(reps, || {
+        let r = baseline_plan.run(spec);
+        std::hint::black_box(r.stats.colors_used);
+    });
+    let checkpoint_ms = median_ms(reps, || {
+        let r = baseline_plan.run(spec.with_checkpoint(true));
+        std::hint::black_box(r.stats.colors_used);
+    });
+    let crashed_ms = median_ms(reps, || {
+        let r = crash_plan.run(spec.with_checkpoint(true));
+        std::hint::black_box(r.stats.colors_used);
+    });
+    let overhead = checkpoint_ms / baseline_ms;
+    let recovery_ms = crashed_ms - checkpoint_ms;
+    println!(
+        "checkpoint   off: {baseline_ms:>8.2} ms   on: {checkpoint_ms:>8.2} ms \
+         ({overhead:.2}x)   crash+recover: {crashed_ms:>8.2} ms (recovery {recovery_ms:+.2} ms)"
+    );
+    println!(
+        "checkpoint   snapshots={snapshots} bytes={snapshot_bytes} \
+         ({bytes_per_round:.0} B/round)   recoveries={} identical={identical}",
+        recovered.stats.crash_recoveries
+    );
+
+    let json = format!(
+        "{{\n  \"bench\": \"micro_kernels_pr9\",\n  \"schema\": 1,\n  \"reps\": {reps},\n  \
+         \"host_cores\": {},\n  \
+         \"graph\": {{\"kind\": \"gnm\", \"n\": {n}, \"m\": {m}, \"seed\": {seed}}},\n  \
+         \"ranks\": {ranks},\n  \"partition\": \"hash\",\n  \
+         \"crash\": {{\"rank\": {victim}, \"round\": {crash_round}}},\n  \
+         \"baseline_ms\": {baseline_ms:.3},\n  \"checkpoint_ms\": {checkpoint_ms:.3},\n  \
+         \"checkpoint_overhead\": {overhead:.3},\n  \"crashed_ms\": {crashed_ms:.3},\n  \
+         \"recovery_ms\": {recovery_ms:.3},\n  \
+         \"snapshots\": {snapshots},\n  \"snapshot_bytes\": {snapshot_bytes},\n  \
+         \"snapshot_bytes_per_round\": {bytes_per_round:.1},\n  \
+         \"crash_recoveries\": {},\n  \"identical_to_baseline\": {identical},\n  \
+         \"observer_identical\": {observer_identical},\n  \
+         \"unrecovered_structured_error\": {structured_error},\n  \
+         \"serviceable_after_error\": {serviceable_after_error}\n}}\n",
+        std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1),
+        recovered.stats.crash_recoveries,
+    );
+    std::fs::write("BENCH_pr9.json", &json).expect("writing BENCH_pr9.json");
+    println!("-> BENCH_pr9.json");
+    // asserted after the JSON is on disk, so a regression is recorded
+    assert!(identical, "crash recovery changed the coloring");
+    assert!(observer_identical, "checkpointing alone perturbed the run");
+    assert_eq!(recovered.stats.crash_recoveries, 1, "the crash never fired (or fired twice)");
+    assert!(snapshots > 0 && snapshot_bytes > 0, "checkpointing recorded no snapshots");
+    assert!(structured_error, "unrecovered crash did not surface as a structured error");
+    assert!(serviceable_after_error, "the failed run poisoned the session");
+}
+
 fn main() {
     if std::env::var("BENCH_PR1").is_ok_and(|v| v == "1") {
         pr1_smoke();
@@ -889,6 +1006,10 @@ fn main() {
     }
     if std::env::var("BENCH_PR7").is_ok_and(|v| v == "1") {
         pr7_smoke();
+        return;
+    }
+    if std::env::var("BENCH_PR9").is_ok_and(|v| v == "1") {
+        pr9_smoke();
         return;
     }
     let reps: usize =

@@ -1,6 +1,7 @@
 // Linted under virtual path rust/src/coloring/fixture.rs (not the comm
 // substrate).  comm.rs's contract: a collective may consume tag..tag+3,
-// and u64::MAX / u64::MAX-1 are reserved for the control plane.
+// and u64::MAX-3..=u64::MAX (NACK, down, rejoin, snapshot) are reserved
+// for the control plane.
 fn exchange(comm: &Comm, pending: u64) -> u64 {
     let a = comm.allreduce_sum(40, pending);
     // BAD: 41 is within 3 of 40 — the barrier's internal sub-tags collide
@@ -9,5 +10,7 @@ fn exchange(comm: &Comm, pending: u64) -> u64 {
     comm.barrier(u64::MAX);
     // BAD: application code referencing a reserved control-plane tag
     let down = CTRL_DOWN;
-    a + b + down
+    // BAD: the snapshot/rejoin tags (PR 9) are reserved too
+    let rejoin = CTRL_REJOIN;
+    a + b + down + rejoin
 }

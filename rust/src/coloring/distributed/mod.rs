@@ -69,7 +69,7 @@ use crate::coloring::local::{
     color_local_with, nb_bit, KernelScratch, LocalKernel, LocalView, ScratchPool,
 };
 use crate::coloring::{colors_used, Color, Problem};
-use crate::distributed::comm::{decode_u32s, encode_u32s, Comm, CommError};
+use crate::distributed::comm::{decode_u32s, encode_u32s, Comm, CommError, StreamSnapshot};
 use crate::distributed::{CostModel, FaultPlan, Topology};
 use crate::distributed::cost::CommStats;
 use crate::graph::{Graph, VId};
@@ -138,6 +138,16 @@ pub struct DistConfig {
     /// with per-rank diagnostics on any divergence.  Costs one extra
     /// reliable neighbor exchange per communication round.
     pub paranoid: bool,
+    /// Round-boundary checkpoint/restart (default off).  Each rank
+    /// snapshots its recovery-relevant state (colors, loser sets, delta
+    /// cursors, per-stream seqnos) at every fix-round boundary —
+    /// incrementally, since the delta exchanges know exactly what
+    /// changed — and a rank lost to [`FaultPlan::with_crash`] is
+    /// respawned from its last snapshot instead of cascading the whole
+    /// run to an error report.  Colorings, round counts and conflict
+    /// counts are bit-identical with the knob on, off, or on-and-
+    /// recovering (`tests/fault_injection.rs` pins the crash matrix).
+    pub checkpoint: bool,
 }
 
 impl Default for DistConfig {
@@ -154,6 +164,7 @@ impl Default for DistConfig {
             topology: None,
             faults: None,
             paranoid: false,
+            checkpoint: false,
         }
     }
 }
@@ -252,6 +263,17 @@ pub struct RankOutcome {
     /// Ghost-table entries audited by paranoid validation (0 unless
     /// [`DistConfig::paranoid`]).
     pub paranoid_checks: u64,
+    /// Crash recoveries this rank performed: respawns of its future from
+    /// the last round-boundary snapshot (0 unless
+    /// [`DistConfig::checkpoint`] is on and a crash was injected).
+    pub recoveries: u64,
+    /// Round-boundary snapshots taken (0 unless
+    /// [`DistConfig::checkpoint`]).
+    pub snapshots: u64,
+    /// Bytes captured across all snapshots: the first is a full color
+    /// image, every later one only the round's write set (recolored
+    /// losers + installed ghost deltas) plus the stream cursors.
+    pub snapshot_bytes: u64,
     pub timers: SplitTimer,
     pub comm: CommStats,
 }
@@ -301,6 +323,15 @@ pub struct RunStats {
     /// Ghost-table entries audited by paranoid validation (sum over
     /// ranks; 0 unless the run asked for it).
     pub paranoid_checks: u64,
+    /// Rank futures respawned from a round-boundary snapshot (sum over
+    /// ranks; 0 unless checkpointing was on and a crash was injected).
+    pub crash_recoveries: u64,
+    /// Round-boundary snapshots taken (sum over ranks; 0 unless the run
+    /// asked for [`DistConfig::checkpoint`]).
+    pub snapshots: u64,
+    /// Total snapshot footprint in bytes (sum over ranks; incremental —
+    /// see [`RankOutcome::snapshot_bytes`]).
+    pub snapshot_bytes: u64,
 }
 
 impl RunStats {
@@ -381,6 +412,7 @@ pub fn color_distributed(
         max_rounds: cfg.max_rounds,
         double_buffer: cfg.double_buffer,
         paranoid: cfg.paranoid,
+        checkpoint: cfg.checkpoint,
     };
     let mut out = plan.run_with_backend(spec, backend);
     // one-shot semantics: construction cost is part of this run's bill
@@ -419,6 +451,9 @@ pub(crate) fn assemble(n_global: usize, outcomes: Vec<RankOutcome>, nranks: usiz
         fault_delays: 0,
         fault_recovery_ns: 0,
         paranoid_checks: 0,
+        crash_recoveries: 0,
+        snapshots: 0,
+        snapshot_bytes: 0,
     };
     for o in outcomes {
         for (v, c) in o.owned_colors {
@@ -450,6 +485,9 @@ pub(crate) fn assemble(n_global: usize, outcomes: Vec<RankOutcome>, nranks: usiz
         stats.fault_delays += o.comm.fault_delays;
         stats.fault_recovery_ns = stats.fault_recovery_ns.max(o.comm.fault_recovery_ns);
         stats.paranoid_checks += o.paranoid_checks;
+        stats.crash_recoveries += o.recoveries;
+        stats.snapshots += o.snapshots;
+        stats.snapshot_bytes += o.snapshot_bytes;
     }
     stats.colors_used = colors_used(&colors);
     RunResult { colors, stats }
@@ -476,7 +514,7 @@ pub fn color_rank(
     let pool = ScratchPool::new(cfg.threads);
     let mut xscratch = ExchangeScratch::new();
     let rank = comm.rank();
-    let mut out = par::block_on(color_rank_planned(comm, &lg, cfg, backend, &pool, &mut xscratch))
+    let mut out = par::block_on(color_rank_supervised(comm, &lg, cfg, backend, &pool, &mut xscratch))
         .unwrap_or_else(|e| panic!("rank {rank}: {e}"));
     out.timers.comm += build_timer.comm;
     out
@@ -506,6 +544,7 @@ pub(crate) async fn color_rank_planned(
     backend: &dyn LocalBackend,
     pool: &ScratchPool,
     xscratch: &mut ExchangeScratch,
+    mut ckpt: Option<&mut Checkpoint>,
 ) -> Result<RankOutcome, CommError> {
     let two_layers = match cfg.problem {
         Problem::D1 => cfg.two_ghost_layers,
@@ -515,64 +554,105 @@ pub(crate) async fn color_rank_planned(
     let n_all = lg.n_local + lg.n_ghost;
     let mut colors: Vec<Color> = vec![0; n_all];
 
-    // ---- initial local coloring (ghosts unknown/uncolored), overlapped
-    // with the boundary-color exchange (§3): color the boundary prefix,
-    // launch the sends, then color the interior while the wires drain.
-    // Everything any rank subscribes to is inside the prefix (asserted
-    // in LocalGraph::build), so the shipped colors are final.
-    let pre = if two_layers { lg.n_boundary2 } else { lg.n_boundary1 };
-    let seed0 = cfg.seed ^ lg.rank as u64;
+    // fix-loop state, hoisted so a respawn can re-enter the loop from a
+    // snapshot without re-running the prologue.  `mask` is all-false at
+    // every round boundary (each user restores it), so a restored rank
+    // just allocates a fresh one.
     let mut mask = vec![false; n_all];
-    if pre > 0 {
-        mask[..pre].fill(true);
-        timers.comp(|| {
-            pool.with(|scratch| {
-                backend.color_with_scratch(
-                    cfg.problem,
-                    &LocalView { graph: &lg.graph, mask: &mask },
-                    &mut colors,
-                    seed0,
-                    scratch,
-                )
-            })
-        });
-    }
     let mut comm_rounds = 1usize;
-    timers.comm(|| exchange_full_send(comm, lg, &colors))?;
-    if pre < lg.n_local {
-        mask[..pre].fill(false);
-        mask[pre..lg.n_local].fill(true);
-        timers.comp(|| {
-            pool.with(|scratch| {
-                backend.color_with_scratch(
-                    cfg.problem,
-                    &LocalView { graph: &lg.graph, mask: &mask },
-                    &mut colors,
-                    seed0,
-                    scratch,
-                )
-            })
-        });
-        mask[pre..lg.n_local].fill(false);
-    } else {
-        mask[..pre].fill(false);
-    }
-    let t0 = std::time::Instant::now();
-    let recv = exchange_full_recv_async(comm, lg, &mut colors).await;
-    timers.comm_add(t0);
-    recv?;
-
-    // paranoid audits run after *every* exchange on their own tag
-    // stream; the epoch counter advances in lockstep on all ranks
-    // (every audit point is collective), keeping the tags aligned
     let mut paranoid_checks = 0u64;
     let mut paranoid_epoch = 0u64;
-    if cfg.paranoid {
+    let mut conflicts_total = 0u64;
+    let mut recolored_total = 0u64;
+    let mut round = 0usize;
+    let mut overlap_saved_ns = 0u64;
+    let mut local_losers: Vec<u32> = Vec::new();
+    let mut ghost_losers: Vec<u32> = Vec::new();
+    let mut found: u64;
+
+    if let Some(c) = ckpt.as_deref_mut().filter(|c| c.valid) {
+        // ---- respawn: resume at the snapshotted round boundary.  The
+        // snapshot was taken at the top of the fix loop, before this
+        // round's continuation allreduce, and the crash fired with zero
+        // comm in between — so restoring it and falling into the loop
+        // replays the boundary exactly.  `xscratch` is reused as-is: its
+        // per-round buffers are fully rewritten/cleared by each exchange.
+        colors.copy_from_slice(&c.colors);
+        found = c.found;
+        local_losers.extend_from_slice(&c.local_losers);
+        ghost_losers.extend_from_slice(&c.ghost_losers);
+        round = c.round;
+        comm_rounds = c.comm_rounds;
+        conflicts_total = c.conflicts_total;
+        recolored_total = c.recolored_total;
+        overlap_saved_ns = c.overlap_saved_ns;
+        paranoid_checks = c.paranoid_checks;
+        paranoid_epoch = c.paranoid_epoch;
+    } else {
+        // ---- initial local coloring (ghosts unknown/uncolored), overlapped
+        // with the boundary-color exchange (§3): color the boundary prefix,
+        // launch the sends, then color the interior while the wires drain.
+        // Everything any rank subscribes to is inside the prefix (asserted
+        // in LocalGraph::build), so the shipped colors are final.
+        let pre = if two_layers { lg.n_boundary2 } else { lg.n_boundary1 };
+        let seed0 = cfg.seed ^ lg.rank as u64;
+        if pre > 0 {
+            mask[..pre].fill(true);
+            timers.comp(|| {
+                pool.with(|scratch| {
+                    backend.color_with_scratch(
+                        cfg.problem,
+                        &LocalView { graph: &lg.graph, mask: &mask },
+                        &mut colors,
+                        seed0,
+                        scratch,
+                    )
+                })
+            });
+        }
+        timers.comm(|| exchange_full_send(comm, lg, &colors))?;
+        if pre < lg.n_local {
+            mask[..pre].fill(false);
+            mask[pre..lg.n_local].fill(true);
+            timers.comp(|| {
+                pool.with(|scratch| {
+                    backend.color_with_scratch(
+                        cfg.problem,
+                        &LocalView { graph: &lg.graph, mask: &mask },
+                        &mut colors,
+                        seed0,
+                        scratch,
+                    )
+                })
+            });
+            mask[pre..lg.n_local].fill(false);
+        } else {
+            mask[..pre].fill(false);
+        }
         let t0 = std::time::Instant::now();
-        let audited = paranoid_ghost_check(comm, lg, &colors, TAG_PARANOID + paranoid_epoch).await;
+        let recv = exchange_full_recv_async(comm, lg, &mut colors).await;
         timers.comm_add(t0);
-        paranoid_checks += audited?;
-        paranoid_epoch += 1;
+        recv?;
+
+        // paranoid audits run after *every* exchange on their own tag
+        // stream; the epoch counter advances in lockstep on all ranks
+        // (every audit point is collective), keeping the tags aligned
+        if cfg.paranoid {
+            let t0 = std::time::Instant::now();
+            let audited =
+                paranoid_ghost_check(comm, lg, &colors, TAG_PARANOID + paranoid_epoch).await;
+            timers.comm_add(t0);
+            paranoid_checks += audited?;
+            paranoid_epoch += 1;
+        }
+
+        found = timers.comp(|| {
+            pool.with(|scratch| {
+                let exec = scratch.executor();
+                detect_conflicts(lg, &colors, cfg, &exec, &mut local_losers, &mut ghost_losers)
+            })
+        });
+        conflicts_total += found;
     }
 
     // ---- speculative fix loop -------------------------------------------
@@ -589,20 +669,38 @@ pub(crate) async fn color_rank_planned(
     //                           only candidates the deltas dirtied)
     // Both arms produce bit-identical losers/counts (see detect_fixup),
     // so the coloring and round count never depend on the knob.
-    let mut conflicts_total = 0u64;
-    let mut recolored_total = 0u64;
-    let mut round = 0usize;
-    let mut overlap_saved_ns = 0u64;
-    let mut local_losers: Vec<u32> = Vec::new();
-    let mut ghost_losers: Vec<u32> = Vec::new();
-    let mut found = timers.comp(|| {
-        pool.with(|scratch| {
-            let exec = scratch.executor();
-            detect_conflicts(lg, &colors, cfg, &exec, &mut local_losers, &mut ghost_losers)
-        })
-    });
-    conflicts_total += found;
     loop {
+        // round boundary: snapshot first, crash second.  The snapshot
+        // captures exactly the state this iteration is about to consume,
+        // and an injected crash fires with zero comm after it — so the
+        // supervisor's restore-and-re-enter replays the boundary bit for
+        // bit (the continuation allreduce below has not contributed yet;
+        // the peers' early tree hops wait in the surviving endpoint's
+        // mailbox).
+        if let Some(c) = ckpt.as_deref_mut() {
+            c.update(
+                &colors,
+                found,
+                &local_losers,
+                &ghost_losers,
+                CheckpointScalars {
+                    round,
+                    comm_rounds,
+                    conflicts_total,
+                    recolored_total,
+                    overlap_saved_ns,
+                    paranoid_checks,
+                    paranoid_epoch,
+                },
+                xscratch.updated(),
+                comm,
+            );
+        }
+        if let Some(f) = cfg.faults {
+            if f.crash == Some((lg.rank, round as u32)) {
+                return Err(CommError::InjectedCrash { rank: lg.rank, round: round as u32 });
+            }
+        }
         let t0 = std::time::Instant::now();
         let global = comm.allreduce_sum_async(TAG_REDUCE + 2 * round as u64, found).await;
         timers.comm_add(t0);
@@ -735,9 +833,157 @@ pub(crate) async fn color_rank_planned(
         recolored: recolored_total,
         overlap_saved_ns,
         paranoid_checks,
+        // checkpoint accounting lives in the supervisor's `Checkpoint`;
+        // it overwrites these on the way out when the knob is on
+        recoveries: 0,
+        snapshots: 0,
+        snapshot_bytes: 0,
         timers,
         comm: comm.stats(),
     })
+}
+
+/// The scalar half of a round-boundary snapshot (see [`Checkpoint`]),
+/// bundled so [`Checkpoint::update`]'s signature stays readable.
+#[derive(Clone, Copy, Debug, Default)]
+pub(crate) struct CheckpointScalars {
+    pub round: usize,
+    pub comm_rounds: usize,
+    pub conflicts_total: u64,
+    pub recolored_total: u64,
+    pub overlap_saved_ns: u64,
+    pub paranoid_checks: u64,
+    pub paranoid_epoch: u64,
+}
+
+/// A rank's last round-boundary snapshot: everything
+/// [`color_rank_planned`]'s fix loop needs to re-enter at the boundary
+/// it was taken — the color array (owned + ghost), the loser sets the
+/// boundary is about to consume, the fix-loop scalars, and the comm
+/// stream cursors ([`StreamSnapshot`]).  Owned by the supervisor
+/// ([`color_rank_supervised`]) and updated in place at every boundary;
+/// after the first full color image, updates patch only the round's
+/// write set (the recolored losers — including 2GL ghost predictions —
+/// plus the ghost installs the delta exchange recorded in
+/// [`ExchangeScratch::updated`]), which is what `snapshot_bytes` meters.
+#[derive(Clone, Debug, Default)]
+pub(crate) struct Checkpoint {
+    valid: bool,
+    colors: Vec<Color>,
+    found: u64,
+    local_losers: Vec<u32>,
+    ghost_losers: Vec<u32>,
+    round: usize,
+    comm_rounds: usize,
+    conflicts_total: u64,
+    recolored_total: u64,
+    overlap_saved_ns: u64,
+    paranoid_checks: u64,
+    paranoid_epoch: u64,
+    streams: StreamSnapshot,
+    snapshots: u64,
+    snapshot_bytes: u64,
+    recoveries: u64,
+}
+
+impl Checkpoint {
+    #[allow(clippy::too_many_arguments)]
+    fn update(
+        &mut self,
+        colors: &[Color],
+        found: u64,
+        local_losers: &[u32],
+        ghost_losers: &[u32],
+        scalars: CheckpointScalars,
+        updated_ghosts: &[u32],
+        comm: &Comm,
+    ) {
+        let delta_ids;
+        if !self.valid || self.colors.len() != colors.len() {
+            self.colors.clear();
+            self.colors.extend_from_slice(colors);
+            delta_ids = colors.len();
+        } else {
+            // incremental: between the previous boundary and this one the
+            // only color writes are the recolor of the previous boundary's
+            // loser sets (ghost losers only on the 2GL predictive path,
+            // where the patch is a harmless no-op otherwise) and the
+            // ghost installs the delta exchange recorded
+            for &v in self
+                .local_losers
+                .iter()
+                .chain(self.ghost_losers.iter())
+                .chain(updated_ghosts.iter())
+            {
+                self.colors[v as usize] = colors[v as usize];
+            }
+            delta_ids = self.local_losers.len() + self.ghost_losers.len() + updated_ghosts.len();
+        }
+        self.found = found;
+        self.local_losers.clear();
+        self.local_losers.extend_from_slice(local_losers);
+        self.ghost_losers.clear();
+        self.ghost_losers.extend_from_slice(ghost_losers);
+        self.round = scalars.round;
+        self.comm_rounds = scalars.comm_rounds;
+        self.conflicts_total = scalars.conflicts_total;
+        self.recolored_total = scalars.recolored_total;
+        self.overlap_saved_ns = scalars.overlap_saved_ns;
+        self.paranoid_checks = scalars.paranoid_checks;
+        self.paranoid_epoch = scalars.paranoid_epoch;
+        self.streams = comm.export_streams();
+        self.valid = true;
+        self.snapshots += 1;
+        self.snapshot_bytes += (delta_ids * std::mem::size_of::<Color>()) as u64
+            + ((local_losers.len() + ghost_losers.len()) * 4) as u64
+            + self.streams.encoded_len() as u64
+            + std::mem::size_of::<CheckpointScalars>() as u64
+            + 8; // `found`
+    }
+}
+
+/// Supervisor wrapper around [`color_rank_planned`].  With
+/// [`DistConfig::checkpoint`] off it is a plain delegation (no snapshot
+/// work at all); with it on, the rank snapshots at every fix-round
+/// boundary and an injected crash ([`FaultPlan::with_crash`]) is caught
+/// *here* and answered with a respawn instead of cascading `CTRL_DOWN`:
+/// the comm endpoint survives the dead future (its mailbox may hold
+/// faster peers' early collective hops), the snapshot's stream cursors
+/// are restored, the rejoin is announced on the reserved control-plane
+/// band (`Comm::rejoin_all`, answered by `CTRL_SNAP` watermarks that
+/// reconcile the in-flight round), and the poll loop re-enters from the
+/// snapshot.  The crash schedule is disarmed before the respawn so it
+/// fires exactly once.
+pub(crate) async fn color_rank_supervised(
+    comm: &mut Comm,
+    lg: &LocalGraph,
+    mut cfg: DistConfig,
+    backend: &dyn LocalBackend,
+    pool: &ScratchPool,
+    xscratch: &mut ExchangeScratch,
+) -> Result<RankOutcome, CommError> {
+    if !cfg.checkpoint {
+        return color_rank_planned(comm, lg, cfg, backend, pool, xscratch, None).await;
+    }
+    let mut ckpt = Checkpoint::default();
+    loop {
+        match color_rank_planned(comm, lg, cfg, backend, pool, xscratch, Some(&mut ckpt)).await {
+            Err(CommError::InjectedCrash { .. }) => {
+                cfg.faults = cfg.faults.map(|f| f.without_crash());
+                comm.restore_streams(&ckpt.streams);
+                comm.rejoin_all();
+                ckpt.recoveries += 1;
+            }
+            out => {
+                return out.map(|mut o| {
+                    o.recoveries = ckpt.recoveries;
+                    o.snapshots = ckpt.snapshots;
+                    o.snapshot_bytes = ckpt.snapshot_bytes;
+                    o
+                });
+            }
+        }
+    }
 }
 
 // -----------------------------------------------------------------------

@@ -69,8 +69,15 @@
 //! tree broadcast, payload), so callers space tags by at least 3 when
 //! issuing back-to-back collectives with distinct tags.  Reusing one tag
 //! for *sequential* collectives is safe — selective receive plus
-//! per-channel FIFO keeps rounds apart.  The two topmost tag values are
-//! reserved for the control plane (NACK and rank-down notices).
+//! per-channel FIFO keeps rounds apart.  The four topmost tag values are
+//! reserved for the control plane: NACK and rank-down notices (PR 6),
+//! plus the checkpoint/restart band (PR 9) — a recovered rank announces
+//! itself with a rejoin notice (`CTRL_REJOIN`), and each peer replies
+//! with a snapshot of its receive watermarks for the rejoiner's streams
+//! (`CTRL_SNAP`), reconciling the in-flight round without any
+//! application traffic.  All four are pure control traffic: never
+//! accounted, so a recovered run's wire totals stay bit-identical to an
+//! uninterrupted one.
 
 // clippy.toml bans HashMap (nondeterministic iteration) and raw thread
 // spawns repo-wide.  The mailbox tables here are keyed lookups whose
@@ -93,6 +100,13 @@ type Packet = (u32, u64, Vec<u8>); // (from, tag, payload)
 /// Control-plane tags, never valid application tags.
 const CTRL_NACK: u64 = u64::MAX;
 const CTRL_DOWN: u64 = u64::MAX - 1;
+/// Checkpoint/restart control plane: a recovered rank broadcasts
+/// `CTRL_REJOIN` (the up half of the down-then-up lifecycle); each peer
+/// clears the rejoiner's down flag and replies with `CTRL_SNAP`
+/// carrying its receive watermarks for the rejoiner's streams, which
+/// the rejoiner folds into its restored send cursors (max-merge).
+const CTRL_REJOIN: u64 = u64::MAX - 2;
+const CTRL_SNAP: u64 = u64::MAX - 3;
 
 /// One rank's inbound queue: a completion-based endpoint instead of the
 /// old blocking mpsc channel.  A consumer that finds the queue empty
@@ -140,6 +154,11 @@ impl Mailbox {
         }
         inner.waiter = Some(cx.waker().clone());
         Poll::Pending
+    }
+
+    /// Pop the next packet if one is queued; never suspends.
+    fn try_pop(&self) -> Option<Packet> {
+        self.inner.lock().unwrap().queue.pop_front()
     }
 }
 
@@ -212,6 +231,12 @@ pub enum CommError {
     Decode { len: usize, elem: usize },
     /// A paranoid validation check found an inconsistency.
     Paranoid { detail: String },
+    /// A deterministic crash scheduled by `FaultPlan::with_crash` fired
+    /// on this rank at a fix-round boundary.  With checkpointing on the
+    /// supervisor catches this and recovers the rank from its last
+    /// snapshot; with checkpointing off it surfaces in the run's error
+    /// report like any other rank failure.
+    InjectedCrash { rank: u32, round: u32 },
 }
 
 impl std::fmt::Display for CommError {
@@ -226,11 +251,37 @@ impl std::fmt::Display for CommError {
                 write!(f, "payload of {len} bytes is not a whole number of {elem}-byte elements")
             }
             CommError::Paranoid { detail } => write!(f, "paranoid validation failed: {detail}"),
+            CommError::InjectedCrash { rank, round } => {
+                write!(f, "rank {rank} crashed (injected) at fix-round {round}")
+            }
         }
     }
 }
 
 impl std::error::Error for CommError {}
+
+/// Per-stream cursor + accounting snapshot of a [`Comm`] at a fix-round
+/// boundary — the comm half of a checkpoint (the coloring half lives in
+/// `coloring::distributed`'s `Checkpoint`).  Cursors are stored sorted
+/// by `(peer, tag)`, so snapshots of equal comm states compare equal.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub(crate) struct StreamSnapshot {
+    /// Next send seqno per `(to, tag)` stream, sorted by key.
+    tx: Vec<((u32, u64), u32)>,
+    /// Next expected seqno per `(from, tag)` stream, sorted by key.
+    rx: Vec<((u32, u64), u32)>,
+    /// The full accounting state at the boundary.
+    stats: CommStats,
+}
+
+impl StreamSnapshot {
+    /// Bytes this snapshot would occupy encoded (12 per cursor record)
+    /// — what the checkpoint's `snapshot_bytes` accounting charges for
+    /// the comm half.
+    pub(crate) fn encoded_len(&self) -> usize {
+        12 * (self.tx.len() + self.rx.len())
+    }
+}
 
 /// Per-rank communicator handle (not Clone: one per rank).
 ///
@@ -423,6 +474,68 @@ impl Comm {
         }
     }
 
+    /// Announce this rank's recovery to every peer — the up half of the
+    /// down-then-up lifecycle.  Peers service the notice inline in
+    /// their next receive: they clear our down flag and reply with a
+    /// [`CTRL_SNAP`] watermark snapshot, which [`Comm::service_snap`]
+    /// folds into our restored send cursors.  Pure control traffic
+    /// (never accounted), so a recovered run's wire totals stay
+    /// bit-identical to an uninterrupted one.
+    pub(crate) fn rejoin_all(&mut self) {
+        for (r, mb) in self.peers.iter().enumerate() {
+            if r as u32 != self.rank {
+                mb.push((self.rank, CTRL_REJOIN, Vec::new()));
+            }
+        }
+    }
+
+    /// Snapshot this communicator's per-stream cursors and accounting —
+    /// the comm half of a round-boundary checkpoint.  Cursors are
+    /// stored sorted by `(peer, tag)` key, so snapshots of equal comm
+    /// states compare equal regardless of hash-map history.
+    pub(crate) fn export_streams(&self) -> StreamSnapshot {
+        // repolint: allow(L02) -- collected into a Vec and sorted by key two lines down
+        let mut tx: Vec<((u32, u64), u32)> = self.tx_seq.iter().map(|(&k, &v)| (k, v)).collect();
+        tx.sort_unstable();
+        // repolint: allow(L02) -- collected into a Vec and sorted by key two lines down
+        let mut rx: Vec<((u32, u64), u32)> = self.rx_seq.iter().map(|(&k, &v)| (k, v)).collect();
+        rx.sort_unstable();
+        StreamSnapshot { tx, rx, stats: self.stats }
+    }
+
+    /// Restore the cursors and accounting captured by
+    /// [`Comm::export_streams`].  The transport state that models the
+    /// *network* rather than the rank — queued packets, early frames,
+    /// unacked retransmit copies, peer down flags — is deliberately
+    /// left alone: the endpoint outlives the crashed compute state
+    /// machine, exactly as a NIC outlives the process it serves, so
+    /// in-flight peer traffic (e.g. a faster neighbor's early allreduce
+    /// contribution) survives the respawn.
+    pub(crate) fn restore_streams(&mut self, snap: &StreamSnapshot) {
+        self.tx_seq = snap.tx.iter().copied().collect();
+        self.rx_seq = snap.rx.iter().copied().collect();
+        self.stats = snap.stats;
+    }
+
+    /// A peer answered our [`CTRL_REJOIN`] with its receive watermarks:
+    /// max-fold them into our send cursors.  After a snapshot restore
+    /// the cursors already equal the watermarks (the snapshot was taken
+    /// at the same round boundary the peer last consumed through), so
+    /// the fold is a reconciliation no-op that makes the agreement
+    /// explicit — and a *stale* watermark can never rewind a stream.
+    fn service_snap(&mut self, from: u32, ctrl: &[u8]) -> Result<(), CommError> {
+        if ctrl.len() % 12 != 0 {
+            return Err(CommError::Decode { len: ctrl.len(), elem: 12 });
+        }
+        for rec in ctrl.chunks_exact(12) {
+            let tag = u64::from_le_bytes(rec[..8].try_into().unwrap());
+            let next = u32::from_le_bytes(rec[8..12].try_into().unwrap());
+            let e = self.tx_seq.entry((from, tag)).or_insert(0);
+            *e = (*e).max(next);
+        }
+        Ok(())
+    }
+
     /// Pull one packet off our mailbox, servicing control traffic
     /// inline.  `Ok(None)` means a control packet was consumed —
     /// callers loop.  This await is *the* yield point of the entire
@@ -434,6 +547,26 @@ impl Comm {
     async fn pull(&mut self) -> Result<Option<Packet>, CommError> {
         let mailbox = Arc::clone(&self.peers[self.rank as usize]);
         let pkt = std::future::poll_fn(|cx| mailbox.poll_pop(cx)).await;
+        self.service_ctrl(pkt)
+    }
+
+    /// Non-suspending [`Comm::pull`]: `Ok(None)` when the mailbox is
+    /// empty, otherwise `Ok(Some(_))` with exactly what `pull` would
+    /// have returned.  The receive paths use this to drain queued
+    /// traffic *after* a peer's down flag is set — the down-then-up
+    /// lifecycle: a rejoin notice right behind the down notice reopens
+    /// the wire, and only an empty mailbox makes the down verdict final.
+    fn try_pull(&mut self) -> Result<Option<Option<Packet>>, CommError> {
+        match self.peers[self.rank as usize].try_pop() {
+            None => Ok(None),
+            Some(pkt) => self.service_ctrl(pkt).map(Some),
+        }
+    }
+
+    /// The control-plane dispatch shared by [`Comm::pull`] and
+    /// [`Comm::try_pull`]: `Ok(None)` means a control packet was
+    /// consumed, `Ok(Some(pkt))` is application traffic.
+    fn service_ctrl(&mut self, pkt: Packet) -> Result<Option<Packet>, CommError> {
         match pkt.1 {
             CTRL_DOWN => {
                 self.down[pkt.0 as usize] = true;
@@ -441,6 +574,27 @@ impl Comm {
             }
             CTRL_NACK => {
                 self.service_nack(pkt.0, &pkt.2)?;
+                Ok(None)
+            }
+            CTRL_REJOIN => {
+                // a recovered peer is back: clear its down flag and
+                // reply with our receive watermarks for its streams so
+                // its restored send cursors are reconciled explicitly
+                let from = pkt.0;
+                self.down[from as usize] = false;
+                // repolint: allow(L02) -- collected into a Vec and sorted by tag before encoding
+                let mut marks: Vec<(u64, u32)> = self.rx_seq.iter().filter(|(k, _)| k.0 == from).map(|(k, &s)| (k.1, s)).collect();
+                marks.sort_unstable();
+                let mut p = Vec::with_capacity(marks.len() * 12);
+                for (tag, next) in marks {
+                    p.extend_from_slice(&tag.to_le_bytes());
+                    p.extend_from_slice(&next.to_le_bytes());
+                }
+                self.peers[from as usize].push((self.rank, CTRL_SNAP, p));
+                Ok(None)
+            }
+            CTRL_SNAP => {
+                self.service_snap(pkt.0, &pkt.2)?;
                 Ok(None)
             }
             _ => Ok(Some(pkt)),
@@ -578,10 +732,18 @@ impl Comm {
             let pkt = match self.pending.iter().position(|&(f, t, _)| f == from && t == tag) {
                 Some(pos) => Some(self.pending.remove(pos).unwrap()),
                 None => {
-                    if self.down[from as usize] {
-                        return Err(CommError::RankDown { rank: from });
-                    }
-                    match self.pull().await? {
+                    let pulled = if self.down[from as usize] {
+                        // down-then-up: drain queued traffic first — a
+                        // rejoin notice reopens the wire; only an empty
+                        // mailbox makes the down verdict final
+                        match self.try_pull()? {
+                            None => return Err(CommError::RankDown { rank: from }),
+                            Some(p) => p,
+                        }
+                    } else {
+                        self.pull().await?
+                    };
+                    match pulled {
                         Some(pkt) if pkt.0 == from && pkt.1 == tag => Some(pkt),
                         Some(pkt) => {
                             self.pending.push_back(pkt);
@@ -962,10 +1124,16 @@ impl Comm {
             if let Some(pos) = self.pending.iter().position(|&(f, t, _)| f == from && t == tag) {
                 return Ok(self.pending.remove(pos).unwrap().2);
             }
-            if self.down[from as usize] {
-                return Err(CommError::RankDown { rank: from });
-            }
-            match self.pull().await? {
+            let pulled = if self.down[from as usize] {
+                // down-then-up: see recv_async — drain before failing
+                match self.try_pull()? {
+                    None => return Err(CommError::RankDown { rank: from }),
+                    Some(p) => p,
+                }
+            } else {
+                self.pull().await?
+            };
+            match pulled {
                 Some(pkt) if pkt.0 == from && pkt.1 == tag => return Ok(pkt.2),
                 Some(pkt) => self.pending.push_back(pkt),
                 None => {}
@@ -983,10 +1151,16 @@ impl Comm {
             let pkt = match self.pending.iter().position(|&(_, t, _)| t == tag) {
                 Some(pos) => Some(self.pending.remove(pos).unwrap()),
                 None => {
-                    if let Some(r) = self.down.iter().position(|&d| d) {
-                        return Err(CommError::RankDown { rank: r as u32 });
-                    }
-                    match self.pull().await? {
+                    let pulled = if let Some(r) = self.down.iter().position(|&d| d) {
+                        // down-then-up: see recv_async — drain first
+                        match self.try_pull()? {
+                            None => return Err(CommError::RankDown { rank: r as u32 }),
+                            Some(p) => p,
+                        }
+                    } else {
+                        self.pull().await?
+                    };
+                    match pulled {
                         Some(pkt) if pkt.1 == tag => Some(pkt),
                         Some(pkt) => {
                             self.pending.push_back(pkt);
@@ -1523,6 +1697,91 @@ mod tests {
         let payload = out[1].as_ref().unwrap_err();
         let msg = payload.downcast_ref::<&str>().expect("panic payload");
         assert!(msg.contains("rank 1 died"));
+    }
+
+    #[test]
+    fn stream_snapshot_roundtrips_and_snap_fold_is_max() {
+        let domain = CommDomain::new(2);
+        let mut c = domain.comm(0, Topology::flat(CostModel::zero()), Some(FaultPlan::mild(1)));
+        c.send(1, 5, vec![1]).unwrap();
+        c.send(1, 5, vec![2]).unwrap();
+        c.send(1, 8, vec![3]).unwrap();
+        let snap = c.export_streams();
+        assert_eq!(snap.encoded_len(), 24, "two tx streams, no rx streams");
+        // post-snapshot activity is rolled back by restore
+        c.send(1, 5, vec![4]).unwrap();
+        c.restore_streams(&snap);
+        assert_eq!(c.export_streams(), snap, "restore must reproduce the snapshot exactly");
+        // a stale watermark (below the cursor) must not rewind the stream
+        let mut p = Vec::new();
+        p.extend_from_slice(&5u64.to_le_bytes());
+        p.extend_from_slice(&1u32.to_le_bytes());
+        c.service_snap(1, &p).unwrap();
+        assert_eq!(c.export_streams(), snap, "stale watermark rewound a cursor");
+        // a watermark ahead of the cursor fast-forwards it (max-fold)
+        let mut p = Vec::new();
+        p.extend_from_slice(&9u64.to_le_bytes());
+        p.extend_from_slice(&7u32.to_le_bytes());
+        c.service_snap(1, &p).unwrap();
+        assert!(c.export_streams().tx.contains(&((1, 9), 7)));
+        // torn control payloads are typed errors, not panics
+        assert!(matches!(c.service_snap(1, &[0u8; 13]), Err(CommError::Decode { .. })));
+    }
+
+    #[test]
+    fn rejoin_handshake_survives_a_faulted_stream() {
+        // rank 0 streams through injected faults, snapshots, restores,
+        // and rejoins; the peer's CTRL_SNAP watermark fold must be a
+        // no-op and the stream must continue seamlessly in order
+        let plan = FaultPlan::mild(17);
+        let out = run_ranks_cfg(2, Topology::flat(CostModel::zero()), Some(plan), |c| {
+            if c.rank() == 0 {
+                for i in 0..40u32 {
+                    c.send(1, 21, encode_u32s(&[i])).unwrap();
+                }
+                let snap = c.export_streams();
+                c.restore_streams(&snap);
+                c.rejoin_all();
+                // the peer's CTRL_SNAP reply is serviced inside this
+                // barrier's receives; the fold must leave the restored
+                // cursors untouched for the stream to stay in order
+                c.barrier(600).unwrap();
+                for i in 40..80u32 {
+                    c.send(1, 21, encode_u32s(&[i])).unwrap();
+                }
+                c.barrier(610).unwrap();
+            } else {
+                for i in 0..40u32 {
+                    assert_eq!(decode_u32s(&c.recv(0, 21).unwrap()).unwrap(), vec![i]);
+                }
+                c.barrier(600).unwrap();
+                for i in 40..80u32 {
+                    assert_eq!(decode_u32s(&c.recv(0, 21).unwrap()).unwrap(), vec![i]);
+                }
+                c.barrier(610).unwrap();
+            }
+        });
+        assert!(out.into_iter().all(|r| r.is_ok()));
+    }
+
+    #[test]
+    fn rejoin_reopens_a_downed_wire() {
+        // down-then-up lifecycle, deterministic: all of rank 0's
+        // traffic (down notice, rejoin notice, payload) is queued
+        // before rank 1 receives, so the drain path must service DOWN
+        // then REJOIN and still deliver the payload — only an empty
+        // mailbox makes the down verdict final
+        let domain = CommDomain::new(2);
+        let topo = Topology::flat(CostModel::zero());
+        let mut c0 = domain.comm(0, topo, None);
+        let mut c1 = domain.comm(1, topo, None);
+        c0.abort();
+        c0.rejoin_all();
+        c0.send(1, 33, vec![7]).unwrap();
+        assert_eq!(c1.recv(0, 33).unwrap(), vec![7]);
+        // with no rejoin behind it, the down verdict is final
+        c0.abort();
+        assert_eq!(c1.recv(0, 35).unwrap_err(), CommError::RankDown { rank: 0 });
     }
 
     #[test]

@@ -19,6 +19,16 @@
 //!   gate only means something when the schedule is a function, not a
 //!   dice roll.
 //!
+//! Beyond the per-frame wire faults, a plan can also schedule one
+//! **rank crash**: [`FaultPlan::with_crash`]`(rank, round)` makes that
+//! rank fail deterministically at the given fix-round boundary.  With
+//! checkpointing on (`ProblemSpec::with_checkpoint`) the runtime
+//! recovers the rank from its last round-boundary snapshot; with it off
+//! the crash surfaces as a structured `RunError`.  A crash schedule is
+//! control-plane state, not a wire fault: it does not by itself enable
+//! frame injection ([`FaultPlan::enabled`] stays rate-driven), so a
+//! crash-only plan keeps the wire byte-identical to no plan at all.
+//!
 //! When a plan is active every application payload travels framed as
 //! `[kind u8][seqno u32][delay_ns u64][checksum u64][payload]`.  The
 //! first 13 header bytes model the part of a transport the NIC protects
@@ -71,6 +81,10 @@ pub struct FaultPlan {
     /// Retransmits allowed per frame before the sender gives up and the
     /// exchange escalates to a full resync (attempts `0..=retry_budget`).
     pub retry_budget: u32,
+    /// Scheduled rank crash: `Some((rank, fix_round))` makes that rank
+    /// fail deterministically at that fix-round boundary, exactly once
+    /// per run.  Not a wire fault — see [`FaultPlan::enabled`].
+    pub crash: Option<(u32, u32)>,
 }
 
 impl FaultPlan {
@@ -86,6 +100,7 @@ impl FaultPlan {
             delay_ppm: 0,
             delay_ns: 25_000,
             retry_budget: 4,
+            crash: None,
         }
     }
 
@@ -132,8 +147,29 @@ impl FaultPlan {
         self
     }
 
-    /// Does this plan inject anything at all?  A disabled plan is
-    /// treated exactly like no plan (no framing, no overhead).
+    /// Schedule `rank` to crash at fix-round boundary `round` (0-based;
+    /// boundary `r` is crossed just before round `r`'s continuation
+    /// vote).  The crash fires exactly once per run: a checkpointed run
+    /// recovers and resumes past it, an uncheckpointed run reports it.
+    pub fn with_crash(mut self, rank: u32, round: u32) -> Self {
+        self.crash = Some((rank, round));
+        self
+    }
+
+    /// Clear the crash schedule — what the checkpoint supervisor does
+    /// after delivering a crash, so the respawned rank (which re-enters
+    /// the loop at the same round) does not crash again forever.
+    pub fn without_crash(mut self) -> Self {
+        self.crash = None;
+        self
+    }
+
+    /// Does this plan inject any *wire* faults?  A rate-disabled plan
+    /// is treated exactly like no plan on the wire (no framing, no
+    /// overhead) — deliberately including plans that only carry a
+    /// [`FaultPlan::with_crash`] schedule, so a crash-only plan keeps
+    /// the faults-off byte-parity invariant intact while the coloring
+    /// layer still sees the crash via the config's plan.
     pub fn enabled(&self) -> bool {
         self.drop_ppm > 0 || self.flip_ppm > 0 || self.dup_ppm > 0 || self.delay_ppm > 0
     }
@@ -283,6 +319,23 @@ mod tests {
             assert!(!p.doomed(0, 1, 5, s));
         }
         assert!(FaultPlan::mild(42).enabled());
+    }
+
+    #[test]
+    fn crash_schedule_is_not_a_wire_fault() {
+        // a crash-only plan must stay wire-disabled (no framing), and
+        // the schedule must round-trip through the builders
+        let p = FaultPlan::new(9).with_crash(3, 1);
+        assert!(!p.enabled(), "crash-only plans must not frame the wire");
+        assert_eq!(p.crash, Some((3, 1)));
+        assert_eq!(p.without_crash().crash, None);
+        // and it composes with wire rates without perturbing them
+        let q = FaultPlan::mild(9).with_crash(0, 0);
+        let r = FaultPlan::mild(9);
+        assert!(q.enabled());
+        for s in 0..100 {
+            assert_eq!(q.action(0, 1, 5, s, 0), r.action(0, 1, 5, s, 0));
+        }
     }
 
     #[test]

@@ -94,7 +94,31 @@
 //! diagnostics (surfaced through `Plan::try_run`) rather than returning
 //! a silently wrong coloring.  Rank panics are likewise contained:
 //! `Plan::try_run` reports every failed rank's message instead of
-//! hanging the survivors.
+//! hanging the survivors (and `Plan::run` re-panics with the typed
+//! [`session::RunError`] as the payload, not a flattened string).
+//!
+//! Whole-rank failure is recoverable too.  With
+//! `ProblemSpec::with_checkpoint(true)` (or the `DIST_CRASH_AT=rank:round`
+//! env knob, which arms both the crash and the checkpoints), every rank
+//! snapshots its recovery-relevant state — local colors, loser sets,
+//! delta-exchange cursors, per-stream sequence numbers — at each
+//! fix-round boundary.  Snapshots are incremental: the first is a full
+//! color image, every later one only the round's write set.  A rank
+//! killed by the deterministic [`distributed::FaultPlan::with_crash`]
+//! injector is respawned from its last snapshot on the same
+//! communication endpoint: it re-announces itself on the reserved
+//! control-plane tag band (rejoin + watermark-snapshot tags, above the
+//! NACK/rank-down pair from the retransmit layer), reconciles the
+//! in-flight round with its neighbors' stream watermarks, and resumes
+//! the poll loop instead of cascading rank-down notices.  The bar is
+//! the same as for wire faults: a crash-and-recover run is
+//! bit-identical to the uninterrupted one — colorings, round counts,
+//! conflict counts — at every rank and thread count, with only the
+//! `RunStats::crash_recoveries` / `snapshots` / `snapshot_bytes`
+//! counters telling the difference.  With checkpointing *off*, the same
+//! crash surfaces as a structured `RunError` through `Plan::try_run`
+//! (no hangs, no poisoned session) and the session stays serviceable
+//! for the next run.
 //!
 //! ## Layers
 //!

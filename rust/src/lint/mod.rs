@@ -390,7 +390,7 @@ mod tests {
             "rust/src/coloring/fixture.rs",
             "l05_bad.rs",
             "L05",
-            3,
+            4,
             "l05_good.rs",
         );
     }

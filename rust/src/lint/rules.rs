@@ -490,7 +490,7 @@ pub fn rule_l05(lx: &Lexed, out: &mut Vec<Finding>) {
     let n = toks.len();
     if lx.path != "rust/src/distributed/comm.rs" {
         for tok in toks {
-            if tok.t == "CTRL_NACK" || tok.t == "CTRL_DOWN" {
+            if matches!(tok.t.as_str(), "CTRL_NACK" | "CTRL_DOWN" | "CTRL_REJOIN" | "CTRL_SNAP") {
                 out.push(Finding::new(
                     "L05",
                     &lx.path,

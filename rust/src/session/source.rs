@@ -23,6 +23,7 @@
 //!   non-trivial partition (asserted by `tests/session_api.rs`).
 
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
 
 use crate::graph::{Graph, VId};
 
@@ -132,8 +133,10 @@ pub trait GraphSource: Sync {
     /// produce identical slabs for every `(rank, owned)` query — the
     /// cache will hand one plan to both.  The in-memory sources hash
     /// their CSR (O(n + m), far cheaper than the collective ghost
-    /// build a hit skips); [`EdgeStreamSource`] stays `None` because
-    /// fingerprinting would force an extra full stream replay.
+    /// build a hit skips); [`EdgeStreamSource`] hashes one extra
+    /// chunked stream replay the first time it is asked and caches the
+    /// result, under a domain-separated key so a streamed graph and a
+    /// CSR of the same graph never alias one cache entry.
     fn fingerprint(&self) -> Option<u64> {
         None
     }
@@ -214,7 +217,16 @@ where
     chunk_edges: usize,
     visit: F,
     peak: AtomicUsize,
+    /// Lazily computed content fingerprint (one extra stream replay,
+    /// paid at most once per source — see [`GraphSource::fingerprint`]).
+    fp: Mutex<Option<u64>>,
 }
+
+/// Domain separator folded into every stream fingerprint: a streamed
+/// graph and an in-memory CSR of the *same* graph hash through different
+/// cleanup paths (the stream dedups at slab build, rows hash their final
+/// form), so their cache keys must never alias.
+const STREAM_FP_DOMAIN: u64 = 0x7374_7265_616d_6670; // "streamfp"
 
 impl<F> EdgeStreamSource<F>
 where
@@ -223,7 +235,13 @@ where
     /// `n` vertices; the stream is re-scanned once per rank, buffering
     /// `chunk_edges` records at a time (min 1).
     pub fn new(n: usize, chunk_edges: usize, visit: F) -> Self {
-        EdgeStreamSource { n, chunk_edges: chunk_edges.max(1), visit, peak: AtomicUsize::new(0) }
+        EdgeStreamSource {
+            n,
+            chunk_edges: chunk_edges.max(1),
+            visit,
+            peak: AtomicUsize::new(0),
+            fp: Mutex::new(None),
+        }
     }
 
     /// Maximum (stream buffer + retained pairs) any single `load_rank`
@@ -276,6 +294,32 @@ where
         peak = peak.max(pairs.len());
         self.peak.fetch_max(peak, Ordering::Relaxed);
         RankSlab::from_pairs(owned.len(), pairs)
+    }
+
+    /// Streaming FNV-1a content fingerprint: each edge is hashed as it
+    /// arrives — endpoints normalized to (min, max) so either emission
+    /// order fingerprints alike — and the per-edge hashes are folded
+    /// with a commutative wrapping sum, so neither the chunk size nor
+    /// the replay order can change the key.  O(1) memory: nothing is
+    /// buffered, keeping the source's no-global-residency guarantee.
+    /// The vertex count and edge-record count delimit the stream
+    /// (mirroring how [`graph_fingerprint`] row-delimits the CSR), and
+    /// [`STREAM_FP_DOMAIN`] keeps streamed keys out of the CSR keyspace.
+    fn fingerprint(&self) -> Option<u64> {
+        let mut cached = self.fp.lock().unwrap_or_else(|e| e.into_inner());
+        if cached.is_none() {
+            let mut acc = 0u64;
+            let mut records = 0u64;
+            let mut on_edge = |u: VId, v: VId| {
+                let (lo, hi) = if u <= v { (u, v) } else { (v, u) };
+                acc = acc.wrapping_add(fnv1a(fnv1a(FNV_OFFSET, lo as u64), hi as u64));
+                records += 1;
+            };
+            (self.visit)(&mut on_edge);
+            let h = fnv1a(fnv1a(fnv1a(STREAM_FP_DOMAIN, self.n as u64), records), acc);
+            *cached = Some(h);
+        }
+        *cached
     }
 }
 
@@ -364,8 +408,38 @@ mod tests {
         assert_eq!(Some(fp_g), GraphSliceSource::new(&g).fingerprint(), "wrapper must agree");
         assert_eq!(Some(fp_g), GraphSource::fingerprint(&g), "fingerprint must be stable");
         assert_ne!(Some(fp_g), GraphSource::fingerprint(&h), "different edges, different key");
-        let stream = EdgeStreamSource::new(g.n(), 64, |_emit| {});
-        assert_eq!(stream.fingerprint(), None, "streams opt out of the plan cache");
+    }
+
+    #[test]
+    fn stream_fingerprints_are_content_keys_too() {
+        let g = gnm(200, 800, 3);
+        let h = gnm(200, 800, 4); // same shape, different edges
+        let stream_of = |g: &Graph, chunk: usize, flip: bool| {
+            let edges: Vec<(VId, VId)> = (0..g.n() as VId)
+                .flat_map(|v| {
+                    g.neighbors(v).iter().filter(|&&u| u > v).map(move |&u| (v, u))
+                })
+                .collect();
+            EdgeStreamSource::new(g.n(), chunk, move |emit| {
+                for &(u, v) in &edges {
+                    if flip {
+                        emit(v, u); // reversed endpoints must not matter
+                    } else {
+                        emit(u, v);
+                    }
+                }
+            })
+        };
+        let a = stream_of(&g, 64, false);
+        let fp = GraphSource::fingerprint(&a).expect("streams now fingerprint");
+        // stable across calls (the replay is cached, not repeated)
+        assert_eq!(GraphSource::fingerprint(&a), Some(fp));
+        // chunk size and endpoint order are presentation, not content
+        assert_eq!(GraphSource::fingerprint(&stream_of(&g, 7, true)), Some(fp));
+        // different edges, different key
+        assert_ne!(GraphSource::fingerprint(&stream_of(&h, 64, false)), Some(fp));
+        // and the stream keyspace is domain-separated from the CSR one
+        assert_ne!(Some(fp), GraphSource::fingerprint(&g));
     }
 
     #[test]

@@ -1,4 +1,5 @@
-//! Fault-injection parity matrix (PR 6).
+//! Fault-injection parity matrix (PR 6) and crash-recovery parity
+//! matrix (PR 9).
 //!
 //! The substrate's contract: with deterministic drops, bit flips,
 //! duplicate deliveries and straggler delays injected on every data
@@ -8,6 +9,13 @@
 //! counters prove the faults actually fired.  When a stream exhausts
 //! its retry budget the affected exchange escalates to a reliable full
 //! resync, and the same parity must still hold.
+//!
+//! The crash axis extends the same bar to whole-rank failure: with
+//! checkpointing on, a rank killed at any fix-round boundary
+//! ([`FaultPlan::with_crash`]) is respawned from its last snapshot and
+//! the finished run must still be bit-identical to the uninterrupted
+//! one — including when the crash lands inside a budget-exhausted
+//! full-resync escalation.
 
 use dist_color::coloring::distributed::RunResult;
 use dist_color::coloring::{validate, Problem};
@@ -41,6 +49,18 @@ fn run_one(
     faults: Option<FaultPlan>,
     paranoid: bool,
 ) -> RunResult {
+    run_cfg(g, part, ranks, problem, faults, paranoid, false)
+}
+
+fn run_cfg(
+    g: &Graph,
+    part: &Partition,
+    ranks: usize,
+    problem: Problem,
+    faults: Option<FaultPlan>,
+    paranoid: bool,
+    checkpoint: bool,
+) -> RunResult {
     let mut builder =
         Session::builder().ranks(ranks).cost(CostModel::zero()).threads(1).seed(5);
     if let Some(fp) = faults {
@@ -48,7 +68,7 @@ fn run_one(
     }
     let session = builder.build();
     let plan = session.plan(g, part, GhostLayers::Two);
-    plan.run(spec_for(problem).with_paranoid(paranoid))
+    plan.run(spec_for(problem).with_paranoid(paranoid).with_checkpoint(checkpoint))
 }
 
 #[test]
@@ -159,4 +179,96 @@ fn disabled_fault_plan_changes_nothing_at_all() {
     assert_eq!(zero.stats.fault_resyncs, 0);
     assert_eq!(zero.stats.fault_delays, 0);
     assert_eq!(zero.stats.fault_recovery_ns, 0);
+}
+
+#[test]
+fn crash_recovery_is_bit_invisible_across_the_matrix() {
+    // {D1-2GL, D2, PD2} x ranks {2, 8, 17} x crash-at-round {0, 1,
+    // last}: with checkpointing on, killing one rank's future at a
+    // fix-round boundary and respawning it from its snapshot must leave
+    // the coloring, the round count, the conflict count and the
+    // recolor count bit-identical to the uninterrupted run, while the
+    // recovery counters prove the crash actually fired.  The victim is
+    // the middle rank so both 2-rank and 17-rank layouts exercise a
+    // non-root peer.
+    for &ranks in &[2usize, 8, 17] {
+        let (g, part) = fixture(ranks);
+        let victim = (ranks / 2) as u32;
+        for problem in [Problem::D1, Problem::D2, Problem::PD2] {
+            let clean = run_one(&g, &part, ranks, problem, None, false);
+            // boundaries run 0..=comm_rounds-1 (the last one carries the
+            // terminating allreduce), so every crash round below is hit
+            let last = (clean.stats.comm_rounds - 1) as u32;
+            let mut crash_rounds = vec![0u32, 1.min(last), last];
+            crash_rounds.sort_unstable();
+            crash_rounds.dedup();
+            for &at in &crash_rounds {
+                let plan = FaultPlan::new(0).with_crash(victim, at);
+                let crashed = run_cfg(&g, &part, ranks, problem, Some(plan), false, true);
+                let ctx = format!("{problem} ranks={ranks} crash@({victim},{at})");
+                assert_eq!(clean.colors, crashed.colors, "{ctx}: coloring diverged");
+                assert_eq!(clean.stats.comm_rounds, crashed.stats.comm_rounds, "{ctx}");
+                assert_eq!(clean.stats.conflicts, crashed.stats.conflicts, "{ctx}");
+                assert_eq!(clean.stats.recolored, crashed.stats.recolored, "{ctx}");
+                assert_eq!(crashed.stats.crash_recoveries, 1, "{ctx}: crash never fired");
+                assert!(crashed.stats.snapshots > 0, "{ctx}: no snapshot taken");
+                assert!(crashed.stats.snapshot_bytes > 0, "{ctx}: empty snapshots");
+            }
+            // checkpointing with no crash is a pure observer: identical
+            // output, zero recoveries, snapshots on every rank.  The
+            // explicit zero-rate plan pins the session crash-free even
+            // when `verify.sh --crash` exports DIST_CRASH_AT (an
+            // explicit plan wins over the env knob).
+            let quiet = run_cfg(&g, &part, ranks, problem, Some(FaultPlan::new(0)), false, true);
+            let ctx = format!("{problem} ranks={ranks} quiet-checkpoint");
+            assert_eq!(clean.colors, quiet.colors, "{ctx}: coloring diverged");
+            assert_eq!(clean.stats.comm_rounds, quiet.stats.comm_rounds, "{ctx}");
+            assert_eq!(clean.stats.conflicts, quiet.stats.conflicts, "{ctx}");
+            assert_eq!(quiet.stats.crash_recoveries, 0, "{ctx}");
+            assert!(quiet.stats.snapshots >= ranks as u64, "{ctx}: ranks skipped snapshots");
+        }
+    }
+}
+
+#[test]
+fn crash_during_full_resync_recovers_bit_for_bit() {
+    // The nastiest corner: every data stream is doomed (100% drop,
+    // zero retry budget) so every exchange escalates to the reliable
+    // full-resync path — and a rank crashes at a boundary in the middle
+    // of that regime.  The respawned future must replay the boundary,
+    // re-escalate the same exchanges, and still land bit-identical to
+    // the clean run, with paranoid audits certifying the recovered
+    // ghost tables on both sides.
+    for &ranks in &[2usize, 8] {
+        let (g, part) = fixture(ranks);
+        let victim = (ranks / 2) as u32;
+        for problem in [Problem::D1, Problem::D2] {
+            let clean = run_one(&g, &part, ranks, problem, None, true);
+            assert!(
+                clean.stats.comm_rounds >= 2,
+                "{problem} ranks={ranks}: fixture must need a fix round"
+            );
+            let doomed = FaultPlan::new(1).with_drop_ppm(1_000_000).with_retry_budget(0);
+            let crashed = run_cfg(
+                &g,
+                &part,
+                ranks,
+                problem,
+                Some(doomed.with_crash(victim, 1)),
+                true,
+                true,
+            );
+            let ctx = format!("{problem} ranks={ranks}");
+            assert_eq!(clean.colors, crashed.colors, "{ctx}: coloring diverged");
+            assert_eq!(clean.stats.comm_rounds, crashed.stats.comm_rounds, "{ctx}");
+            assert_eq!(clean.stats.conflicts, crashed.stats.conflicts, "{ctx}");
+            assert_eq!(
+                clean.stats.paranoid_checks, crashed.stats.paranoid_checks,
+                "{ctx}: both runs must audit the same ghost entries"
+            );
+            assert_eq!(crashed.stats.crash_recoveries, 1, "{ctx}: crash never fired");
+            assert!(crashed.stats.fault_resyncs > 0, "{ctx}: nothing escalated");
+            assert!(crashed.stats.fault_drops > 0, "{ctx}: nothing dropped");
+        }
+    }
 }

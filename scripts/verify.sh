@@ -15,6 +15,15 @@
 #                                   # fault-injected wires
 #                                   # (FaultPlan::mild; the colorings must
 #                                   # not change), then lints + smokes
+#   scripts/verify.sh --crash       # build + test, then re-run the test
+#                                   # suite with DIST_CRASH_AT pinned so
+#                                   # every Session-driven test arms a
+#                                   # deterministic rank crash at a fix-
+#                                   # round boundary plus checkpointing
+#                                   # (PR 9); restart-from-snapshot must
+#                                   # keep every coloring bit-identical,
+#                                   # so the suite passing unchanged IS
+#                                   # the assertion (then lints + smokes)
 #   scripts/verify.sh --concurrent  # build + test, then re-run the suite
 #                                   # starved onto 2 cooperative scheduler
 #                                   # workers (DIST_TEST_THREADS=2 — every
@@ -46,12 +55,14 @@ cd "$(dirname "$0")/.."
 quick=0
 matrix=0
 faults=0
+crash=0
 concurrent=0
 static_only=0
 case "${1:-}" in
   --quick) quick=1 ;;
   --matrix) matrix=1 ;;
   --faults) faults=1 ;;
+  --crash) crash=1 ;;
   --concurrent) concurrent=1 ;;
   --static) static_only=1 ;;
 esac
@@ -180,6 +191,18 @@ if [ "$faults" = "1" ]; then
   DIST_FAULT_SEED=20210607 cargo test -q
 fi
 
+if [ "$crash" = "1" ]; then
+  # PR 9: the whole suite again with a rank crash armed.  Every Session
+  # built via the env knob arms FaultPlan::with_crash(rank, round) AND
+  # forces checkpointing, so each run kills rank 1 at fix-round
+  # boundary 1 (runs that converge earlier, or with fewer ranks, simply
+  # never reach the schedule and stay clean) and must recover from its
+  # snapshot bit-identically — the suite passing unchanged IS the
+  # assertion.
+  echo "== cargo test -q (DIST_CRASH_AT=1:1) =="
+  DIST_CRASH_AT=1:1 cargo test -q
+fi
+
 if [ "$concurrent" = "1" ]; then
   # PR 7: starve the cooperative scheduler.  DIST_TEST_THREADS=2 also
   # collapses every Session's worker_budget to 2 workers (unless a test
@@ -233,5 +256,8 @@ BENCH_PR6=1 BENCH_REPS="${BENCH_REPS:-3}" cargo bench --bench micro_kernels
 
 echo "== micro_kernels PR-7 smoke (writes BENCH_pr7.json) =="
 BENCH_PR7=1 BENCH_REPS="${BENCH_REPS:-3}" cargo bench --bench micro_kernels
+
+echo "== micro_kernels PR-9 smoke (writes BENCH_pr9.json) =="
+BENCH_PR9=1 BENCH_REPS="${BENCH_REPS:-3}" cargo bench --bench micro_kernels
 
 echo "verify: OK"
