@@ -28,7 +28,11 @@
 //! to run the checkpoint/restart smoke (checkpoint-on vs -off overhead,
 //! per-round snapshot footprint, the crash-recovery bit-parity gate and
 //! the wall cost of one recovery, plus the unrecovered-crash
-//! structured-error gate) and write `BENCH_pr9.json`.  All JSON
+//! structured-error gate) and write `BENCH_pr9.json`; set
+//! `BENCH_PR10=1` to run the compact-storage smoke (plain vs compact
+//! adjacency bytes/arc on the rmat scale-18 fixture, the bit-parity
+//! gate, varint build overhead and iterator-kernel wall-time delta)
+//! and write `BENCH_pr10.json`.  All JSON
 //! schemas are documented in `rust/benches/README.md`.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -43,8 +47,8 @@ use dist_color::coloring::local::{eb_bit, greedy, jp, nb_bit, vb_bit, KernelScra
 use dist_color::coloring::Color;
 use dist_color::distributed::comm::encode_u32s;
 use dist_color::distributed::{run_ranks, CommStats, CostModel, FaultPlan, Topology};
-use dist_color::graph::generators::{ba, erdos_renyi::gnm, mesh};
-use dist_color::graph::{Graph, VId};
+use dist_color::graph::generators::{ba, erdos_renyi::gnm, mesh, rmat::rmat};
+use dist_color::graph::{Graph, StorageMode, VId};
 use dist_color::partition;
 use dist_color::session::{GhostLayers, GraphSource, ProblemSpec, RankSlab, Session};
 use dist_color::util::par;
@@ -979,6 +983,117 @@ fn pr9_smoke() {
     assert!(serviceable_after_error, "the failed run poisoned the session");
 }
 
+/// Compact-storage smoke (PR 10): per-rank adjacency bytes/arc for the
+/// plain u64-offset CSR vs the delta-encoded compact CSR on the rmat
+/// scale-18 fixture, with the compact-vs-plain bit-parity gate recorded
+/// before any assert, the plan-build overhead of varint encoding, and
+/// the iterator-kernel wall-time delta.  Written to `BENCH_pr10.json`.
+fn pr10_smoke() {
+    let reps: usize =
+        std::env::var("BENCH_REPS").ok().and_then(|s| s.parse().ok()).unwrap_or(5);
+    let ranks = 8usize;
+    let (scale, avg_deg, seed) = (18u32, 16usize, 7u64);
+    eprintln!("pr10 smoke: rmat({scale}, {avg_deg}) edge-balanced over {ranks} ranks ...");
+    let g = rmat(scale, avg_deg, seed);
+    let part = partition::edge_balanced(&g, ranks);
+    let arcs = 2 * g.m();
+    let spec = ProblemSpec::d1();
+
+    let session_for = |mode| {
+        Session::builder()
+            .ranks(ranks)
+            .cost(CostModel::default())
+            .threads(1)
+            .seed(42)
+            .storage(mode)
+            .build()
+    };
+    let plain_session = session_for(StorageMode::Plain);
+    let plain_plan = plain_session.plan(&g, &part, GhostLayers::One);
+    let compact_session = session_for(StorageMode::Compact);
+    let compact_plan = compact_session.plan(&g, &part, GhostLayers::One);
+
+    // parity gate material first, so a divergence is recorded in JSON
+    let p = plain_plan.run(spec);
+    let c = compact_plan.run(spec);
+    let identical = c.colors == p.colors
+        && c.stats.comm_rounds == p.stats.comm_rounds
+        && c.stats.conflicts == p.stats.conflicts
+        && c.stats.bytes == p.stats.bytes;
+
+    // per-rank adjacency footprint, reported by the runs themselves
+    let plain_bpa = p.stats.mem_adj_bytes_sum as f64 / arcs as f64;
+    let compact_bpa = c.stats.mem_adj_bytes_sum as f64 / arcs as f64;
+    let reduction = p.stats.mem_adj_bytes_sum as f64 / c.stats.mem_adj_bytes_sum as f64;
+
+    // plan-build cost: fresh session per rep so the plan cache never hits
+    let build_ms_of = |mode| {
+        median_ms(reps, || {
+            let s = session_for(mode);
+            let plan = s.plan(&g, &part, GhostLayers::One);
+            std::hint::black_box(plan.build_stats().bytes);
+        })
+    };
+    let plain_build_ms = build_ms_of(StorageMode::Plain);
+    let compact_build_ms = build_ms_of(StorageMode::Compact);
+    let build_overhead = compact_build_ms / plain_build_ms;
+
+    // kernel wall time through the iterator contract, per storage mode
+    let run_ms_of = |plan: &dist_color::session::Plan| {
+        median_ms(reps, || {
+            let r = plan.run(spec);
+            std::hint::black_box(r.stats.colors_used);
+        })
+    };
+    let plain_run_ms = run_ms_of(&plain_plan);
+    let compact_run_ms = run_ms_of(&compact_plan);
+    let run_ratio = compact_run_ms / plain_run_ms;
+
+    println!(
+        "storage    plain: {plain_bpa:>6.2} B/arc   compact: {compact_bpa:>6.2} B/arc \
+         ({reduction:.2}x smaller)   identical={identical}"
+    );
+    println!(
+        "storage    build plain: {plain_build_ms:>8.2} ms   compact: {compact_build_ms:>8.2} ms \
+         ({build_overhead:.2}x)   run plain: {plain_run_ms:>7.2} ms   compact: \
+         {compact_run_ms:>7.2} ms ({run_ratio:.2}x)"
+    );
+
+    let json = format!(
+        "{{\n  \"bench\": \"micro_kernels_pr10\",\n  \"schema\": 1,\n  \"reps\": {reps},\n  \
+         \"host_cores\": {},\n  \
+         \"graph\": {{\"kind\": \"rmat\", \"scale\": {scale}, \"avg_deg\": {avg_deg}, \
+         \"seed\": {seed}, \"n\": {}, \"m\": {}}},\n  \
+         \"ranks\": {ranks},\n  \"partition\": \"edge_balanced\",\n  \
+         \"identical_colorings\": {identical},\n  \
+         \"plain_adj_bytes_sum\": {},\n  \"compact_adj_bytes_sum\": {},\n  \
+         \"plain_adj_bytes_max\": {},\n  \"compact_adj_bytes_max\": {},\n  \
+         \"plain_bytes_per_arc\": {plain_bpa:.3},\n  \
+         \"compact_bytes_per_arc\": {compact_bpa:.3},\n  \
+         \"adj_bytes_reduction\": {reduction:.3},\n  \
+         \"plain_build_ms\": {plain_build_ms:.3},\n  \
+         \"compact_build_ms\": {compact_build_ms:.3},\n  \
+         \"compact_build_overhead\": {build_overhead:.3},\n  \
+         \"plain_run_ms\": {plain_run_ms:.3},\n  \"compact_run_ms\": {compact_run_ms:.3},\n  \
+         \"compact_run_ratio\": {run_ratio:.3}\n}}\n",
+        std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1),
+        g.n(),
+        g.m(),
+        p.stats.mem_adj_bytes_sum,
+        c.stats.mem_adj_bytes_sum,
+        p.stats.mem_adj_bytes_max,
+        c.stats.mem_adj_bytes_max,
+    );
+    std::fs::write("BENCH_pr10.json", &json).expect("writing BENCH_pr10.json");
+    println!("-> BENCH_pr10.json");
+    // asserted after the JSON is on disk, so a regression is recorded
+    assert!(identical, "compact storage changed the coloring");
+    assert!(
+        reduction >= 1.8,
+        "compact adjacency ({compact_bpa:.2} B/arc) not >= 1.8x below plain ({plain_bpa:.2} B/arc)"
+    );
+}
+
 fn main() {
     if std::env::var("BENCH_PR1").is_ok_and(|v| v == "1") {
         pr1_smoke();
@@ -1010,6 +1125,10 @@ fn main() {
     }
     if std::env::var("BENCH_PR9").is_ok_and(|v| v == "1") {
         pr9_smoke();
+        return;
+    }
+    if std::env::var("BENCH_PR10").is_ok_and(|v| v == "1") {
+        pr10_smoke();
         return;
     }
     let reps: usize =

@@ -1,0 +1,25 @@
+// Linted under virtual path rust/src/coloring/local/fixture.rs (hot dir).
+use crate::graph::{Graph, VId};
+
+pub struct Rows {
+    off: Vec<usize>,
+    col: Vec<VId>,
+}
+
+impl Rows {
+    // BAD: slice-typed adjacency accessor re-pins the plain CSR layout
+    pub fn neighbors(&self, v: VId) -> &[VId] {
+        &self.col[self.off[v as usize]..self.off[v as usize + 1]]
+    }
+
+    // BAD: same, with an explicit lifetime and u32 element type
+    pub fn adj_row<'a>(&'a self, v: VId) -> &'a [u32] {
+        &self.col[self.off[v as usize]..self.off[v as usize + 1]]
+    }
+}
+
+pub fn forbidden_colors(g: &Graph, v: VId, colors: &[u32]) -> Vec<u32> {
+    // BAD: materializes the neighbor iterator just to walk it once
+    let nb: Vec<VId> = g.neighbors(v).collect();
+    nb.iter().map(|&u| colors[u as usize]).collect()
+}

@@ -1,0 +1,24 @@
+// Linted under virtual path rust/src/coloring/local/fixture.rs (hot dir).
+use crate::graph::{Graph, Neighbors, VId};
+
+pub struct Rows {
+    g: Graph,
+}
+
+impl Rows {
+    // iterator-typed accessor: works for plain and compact storage
+    pub fn neighbors(&self, v: VId) -> Neighbors<'_> {
+        self.g.neighbors(v)
+    }
+}
+
+pub fn max_neighbor_color(g: &Graph, v: VId, colors: &[u32]) -> u32 {
+    // iterate in place: no allocation, no layout assumption
+    g.neighbors(v).map(|u| colors[u as usize]).max().unwrap_or(0)
+}
+
+pub fn sorted_row_oracle(g: &Graph, v: VId) -> Vec<VId> {
+    // repolint: allow(L11) -- test oracle compares materialized rows
+    let row: Vec<VId> = g.neighbors(v).collect();
+    row
+}

@@ -113,7 +113,7 @@ pub(crate) fn scan_ghost_d1(
         return 0;
     }
     let mut count = 0u64;
-    for &u in lg.graph.neighbors(gl) {
+    for u in lg.graph.neighbors(gl) {
         if colors[u as usize] != cg {
             continue;
         }
@@ -183,14 +183,14 @@ pub(crate) fn scan_vertex_d2(
         )
     };
     let mut count = 0u64;
-    for &u in lg.graph.neighbors(v) {
+    for u in lg.graph.neighbors(v) {
         if !partial && u >= nl && colors[u as usize] == cv {
             count += 1;
             if v_loses(u) {
                 on_loser(v);
             }
         }
-        for &x in lg.graph.neighbors(u) {
+        for x in lg.graph.neighbors(u) {
             if x != v && x >= nl && colors[x as usize] == cv {
                 count += 1;
                 if v_loses(x) {
@@ -224,7 +224,7 @@ pub(crate) fn mark_dirty_d1(
     };
     for &g in updated {
         mark(g);
-        for &w in lg.graph.neighbors(g) {
+        for w in lg.graph.neighbors(g) {
             mark(w);
         }
     }
@@ -252,9 +252,9 @@ pub(crate) fn mark_dirty_d2(
         }
     };
     for &g in updated {
-        for &w in lg.graph.neighbors(g) {
+        for w in lg.graph.neighbors(g) {
             mark(w);
-            for &x in lg.graph.neighbors(w) {
+            for x in lg.graph.neighbors(w) {
                 mark(x);
             }
         }

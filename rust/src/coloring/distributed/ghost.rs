@@ -35,7 +35,8 @@
 #![allow(clippy::disallowed_types)]
 
 use crate::distributed::comm::{decode_u32s, encode_u32s, Comm, CommError};
-use crate::graph::{Graph, GraphBuilder, VId};
+use crate::graph::storage::CsrEncoder;
+use crate::graph::{Graph, StorageMode, VId};
 use crate::partition::Partition;
 use crate::session::source::{GraphSource, RankSlab};
 
@@ -116,6 +117,7 @@ impl LocalGraph {
             owned_sorted,
             part,
             two_layers,
+            StorageMode::default(),
         ))
         .expect("local graph construction failed")
     }
@@ -137,6 +139,7 @@ impl LocalGraph {
         owned_sorted: Vec<VId>,
         part: &Partition,
         two_layers: bool,
+        storage: StorageMode,
     ) -> Result<LocalGraph, CommError> {
         let rank = comm.rank();
         let p = comm.nranks() as usize;
@@ -152,7 +155,7 @@ impl LocalGraph {
         // at worst) — which is what lets the driver ship boundary colors
         // before the interior is colored.
         let b1: Vec<bool> = (0..n_local)
-            .map(|i| slab.row(i).iter().any(|&u| part.owner[u as usize] != rank))
+            .map(|i| slab.row(i).any(|u| part.owner[u as usize] != rank))
             .collect();
         // owned_sorted is ascending, so ownership tests are binary searches
         let b2: Vec<bool> = (0..n_local)
@@ -160,8 +163,7 @@ impl LocalGraph {
                 b1[i]
                     || slab
                         .row(i)
-                        .iter()
-                        .any(|&u| owned_sorted.binary_search(&u).is_ok_and(|j| b1[j]))
+                        .any(|u| owned_sorted.binary_search(&u).is_ok_and(|j| b1[j]))
             })
             .collect();
         // `order[li]` = ascending-gid index of the li-th vertex of the
@@ -185,7 +187,7 @@ impl LocalGraph {
         // ---- first-layer ghosts -------------------------------------
         let mut ghosts1: Vec<VId> = Vec::new();
         for &i in &order {
-            for &u in slab.row(i) {
+            for u in slab.row(i) {
                 if part.owner[u as usize] != rank && !lid.contains_key(&u) {
                     lid.insert(u, 0); // placeholder, fixed below
                     ghosts1.push(u);
@@ -209,7 +211,7 @@ impl LocalGraph {
                 let row = slab.row(i);
                 let mut out = Vec::with_capacity(row.len() + 1);
                 out.push(row.len() as u32);
-                out.extend_from_slice(row);
+                out.extend(row);
                 out
             })
             .await?;
@@ -305,26 +307,62 @@ impl LocalGraph {
             .collect();
 
         // ---- local CSR -------------------------------------------------
+        // Rows stream straight into the storage encoder in local-id
+        // order, each derived from its single source of truth: owned
+        // rows from the slab, layer-1 ghost rows from the fetched wire
+        // payload, back-edge rows (one-layer ghosts, layer-2 ghosts)
+        // scattered off the rows that name them.  Every row is a
+        // remapping of a deduplicated global row, so sorting alone
+        // reproduces exactly what the old symmetrize-and-dedup builder
+        // emitted — no plain intermediate graph is ever materialized.
         let nl = n_local + n_ghost;
-        let mut b = GraphBuilder::with_edge_capacity(nl, slab.arcs());
+        let mut enc = CsrEncoder::new(storage, nl, slab.arcs() * 2);
+        let mut row_buf: Vec<VId> = Vec::new();
+        // one-layer ghost rows are the back-edges to locals (E_g);
+        // collect them while the owned rows stream out.  Scatter order
+        // (ascending source id, deduplicated rows) keeps each list
+        // strictly sorted with no extra sort pass.
+        let mut back: Vec<Vec<VId>> =
+            if two_layers { Vec::new() } else { vec![Vec::new(); n_ghost] };
         for (li, &i) in order.iter().enumerate() {
-            for &u in slab.row(i) {
-                b.edge(li as VId, lid[&u]);
-            }
-        }
-        if two_layers {
-            for (i, adj) in ghost_adj.iter().enumerate() {
-                let gl = (n_local + i) as VId;
-                // adj[0] is the degree, rest are neighbors
-                for &u in &adj[1..] {
-                    b.edge(gl, lid[&u]);
+            row_buf.clear();
+            row_buf.extend(slab.row(i).map(|u| lid[&u]));
+            row_buf.sort_unstable();
+            enc.push_row(&row_buf);
+            if !two_layers {
+                for &u in &row_buf {
+                    if (u as usize) >= n_local {
+                        back[u as usize - n_local].push(li as VId);
+                    }
                 }
             }
         }
-        // repolint: allow(L03) -- GraphBuilder::build assembles the local CSR in
-        // memory; the sync block_on shim of the same name is LocalGraph::build,
-        // which async code never calls.
-        let graph = b.build();
+        if two_layers {
+            // layer-1 ghost rows come off the wire payload (adj[0] is
+            // the degree header); their entries naming layer-2 ghosts
+            // scatter into the layer-2 back-edge rows as they pass
+            let mut l2: Vec<Vec<VId>> = vec![Vec::new(); n_ghost - n_ghost1];
+            for (i, adj) in ghost_adj.iter().enumerate() {
+                let gl = (n_local + i) as VId;
+                row_buf.clear();
+                row_buf.extend(adj[1..].iter().map(|u| lid[u]));
+                row_buf.sort_unstable();
+                enc.push_row(&row_buf);
+                for &u in &row_buf {
+                    if (u as usize) >= n_local + n_ghost1 {
+                        l2[u as usize - n_local - n_ghost1].push(gl);
+                    }
+                }
+            }
+            for row in &l2 {
+                enc.push_row(row);
+            }
+        } else {
+            for row in &back {
+                enc.push_row(row);
+            }
+        }
+        let graph = Graph::from_store(enc.finish());
 
         // ---- boundary sets ---------------------------------------------
         // With the boundary-first ordering these are exactly the id
@@ -333,7 +371,7 @@ impl LocalGraph {
         let mut boundary_d1: Vec<u32> = Vec::new();
         let mut is_b1 = vec![false; n_local];
         for v in 0..n_local {
-            if graph.neighbors(v as VId).iter().any(|&u| (u as usize) >= n_local) {
+            if graph.neighbors(v as VId).any(|u| (u as usize) >= n_local) {
                 boundary_d1.push(v as u32);
                 is_b1[v] = true;
             }
@@ -343,8 +381,7 @@ impl LocalGraph {
             let b2 = is_b1[v]
                 || graph
                     .neighbors(v as VId)
-                    .iter()
-                    .any(|&u| (u as usize) < n_local && is_b1[u as usize]);
+                    .any(|u| (u as usize) < n_local && is_b1[u as usize]);
             if b2 {
                 boundary_d2.push(v as u32);
             }
@@ -379,12 +416,62 @@ impl LocalGraph {
         (v as usize) >= self.n_local
     }
 
+    /// Exact per-component heap footprint of this rank's graph state.
+    /// Every field of the struct is accounted: adjacency storage, the
+    /// gid/degree tables, both boundary vectors, the subscription lists
+    /// (`subs_out` + `subs_pos`) and the ghost/topology maps
+    /// (`ghost_from` + `send_ranks` + `recv_ranks`).  Nested vectors
+    /// count their element payload plus one `Vec` header each.
+    pub fn memory_bytes(&self) -> LocalMemory {
+        let vec_header = std::mem::size_of::<Vec<u32>>();
+        let nested_u32 = |vv: &[Vec<u32>]| -> usize {
+            vv.iter().map(|v| v.len() * 4 + vec_header).sum()
+        };
+        let nested_pair = |vv: &[Vec<(u32, u32)>]| -> usize {
+            vv.iter().map(|v| v.len() * 8 + vec_header).sum()
+        };
+        LocalMemory {
+            adjacency: self.graph.memory_bytes(),
+            gids: self.gids.len() * 4,
+            degrees: self.degrees.len() * 4,
+            boundary: (self.boundary_d1.len() + self.boundary_d2.len()) * 4,
+            subs: nested_u32(&self.subs_out) + nested_pair(&self.subs_pos),
+            ghost_maps: nested_u32(&self.ghost_from)
+                + (self.send_ranks.len() + self.recv_ranks.len()) * 4,
+        }
+    }
+
     /// Interior vertices: owned, no ghost neighbor (never conflict,
     /// §2.4).  A contiguous id suffix under the boundary-first ordering,
     /// so this is just the range — no allocation, iterate it directly.
     #[inline]
     pub fn interior(&self) -> std::ops::Range<u32> {
         self.n_boundary1 as u32..self.n_local as u32
+    }
+}
+
+/// Exact per-component heap footprint of a [`LocalGraph`], in bytes
+/// (see [`LocalGraph::memory_bytes`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct LocalMemory {
+    /// Adjacency storage: offset/chunk tables + neighbor data.
+    pub adjacency: usize,
+    /// `gids` local→global table.
+    pub gids: usize,
+    /// `degrees` global-degree table.
+    pub degrees: usize,
+    /// `boundary_d1` + `boundary_d2`.
+    pub boundary: usize,
+    /// Subscription lists: `subs_out` + `subs_pos`.
+    pub subs: usize,
+    /// Ghost/topology maps: `ghost_from` + `send_ranks` + `recv_ranks`.
+    pub ghost_maps: usize,
+}
+
+impl LocalMemory {
+    /// Sum of every component.
+    pub fn total(&self) -> usize {
+        self.adjacency + self.gids + self.degrees + self.boundary + self.subs + self.ghost_maps
     }
 }
 
@@ -515,10 +602,7 @@ mod tests {
             // every ghost is adjacent to an owned vertex in the global graph
             for gi in lg.n_local..lg.n_local + lg.n_ghost {
                 let gv = lg.gids[gi];
-                let touches_owned = g
-                    .neighbors(gv)
-                    .iter()
-                    .any(|&u| part.owner[u as usize] == lg.rank);
+                let touches_owned = g.neighbors(gv).any(|u| part.owner[u as usize] == lg.rank);
                 assert!(touches_owned);
             }
             assert_eq!(lg.n_ghost, lg.n_ghost1);
@@ -532,15 +616,12 @@ mod tests {
         for lg in build_all(&g, &part, false) {
             for v in 0..lg.n_local {
                 let gv = lg.gids[v];
-                let mut local_nb: Vec<VId> = lg
-                    .graph
-                    .neighbors(v as VId)
-                    .iter()
-                    .map(|&u| lg.gids[u as usize])
-                    .collect();
+                // repolint: allow(L11) -- test oracle compares materialized rows
+                let mut local_nb: Vec<VId> =
+                    lg.graph.neighbors(v as VId).map(|u| lg.gids[u as usize]).collect();
                 local_nb.sort_unstable();
-                let mut global_nb: Vec<VId> = g.neighbors(gv).to_vec();
-                global_nb.sort_unstable();
+                // repolint: allow(L11) -- test oracle compares materialized rows
+                let global_nb: Vec<VId> = g.neighbors(gv).collect();
                 assert_eq!(local_nb, global_nb, "rank {} vertex {gv}", lg.rank);
             }
         }
@@ -553,15 +634,12 @@ mod tests {
         for lg in build_all(&g, &part, true) {
             for gi in lg.n_local..lg.n_local + lg.n_ghost1 {
                 let gv = lg.gids[gi];
-                let mut local_nb: Vec<VId> = lg
-                    .graph
-                    .neighbors(gi as VId)
-                    .iter()
-                    .map(|&u| lg.gids[u as usize])
-                    .collect();
+                // repolint: allow(L11) -- test oracle compares materialized rows
+                let mut local_nb: Vec<VId> =
+                    lg.graph.neighbors(gi as VId).map(|u| lg.gids[u as usize]).collect();
                 local_nb.sort_unstable();
-                let mut global_nb: Vec<VId> = g.neighbors(gv).to_vec();
-                global_nb.sort_unstable();
+                // repolint: allow(L11) -- test oracle compares materialized rows
+                let global_nb: Vec<VId> = g.neighbors(gv).collect();
                 assert_eq!(local_nb, global_nb, "ghost {gv} on rank {}", lg.rank);
             }
         }
@@ -644,6 +722,87 @@ mod tests {
             }
             // interior + boundary_d1 = all locals
             assert_eq!(lg.interior().len() + lg.boundary_d1.len(), lg.n_local);
+        }
+    }
+
+    #[test]
+    fn memory_accounting_is_exact() {
+        use crate::graph::{GraphBuilder, StorageMode};
+        // triangle in plain mode so the adjacency arithmetic is exact:
+        // (n+1)=4 u64 offsets + 6 u32 arcs
+        let g = GraphBuilder::new(3)
+            .edges(&[(0, 1), (1, 2), (0, 2)])
+            .storage(StorageMode::Plain)
+            .build();
+        let lg = LocalGraph {
+            rank: 0,
+            nranks: 2,
+            n_local: 2,
+            n_boundary1: 1,
+            n_boundary2: 2,
+            n_ghost1: 1,
+            n_ghost: 1,
+            gids: vec![0, 1, 2],
+            graph: g,
+            degrees: vec![2, 2, 2],
+            boundary_d1: vec![0],
+            boundary_d2: vec![0, 1],
+            subs_out: vec![Vec::new(), vec![0]],
+            subs_pos: vec![Vec::new(), vec![(0, 0)]],
+            ghost_from: vec![Vec::new(), vec![2]],
+            send_ranks: vec![1],
+            recv_ranks: vec![1],
+        };
+        let m = lg.memory_bytes();
+        let hdr = std::mem::size_of::<Vec<u32>>();
+        assert_eq!(m.adjacency, 4 * 8 + 6 * 4);
+        assert_eq!(m.gids, 12);
+        assert_eq!(m.degrees, 12);
+        assert_eq!(m.boundary, 12); // |boundary_d1| + |boundary_d2| = 3 ids
+        assert_eq!(m.subs, (4 + 2 * hdr) + (8 + 2 * hdr));
+        assert_eq!(m.ghost_maps, (4 + 2 * hdr) + 8);
+        assert_eq!(
+            m.total(),
+            m.adjacency + m.gids + m.degrees + m.boundary + m.subs + m.ghost_maps
+        );
+    }
+
+    #[test]
+    fn compact_build_matches_plain_build() {
+        // the tentpole invariant at the construction layer: the local
+        // graphs a rank builds under either storage mode are logically
+        // identical (same rows, same boundary prefixes, same topology)
+        let g = gnm(120, 500, 17);
+        for (nparts, two) in [(4usize, false), (3, true)] {
+            let part = hash(&g, nparts, 2);
+            let plain: Vec<LocalGraph> = run_ranks(part.nparts, CostModel::zero(), |c| {
+                let owned = part.owned(c.rank());
+                let slab = GraphSource::load_rank(&g, c.rank(), &owned);
+                crate::util::par::block_on(LocalGraph::build_from_slab(
+                    c,
+                    &slab,
+                    owned,
+                    &part,
+                    two,
+                    StorageMode::Plain,
+                ))
+                .unwrap()
+            });
+            let compact = build_all(&g, &part, two); // default = compact
+            for (p, c) in plain.iter().zip(&compact) {
+                assert_eq!(p.graph.storage_mode(), StorageMode::Plain);
+                assert_eq!(c.graph.storage_mode(), StorageMode::Compact);
+                assert_eq!(p.graph, c.graph, "rank {} two={two}", p.rank);
+                assert_eq!(p.gids, c.gids);
+                assert_eq!(p.degrees, c.degrees);
+                assert_eq!(p.n_boundary1, c.n_boundary1);
+                assert_eq!(p.n_boundary2, c.n_boundary2);
+                assert_eq!(p.subs_out, c.subs_out);
+                assert_eq!(p.ghost_from, c.ghost_from);
+                // and the diet is real even at toy sizes
+                let (pm, cm) = (p.graph.memory_bytes(), c.graph.memory_bytes());
+                assert!(cm <= pm, "rank {}: compact {cm} > plain {pm}", p.rank);
+            }
         }
     }
 

@@ -72,7 +72,7 @@ use crate::coloring::{colors_used, Color, Problem};
 use crate::distributed::comm::{decode_u32s, encode_u32s, Comm, CommError, StreamSnapshot};
 use crate::distributed::{CostModel, FaultPlan, Topology};
 use crate::distributed::cost::CommStats;
-use crate::graph::{Graph, VId};
+use crate::graph::{Graph, StorageMode, VId};
 use crate::partition::Partition;
 use crate::util::gid_rand;
 use crate::util::par;
@@ -148,6 +148,13 @@ pub struct DistConfig {
     /// counts are bit-identical with the knob on, off, or on-and-
     /// recovering (`tests/fault_injection.rs` pins the crash matrix).
     pub checkpoint: bool,
+    /// Adjacency storage backend for every rank-local graph (CLI
+    /// `--storage compact|plain`; see docs/STORAGE.md).  The default
+    /// [`StorageMode::Compact`] delta-encodes neighbor lists; colorings,
+    /// rounds, conflicts and wire bytes are bit-identical under either
+    /// mode (`tests/storage_parity.rs` pins the matrix) — the knob
+    /// trades bytes for decode work only.
+    pub storage: StorageMode,
 }
 
 impl Default for DistConfig {
@@ -165,6 +172,7 @@ impl Default for DistConfig {
             faults: None,
             paranoid: false,
             checkpoint: false,
+            storage: StorageMode::default(),
         }
     }
 }
@@ -274,6 +282,13 @@ pub struct RankOutcome {
     /// image, every later one only the round's write set (recolored
     /// losers + installed ghost deltas) plus the stream cursors.
     pub snapshot_bytes: u64,
+    /// Exact bytes of this rank's adjacency storage (owned + ghost rows,
+    /// in whatever [`DistConfig::storage`] mode the plan was built in).
+    pub mem_adj_bytes: u64,
+    /// Exact bytes of this rank's whole `LocalGraph` (adjacency plus
+    /// gid/degree/boundary/subscription/topology tables — see
+    /// [`ghost::LocalGraph::memory_bytes`]).
+    pub mem_local_bytes: u64,
     pub timers: SplitTimer,
     pub comm: CommStats,
 }
@@ -332,6 +347,16 @@ pub struct RunStats {
     /// Total snapshot footprint in bytes (sum over ranks; incremental —
     /// see [`RankOutcome::snapshot_bytes`]).
     pub snapshot_bytes: u64,
+    /// Largest single rank's adjacency storage, in bytes — the paper's
+    /// "does one GPU's slab fit" number ([`RankOutcome::mem_adj_bytes`]).
+    pub mem_adj_bytes_max: u64,
+    /// Total adjacency bytes across all ranks.
+    pub mem_adj_bytes_sum: u64,
+    /// Largest single rank's full `LocalGraph` footprint, in bytes
+    /// ([`RankOutcome::mem_local_bytes`]).
+    pub mem_local_bytes_max: u64,
+    /// Total `LocalGraph` bytes across all ranks.
+    pub mem_local_bytes_sum: u64,
 }
 
 impl RunStats {
@@ -388,7 +413,8 @@ pub fn color_distributed(
         .ranks(part.nparts)
         .cost(cost)
         .threads(cfg.threads)
-        .seed(cfg.seed);
+        .seed(cfg.seed)
+        .storage(cfg.storage);
     if let Some(topo) = cfg.topology {
         builder = builder.topology(topo);
     }
@@ -454,6 +480,10 @@ pub(crate) fn assemble(n_global: usize, outcomes: Vec<RankOutcome>, nranks: usiz
         crash_recoveries: 0,
         snapshots: 0,
         snapshot_bytes: 0,
+        mem_adj_bytes_max: 0,
+        mem_adj_bytes_sum: 0,
+        mem_local_bytes_max: 0,
+        mem_local_bytes_sum: 0,
     };
     for o in outcomes {
         for (v, c) in o.owned_colors {
@@ -488,6 +518,10 @@ pub(crate) fn assemble(n_global: usize, outcomes: Vec<RankOutcome>, nranks: usiz
         stats.crash_recoveries += o.recoveries;
         stats.snapshots += o.snapshots;
         stats.snapshot_bytes += o.snapshot_bytes;
+        stats.mem_adj_bytes_max = stats.mem_adj_bytes_max.max(o.mem_adj_bytes);
+        stats.mem_adj_bytes_sum += o.mem_adj_bytes;
+        stats.mem_local_bytes_max = stats.mem_local_bytes_max.max(o.mem_local_bytes);
+        stats.mem_local_bytes_sum += o.mem_local_bytes;
     }
     stats.colors_used = colors_used(&colors);
     RunResult { colors, stats }
@@ -838,6 +872,8 @@ pub(crate) async fn color_rank_planned(
         recoveries: 0,
         snapshots: 0,
         snapshot_bytes: 0,
+        mem_adj_bytes: lg.graph.memory_bytes() as u64,
+        mem_local_bytes: lg.memory_bytes().total() as u64,
         timers,
         comm: comm.stats(),
     })
@@ -1329,7 +1365,7 @@ fn recolor_predictive(
     let mut forbidden = crate::util::bitset::BitSet::with_capacity(64);
     for &v in &order {
         forbidden.clear();
-        for &u in lg.graph.neighbors(v as VId) {
+        for u in lg.graph.neighbors(v as VId) {
             let c = colors[u as usize];
             if c > 0 {
                 forbidden.set(c as usize - 1);

@@ -153,6 +153,8 @@ fn zoltan_rank(comm: &mut Comm, g: &Graph, part: &Partition, cfg: ZoltanConfig) 
         // Zoltan's supersteps are strictly phased; no exchange overlap
         overlap_saved_ns: 0,
         paranoid_checks: 0,
+        mem_adj_bytes: lg.graph.memory_bytes() as u64,
+        mem_local_bytes: lg.memory_bytes().total() as u64,
         timers,
         comm: comm.stats(),
     }
@@ -163,7 +165,7 @@ fn assign(lg: &LocalGraph, v: u32, colors: &mut [Color], forbidden: &mut BitSet,
     forbidden.clear();
     match problem {
         Problem::D1 => {
-            for &u in lg.graph.neighbors(v as VId) {
+            for u in lg.graph.neighbors(v as VId) {
                 let c = colors[u as usize];
                 if c > 0 {
                     forbidden.set(c as usize - 1);
@@ -172,14 +174,14 @@ fn assign(lg: &LocalGraph, v: u32, colors: &mut [Color], forbidden: &mut BitSet,
         }
         Problem::D2 | Problem::PD2 => {
             let partial = problem == Problem::PD2;
-            for &u in lg.graph.neighbors(v as VId) {
+            for u in lg.graph.neighbors(v as VId) {
                 if !partial {
                     let c = colors[u as usize];
                     if c > 0 {
                         forbidden.set(c as usize - 1);
                     }
                 }
-                for &x in lg.graph.neighbors(u) {
+                for x in lg.graph.neighbors(u) {
                     if x != v as VId {
                         let c = colors[x as usize];
                         if c > 0 {
@@ -204,7 +206,7 @@ fn detect(lg: &LocalGraph, colors: &[Color], cfg: ZoltanConfig) -> Vec<u32> {
                 if cg == 0 {
                     continue;
                 }
-                for &u in lg.graph.neighbors(gl) {
+                for u in lg.graph.neighbors(gl) {
                     if u < nl
                         && colors[u as usize] == cg
                         && conflict::first_loses(
@@ -240,11 +242,11 @@ fn detect(lg: &LocalGraph, colors: &[Color], cfg: ZoltanConfig) -> Vec<u32> {
                         losers.push(v);
                     }
                 };
-                for &u in lg.graph.neighbors(v as VId) {
+                for u in lg.graph.neighbors(v as VId) {
                     if !partial && u >= nl && colors[u as usize] == cv {
                         v_loses(u, &mut losers);
                     }
-                    for &x in lg.graph.neighbors(u) {
+                    for x in lg.graph.neighbors(u) {
                         if x != v as VId && x >= nl && colors[x as usize] == cv {
                             v_loses(x, &mut losers);
                         }

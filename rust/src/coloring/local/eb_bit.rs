@@ -49,7 +49,7 @@ pub fn color_with(view: &LocalView, colors: &mut [Color], scratch: &mut KernelSc
                 let mut out: Vec<(VId, Color)> = Vec::with_capacity(chunk.len());
                 for &v in chunk {
                     forbidden.clear();
-                    for &u in g.neighbors(v) {
+                    for u in g.neighbors(v) {
                         let c = snapshot[u as usize];
                         if c > 0 {
                             forbidden.set(c as usize - 1);
@@ -76,7 +76,7 @@ pub fn color_with(view: &LocalView, colors: &mut [Color], scratch: &mut KernelSc
                 let mut out: Vec<VId> = Vec::new();
                 for &v in chunk {
                     let cv = snapshot[v as usize];
-                    for &u in g.neighbors(v) {
+                    for u in g.neighbors(v) {
                         if snapshot[u as usize] == cv {
                             // conflict edge (v, u): hashed-priority loser
                             let loser =

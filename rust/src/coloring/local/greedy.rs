@@ -80,7 +80,7 @@ fn order_of(g: &Graph, ord: Ordering) -> Vec<VId> {
                 };
                 removed[v as usize] = true;
                 removal.push(v);
-                for &u in g.neighbors(v) {
+                for u in g.neighbors(v) {
                     if !removed[u as usize] {
                         deg[u as usize] -= 1;
                         buckets[deg[u as usize]].push(u);
@@ -96,7 +96,7 @@ fn order_of(g: &Graph, ord: Ordering) -> Vec<VId> {
 #[inline]
 fn assign_first_fit(g: &Graph, v: VId, colors: &mut [Color], forbidden: &mut BitSet) {
     forbidden.clear();
-    for &u in g.neighbors(v) {
+    for u in g.neighbors(v) {
         let c = colors[u as usize];
         if c > 0 {
             forbidden.set(c as usize - 1);
@@ -126,7 +126,7 @@ pub fn dsatur(g: &Graph) -> Vec<Color> {
         assign_first_fit(g, v, &mut colors, &mut forbidden);
         done[v as usize] = true;
         let c = colors[v as usize];
-        for &u in g.neighbors(v) {
+        for u in g.neighbors(v) {
             sat[u as usize].insert(c);
         }
     }

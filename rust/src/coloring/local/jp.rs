@@ -47,7 +47,7 @@ pub fn color_with(
                     .iter()
                     .copied()
                     .filter(|&v| {
-                        g.neighbors(v).iter().all(|&u| {
+                        g.neighbors(v).all(|u| {
                             snapshot[u as usize] > 0
                                 || !view.mask[u as usize]
                                 || (prio[u as usize], u) < (prio[v as usize], v)
@@ -62,7 +62,7 @@ pub fn color_with(
         debug_assert!(!winners.is_empty() || active.is_empty(), "JP stuck");
         for &v in &winners {
             forbidden.clear();
-            for &u in g.neighbors(v) {
+            for u in g.neighbors(v) {
                 let c = colors[u as usize];
                 if c > 0 {
                     forbidden.set(c as usize - 1);

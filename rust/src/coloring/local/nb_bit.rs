@@ -56,14 +56,14 @@ pub fn color_with(
                 let mut out: Vec<(VId, Color)> = Vec::with_capacity(chunk.len());
                 for &v in chunk {
                     forbidden.clear();
-                    for &u in g.neighbors(v) {
+                    for u in g.neighbors(v) {
                         if !partial {
                             let c = snapshot[u as usize];
                             if c > 0 {
                                 forbidden.set(c as usize - 1);
                             }
                         }
-                        for &w in g.neighbors(u) {
+                        for w in g.neighbors(u) {
                             if w != v {
                                 let c = snapshot[w as usize];
                                 if c > 0 {
@@ -91,12 +91,12 @@ pub fn color_with(
                     let cv = snapshot[v as usize];
                     let pv = (prio[v as usize], v);
                     let mut loses = false;
-                    'outer: for &u in g.neighbors(v) {
+                    'outer: for u in g.neighbors(v) {
                         if !partial && snapshot[u as usize] == cv && (prio[u as usize], u) < pv {
                             loses = true;
                             break;
                         }
-                        for &w in g.neighbors(u) {
+                        for w in g.neighbors(u) {
                             if w != v && snapshot[w as usize] == cv && (prio[w as usize], w) < pv {
                                 loses = true;
                                 break 'outer;

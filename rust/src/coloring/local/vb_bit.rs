@@ -61,7 +61,7 @@ pub fn color_with(view: &LocalView, colors: &mut [Color], scratch: &mut KernelSc
                 let mut out: Vec<(VId, Color)> = Vec::with_capacity(chunk.len());
                 for &v in chunk {
                     forbidden.clear();
-                    for &u in g.neighbors(v) {
+                    for u in g.neighbors(v) {
                         let c = snapshot[u as usize];
                         if c > 0 {
                             forbidden.set(c as usize - 1);
@@ -89,8 +89,7 @@ pub fn color_with(view: &LocalView, colors: &mut [Color], scratch: &mut KernelSc
                         let c = snapshot[v as usize];
                         let pv = (prio[v as usize], v);
                         g.neighbors(v)
-                            .iter()
-                            .any(|&u| snapshot[u as usize] == c && (prio[u as usize], u) < pv)
+                            .any(|u| snapshot[u as usize] == c && (prio[u as usize], u) < pv)
                     })
                     .collect()
             })

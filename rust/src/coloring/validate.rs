@@ -18,7 +18,7 @@ pub fn first_violation_d1(g: &Graph, colors: &[Color]) -> Option<(VId, VId)> {
         if colors[v as usize] == 0 {
             return Some((v, v));
         }
-        for &u in g.neighbors(v) {
+        for u in g.neighbors(v) {
             if u > v && colors[u as usize] == colors[v as usize] {
                 return Some((v, u));
             }
@@ -68,7 +68,7 @@ fn no_two_hop_conflicts(g: &Graph, colors: &[Color], limit: Option<usize>) -> bo
     let mut seen: std::collections::HashMap<Color, VId> = std::collections::HashMap::new();
     for u in 0..g.n() as VId {
         seen.clear();
-        for &v in g.neighbors(u) {
+        for v in g.neighbors(u) {
             if (v as usize) >= lim {
                 continue;
             }

@@ -1,23 +1,31 @@
 //! Edge-list → CSR construction with the paper's preprocessing:
 //! deduplicate multi-edges, drop self-loops, symmetrize.
 
+use super::storage::{CsrEncoder, StorageMode};
 use super::{Graph, VId};
 
 /// Accumulates (possibly directed, duplicated) edges and produces a clean
-/// undirected CSR.
+/// undirected CSR in the requested [`StorageMode`] (compact by default).
 #[derive(Clone, Debug)]
 pub struct GraphBuilder {
     n: usize,
     edges: Vec<(VId, VId)>,
+    storage: StorageMode,
 }
 
 impl GraphBuilder {
     pub fn new(n: usize) -> Self {
-        GraphBuilder { n, edges: Vec::new() }
+        GraphBuilder { n, edges: Vec::new(), storage: StorageMode::default() }
     }
 
     pub fn with_edge_capacity(n: usize, m: usize) -> Self {
-        GraphBuilder { n, edges: Vec::with_capacity(m) }
+        GraphBuilder { n, edges: Vec::with_capacity(m), storage: StorageMode::default() }
+    }
+
+    /// Select the adjacency storage backend for the built graph.
+    pub fn storage(mut self, mode: StorageMode) -> Self {
+        self.storage = mode;
+        self
     }
 
     /// Add a single undirected edge (either direction).
@@ -64,25 +72,26 @@ impl GraphBuilder {
             col_idx[*c as usize] = v;
             *c += 1;
         }
-        // sort + dedup each row
-        let mut out_ptr = vec![0u64; n + 1];
-        let mut out_idx = Vec::with_capacity(col_idx.len());
+        // sort + dedup each row straight into the encoder — the encoded
+        // form is the only full-size copy that outlives this function
+        let mut enc = CsrEncoder::new(self.storage, n, col_idx.len());
+        let mut row_buf: Vec<VId> = Vec::new();
         for v in 0..n {
             let s = deg[v] as usize;
             let e = deg[v + 1] as usize;
             let row = &mut col_idx[s..e];
             row.sort_unstable();
-            let before = out_idx.len();
+            row_buf.clear();
             let mut last: Option<VId> = None;
             for &u in row.iter() {
                 if last != Some(u) {
-                    out_idx.push(u);
+                    row_buf.push(u);
                     last = Some(u);
                 }
             }
-            out_ptr[v + 1] = out_ptr[v] + (out_idx.len() - before) as u64;
+            enc.push_row(&row_buf);
         }
-        Graph { row_ptr: out_ptr, col_idx: out_idx }
+        Graph::from_store(enc.finish())
     }
 }
 
@@ -96,8 +105,8 @@ mod tests {
             .edges(&[(0, 1), (1, 0), (0, 1), (2, 2), (1, 2)])
             .build();
         assert_eq!(g.m(), 2);
-        assert_eq!(g.neighbors(0), &[1]);
-        assert_eq!(g.neighbors(1), &[0, 2]);
+        assert_eq!(g.neighbors(0).collect::<Vec<_>>(), vec![1]);
+        assert_eq!(g.neighbors(1).collect::<Vec<_>>(), vec![0, 2]);
         g.validate().unwrap();
     }
 
@@ -114,8 +123,18 @@ mod tests {
         let g = GraphBuilder::new(4)
             .edges(&[(3, 0), (3, 2), (3, 1)])
             .build();
-        assert_eq!(g.neighbors(3), &[0, 1, 2]);
+        assert_eq!(g.neighbors(3).collect::<Vec<_>>(), vec![0, 1, 2]);
         g.validate().unwrap();
+    }
+
+    #[test]
+    fn storage_knob_is_parity_neutral() {
+        let es = [(0, 3), (1, 3), (2, 3), (0, 1)];
+        let c = GraphBuilder::new(4).edges(&es).build();
+        let p = GraphBuilder::new(4).edges(&es).storage(StorageMode::Plain).build();
+        assert_eq!(c.storage_mode(), StorageMode::Compact);
+        assert_eq!(p.storage_mode(), StorageMode::Plain);
+        assert_eq!(c, p);
     }
 
     #[test]

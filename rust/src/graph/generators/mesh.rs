@@ -110,7 +110,7 @@ mod tests {
         // all neighbors of slab z are within one slab distance
         for v in 0..g.n() {
             let z = v / (nx * ny);
-            for &u in g.neighbors(v as VId) {
+            for u in g.neighbors(v as VId) {
                 let uz = u as usize / (nx * ny);
                 let dz = z.abs_diff(uz);
                 assert!(dz == 0 || dz == 1 || dz == nz - 1);

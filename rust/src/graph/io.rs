@@ -70,7 +70,7 @@ pub fn write_matrix_market(g: &Graph, path: impl AsRef<Path>) -> Result<(), Stri
         writeln!(w, "%%MatrixMarket matrix coordinate pattern symmetric")?;
         writeln!(w, "{} {} {}", g.n(), g.n(), g.m())?;
         for v in 0..g.n() {
-            for &u in g.neighbors(v as VId) {
+            for u in g.neighbors(v as VId) {
                 if (u as usize) < v {
                     // lower triangle (v > u): MM symmetric stores one side
                     writeln!(w, "{} {}", v + 1, u + 1)?;
@@ -111,11 +111,18 @@ pub fn write_binary(g: &Graph, path: impl AsRef<Path>) -> Result<(), String> {
         w.write_all(b"DCG1")?;
         w.write_all(&(g.n() as u64).to_le_bytes())?;
         w.write_all(&(g.arcs() as u64).to_le_bytes())?;
-        for &x in &g.row_ptr {
-            w.write_all(&x.to_le_bytes())?;
+        // row_ptr reconstructed as a running degree sum — byte-identical
+        // to the old raw-array dump regardless of storage backend
+        let mut off = 0u64;
+        w.write_all(&off.to_le_bytes())?;
+        for v in 0..g.n() {
+            off += g.degree(v as VId) as u64;
+            w.write_all(&off.to_le_bytes())?;
         }
-        for &x in &g.col_idx {
-            w.write_all(&x.to_le_bytes())?;
+        for v in 0..g.n() {
+            for u in g.neighbors(v as VId) {
+                w.write_all(&u.to_le_bytes())?;
+            }
         }
         Ok(())
     })();
@@ -146,9 +153,50 @@ pub fn read_binary(path: impl AsRef<Path>) -> Result<Graph, String> {
         f.read_exact(&mut u32buf).map_err(|e| e.to_string())?;
         col_idx.push(u32::from_le_bytes(u32buf));
     }
-    let g = Graph { row_ptr, col_idx };
+    // validate the raw arrays BEFORE encoding: the compact encoder
+    // requires strictly sorted rows and must never see untrusted input
+    validate_raw_csr(&row_ptr, &col_idx)?;
+    let g = Graph::from_csr(row_ptr, col_idx, crate::graph::StorageMode::default());
     g.validate()?;
     Ok(g)
+}
+
+/// Structural checks on raw CSR arrays from an untrusted file: monotone
+/// offsets, strictly sorted in-range rows, no self-loops, symmetry.
+fn validate_raw_csr(row_ptr: &[u64], col_idx: &[VId]) -> Result<(), String> {
+    if row_ptr.is_empty() {
+        return Err("row_ptr empty".into());
+    }
+    let n = row_ptr.len() - 1;
+    if row_ptr[0] != 0 || *row_ptr.last().unwrap() != col_idx.len() as u64 {
+        return Err("row_ptr endpoints inconsistent with col_idx".into());
+    }
+    let has = |v: usize, u: VId| -> bool {
+        let (s, e) = (row_ptr[v] as usize, row_ptr[v + 1] as usize);
+        col_idx[s..e].binary_search(&u).is_ok()
+    };
+    for v in 0..n {
+        let (s, e) = (row_ptr[v] as usize, row_ptr[v + 1] as usize);
+        if s > e || e > col_idx.len() {
+            return Err(format!("row_ptr not monotone at {v}"));
+        }
+        let row = &col_idx[s..e];
+        for (i, &u) in row.iter().enumerate() {
+            if i > 0 && row[i - 1] >= u {
+                return Err(format!("row {v} not strictly sorted"));
+            }
+            if u as usize >= n {
+                return Err(format!("edge ({v},{u}) out of range"));
+            }
+            if u as usize == v {
+                return Err(format!("self-loop at {v}"));
+            }
+            if !has(u as usize, v as VId) {
+                return Err(format!("edge ({v},{u}) not symmetric"));
+            }
+        }
+    }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -190,6 +238,37 @@ mod tests {
         assert_eq!(g.n(), 3);
         assert_eq!(g.m(), 3);
         std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn binary_rejects_unsorted_rows() {
+        // hand-craft a DCG1 file whose row is out of order; must be a
+        // clean Err (never fed to the compact encoder, which would panic)
+        let p = tmp("bad.bin");
+        let mut bytes: Vec<u8> = Vec::new();
+        bytes.extend_from_slice(b"DCG1");
+        bytes.extend_from_slice(&2u64.to_le_bytes()); // n
+        bytes.extend_from_slice(&2u64.to_le_bytes()); // arcs
+        for off in [0u64, 1, 2] {
+            bytes.extend_from_slice(&off.to_le_bytes());
+        }
+        bytes.extend_from_slice(&1u32.to_le_bytes());
+        bytes.extend_from_slice(&1u32.to_le_bytes()); // row 1 = [1]: self-loop
+        std::fs::write(&p, bytes).unwrap();
+        assert!(read_binary(&p).is_err());
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn binary_bytes_are_mode_independent() {
+        let g = gnm(40, 90, 3);
+        let p1 = tmp("c.bin");
+        let p2 = tmp("p.bin");
+        write_binary(&g, &p1).unwrap();
+        write_binary(&g.to_mode(crate::graph::StorageMode::Plain), &p2).unwrap();
+        assert_eq!(std::fs::read(&p1).unwrap(), std::fs::read(&p2).unwrap());
+        std::fs::remove_file(p1).ok();
+        std::fs::remove_file(p2).ok();
     }
 
     #[test]

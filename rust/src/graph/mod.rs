@@ -4,57 +4,107 @@
 //! `u32` vertex ids; builders deduplicate multi-edges and drop self-loops,
 //! matching the paper's preprocessing ("values listed are after
 //! preprocessing to remove multi-edges and self-loops").
+//!
+//! Adjacency is accessed only through the [`Graph::neighbors`] iterator
+//! — the backing bytes live in one of two [`storage`] backends (plain
+//! `u64`-offset CSR, or the compact chunked delta-varint form that is
+//! the default), and the iterator contract is what keeps every kernel,
+//! conflict scan and exchange bit-identical under either encoding.
+//! See docs/STORAGE.md.
 
 pub mod builder;
 pub mod generators;
 pub mod io;
 pub mod stats;
+pub mod storage;
 
 pub use builder::GraphBuilder;
+pub use storage::{Neighbors, StorageMode};
+
+use storage::AdjStore;
 
 /// Vertex id within a graph.
 pub type VId = u32;
 
-/// An undirected graph in compressed-sparse-row form.
-#[derive(Clone, Debug, PartialEq, Eq)]
+/// An undirected graph in compressed-sparse-row form, behind one of the
+/// [`storage`] backends.  Equality, validation and every accessor are
+/// defined on the *logical* adjacency (the ascending neighbor sequences),
+/// so two graphs with the same edges compare equal regardless of mode.
+#[derive(Clone)]
 pub struct Graph {
-    /// Row offsets, `n + 1` entries.
-    pub row_ptr: Vec<u64>,
-    /// Flattened adjacency; each undirected edge appears twice.
-    pub col_idx: Vec<VId>,
+    store: AdjStore,
 }
 
 impl Graph {
+    /// Build from raw CSR arrays (rows must be strictly sorted and
+    /// deduplicated — `GraphBuilder` output, or arrays validated by
+    /// `io::read_binary`), encoding into the requested storage mode.
+    pub fn from_csr(row_ptr: Vec<u64>, col_idx: Vec<VId>, mode: StorageMode) -> Graph {
+        assert!(!row_ptr.is_empty(), "row_ptr needs n + 1 entries");
+        assert_eq!(*row_ptr.last().unwrap(), col_idx.len() as u64, "row_ptr[n] != |col_idx|");
+        Graph { store: storage::from_csr_arrays(row_ptr, col_idx, mode) }
+    }
+
+    pub(crate) fn from_store(store: AdjStore) -> Graph {
+        Graph { store }
+    }
+
+    /// Re-encode into `mode` (a clone if already there).
+    pub fn to_mode(&self, mode: StorageMode) -> Graph {
+        if self.storage_mode() == mode {
+            return self.clone();
+        }
+        let mut enc = storage::CsrEncoder::new(mode, self.n(), self.arcs());
+        let mut row: Vec<VId> = Vec::new();
+        for v in 0..self.n() as VId {
+            row.clear();
+            row.extend(self.neighbors(v));
+            enc.push_row(&row);
+        }
+        Graph { store: enc.finish() }
+    }
+
+    /// Which storage backend this graph uses.
+    pub fn storage_mode(&self) -> StorageMode {
+        self.store.mode()
+    }
+
     /// Number of vertices.
     #[inline]
     pub fn n(&self) -> usize {
-        self.row_ptr.len() - 1
+        self.store.n()
     }
 
     /// Number of undirected edges (each stored twice internally).
     #[inline]
     pub fn m(&self) -> usize {
-        self.col_idx.len() / 2
+        self.store.arcs() / 2
     }
 
     /// Number of directed arcs (CSR entries).
     #[inline]
     pub fn arcs(&self) -> usize {
-        self.col_idx.len()
+        self.store.arcs()
     }
 
-    /// Neighbors of `v`.
+    /// Neighbors of `v`, ascending.  The only adjacency access path —
+    /// both storage backends yield the identical sequence.
     #[inline]
-    pub fn neighbors(&self, v: VId) -> &[VId] {
-        let s = self.row_ptr[v as usize] as usize;
-        let e = self.row_ptr[v as usize + 1] as usize;
-        &self.col_idx[s..e]
+    pub fn neighbors(&self, v: VId) -> Neighbors<'_> {
+        self.store.neighbors(v)
     }
 
-    /// Degree of `v`.
+    /// Degree of `v` (O(1) under both backends).
     #[inline]
     pub fn degree(&self, v: VId) -> usize {
-        (self.row_ptr[v as usize + 1] - self.row_ptr[v as usize]) as usize
+        self.store.degree(v)
+    }
+
+    /// True iff `u` is a neighbor of `v` (sorted membership probe:
+    /// binary search on plain rows, skip-anchor walk on compact ones).
+    #[inline]
+    pub fn has_edge(&self, v: VId, u: VId) -> bool {
+        self.store.has_edge(v, u)
     }
 
     pub fn max_degree(&self) -> usize {
@@ -69,39 +119,33 @@ impl Graph {
         }
     }
 
-    /// Estimated in-memory size in bytes (CSR arrays only).
+    /// Exact in-memory size in bytes of the adjacency storage (every
+    /// field of the active backend: offset/chunk tables + neighbor
+    /// data).
     pub fn memory_bytes(&self) -> usize {
-        self.row_ptr.len() * 8 + self.col_idx.len() * 4
+        self.store.memory_bytes()
     }
 
-    /// True iff the CSR is a well-formed undirected simple graph:
+    /// True iff the adjacency is a well-formed undirected simple graph:
     /// sorted rows, no self-loops, no duplicates, symmetric.
     pub fn validate(&self) -> Result<(), String> {
         let n = self.n() as u64;
-        if *self.row_ptr.first().unwrap_or(&1) != 0 {
-            return Err("row_ptr[0] != 0".into());
-        }
-        if *self.row_ptr.last().unwrap() != self.col_idx.len() as u64 {
-            return Err("row_ptr[n] != |col_idx|".into());
-        }
         for v in 0..self.n() {
-            if self.row_ptr[v] > self.row_ptr[v + 1] {
-                return Err(format!("row_ptr decreasing at {v}"));
-            }
-            let row = self.neighbors(v as VId);
-            for w in row.windows(2) {
-                if w[0] >= w[1] {
-                    return Err(format!("row {v} not strictly sorted"));
+            let mut prev: Option<VId> = None;
+            for u in self.neighbors(v as VId) {
+                if let Some(p) = prev {
+                    if p >= u {
+                        return Err(format!("row {v} not strictly sorted"));
+                    }
                 }
-            }
-            for &u in row {
+                prev = Some(u);
                 if u as u64 >= n {
                     return Err(format!("edge ({v},{u}) out of range"));
                 }
                 if u as usize == v {
                     return Err(format!("self-loop at {v}"));
                 }
-                if !self.neighbors(u).binary_search(&(v as VId)).is_ok() {
+                if !self.has_edge(u, v as VId) {
                     return Err(format!("edge ({v},{u}) not symmetric"));
                 }
             }
@@ -124,7 +168,7 @@ impl Graph {
         while order.len() < n {
             while let Some(v) = queue.pop_front() {
                 order.push(v);
-                for &u in self.neighbors(v) {
+                for u in self.neighbors(v) {
                     if !seen[u as usize] {
                         seen[u as usize] = true;
                         queue.push_back(u);
@@ -145,6 +189,24 @@ impl Graph {
     }
 }
 
+impl PartialEq for Graph {
+    fn eq(&self, other: &Graph) -> bool {
+        self.store.logical_eq(&other.store)
+    }
+}
+
+impl Eq for Graph {}
+
+impl std::fmt::Debug for Graph {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Graph")
+            .field("n", &self.n())
+            .field("arcs", &self.arcs())
+            .field("storage", &self.storage_mode())
+            .finish()
+    }
+}
+
 /// A bipartite graph stored as a general graph whose first `ns` vertices
 /// form the "source" side `V_s` (the set partial distance-2 coloring
 /// colors), and the rest form `V_t` (§3.6 of the paper).
@@ -160,7 +222,7 @@ impl BipartiteGraph {
     pub fn validate(&self) -> Result<(), String> {
         self.graph.validate()?;
         for v in 0..self.graph.n() {
-            for &u in self.graph.neighbors(v as VId) {
+            for u in self.graph.neighbors(v as VId) {
                 if (v < self.ns) == ((u as usize) < self.ns) {
                     return Err(format!("edge ({v},{u}) does not cross sides"));
                 }
@@ -185,11 +247,26 @@ mod tests {
         let g = triangle();
         assert_eq!(g.n(), 3);
         assert_eq!(g.m(), 3);
-        assert_eq!(g.neighbors(0), &[1, 2]);
+        assert_eq!(g.neighbors(0).collect::<Vec<_>>(), vec![1, 2]);
         assert_eq!(g.degree(1), 2);
         assert_eq!(g.max_degree(), 2);
         assert!((g.avg_degree() - 2.0).abs() < 1e-12);
+        assert!(g.has_edge(0, 1) && g.has_edge(1, 0) && !g.has_edge(0, 0));
         g.validate().unwrap();
+    }
+
+    #[test]
+    fn modes_are_logically_equal() {
+        let g = triangle(); // built in the default (compact) mode
+        assert_eq!(g.storage_mode(), StorageMode::Compact);
+        let p = g.to_mode(StorageMode::Plain);
+        assert_eq!(p.storage_mode(), StorageMode::Plain);
+        assert_eq!(g, p);
+        assert_eq!(p.to_mode(StorageMode::Compact), g);
+        p.validate().unwrap();
+        // plain pays 8 B/vertex offsets + 4 B/arc; compact must not
+        // exceed it even on a 3-vertex toy
+        assert!(g.memory_bytes() <= p.memory_bytes());
     }
 
     #[test]

@@ -1,0 +1,713 @@
+//! Adjacency storage backends behind the [`Graph`](super::Graph)
+//! iterator contract (see docs/STORAGE.md).
+//!
+//! Two interchangeable encodings of the same strictly-sorted,
+//! deduplicated, symmetric CSR:
+//!
+//! * [`PlainCsr`] — the classic layout (`Vec<u64>` row offsets +
+//!   `Vec<u32>` neighbor ids).  The parity baseline: every other
+//!   backend must yield bit-identical neighbor sequences.
+//! * [`CompactCsr`] — the billion-edge diet.  Row offsets are chunked
+//!   (one `u64` byte base per 2^16 vertices plus a `u32` in-chunk
+//!   offset per vertex, halving the 8 B/vertex offset column), and each
+//!   neighbor list is delta-encoded: a varint degree header, optional
+//!   skip anchors, the first neighbor absolute, then `gap - 1` varints
+//!   (rows are strictly sorted, so gaps are >= 1 and consecutive runs
+//!   cost one byte each).  `degree(v)` stays O(1) — it is the header
+//!   varint at a directly computed byte offset — and membership tests
+//!   use the anchors to decode at most [`ANCHOR_STRIDE`] varints.
+//!
+//! Storage changes iteration *encoding*, never iteration *order*: both
+//! backends yield each row ascending, so colorings, round counts,
+//! conflicts and wire bytes are bit-identical under either mode (pinned
+//! by `tests/storage_parity.rs`).
+
+use super::VId;
+
+/// Which adjacency backend a graph (or rank-local ghost table) uses.
+///
+/// Threaded through `SessionBuilder::storage`, `DistConfig::storage`
+/// and the CLI `--storage compact|plain` flag; compact is the default
+/// everywhere.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, Default)]
+pub enum StorageMode {
+    /// Delta-encoded chunked CSR ([`CompactCsr`]) — the default.
+    #[default]
+    Compact,
+    /// Classic `u64`-offset CSR ([`PlainCsr`]) — the parity baseline.
+    Plain,
+}
+
+impl StorageMode {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            StorageMode::Compact => "compact",
+            StorageMode::Plain => "plain",
+        }
+    }
+}
+
+impl std::str::FromStr for StorageMode {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, String> {
+        match s {
+            "compact" => Ok(StorageMode::Compact),
+            "plain" => Ok(StorageMode::Plain),
+            other => Err(format!("unknown storage mode '{other}' (compact|plain)")),
+        }
+    }
+}
+
+/// Vertices per row-offset chunk (2^16): one `u64` byte base per chunk,
+/// `u32` offsets within it.
+const CHUNK_BITS: u32 = 16;
+const CHUNK: usize = 1 << CHUNK_BITS;
+
+/// Neighbor index stride between skip anchors in long compact lists.
+/// Membership probes decode at most this many varints after the anchor
+/// binary search.
+pub const ANCHOR_STRIDE: usize = 64;
+
+/// Append `x` as a LEB128 varint (7 data bits per byte, high bit =
+/// continuation; 1..=5 bytes for a `u32`).
+#[inline]
+pub fn write_varint(buf: &mut Vec<u8>, mut x: u32) {
+    loop {
+        let b = (x & 0x7f) as u8;
+        x >>= 7;
+        if x == 0 {
+            buf.push(b);
+            return;
+        }
+        buf.push(b | 0x80);
+    }
+}
+
+/// Decode one LEB128 varint at `*pos`, advancing it.
+#[inline]
+pub fn read_varint(data: &[u8], pos: &mut usize) -> u32 {
+    let mut x = 0u32;
+    let mut shift = 0u32;
+    loop {
+        let b = data[*pos];
+        *pos += 1;
+        x |= ((b & 0x7f) as u32) << shift;
+        if b & 0x80 == 0 {
+            return x;
+        }
+        shift += 7;
+    }
+}
+
+/// The classic CSR layout; iteration is a plain slice walk.
+#[derive(Clone, Debug)]
+pub struct PlainCsr {
+    /// Row offsets, `n + 1` entries.
+    pub(crate) row_ptr: Vec<u64>,
+    /// Flattened adjacency; each undirected edge appears twice.
+    pub(crate) col_idx: Vec<VId>,
+}
+
+impl PlainCsr {
+    #[inline]
+    fn n(&self) -> usize {
+        self.row_ptr.len() - 1
+    }
+
+    #[inline]
+    fn row(&self, v: VId) -> &[VId] {
+        let s = self.row_ptr[v as usize] as usize;
+        let e = self.row_ptr[v as usize + 1] as usize;
+        &self.col_idx[s..e]
+    }
+
+    fn memory_bytes(&self) -> usize {
+        self.row_ptr.len() * 8 + self.col_idx.len() * 4
+    }
+}
+
+/// Chunked-offset, delta-varint CSR.  See the module doc for the exact
+/// per-list byte layout.
+#[derive(Clone, Debug)]
+pub struct CompactCsr {
+    /// Byte offset (into `data`) of the first list of each chunk of
+    /// [`CHUNK`] vertices; one trailing entry if `n` lands on a chunk
+    /// boundary so the terminal offset below always resolves.
+    chunk_base: Vec<u64>,
+    /// Per-vertex byte offset relative to its chunk base, `n + 1`
+    /// entries (the last is the end-of-data sentinel).
+    local_off: Vec<u32>,
+    /// Concatenated encoded lists.
+    data: Vec<u8>,
+    /// Total directed arc count (sum of degrees), kept so `arcs()` is
+    /// O(1) without a decode sweep.
+    arcs: usize,
+}
+
+impl CompactCsr {
+    #[inline]
+    fn n(&self) -> usize {
+        self.local_off.len() - 1
+    }
+
+    /// Absolute byte offset of vertex `v`'s encoded list (`v == n`
+    /// resolves to the end of data).
+    #[inline]
+    fn start(&self, v: usize) -> usize {
+        (self.chunk_base[v >> CHUNK_BITS] + self.local_off[v] as u64) as usize
+    }
+
+    #[inline]
+    fn degree(&self, v: VId) -> usize {
+        let mut pos = self.start(v as usize);
+        read_varint(&self.data, &mut pos) as usize
+    }
+
+    /// Decode position and state just past the header + anchor section:
+    /// (degree, byte pos of the first neighbor varint).
+    #[inline]
+    fn list_body(&self, v: VId) -> (usize, usize) {
+        let mut pos = self.start(v as usize);
+        let deg = read_varint(&self.data, &mut pos) as usize;
+        pos += anchor_count(deg) * 8;
+        (deg, pos)
+    }
+
+    fn iter(&self, v: VId) -> Neighbors<'_> {
+        let (deg, pos) = self.list_body(v);
+        Neighbors {
+            rem: deg,
+            inner: NbInner::Compact { data: &self.data, pos, prev: 0, first: true },
+        }
+    }
+
+    /// O(log(deg/STRIDE) + STRIDE) membership via the skip anchors.
+    fn has_edge(&self, v: VId, target: VId) -> bool {
+        let mut pos = self.start(v as usize);
+        let deg = read_varint(&self.data, &mut pos) as usize;
+        if deg == 0 {
+            return false;
+        }
+        let nanch = anchor_count(deg);
+        let anchors = &self.data[pos..pos + nanch * 8];
+        let body = pos + nanch * 8;
+        // last anchor whose value <= target (binary search over the
+        // fixed-width 8-byte records)
+        let mut lo = 0usize;
+        let mut hi = nanch;
+        while lo < hi {
+            let mid = (lo + hi) / 2;
+            let av = u32::from_le_bytes(anchors[mid * 8..mid * 8 + 4].try_into().unwrap());
+            if av <= target {
+                lo = mid + 1;
+            } else {
+                hi = mid;
+            }
+        }
+        let (mut idx, mut prev, mut dpos) = if lo == 0 {
+            // start from the absolute first neighbor
+            let mut p = body;
+            let first = read_varint(&self.data, &mut p);
+            if first == target {
+                return true;
+            }
+            if first > target {
+                return false;
+            }
+            (1usize, first, p)
+        } else {
+            let a = &anchors[(lo - 1) * 8..lo * 8];
+            let av = u32::from_le_bytes(a[..4].try_into().unwrap());
+            let aoff = u32::from_le_bytes(a[4..].try_into().unwrap());
+            if av == target {
+                return true;
+            }
+            // anchor lo-1 sits at neighbor index lo * STRIDE; its
+            // stored offset is where decoding of index lo*STRIDE + 1
+            // resumes, relative to the list body
+            (lo * ANCHOR_STRIDE + 1, av, body + aoff as usize)
+        };
+        while idx < deg {
+            let gap = read_varint(&self.data, &mut dpos);
+            prev += gap + 1;
+            if prev == target {
+                return true;
+            }
+            if prev > target {
+                return false;
+            }
+            idx += 1;
+        }
+        false
+    }
+
+    fn memory_bytes(&self) -> usize {
+        self.chunk_base.len() * 8 + self.local_off.len() * 4 + self.data.len()
+    }
+}
+
+/// Anchors carried by a list of `deg` neighbors: one per full
+/// [`ANCHOR_STRIDE`] prefix, none for short lists.
+#[inline]
+fn anchor_count(deg: usize) -> usize {
+    if deg == 0 {
+        0
+    } else {
+        (deg - 1) / ANCHOR_STRIDE
+    }
+}
+
+/// One adjacency backend; `Graph` owns exactly one of these.
+#[derive(Clone, Debug)]
+pub enum AdjStore {
+    Plain(PlainCsr),
+    Compact(CompactCsr),
+}
+
+impl AdjStore {
+    #[inline]
+    pub fn n(&self) -> usize {
+        match self {
+            AdjStore::Plain(p) => p.n(),
+            AdjStore::Compact(c) => c.n(),
+        }
+    }
+
+    #[inline]
+    pub fn arcs(&self) -> usize {
+        match self {
+            AdjStore::Plain(p) => p.col_idx.len(),
+            AdjStore::Compact(c) => c.arcs,
+        }
+    }
+
+    #[inline]
+    pub fn degree(&self, v: VId) -> usize {
+        match self {
+            AdjStore::Plain(p) => {
+                (p.row_ptr[v as usize + 1] - p.row_ptr[v as usize]) as usize
+            }
+            AdjStore::Compact(c) => c.degree(v),
+        }
+    }
+
+    #[inline]
+    pub fn neighbors(&self, v: VId) -> Neighbors<'_> {
+        match self {
+            AdjStore::Plain(p) => {
+                let row = p.row(v);
+                Neighbors { rem: row.len(), inner: NbInner::Plain(row.iter()) }
+            }
+            AdjStore::Compact(c) => c.iter(v),
+        }
+    }
+
+    /// Sorted-row membership test (`u in adj(v)`).
+    #[inline]
+    pub fn has_edge(&self, v: VId, u: VId) -> bool {
+        match self {
+            AdjStore::Plain(p) => p.row(v).binary_search(&u).is_ok(),
+            AdjStore::Compact(c) => c.has_edge(v, u),
+        }
+    }
+
+    pub fn mode(&self) -> StorageMode {
+        match self {
+            AdjStore::Plain(_) => StorageMode::Plain,
+            AdjStore::Compact(_) => StorageMode::Compact,
+        }
+    }
+
+    /// Bytes held by the adjacency arrays themselves.
+    pub fn memory_bytes(&self) -> usize {
+        match self {
+            AdjStore::Plain(p) => p.memory_bytes(),
+            AdjStore::Compact(c) => c.memory_bytes(),
+        }
+    }
+
+    /// Logical equality: same vertex count and identical ascending
+    /// neighbor sequences, regardless of backend.
+    pub fn logical_eq(&self, other: &AdjStore) -> bool {
+        if let (AdjStore::Plain(a), AdjStore::Plain(b)) = (self, other) {
+            return a.row_ptr == b.row_ptr && a.col_idx == b.col_idx;
+        }
+        if self.n() != other.n() || self.arcs() != other.arcs() {
+            return false;
+        }
+        (0..self.n()).all(|v| self.neighbors(v as VId).eq(other.neighbors(v as VId)))
+    }
+}
+
+enum NbInner<'a> {
+    Plain(std::slice::Iter<'a, VId>),
+    Compact { data: &'a [u8], pos: usize, prev: u32, first: bool },
+}
+
+impl Clone for NbInner<'_> {
+    fn clone(&self) -> Self {
+        match self {
+            NbInner::Plain(it) => NbInner::Plain(it.clone()),
+            NbInner::Compact { data, pos, prev, first } => {
+                NbInner::Compact { data, pos: *pos, prev: *prev, first: *first }
+            }
+        }
+    }
+}
+
+/// Iterator over one vertex's neighbors, ascending.  The only way any
+/// code outside the graph core reads adjacency (repolint L11): both
+/// backends yield the identical sequence, which is what makes storage
+/// mode invisible to kernels, conflict scans and wire traffic.
+#[derive(Clone)]
+pub struct Neighbors<'a> {
+    rem: usize,
+    inner: NbInner<'a>,
+}
+
+impl Iterator for Neighbors<'_> {
+    type Item = VId;
+
+    #[inline]
+    fn next(&mut self) -> Option<VId> {
+        if self.rem == 0 {
+            return None;
+        }
+        self.rem -= 1;
+        match &mut self.inner {
+            NbInner::Plain(it) => it.next().copied(),
+            NbInner::Compact { data, pos, prev, first } => {
+                let x = read_varint(data, pos);
+                let val = if *first {
+                    *first = false;
+                    x
+                } else {
+                    *prev + 1 + x
+                };
+                *prev = val;
+                Some(val)
+            }
+        }
+    }
+
+    #[inline]
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        (self.rem, Some(self.rem))
+    }
+}
+
+impl ExactSizeIterator for Neighbors<'_> {}
+
+impl std::fmt::Debug for Neighbors<'_> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Neighbors(rem={})", self.rem)
+    }
+}
+
+/// Streaming row-at-a-time CSR encoder: push strictly sorted,
+/// deduplicated rows in vertex order, then [`finish`](Self::finish).
+/// This is how `ghost.rs` emits compact rank-local + ghost adjacency
+/// directly from slab rows and wire payloads without materializing a
+/// plain intermediate, and how `GraphBuilder`/`EdgeStreamSource` build
+/// their final stores.
+pub struct CsrEncoder {
+    mode: StorageMode,
+    // plain accumulation
+    row_ptr: Vec<u64>,
+    col_idx: Vec<VId>,
+    // compact accumulation
+    chunk_base: Vec<u64>,
+    local_off: Vec<u32>,
+    data: Vec<u8>,
+    arcs: usize,
+    body: Vec<u8>,
+    anchors: Vec<(u32, u32)>,
+}
+
+impl CsrEncoder {
+    pub fn new(mode: StorageMode, n_hint: usize, arc_hint: usize) -> Self {
+        let mut enc = CsrEncoder {
+            mode,
+            row_ptr: Vec::new(),
+            col_idx: Vec::new(),
+            chunk_base: Vec::new(),
+            local_off: Vec::new(),
+            data: Vec::new(),
+            arcs: 0,
+            body: Vec::new(),
+            anchors: Vec::new(),
+        };
+        match mode {
+            StorageMode::Plain => {
+                enc.row_ptr.reserve(n_hint + 1);
+                enc.row_ptr.push(0);
+                enc.col_idx.reserve(arc_hint);
+            }
+            StorageMode::Compact => {
+                enc.local_off.reserve(n_hint + 1);
+                // ~2.5 B/arc is typical; exact size is data-dependent
+                enc.data.reserve(arc_hint / 2);
+            }
+        }
+        enc
+    }
+
+    /// Number of rows pushed so far (== the vertex id the next row is
+    /// encoded under).
+    pub fn rows(&self) -> usize {
+        match self.mode {
+            StorageMode::Plain => self.row_ptr.len() - 1,
+            StorageMode::Compact => self.local_off.len(),
+        }
+    }
+
+    /// Append the next vertex's neighbor row.  `row` must be strictly
+    /// ascending (sorted + deduplicated) — the compact gap encoding has
+    /// no representation for anything else.
+    pub fn push_row(&mut self, row: &[VId]) {
+        match self.mode {
+            StorageMode::Plain => {
+                self.col_idx.extend_from_slice(row);
+                self.row_ptr.push(self.col_idx.len() as u64);
+            }
+            StorageMode::Compact => {
+                self.mark_offset();
+                self.arcs += row.len();
+                write_varint(&mut self.data, row.len() as u32);
+                if row.is_empty() {
+                    return;
+                }
+                // encode the neighbor section into a scratch first so
+                // anchor byte offsets (relative to the section start)
+                // are known before it is appended
+                self.body.clear();
+                self.anchors.clear();
+                write_varint(&mut self.body, row[0]);
+                let mut prev = row[0];
+                for (i, &u) in row.iter().enumerate().skip(1) {
+                    debug_assert!(u > prev, "row not strictly sorted at index {i}");
+                    write_varint(&mut self.body, u - prev - 1);
+                    if i % ANCHOR_STRIDE == 0 {
+                        // anchor for index i: its value, and where
+                        // decoding of index i + 1 resumes — exactly the
+                        // section end now that i's gap is written
+                        self.anchors.push((u, self.body.len() as u32));
+                    }
+                    prev = u;
+                }
+                debug_assert_eq!(self.anchors.len(), anchor_count(row.len()));
+                for &(val, off) in &self.anchors {
+                    self.data.extend_from_slice(&val.to_le_bytes());
+                    self.data.extend_from_slice(&off.to_le_bytes());
+                }
+                self.data.extend_from_slice(&self.body);
+            }
+        }
+    }
+
+    /// Record the current data length as vertex `rows()`'s offset,
+    /// opening a new chunk at each [`CHUNK`] boundary.
+    fn mark_offset(&mut self) {
+        let v = self.local_off.len();
+        if v % CHUNK == 0 {
+            self.chunk_base.push(self.data.len() as u64);
+        }
+        let rel = self.data.len() as u64 - self.chunk_base[v >> CHUNK_BITS];
+        assert!(rel <= u32::MAX as u64, "compact CSR chunk overflows u32 offsets");
+        self.local_off.push(rel as u32);
+    }
+
+    /// Bytes currently held by the partially built store (the
+    /// peak-residency witness for streaming ingestion).
+    pub fn staged_bytes(&self) -> usize {
+        match self.mode {
+            StorageMode::Plain => self.row_ptr.len() * 8 + self.col_idx.len() * 4,
+            StorageMode::Compact => {
+                self.chunk_base.len() * 8 + self.local_off.len() * 4 + self.data.len()
+            }
+        }
+    }
+
+    pub fn finish(mut self) -> AdjStore {
+        match self.mode {
+            StorageMode::Plain => {
+                AdjStore::Plain(PlainCsr { row_ptr: self.row_ptr, col_idx: self.col_idx })
+            }
+            StorageMode::Compact => {
+                self.mark_offset(); // terminal sentinel offset
+                AdjStore::Compact(CompactCsr {
+                    chunk_base: self.chunk_base,
+                    local_off: self.local_off,
+                    data: self.data,
+                    arcs: self.arcs,
+                })
+            }
+        }
+    }
+}
+
+/// Encode `row_ptr`/`col_idx` arrays (already strictly sorted per row)
+/// into a store of the requested mode.
+pub fn from_csr_arrays(row_ptr: Vec<u64>, col_idx: Vec<VId>, mode: StorageMode) -> AdjStore {
+    match mode {
+        StorageMode::Plain => AdjStore::Plain(PlainCsr { row_ptr, col_idx }),
+        StorageMode::Compact => {
+            let n = row_ptr.len() - 1;
+            let mut enc = CsrEncoder::new(mode, n, col_idx.len());
+            for v in 0..n {
+                enc.push_row(&col_idx[row_ptr[v] as usize..row_ptr[v + 1] as usize]);
+            }
+            enc.finish()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn roundtrip(rows: &[Vec<VId>]) {
+        let mut plain = CsrEncoder::new(StorageMode::Plain, rows.len(), 0);
+        let mut compact = CsrEncoder::new(StorageMode::Compact, rows.len(), 0);
+        for r in rows {
+            plain.push_row(r);
+            compact.push_row(r);
+        }
+        let plain = plain.finish();
+        let compact = compact.finish();
+        assert_eq!(plain.n(), rows.len());
+        assert_eq!(compact.n(), rows.len());
+        assert_eq!(plain.arcs(), compact.arcs());
+        for (v, r) in rows.iter().enumerate() {
+            let v = v as VId;
+            assert_eq!(plain.degree(v), r.len());
+            assert_eq!(compact.degree(v), r.len());
+            let got: Vec<VId> = compact.neighbors(v).collect();
+            assert_eq!(&got, r, "vertex {v}");
+            assert!(plain.neighbors(v).eq(compact.neighbors(v)));
+        }
+        assert!(plain.logical_eq(&compact));
+        assert!(compact.logical_eq(&plain));
+    }
+
+    #[test]
+    fn varint_boundaries() {
+        let mut buf = Vec::new();
+        let cases =
+            [0u32, 1, 127, 128, 129, 16_383, 16_384, 2_097_151, 2_097_152, u32::MAX - 1, u32::MAX];
+        for &x in &cases {
+            buf.clear();
+            write_varint(&mut buf, x);
+            assert!(buf.len() <= 5);
+            let mut pos = 0;
+            assert_eq!(read_varint(&buf, &mut pos), x);
+            assert_eq!(pos, buf.len());
+        }
+    }
+
+    #[test]
+    fn edge_case_rows() {
+        roundtrip(&[
+            vec![],                               // empty
+            vec![0],                              // single, smallest id
+            vec![u32::MAX],                       // single, largest id
+            vec![0, u32::MAX],                    // maximal gap
+            (10..200).collect(),                  // dense run (gap-1 == 0 bytes stay 1 B)
+            vec![],                               // empty between full rows
+            vec![5, 6, 7, 1000, 1_000_000, 900_000_000],
+        ]);
+    }
+
+    #[test]
+    fn anchored_long_rows_iterate_and_probe() {
+        // degrees straddling the anchor stride: 1, 64, 65, 128, 129, 1000
+        for deg in [1usize, ANCHOR_STRIDE, ANCHOR_STRIDE + 1, 128, 129, 1000] {
+            let row: Vec<VId> = (0..deg as u32).map(|i| i * 3 + 7).collect();
+            roundtrip(&[row.clone()]);
+            let mut enc = CsrEncoder::new(StorageMode::Compact, 1, deg);
+            enc.push_row(&row);
+            let store = enc.finish();
+            for &u in &row {
+                assert!(store.has_edge(0, u), "deg {deg} missing {u}");
+            }
+            for probe in [0u32, 1, 2, 5, 8, 3 * deg as u32 + 7, u32::MAX] {
+                assert_eq!(
+                    store.has_edge(0, probe),
+                    row.binary_search(&probe).is_ok(),
+                    "deg {deg} probe {probe}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn random_rows_fuzz() {
+        let mut rng = Rng::new(0x5707_AAE);
+        for _case in 0..200 {
+            let nrows = 1 + rng.below(8) as usize;
+            let mut rows = Vec::with_capacity(nrows);
+            for _ in 0..nrows {
+                let deg = rng.below(300) as usize;
+                let mut row: Vec<VId> =
+                    (0..deg).map(|_| rng.below(1 << 20) as u32).collect();
+                row.sort_unstable();
+                row.dedup();
+                rows.push(row);
+            }
+            roundtrip(&rows);
+        }
+    }
+
+    #[test]
+    fn chunk_boundaries_resolve() {
+        // more vertices than one chunk, with rows placed around the
+        // 2^16 boundary so both base lookups are exercised
+        let n = CHUNK + 100;
+        let mut enc = CsrEncoder::new(StorageMode::Compact, n, 0);
+        for v in 0..n {
+            if v % 1000 == 0 || (CHUNK - 2..CHUNK + 2).contains(&v) {
+                enc.push_row(&[1, 2, 70_000]);
+            } else {
+                enc.push_row(&[]);
+            }
+        }
+        let store = enc.finish();
+        assert_eq!(store.n(), n);
+        for v in [0usize, 1000, CHUNK - 2, CHUNK - 1, CHUNK, CHUNK + 1, CHUNK + 99] {
+            let got: Vec<VId> = store.neighbors(v as VId).collect();
+            if v % 1000 == 0 || (CHUNK - 2..CHUNK + 2).contains(&v) {
+                assert_eq!(got, vec![1, 2, 70_000], "vertex {v}");
+            } else {
+                assert!(got.is_empty(), "vertex {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn memory_accounting_is_exact() {
+        let rows: Vec<Vec<VId>> = vec![vec![1, 2, 3], vec![0], vec![0], vec![0]];
+        let mut plain = CsrEncoder::new(StorageMode::Plain, rows.len(), 6);
+        let mut compact = CsrEncoder::new(StorageMode::Compact, rows.len(), 6);
+        for r in &rows {
+            plain.push_row(r);
+            compact.push_row(r);
+        }
+        let (plain, compact) = (plain.finish(), compact.finish());
+        // plain: (n + 1) * 8 offset bytes + arcs * 4 id bytes
+        assert_eq!(plain.memory_bytes(), 5 * 8 + 6 * 4);
+        // compact: 1 chunk base (8) + (n + 1) u32 offsets + data bytes;
+        // every id and gap here is < 128, so each list is deg + 2
+        // one-byte varints minus... exactly: [3,hdr+3B]=4, [1,hdr+1B]=2 x3
+        assert_eq!(compact.memory_bytes(), 8 + 5 * 4 + (4 + 2 + 2 + 2));
+    }
+
+    #[test]
+    fn storage_mode_parses() {
+        assert_eq!("compact".parse::<StorageMode>().unwrap(), StorageMode::Compact);
+        assert_eq!("plain".parse::<StorageMode>().unwrap(), StorageMode::Plain);
+        assert!("csr".parse::<StorageMode>().is_err());
+        assert_eq!(StorageMode::default(), StorageMode::Compact);
+        assert_eq!(StorageMode::Compact.as_str(), "compact");
+    }
+}

@@ -39,8 +39,8 @@
 //! //    streaming sources never materialize the global edge set on a
 //! //    rank) and builds ghost layers + cut topology exactly once.
 //! //    Plans are cached per session under (graph fingerprint,
-//! //    partition fingerprint, ghost layers): re-planning the same
-//! //    input is a hash lookup, not a rebuild.
+//! //    partition fingerprint, ghost layers, storage mode):
+//! //    re-planning the same input is a hash lookup, not a rebuild.
 //! let plan = session.plan(&g, &part, GhostLayers::Two);
 //!
 //! // 3. Run, repeatedly and cheaply: D1(2GL), D2, PD2, kernel and
@@ -63,6 +63,22 @@
 //! `coloring::distributed::color_distributed` remains as the one-shot
 //! wrapper over this lifecycle for legacy call sites; its colorings are
 //! bit-identical to the Session path.
+//!
+//! ## Adjacency storage
+//!
+//! Every rank-local graph sits behind [`graph::storage`]'s `AdjStore`:
+//! either the plain u64-offset CSR or (the default) the compact layout —
+//! chunked u32 row offsets plus varint delta-encoded sorted neighbor
+//! lists with periodic skip anchors — selected by
+//! [`graph::StorageMode`] (`Session::builder().storage(..)`, the CLI's
+//! `--storage compact|plain`).  All consumers, kernels included, walk
+//! rows through the [`graph::Neighbors`] iterator, so the two layouts
+//! are observationally identical: colorings, round counts, conflict
+//! counts and wire bytes are bit-identical in either mode, while the
+//! compact side cuts per-rank adjacency bytes (`RunStats::
+//! mem_adj_bytes_*`) by ~2× on scale-free inputs — the margin that
+//! matters on the paper's billion-edge runs.  Layout details and the
+//! measured bytes/edge are in `docs/STORAGE.md`.
 //!
 //! ## Fault model & recovery
 //!
@@ -135,10 +151,11 @@
 //!
 //! The determinism and accounting contracts above are machine-checked:
 //! [`lint`] implements `repolint`, a zero-dependency static analyzer
-//! whose rule catalog (L01–L10: target registration, iteration-order
+//! whose rule catalog (L01–L11: target registration, iteration-order
 //! determinism, sync-in-async, checkout-across-await, tag spacing,
 //! struct-literal completeness, fault-blind accounting, timer
-//! discipline, delimiter balance, format arity) encodes the invariants
+//! discipline, delimiter balance, format arity, iterator-based
+//! adjacency) encodes the invariants
 //! each PR used to audit by hand.  `cargo run -q --bin repolint` gates
 //! `scripts/verify.sh`; the full catalog and the allow-annotation
 //! escape hatch are documented in `docs/LINTS.md`.

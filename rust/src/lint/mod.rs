@@ -16,6 +16,7 @@
 //! | L08  | `Instant::now` only in the approved wall-timer modules; `SystemTime` banned outright |
 //! | L09  | delimiters balance outside strings/chars/comments (the desk-edit drop-a-brace class) |
 //! | L10  | `format!`-family placeholder count matches the argument list |
+//! | L11  | adjacency access in the kernel/conflict hot dirs (`coloring/local/`, `coloring/distributed/`) stays iterator-based: no slice-typed neighbor accessors, no collect-of-neighbors into a `Vec` |
 //!
 //! A finding is suppressed by a justified annotation on its line (or on
 //! a comment line directly above it), e.g.
@@ -111,6 +112,7 @@ fn lint_lexed(
     rules::rule_l08(lx, &mut per);
     rules::rule_l09(lx, &mut per);
     rules::rule_l10(lx, &mut per);
+    rules::rule_l11(lx, &mut per);
     let allows = rules::parse_allows(lx, &mut per);
     per.retain(|f| f.rule == "L00" || !allows.contains(&(f.rule.to_string(), f.line - 1)));
     per
@@ -458,6 +460,20 @@ mod tests {
             2,
             "l10_good.rs",
         );
+    }
+
+    #[test]
+    fn l11_iterator_adjacency() {
+        check_pair(
+            "rust/src/coloring/local/fixture.rs",
+            "l11_bad.rs",
+            "L11",
+            3,
+            "l11_good.rs",
+        );
+        // same content outside the hot dirs is out of scope
+        let fs = lint_source("rust/src/graph/fixture.rs", &fixture("l11_bad.rs"));
+        assert!(fs.is_empty(), "{fs:?}");
     }
 
     #[test]

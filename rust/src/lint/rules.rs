@@ -1,4 +1,4 @@
-//! The repolint rule catalog (L02–L10) plus the allow-annotation parser.
+//! The repolint rule catalog (L02–L11) plus the allow-annotation parser.
 //!
 //! Every rule works on the token stream / line views produced by
 //! [`super::lex`]; none of them parse Rust.  That makes them fast,
@@ -956,10 +956,106 @@ pub fn rule_l10(lx: &Lexed, out: &mut Vec<Finding>) {
     }
 }
 
+// ---------------------------------------------------------------- L11
+
+/// Kernel/conflict hot dirs whose adjacency access must stay
+/// iterator-based (L11): with `StorageMode::Compact` as the default,
+/// a slice-typed neighbor accessor or a collect-of-neighbors re-pins
+/// the plain CSR layout (or buys back the allocation the iterator
+/// contract removed).
+pub const ADJ_DIRS: &[&str] = &[
+    "rust/src/coloring/local/",
+    "rust/src/coloring/distributed/",
+];
+
+pub fn rule_l11(lx: &Lexed, out: &mut Vec<Finding>) {
+    if !ADJ_DIRS.iter().any(|d| lx.path.starts_with(d)) {
+        return;
+    }
+    let toks = &lx.toks;
+    let n = toks.len();
+    // (a) adjacency accessors typed as slices: `fn *neighbor*` /
+    // `fn *adj*` returning `&[VId]` or `&[u32]`.  Return
+    // `storage::Neighbors` instead so compact rows never materialize.
+    for f in &lx.fns {
+        let lname = f.name.to_ascii_lowercase();
+        if !lname.contains("neighbor") && !lname.contains("adj") {
+            continue;
+        }
+        // return type: tokens between `->` and the body `{`
+        let mut ret = f.open_i;
+        for k in f.sig_i..f.open_i.saturating_sub(1) {
+            if toks[k].t == "-" && toks[k + 1].t == ">" {
+                ret = k + 2;
+                break;
+            }
+        }
+        for k in ret..f.open_i {
+            if toks[k].t != "&" {
+                continue;
+            }
+            // the lexer strips lifetime quotes: `&'a [VId]` lexes as
+            // `&` `a` `[` `VId` `]`
+            let mut j = k + 1;
+            if j + 1 < f.open_i && word_start(&toks[j].t) && toks[j + 1].t == "[" {
+                j += 1;
+            }
+            if j + 2 < f.open_i
+                && toks[j].t == "["
+                && matches!(toks[j + 1].t.as_str(), "VId" | "u32")
+                && toks[j + 2].t == "]"
+            {
+                out.push(Finding::new(
+                    "L11",
+                    &lx.path,
+                    toks[f.sig_i].ln,
+                    format!(
+                        "adjacency accessor `{}` returns a neighbor slice; hot-path \
+                         access is iterator-based (`storage::Neighbors`) so compact \
+                         rows never materialize",
+                        f.name
+                    ),
+                ));
+                break;
+            }
+        }
+    }
+    // (b) materialized neighbor iterators: `.collect()` into a Vec or
+    // `.to_vec()` in the same statement as a `neighbors(...)` call.
+    // Reported at the statement's first token so a preceding-line allow
+    // annotation targets it even when the call sits on a wrapped line.
+    let mut last_stmt = usize::MAX;
+    for i in 0..n {
+        if toks[i].t != "neighbors" || i + 1 >= n || toks[i + 1].t != "(" {
+            continue;
+        }
+        if i > 0 && toks[i - 1].t == "fn" {
+            continue;
+        }
+        let (s, e) = stmt_bounds(toks, &lx.depth, i);
+        if s == last_stmt {
+            continue;
+        }
+        let window: Vec<&str> = (s..=e).map(|k| toks[k].t.as_str()).collect();
+        let vec_collect = window.contains(&"collect") && window.contains(&"Vec");
+        if vec_collect || window.contains(&"to_vec") {
+            last_stmt = s;
+            out.push(Finding::new(
+                "L11",
+                &lx.path,
+                toks[s].ln,
+                "neighbor iterator materialized into a Vec in a kernel hot dir \
+                 (iterate in place; allow-annotate if a test oracle really needs it)"
+                    .to_string(),
+            ));
+        }
+    }
+}
+
 // ----------------------------------------------------------- allows
 
 pub const KNOWN_RULES: &[&str] = &[
-    "L01", "L02", "L03", "L04", "L05", "L06", "L07", "L08", "L09", "L10",
+    "L01", "L02", "L03", "L04", "L05", "L06", "L07", "L08", "L09", "L10", "L11",
 ];
 
 /// Parse allow annotations — `repolint: allow(L02) -- <why>` — out of

@@ -19,7 +19,7 @@ use dist_color::bench::{run_algo, run_algo_with_backend, Algo};
 use dist_color::coloring::distributed::zoltan::{color_zoltan, ZoltanConfig};
 use dist_color::coloring::{validate, Problem};
 use dist_color::distributed::{CostModel, FaultPlan, Topology};
-use dist_color::graph::{generators, io, stats::GraphStats, Graph};
+use dist_color::graph::{generators, io, stats, stats::GraphStats, Graph, StorageMode};
 use dist_color::partition::{self, PartitionKind};
 use dist_color::runtime::PjrtBackend;
 use dist_color::session::{GhostLayers, ProblemSpec, Session};
@@ -70,6 +70,10 @@ COLOR FLAGS:
   --backend B         native | pjrt                            [native]
   --partitioner P     block | edge | bfs | hash                [edge]
   --threads T         on-node kernel threads per rank; 0=auto  [0]
+  --storage M         rank-local adjacency layout: compact (delta-
+                      encoded chunked CSR) | plain (u64-offset CSR);
+                      colorings are bit-identical either way
+                      (see docs/STORAGE.md)                    [compact]
   --workers W         cooperative scheduler workers that multiplex
                       all simulated ranks (no per-rank OS threads);
                       0 = auto: DIST_TEST_THREADS env, else one
@@ -177,6 +181,7 @@ fn cmd_color(f: Flags) -> Result<(), String> {
     let algo = f.get_or("algo", "d1");
     let backend_name = f.get_or("backend", "native");
     let pk: PartitionKind = f.get_or("partitioner", "edge").parse()?;
+    let storage: StorageMode = f.get_or("storage", "compact").parse()?;
     let part = partition::partition(&g, ranks, pk, seed);
     let cost = CostModel::default();
     let gpus_per_node = f.usize_or("gpus-per-node", 1)? as u32;
@@ -248,6 +253,13 @@ fn cmd_color(f: Flags) -> Result<(), String> {
                      (it runs on the clean legacy substrate)"
                 );
             }
+            if storage != StorageMode::default() {
+                println!(
+                    "note: --storage does not apply to the Zoltan baseline \
+                     (its compatibility shim always builds {} local graphs)",
+                    StorageMode::default().as_str()
+                );
+            }
             (color_zoltan(&g, &part, cfg, cost), problem)
         }
         name => {
@@ -267,7 +279,8 @@ fn cmd_color(f: Flags) -> Result<(), String> {
                 .topology(topo)
                 .threads(threads)
                 .workers(workers)
-                .seed(seed);
+                .seed(seed)
+                .storage(storage);
             if let Some(fp) = faults {
                 builder = builder.faults(fp);
             }
@@ -320,6 +333,14 @@ fn cmd_color(f: Flags) -> Result<(), String> {
         result.stats.comm_modeled_ns as f64 / 1e6,
         result.stats.bytes,
         result.stats.overlap_saved_ns as f64 / 1e6
+    );
+    println!(
+        "memory[{}]: adj(max)={} adj(sum)={} local(max)={} local(sum)={}",
+        if algo.starts_with("zoltan") { StorageMode::default() } else { storage }.as_str(),
+        stats::human_bytes(result.stats.mem_adj_bytes_max as usize),
+        stats::human_bytes(result.stats.mem_adj_bytes_sum as usize),
+        stats::human_bytes(result.stats.mem_local_bytes_max as usize),
+        stats::human_bytes(result.stats.mem_local_bytes_sum as usize)
     );
     if faults.is_some() || paranoid {
         println!(

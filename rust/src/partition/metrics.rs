@@ -8,7 +8,7 @@ use crate::graph::{Graph, VId};
 pub fn edge_cut(g: &Graph, p: &Partition) -> usize {
     let mut cut = 0usize;
     for v in 0..g.n() {
-        for &u in g.neighbors(v as VId) {
+        for u in g.neighbors(v as VId) {
             if (u as usize) > v && p.owner[v] != p.owner[u as usize] {
                 cut += 1;
             }

@@ -45,7 +45,7 @@ pub fn pack(view: &LocalView, colors: &[Color], bucket: Bucket) -> EllInputs {
     for v in 0..n {
         let nb = g.neighbors(v as VId);
         assert!(nb.len() <= bucket.dmax, "degree exceeds bucket dmax");
-        for (j, &u) in nb.iter().enumerate() {
+        for (j, u) in nb.enumerate() {
             adj[v * bucket.dmax + j] = u as i32;
         }
     }

@@ -22,7 +22,7 @@
 //!    lists, neighbor topology) exactly once, pulling rows through a
 //!    [`GraphSource`] so no rank ever materializes the global edge set.
 //!    Plans are **cached** per session, keyed by (graph fingerprint,
-//!    partition fingerprint, ghost layers): re-planning the same
+//!    partition fingerprint, ghost layers, storage mode): re-planning the same
 //!    partitioned graph is a hash lookup that returns a handle to the
 //!    same shared plan body ([`Session::plan_cache_stats`] counts
 //!    hits/misses; sources without a fingerprint are built fresh every
@@ -80,6 +80,7 @@ use crate::coloring::local::{LocalKernel, ScratchPool};
 use crate::coloring::Problem;
 use crate::distributed::comm::CommDomain;
 use crate::distributed::{CommError, CommStats, CostModel, FaultPlan, Topology};
+use crate::graph::StorageMode;
 use crate::partition::Partition;
 use crate::util::par;
 use source::{fnv1a, FNV_OFFSET};
@@ -108,6 +109,7 @@ pub struct SessionBuilder {
     workers: usize,
     seed: u64,
     faults: Option<FaultPlan>,
+    storage: StorageMode,
 }
 
 impl SessionBuilder {
@@ -179,6 +181,18 @@ impl SessionBuilder {
         self
     }
 
+    /// Adjacency storage backend for every rank-local graph this
+    /// session's plans build (see docs/STORAGE.md): the default
+    /// [`StorageMode::Compact`] delta-encodes neighbor lists for the
+    /// billion-edge memory budget; [`StorageMode::Plain`] keeps raw
+    /// CSR arrays.  Colorings, rounds, conflicts and wire bytes are
+    /// bit-identical under either — the knob trades bytes for decode
+    /// work only.  The CLI front-end is `--storage compact|plain`.
+    pub fn storage(mut self, mode: StorageMode) -> Self {
+        self.storage = mode;
+        self
+    }
+
     /// Materialize the session.  Cheap: kernel scratches (and their
     /// worker pools) are pooled and created lazily on first checkout,
     /// bounded by the scheduler's worker budget rather than the rank
@@ -218,6 +232,7 @@ impl SessionBuilder {
             workers: self.workers,
             seed: self.seed,
             faults,
+            storage: self.storage,
             force_checkpoint: armed.is_some(),
             scratch: ScratchPool::new(self.threads),
             plans: Mutex::new(HashMap::new()),
@@ -237,12 +252,16 @@ impl Default for SessionBuilder {
             workers: 0,
             seed: 42,
             faults: None,
+            storage: StorageMode::default(),
         }
     }
 }
 
-/// Plan-cache key: (graph fingerprint, partition fingerprint, layers).
-type PlanKey = (u64, u64, GhostLayers);
+/// Plan-cache key: (graph fingerprint, partition fingerprint, layers,
+/// storage mode).  Storage joins the key because a plan's body embeds
+/// mode-specific `LocalGraph`s — a compact session must never be handed
+/// a cached plain core or vice versa.
+type PlanKey = (u64, u64, GhostLayers, StorageMode);
 
 /// A long-lived coloring service instance: the cooperative rank
 /// runtime, the shared kernel-scratch pool, and the keyed plan cache.
@@ -255,6 +274,7 @@ pub struct Session {
     workers: usize,
     seed: u64,
     faults: Option<FaultPlan>,
+    storage: StorageMode,
     /// Set when `DIST_CRASH_AT` armed the env crash: every run of this
     /// session checkpoints regardless of its spec, so the suite-wide
     /// injected crash recovers instead of failing every test.  Explicit
@@ -309,6 +329,12 @@ impl Session {
         self.faults
     }
 
+    /// The adjacency storage backend this session's plans build their
+    /// rank-local graphs in ([`SessionBuilder::storage`]).
+    pub fn storage(&self) -> StorageMode {
+        self.storage
+    }
+
     /// The resolved cooperative worker budget this session schedules
     /// on: explicit [`SessionBuilder::workers`] if nonzero, else the
     /// `DIST_TEST_THREADS` environment variable, else one worker per
@@ -359,7 +385,9 @@ impl Session {
             part.owner.len(),
             "source vertex count does not match the partition"
         );
-        let key = source.fingerprint().map(|gfp| (gfp, partition_fingerprint(part), layers));
+        let key = source
+            .fingerprint()
+            .map(|gfp| (gfp, partition_fingerprint(part), layers, self.storage));
         if let Some(key) = key {
             if let Some(core) = self.plans.lock().unwrap_or_else(|e| e.into_inner()).get(&key) {
                 self.cache_hits.fetch_add(1, Ordering::Relaxed);
@@ -395,11 +423,12 @@ impl Session {
                 let t0 = Instant::now();
                 let owned = part.owned(rank as u32);
                 let slab = source.load_rank(rank as u32, &owned);
-                let lg = LocalGraph::build_from_slab(&mut comm, &slab, owned, part, two)
-                    .await
-                    .unwrap_or_else(|e| {
-                        panic!("rank {rank}: local graph construction failed: {e}")
-                    });
+                let lg =
+                    LocalGraph::build_from_slab(&mut comm, &slab, owned, part, two, self.storage)
+                        .await
+                        .unwrap_or_else(|e| {
+                            panic!("rank {rank}: local graph construction failed: {e}")
+                        });
                 (lg, comm.stats(), t0.elapsed().as_nanos() as u64)
             }));
         }
@@ -495,6 +524,7 @@ impl Session {
                 faults: self.faults,
                 paranoid: spec.paranoid,
                 checkpoint: spec.checkpoint || self.force_checkpoint,
+                storage: self.storage,
             });
         }
         // one private mailbox domain per submission: concurrent runs
@@ -952,7 +982,7 @@ mod tests {
         // of the very same graph
         let stream = EdgeStreamSource::new(g.n(), 64, |emit| {
             for v in 0..g.n() as crate::graph::VId {
-                for &u in g.neighbors(v) {
+                for u in g.neighbors(v) {
                     if u > v {
                         emit(v, u);
                     }

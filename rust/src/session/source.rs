@@ -10,6 +10,15 @@
 //! `LocalGraph::build_from_slab` over the communicator — no global edge
 //! structure is consulted after ingestion.
 //!
+//! Slabs sit behind the same [`AdjStore`] backends as [`Graph`]
+//! (docs/STORAGE.md): rows are reached only through the
+//! [`RankSlab::row`] iterator, so a slab can be delta-encoded without
+//! any consumer noticing.  [`EdgeStreamSource`] goes further and keeps
+//! even its *intermediate* state compressed — each stream chunk's
+//! retained pairs are varint-delta runs, k-way merged into the final
+//! slab — so a rank never holds its full uncompressed edge list at any
+//! point during ingestion.
+//!
 //! Two implementations:
 //!
 //! * [`GraphSliceSource`] (and the blanket impl on [`Graph`]) — the
@@ -22,10 +31,13 @@
 //!   stream chunk — strictly less than the global edge count on any
 //!   non-trivial partition (asserted by `tests/session_api.rs`).
 
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
-use crate::graph::{Graph, VId};
+use crate::graph::storage::{read_varint, write_varint, AdjStore, CsrEncoder};
+use crate::graph::{Graph, Neighbors, StorageMode, VId};
 
 /// FNV-1a 64-bit offset basis — the crate's content-fingerprint hash
 /// (plan-cache keys; see [`GraphSource::fingerprint`]).
@@ -44,13 +56,15 @@ pub(crate) fn fnv1a(mut h: u64, word: u64) -> u64 {
 /// FNV-1a over the full CSR structure (vertex count, then each row's
 /// degree and ascending neighbor list).  Degrees delimit the rows, so
 /// concatenation ambiguities cannot collide two different graphs onto
-/// one stream of neighbor words.
+/// one stream of neighbor words.  Hashes the *logical* rows through the
+/// neighbors iterator: a compact and a plain encoding of the same graph
+/// fingerprint identically (they are the same graph, and must hit the
+/// same plan-cache entry).
 fn graph_fingerprint(g: &Graph) -> u64 {
     let mut h = fnv1a(FNV_OFFSET, g.n() as u64);
     for v in 0..g.n() as VId {
-        let row = g.neighbors(v);
-        h = fnv1a(h, row.len() as u64);
-        for &u in row {
+        h = fnv1a(h, g.degree(v) as u64);
+        for u in g.neighbors(v) {
             h = fnv1a(h, u as u64);
         }
     }
@@ -61,57 +75,86 @@ fn graph_fingerprint(g: &Graph) -> u64 {
 /// vertex, indexed by the vertex's position in the rank's ascending
 /// owned-gid list.  Rows are ascending and deduplicated, exactly like
 /// [`Graph`] rows, so slab-built local graphs are bit-identical to
-/// globally-built ones.
-#[derive(Clone, Debug, PartialEq, Eq)]
+/// globally-built ones.  Equality is logical (row sequences), so slabs
+/// in different storage modes compare equal iff they hold the same rows.
+#[derive(Clone, Debug)]
 pub struct RankSlab {
-    /// Row offsets into `adj`; `rows() + 1` entries.
-    offsets: Vec<usize>,
-    /// Flattened neighbor gids.
-    adj: Vec<VId>,
+    store: AdjStore,
 }
+
+impl PartialEq for RankSlab {
+    fn eq(&self, other: &RankSlab) -> bool {
+        self.store.logical_eq(&other.store)
+    }
+}
+
+impl Eq for RankSlab {}
 
 impl RankSlab {
     /// Build a slab from `(row index, neighbor gid)` pairs in any order
     /// (duplicates and self-loops — `neighbor == owned[row]` pairs the
     /// caller pre-filtered — are the caller's concern; this sorts and
-    /// dedups).  `n_rows` is the owned-vertex count.
-    pub fn from_pairs(n_rows: usize, mut pairs: Vec<(u32, VId)>) -> RankSlab {
+    /// dedups), in the default storage mode.  `n_rows` is the
+    /// owned-vertex count.
+    pub fn from_pairs(n_rows: usize, pairs: Vec<(u32, VId)>) -> RankSlab {
+        Self::from_pairs_in(n_rows, pairs, StorageMode::default())
+    }
+
+    /// [`Self::from_pairs`] with an explicit storage mode.
+    pub fn from_pairs_in(n_rows: usize, mut pairs: Vec<(u32, VId)>, mode: StorageMode) -> RankSlab {
         pairs.sort_unstable();
         pairs.dedup();
-        let mut offsets = vec![0usize; n_rows + 1];
-        for &(i, _) in &pairs {
-            debug_assert!((i as usize) < n_rows, "row index out of range");
-            offsets[i as usize + 1] += 1;
+        let mut enc = CsrEncoder::new(mode, n_rows, pairs.len());
+        let mut row: Vec<VId> = Vec::new();
+        let mut i = 0usize;
+        for r in 0..n_rows as u32 {
+            row.clear();
+            while i < pairs.len() && pairs[i].0 == r {
+                row.push(pairs[i].1);
+                i += 1;
+            }
+            enc.push_row(&row);
         }
-        for i in 0..n_rows {
-            offsets[i + 1] += offsets[i];
-        }
-        let adj = pairs.into_iter().map(|(_, u)| u).collect();
-        RankSlab { offsets, adj }
+        debug_assert_eq!(i, pairs.len(), "row index out of range");
+        RankSlab { store: enc.finish() }
+    }
+
+    pub(crate) fn from_store(store: AdjStore) -> RankSlab {
+        RankSlab { store }
     }
 
     /// Number of owned rows.
     #[inline]
     pub fn rows(&self) -> usize {
-        self.offsets.len() - 1
+        self.store.n()
     }
 
     /// Neighbor gids of the `i`-th owned vertex (ascending).
     #[inline]
-    pub fn row(&self, i: usize) -> &[VId] {
-        &self.adj[self.offsets[i]..self.offsets[i + 1]]
+    pub fn row(&self, i: usize) -> Neighbors<'_> {
+        self.store.neighbors(i as VId)
     }
 
     /// Global degree of the `i`-th owned vertex (rows are complete).
     #[inline]
     pub fn degree(&self, i: usize) -> usize {
-        self.offsets[i + 1] - self.offsets[i]
+        self.store.degree(i as VId)
     }
 
     /// Total directed arc entries resident in this slab.
     #[inline]
     pub fn arcs(&self) -> usize {
-        self.adj.len()
+        self.store.arcs()
+    }
+
+    /// Which storage backend this slab uses.
+    pub fn storage_mode(&self) -> StorageMode {
+        self.store.mode()
+    }
+
+    /// Exact in-memory size of the slab's adjacency storage, in bytes.
+    pub fn memory_bytes(&self) -> usize {
+        self.store.memory_bytes()
     }
 }
 
@@ -149,7 +192,7 @@ pub trait GraphSource: Sync {
 /// extra arc array during construction — the deliberate price of one
 /// build path whose only input is the rank-local slab (a borrowed-row
 /// variant would save the copy but reopen global-graph access in the
-/// builder).
+/// builder).  Slabs inherit the source graph's storage mode.
 pub struct GraphSliceSource<'g> {
     g: &'g Graph,
 }
@@ -162,14 +205,14 @@ impl<'g> GraphSliceSource<'g> {
 
 fn slice_slab(g: &Graph, owned: &[VId]) -> RankSlab {
     let total: usize = owned.iter().map(|&v| g.degree(v)).sum();
-    let mut offsets = Vec::with_capacity(owned.len() + 1);
-    offsets.push(0usize);
-    let mut adj: Vec<VId> = Vec::with_capacity(total);
+    let mut enc = CsrEncoder::new(g.storage_mode(), owned.len(), total);
+    let mut row: Vec<VId> = Vec::new();
     for &v in owned {
-        adj.extend_from_slice(g.neighbors(v));
-        offsets.push(adj.len());
+        row.clear();
+        row.extend(g.neighbors(v));
+        enc.push_row(&row);
     }
-    RankSlab { offsets, adj }
+    RankSlab::from_store(enc.finish())
 }
 
 impl GraphSource for GraphSliceSource<'_> {
@@ -202,13 +245,92 @@ impl GraphSource for Graph {
     }
 }
 
+/// One stream chunk's retained `(row, neighbor)` pairs, sorted,
+/// deduplicated and varint-delta encoded: row index as a gap off the
+/// previous record's row, neighbor as a gap off the previous neighbor
+/// in the same row (absolute on a row change).  ~2× smaller than raw
+/// pairs even on random streams, and the lexicographic order makes the
+/// final slab a k-way merge of run cursors.
+struct Run {
+    data: Vec<u8>,
+    records: usize,
+}
+
+/// Sort/dedup `buf` against `owned`, encode the retained pairs as a
+/// [`Run`], and clear `buf`.  Self-loops are dropped here, like
+/// `GraphBuilder` does.
+fn encode_chunk(owned: &[VId], buf: &mut Vec<(VId, VId)>) -> Option<Run> {
+    let mut chunk: Vec<(u32, VId)> = Vec::with_capacity(buf.len());
+    for &(u, v) in buf.iter() {
+        if u == v {
+            continue;
+        }
+        if let Ok(i) = owned.binary_search(&u) {
+            chunk.push((i as u32, v));
+        }
+        if let Ok(j) = owned.binary_search(&v) {
+            chunk.push((j as u32, u));
+        }
+    }
+    buf.clear();
+    chunk.sort_unstable();
+    chunk.dedup();
+    if chunk.is_empty() {
+        return None;
+    }
+    let mut data = Vec::new();
+    let (mut prev_row, mut prev_nbr) = (0u32, 0u32);
+    for &(r, nb) in &chunk {
+        write_varint(&mut data, r - prev_row);
+        if r != prev_row {
+            prev_nbr = 0;
+        }
+        write_varint(&mut data, nb - prev_nbr);
+        prev_row = r;
+        prev_nbr = nb;
+    }
+    Some(Run { data, records: chunk.len() })
+}
+
+/// Streaming decoder over a [`Run`], yielding its records in order.
+struct RunCursor<'a> {
+    data: &'a [u8],
+    pos: usize,
+    rem: usize,
+    row: u32,
+    nbr: u32,
+}
+
+impl<'a> RunCursor<'a> {
+    fn new(run: &'a Run) -> Self {
+        RunCursor { data: &run.data, pos: 0, rem: run.records, row: 0, nbr: 0 }
+    }
+
+    fn next(&mut self) -> Option<(u32, VId)> {
+        if self.rem == 0 {
+            return None;
+        }
+        self.rem -= 1;
+        let dr = read_varint(self.data, &mut self.pos);
+        if dr != 0 {
+            self.nbr = 0;
+        }
+        self.row += dr;
+        self.nbr += read_varint(self.data, &mut self.pos);
+        Some((self.row, self.nbr))
+    }
+}
+
 /// Chunked edge-stream ingestion: `visit` replays every undirected edge
 /// once (either endpoint order; duplicates and self-loops are cleaned up
 /// like `GraphBuilder` does).  A rank scanning the stream buffers at
-/// most `chunk_edges` stream records plus its own retained pairs, so no
-/// rank ever materializes the global edge set.  [`Self::peak_resident_edges`]
-/// reports the high-water mark across all `load_rank` calls for tests to
-/// pin.
+/// most `chunk_edges` stream records plus its retained state, so no
+/// rank ever materializes the global edge set.  Under the default
+/// compact storage the retained state is itself delta-encoded ([`Run`]
+/// per chunk, k-way merged into the slab), so the rank also never holds
+/// its own uncompressed edge list.  [`Self::peak_resident_edges`] /
+/// [`Self::peak_resident_bytes`] report the high-water marks across all
+/// `load_rank` calls for tests to pin.
 pub struct EdgeStreamSource<F>
 where
     F: Fn(&mut dyn FnMut(VId, VId)) + Sync,
@@ -216,7 +338,9 @@ where
     n: usize,
     chunk_edges: usize,
     visit: F,
+    storage: StorageMode,
     peak: AtomicUsize,
+    peak_bytes: AtomicUsize,
     /// Lazily computed content fingerprint (one extra stream replay,
     /// paid at most once per source — see [`GraphSource::fingerprint`]).
     fp: Mutex<Option<u64>>,
@@ -239,29 +363,40 @@ where
             n,
             chunk_edges: chunk_edges.max(1),
             visit,
+            storage: StorageMode::default(),
             peak: AtomicUsize::new(0),
+            peak_bytes: AtomicUsize::new(0),
             fp: Mutex::new(None),
         }
+    }
+
+    /// Select the storage mode for served slabs *and* for the retained
+    /// ingestion state (compact keeps per-chunk runs delta-encoded;
+    /// plain accumulates raw pairs — the parity baseline).
+    pub fn with_storage(mut self, mode: StorageMode) -> Self {
+        self.storage = mode;
+        self
     }
 
     /// Maximum (stream buffer + retained pairs) any single `load_rank`
     /// call held, in edge records.  The "no rank holds the global graph"
     /// witness: stays well under the global arc count whenever the
-    /// partition spreads edges at all.
+    /// partition spreads edges at all.  Record counts are
+    /// storage-independent (compact shrinks bytes, not records).
     pub fn peak_resident_edges(&self) -> usize {
         self.peak.load(Ordering::Relaxed)
     }
-}
 
-impl<F> GraphSource for EdgeStreamSource<F>
-where
-    F: Fn(&mut dyn FnMut(VId, VId)) + Sync,
-{
-    fn n_vertices(&self) -> usize {
-        self.n
+    /// Maximum bytes of transient ingestion state (stream buffer at
+    /// 8 B/record + retained pairs: 8 B/record plain, encoded run bytes
+    /// compact) any single `load_rank` call held.  The witness that
+    /// compact ingestion actually shrinks the build-time footprint,
+    /// asserted by `tests/storage_parity.rs`.
+    pub fn peak_resident_bytes(&self) -> usize {
+        self.peak_bytes.load(Ordering::Relaxed)
     }
 
-    fn load_rank(&self, _rank: u32, owned: &[VId]) -> RankSlab {
+    fn load_rank_plain(&self, owned: &[VId]) -> RankSlab {
         let mut pairs: Vec<(u32, VId)> = Vec::new();
         let mut buf: Vec<(VId, VId)> = Vec::with_capacity(self.chunk_edges);
         let mut peak = 0usize;
@@ -293,7 +428,97 @@ where
         drain(&mut buf, &mut pairs);
         peak = peak.max(pairs.len());
         self.peak.fetch_max(peak, Ordering::Relaxed);
-        RankSlab::from_pairs(owned.len(), pairs)
+        self.peak_bytes.fetch_max(peak * 8, Ordering::Relaxed);
+        RankSlab::from_pairs_in(owned.len(), pairs, StorageMode::Plain)
+    }
+
+    fn load_rank_compact(&self, owned: &[VId]) -> RankSlab {
+        let mut runs: Vec<Run> = Vec::new();
+        let mut buf: Vec<(VId, VId)> = Vec::with_capacity(self.chunk_edges);
+        let mut records = 0usize;
+        let mut run_bytes = 0usize;
+        let mut peak_rec = 0usize;
+        let mut peak_by = 0usize;
+        {
+            let mut on_edge = |u: VId, v: VId| {
+                buf.push((u, v));
+                if buf.len() >= self.chunk_edges {
+                    peak_rec = peak_rec.max(buf.len() + records);
+                    peak_by = peak_by.max(buf.len() * 8 + run_bytes);
+                    if let Some(run) = encode_chunk(owned, &mut buf) {
+                        records += run.records;
+                        run_bytes += run.data.len();
+                        runs.push(run);
+                    }
+                }
+            };
+            (self.visit)(&mut on_edge);
+        }
+        peak_rec = peak_rec.max(buf.len() + records);
+        peak_by = peak_by.max(buf.len() * 8 + run_bytes);
+        if let Some(run) = encode_chunk(owned, &mut buf) {
+            records += run.records;
+            run_bytes += run.data.len();
+            runs.push(run);
+        }
+        peak_rec = peak_rec.max(records);
+        peak_by = peak_by.max(run_bytes);
+        self.peak.fetch_max(peak_rec, Ordering::Relaxed);
+        self.peak_bytes.fetch_max(peak_by, Ordering::Relaxed);
+
+        // k-way merge of the run cursors straight into the slab
+        // encoder; cross-chunk duplicates collapse on the fly.  The
+        // heap orders by (row, neighbor, run), so rows come out
+        // ascending with ascending deduplicated neighbors — exactly
+        // what the plain path's global sort produces.
+        let mut cursors: Vec<RunCursor<'_>> = runs.iter().map(RunCursor::new).collect();
+        let mut heap: BinaryHeap<Reverse<(u32, VId, usize)>> = BinaryHeap::new();
+        for (k, c) in cursors.iter_mut().enumerate() {
+            if let Some((r, nb)) = c.next() {
+                heap.push(Reverse((r, nb, k)));
+            }
+        }
+        let mut enc = CsrEncoder::new(StorageMode::Compact, owned.len(), records);
+        let mut row: Vec<VId> = Vec::new();
+        let mut cur = 0u32;
+        let mut last: Option<(u32, VId)> = None;
+        while let Some(Reverse((r, nb, k))) = heap.pop() {
+            if let Some((r2, nb2)) = cursors[k].next() {
+                heap.push(Reverse((r2, nb2, k)));
+            }
+            if last == Some((r, nb)) {
+                continue; // duplicate retained by more than one chunk
+            }
+            last = Some((r, nb));
+            while cur < r {
+                enc.push_row(&row);
+                row.clear();
+                cur += 1;
+            }
+            row.push(nb);
+        }
+        while (cur as usize) < owned.len() {
+            enc.push_row(&row);
+            row.clear();
+            cur += 1;
+        }
+        RankSlab::from_store(enc.finish())
+    }
+}
+
+impl<F> GraphSource for EdgeStreamSource<F>
+where
+    F: Fn(&mut dyn FnMut(VId, VId)) + Sync,
+{
+    fn n_vertices(&self) -> usize {
+        self.n
+    }
+
+    fn load_rank(&self, _rank: u32, owned: &[VId]) -> RankSlab {
+        match self.storage {
+            StorageMode::Plain => self.load_rank_plain(owned),
+            StorageMode::Compact => self.load_rank_compact(owned),
+        }
     }
 
     /// Streaming FNV-1a content fingerprint: each edge is hashed as it
@@ -337,9 +562,10 @@ mod tests {
             let owned = part.owned(rank);
             let slab = GraphSliceSource::new(&g).load_rank(rank, &owned);
             assert_eq!(slab.rows(), owned.len());
+            assert_eq!(slab.storage_mode(), g.storage_mode());
             let mut arcs = 0usize;
             for (i, &v) in owned.iter().enumerate() {
-                assert_eq!(slab.row(i), g.neighbors(v), "rank {rank} vertex {v}");
+                assert!(slab.row(i).eq(g.neighbors(v)), "rank {rank} vertex {v}");
                 assert_eq!(slab.degree(i), g.degree(v));
                 arcs += g.degree(v);
             }
@@ -363,41 +589,55 @@ mod tests {
     #[test]
     fn stream_slab_equals_sliced_slab() {
         // streaming the global edge set in small chunks must reproduce
-        // the exact (sorted, deduped) rows of the in-memory slice
+        // the exact (sorted, deduped) rows of the in-memory slice —
+        // under both retained-state representations
         let g = gnm(150, 600, 7);
         let part = partition::hash(&g, 5, 2);
-        let src = EdgeStreamSource::new(g.n(), 17, |emit| {
-            for v in 0..g.n() as VId {
-                for &u in g.neighbors(v) {
-                    if u > v {
-                        emit(v, u);
+        let stream = || {
+            EdgeStreamSource::new(g.n(), 17, |emit| {
+                for v in 0..g.n() as VId {
+                    for u in g.neighbors(v) {
+                        if u > v {
+                            emit(v, u);
+                        }
                     }
                 }
-            }
-        });
+            })
+        };
+        let compact = stream(); // compact is the default
+        let plain = stream().with_storage(StorageMode::Plain);
         for rank in 0..5u32 {
             let owned = part.owned(rank);
-            let a = src.load_rank(rank, &owned);
+            let a = compact.load_rank(rank, &owned);
             let b = GraphSliceSource::new(&g).load_rank(rank, &owned);
             assert_eq!(a, b, "rank {rank}");
+            assert_eq!(a.storage_mode(), StorageMode::Compact);
+            assert_eq!(plain.load_rank(rank, &owned), b, "rank {rank} plain");
         }
-        assert!(src.peak_resident_edges() > 0);
-        assert!(src.peak_resident_edges() < g.arcs());
+        for src in [&compact, &plain] {
+            assert!(src.peak_resident_edges() > 0);
+            assert!(src.peak_resident_edges() < g.arcs());
+        }
+        // compact ingestion's transient state is strictly smaller
+        assert!(compact.peak_resident_bytes() < plain.peak_resident_bytes());
     }
 
     #[test]
     fn stream_cleans_duplicates_and_self_loops() {
         let owned: Vec<VId> = vec![0, 1];
-        let src = EdgeStreamSource::new(3, 2, |emit| {
-            emit(0, 1);
-            emit(1, 0); // duplicate, reversed
-            emit(1, 1); // self-loop
-            emit(0, 2);
-            emit(0, 2); // duplicate
-        });
-        let slab = src.load_rank(0, &owned);
-        assert_eq!(slab.row(0), &[1, 2]);
-        assert_eq!(slab.row(1), &[0]);
+        for mode in [StorageMode::Compact, StorageMode::Plain] {
+            let src = EdgeStreamSource::new(3, 2, |emit| {
+                emit(0, 1);
+                emit(1, 0); // duplicate, reversed
+                emit(1, 1); // self-loop
+                emit(0, 2);
+                emit(0, 2); // duplicate
+            })
+            .with_storage(mode);
+            let slab = src.load_rank(0, &owned);
+            assert_eq!(slab.row(0).collect::<Vec<_>>(), vec![1, 2], "{mode:?}");
+            assert_eq!(slab.row(1).collect::<Vec<_>>(), vec![0], "{mode:?}");
+        }
     }
 
     #[test]
@@ -408,6 +648,12 @@ mod tests {
         assert_eq!(Some(fp_g), GraphSliceSource::new(&g).fingerprint(), "wrapper must agree");
         assert_eq!(Some(fp_g), GraphSource::fingerprint(&g), "fingerprint must be stable");
         assert_ne!(Some(fp_g), GraphSource::fingerprint(&h), "different edges, different key");
+        // and re-encoding cannot move a graph out of its cache slot
+        assert_eq!(
+            Some(fp_g),
+            GraphSource::fingerprint(&g.to_mode(StorageMode::Plain)),
+            "fingerprint must be storage-independent"
+        );
     }
 
     #[test]
@@ -416,9 +662,7 @@ mod tests {
         let h = gnm(200, 800, 4); // same shape, different edges
         let stream_of = |g: &Graph, chunk: usize, flip: bool| {
             let edges: Vec<(VId, VId)> = (0..g.n() as VId)
-                .flat_map(|v| {
-                    g.neighbors(v).iter().filter(|&&u| u > v).map(move |&u| (v, u))
-                })
+                .flat_map(|v| g.neighbors(v).filter(move |&u| u > v).map(move |u| (v, u)))
                 .collect();
             EdgeStreamSource::new(g.n(), chunk, move |emit| {
                 for &(u, v) in &edges {
@@ -445,9 +689,32 @@ mod tests {
     #[test]
     fn from_pairs_handles_empty_rows() {
         let slab = RankSlab::from_pairs(3, vec![(2, 7), (0, 5), (2, 4)]);
-        assert_eq!(slab.row(0), &[5]);
-        assert_eq!(slab.row(1), &[] as &[VId]);
-        assert_eq!(slab.row(2), &[4, 7]);
+        assert_eq!(slab.row(0).collect::<Vec<_>>(), vec![5]);
+        assert_eq!(slab.row(1).count(), 0);
+        assert_eq!(slab.row(2).collect::<Vec<_>>(), vec![4, 7]);
         assert_eq!(slab.arcs(), 3);
+    }
+
+    #[test]
+    fn run_codec_roundtrips() {
+        // the chunk-run encoder/decoder pair must reproduce the sorted
+        // deduplicated pair sequence exactly, including row gaps
+        let owned: Vec<VId> = vec![3, 9, 10, 500];
+        let mut buf: Vec<(VId, VId)> = vec![
+            (3, 0),
+            (9, 3),
+            (3, 9),
+            (500, 1_000_000),
+            (10, 10), // self-loop, dropped
+            (3, 0),   // duplicate
+        ];
+        let run = encode_chunk(&owned, &mut buf).unwrap();
+        assert!(buf.is_empty());
+        let mut c = RunCursor::new(&run);
+        let mut got = Vec::new();
+        while let Some(p) = c.next() {
+            got.push(p);
+        }
+        assert_eq!(got, vec![(0, 0), (0, 9), (1, 3), (2, 9), (3, 1_000_000)]);
     }
 }

@@ -35,7 +35,7 @@ fn property_builder_is_idempotent_under_rebuild() {
         // rebuild from its own edge list: must round-trip exactly
         let mut b = GraphBuilder::new(g.n());
         for v in 0..g.n() as VId {
-            for &u in g.neighbors(v) {
+            for u in g.neighbors(v) {
                 if u > v {
                     b.edge(v, u);
                 }

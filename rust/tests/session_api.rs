@@ -124,7 +124,7 @@ fn streaming_source_colors_correctly_without_global_residency() {
     let part = partition::partition(&g, 8, PartitionKind::EdgeBalanced, 9);
     let source = EdgeStreamSource::new(g.n(), 1024, |emit| {
         for v in 0..g.n() as VId {
-            for &u in g.neighbors(v) {
+            for u in g.neighbors(v) {
                 if u > v {
                     emit(v, u);
                 }

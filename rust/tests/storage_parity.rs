@@ -1,0 +1,190 @@
+//! PR 10: compact-vs-plain adjacency storage bit-parity matrix.
+//!
+//! `StorageMode::Compact` (delta-encoded chunked CSR, the default) and
+//! `StorageMode::Plain` (u64-offset CSR, the parity baseline) must
+//! produce **bit-identical** colorings, round counts, conflict counts
+//! and wire bytes — across problems (D1-2GL, D2, PD2), graph families
+//! (rmat, rgg, chain lattice), rank counts (1, 2, 8, 17) and thread
+//! counts (1, 8).  The storage layer may change how a rank holds its
+//! rows, never what any kernel observes (docs/STORAGE.md).
+//!
+//! Also here: the varint row codec round-trip fuzz and the streaming-
+//! ingestion residency witness (compact chunk staging must hold fewer
+//! bytes than the plain pair buffer it replaces).
+
+use dist_color::coloring::{validate, Problem};
+use dist_color::distributed::CostModel;
+use dist_color::graph::generators::erdos_renyi::gnm;
+use dist_color::graph::generators::lattice::road_lattice;
+use dist_color::graph::generators::rgg::random_geometric;
+use dist_color::graph::generators::rmat::rmat;
+use dist_color::graph::storage::{read_varint, write_varint, CsrEncoder};
+use dist_color::graph::{Graph, StorageMode, VId};
+use dist_color::partition::{self, PartitionKind};
+use dist_color::session::{EdgeStreamSource, GhostLayers, ProblemSpec, Session};
+use dist_color::util::rng::Rng;
+
+const RANK_COUNTS: [usize; 4] = [1, 2, 8, 17];
+
+/// The full {1, 8} thread matrix by default, or the single count named
+/// by `DIST_TEST_THREADS` (how `verify.sh --matrix` pins each arm of
+/// the sweep in its own process).
+fn thread_counts() -> Vec<usize> {
+    match std::env::var("DIST_TEST_THREADS") {
+        Ok(s) => vec![s.trim().parse().expect("DIST_TEST_THREADS must be a thread count")],
+        Err(_) => vec![1, 8],
+    }
+}
+
+fn graphs() -> Vec<(&'static str, Graph, PartitionKind)> {
+    vec![
+        ("rmat", rmat(7, 6, 5), PartitionKind::Hash),
+        ("rgg", random_geometric(300, 6.0, 7), PartitionKind::Hash),
+        ("chain-lattice", road_lattice(16, 12, 3), PartitionKind::Block),
+    ]
+}
+
+fn spec_for(problem: Problem) -> ProblemSpec {
+    match problem {
+        Problem::D1 => ProblemSpec::d1(), // 2GL on the two-layer plans below
+        Problem::D2 => ProblemSpec::d2(),
+        Problem::PD2 => ProblemSpec::pd2(),
+    }
+}
+
+#[test]
+fn compact_and_plain_agree_across_the_matrix() {
+    for (name, g, pk) in graphs() {
+        for &ranks in &RANK_COUNTS {
+            let part = partition::partition(&g, ranks, pk, 13);
+            for threads in thread_counts() {
+                let mk = |mode: StorageMode| {
+                    Session::builder()
+                        .ranks(ranks)
+                        .cost(CostModel::zero())
+                        .threads(threads)
+                        .seed(29)
+                        .storage(mode)
+                        .build()
+                };
+                let compact = mk(StorageMode::Compact);
+                let plain = mk(StorageMode::Plain);
+                let cplan = compact.plan(&g, &part, GhostLayers::Two);
+                let pplan = plain.plan(&g, &part, GhostLayers::Two);
+                for problem in [Problem::D1, Problem::D2, Problem::PD2] {
+                    let ctx = format!("{name} {problem} ranks={ranks} threads={threads}");
+                    let spec = spec_for(problem);
+                    let c = cplan.run(spec);
+                    let p = pplan.run(spec);
+                    assert_eq!(c.colors, p.colors, "storage changed the coloring: {ctx}");
+                    assert_eq!(
+                        c.stats.comm_rounds, p.stats.comm_rounds,
+                        "storage changed the round count: {ctx}"
+                    );
+                    assert_eq!(
+                        c.stats.conflicts, p.stats.conflicts,
+                        "storage changed the conflict count: {ctx}"
+                    );
+                    assert_eq!(
+                        c.stats.bytes, p.stats.bytes,
+                        "storage changed the wire bytes: {ctx}"
+                    );
+                    let proper = match problem {
+                        Problem::D1 => validate::is_proper_d1(&g, &c.colors),
+                        Problem::D2 => validate::is_proper_d2(&g, &c.colors),
+                        Problem::PD2 => validate::is_proper_pd2(&g, &c.colors),
+                    };
+                    assert!(proper, "improper coloring: {ctx}");
+                    // both modes report per-rank memory; only the
+                    // magnitudes may differ, never the coloring above
+                    assert!(c.stats.mem_adj_bytes_max > 0, "{ctx}");
+                    assert!(p.stats.mem_adj_bytes_max > 0, "{ctx}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn varint_codec_roundtrips_random_sorted_lists() {
+    // raw varint: every byte-length class plus the extremes
+    for x in [0u32, 1, 127, 128, 16_383, 16_384, u32::MAX - 1, u32::MAX] {
+        let mut buf = Vec::new();
+        write_varint(&mut buf, x);
+        let mut pos = 0;
+        assert_eq!(read_varint(&buf, &mut pos), x);
+        assert_eq!(pos, buf.len(), "trailing bytes after {x}");
+    }
+
+    // 1000 random strictly-sorted neighbor lists through the row codec
+    let mut rng = Rng::new(0xC0FFEE);
+    for case in 0..1000u32 {
+        let deg = match case {
+            0 => 0,                             // empty row
+            1 => 1,                             // single entry
+            2 => 200,                           // dense consecutive run
+            _ => (rng.below(120) + 1) as usize, // random
+        };
+        let mut row: Vec<VId> = match case {
+            2 => (500..700).collect(),
+            _ => (0..deg).map(|_| rng.below(1 << 30) as VId).collect(),
+        };
+        if case == 3 {
+            row.push(u32::MAX); // max-value neighbor survives the gap codec
+        }
+        row.sort_unstable();
+        row.dedup();
+        for &mode in &[StorageMode::Compact, StorageMode::Plain] {
+            let mut enc = CsrEncoder::new(mode, 1, row.len());
+            enc.push_row(&row);
+            let store = enc.finish();
+            assert_eq!(store.degree(0), row.len(), "case {case} ({mode:?})");
+            let decoded: Vec<VId> = store.neighbors(0).collect();
+            assert_eq!(decoded, row, "case {case} ({mode:?})");
+        }
+    }
+}
+
+#[test]
+fn compact_stream_ingestion_stays_below_plain_residency() {
+    let g = gnm(4_000, 16_000, 23);
+    let part = partition::partition(&g, 6, PartitionKind::EdgeBalanced, 9);
+    let stream_of = |mode: StorageMode| {
+        EdgeStreamSource::new(g.n(), 512, |emit| {
+            for v in 0..g.n() as VId {
+                for u in g.neighbors(v) {
+                    if u > v {
+                        emit(v, u);
+                    }
+                }
+            }
+        })
+        .with_storage(mode)
+    };
+
+    let mut colors_by_mode = Vec::new();
+    let mut peaks = Vec::new();
+    for mode in [StorageMode::Compact, StorageMode::Plain] {
+        let source = stream_of(mode);
+        let session = Session::builder()
+            .ranks(6)
+            .cost(CostModel::zero())
+            .threads(1)
+            .seed(3)
+            .storage(mode)
+            .build();
+        let run = session.plan(&source, &part, GhostLayers::One).run(ProblemSpec::d1());
+        assert!(validate::is_proper_d1(&g, &run.colors), "{mode:?}");
+        colors_by_mode.push(run.colors);
+        peaks.push(source.peak_resident_bytes());
+    }
+    assert_eq!(
+        colors_by_mode[0], colors_by_mode[1],
+        "streamed compact and plain colorings diverged"
+    );
+    assert!(
+        peaks[0] < peaks[1],
+        "compact ingestion ({} B) not below plain ({} B)",
+        peaks[0], peaks[1]
+    );
+}

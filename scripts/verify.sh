@@ -260,4 +260,7 @@ BENCH_PR7=1 BENCH_REPS="${BENCH_REPS:-3}" cargo bench --bench micro_kernels
 echo "== micro_kernels PR-9 smoke (writes BENCH_pr9.json) =="
 BENCH_PR9=1 BENCH_REPS="${BENCH_REPS:-3}" cargo bench --bench micro_kernels
 
+echo "== micro_kernels PR-10 smoke (writes BENCH_pr10.json) =="
+BENCH_PR10=1 BENCH_REPS="${BENCH_REPS:-3}" cargo bench --bench micro_kernels
+
 echo "verify: OK"
